@@ -1,0 +1,146 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Serves a batched long-context prefill workload through the full stack:
+//! Poisson request generator → FIFO scheduler → distributed TokenRing
+//! engine (4 real device threads, real message passing, real numerics) —
+//! and reports latency/throughput for TokenRing vs the Ring-Attention
+//! baseline. A numeric-equivalence check against single-device attention
+//! runs first, so every number below is produced by a verified system.
+//!
+//! Run: `cargo run --release --example e2e_serving`
+
+use tokenring::attention::full_attention;
+use tokenring::engine::backend::BackendSpec;
+use tokenring::engine::{run_token_ring, EngineOpts};
+use tokenring::parallelism::partition::Partition;
+use tokenring::runtime::default_artifact_dir;
+use tokenring::scheduler::{serve, ServeOpts, ServeSchedule};
+use tokenring::tensor::Tensor;
+use tokenring::util::rng::Rng;
+use tokenring::util::stats::Table;
+use tokenring::workload::{LenDist, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let devices = 4;
+    let (heads, head_dim) = (4, 32);
+
+    // --- 0. numeric gate: the engine must match the oracle before serving
+    {
+        let mut rng = Rng::new(99);
+        let seq = 256;
+        let sz = seq * heads * head_dim;
+        let q = Tensor::new(&[seq, heads, head_dim], rng.normal_vec(sz, 1.0));
+        let k = Tensor::new(&[seq, heads, head_dim], rng.normal_vec(sz, 1.0));
+        let v = Tensor::new(&[seq, heads, head_dim], rng.normal_vec(sz, 1.0));
+        let opts = EngineOpts {
+            causal: true,
+            partition: Partition::Zigzag,
+            backend: BackendSpec::Native,
+            record: false,
+        };
+        let got = run_token_ring(&q, &k, &v, devices, &opts)?;
+        let (eo, _) = full_attention(&q, &k, &v, true);
+        let diff = got.out.max_abs_diff(&eo);
+        println!("numeric gate: max |distributed - single-device| = {diff:.2e}");
+        assert!(diff < 1e-4);
+
+        // if AOT artifacts exist, also gate the PJRT path
+        if default_artifact_dir().join("manifest.json").exists() {
+            let pjrt = EngineOpts {
+                backend: BackendSpec::Pjrt {
+                    dir: default_artifact_dir(),
+                    profile: "tiny".into(),
+                },
+                ..opts
+            };
+            let got2 = run_token_ring(&q, &k, &v, devices, &pjrt)?;
+            println!(
+                "numeric gate (pjrt artifacts): max |err| = {:.2e}",
+                got2.out.max_abs_diff(&eo)
+            );
+        }
+    }
+
+    // --- 1. workload: 24 requests, bimodal context lengths, Poisson arrivals
+    let gen = WorkloadGen {
+        rate: 50.0,
+        dist: LenDist::Bimodal { short: 256, long: 1024, long_frac: 0.25 },
+        multiple: 2 * devices * 8,
+    };
+    let requests = gen.generate(24, 7);
+    let total_tokens: usize = requests.iter().map(|r| r.seq_len).sum();
+    println!(
+        "\nworkload: {} requests, {} total tokens, lengths {}..{}",
+        requests.len(),
+        total_tokens,
+        requests.iter().map(|r| r.seq_len).min().unwrap(),
+        requests.iter().map(|r| r.seq_len).max().unwrap()
+    );
+
+    // --- 2. serve under both schedules, report the comparison
+    let mut table = Table::new(&[
+        "schedule", "tokens/s", "latency p50 (ms)", "latency p95 (ms)", "service p50 (ms)",
+    ]);
+    for (name, schedule) in [
+        ("token_ring", ServeSchedule::TokenRing),
+        ("ring_attention", ServeSchedule::RingAttention),
+    ] {
+        let opts = ServeOpts {
+            devices,
+            heads,
+            head_dim,
+            layers: 2,
+            schedule,
+            engine: EngineOpts {
+                causal: true,
+                partition: Partition::Zigzag,
+                backend: BackendSpec::Native,
+                record: false,
+            },
+        };
+        let rep = serve(&requests, &opts)?;
+        let lat = rep.latency_summary();
+        table.row(&[
+            name.into(),
+            format!("{:.0}", rep.throughput_tokens_per_s()),
+            format!("{:.1}", lat.p50 * 1e3),
+            format!("{:.1}", lat.p95 * 1e3),
+            format!("{:.1}", rep.service_p50() * 1e3),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("(engine wall times on CPU threads; relative ordering, not A10 absolutes)");
+
+    // --- 3. cache-backed path: chunked prefill (§2.3) + decode over the
+    //        paged, sequence-sharded KV cache and the batched decode ring.
+    let cached = tokenring::scheduler::serve_cached(
+        &requests[..8],
+        &tokenring::scheduler::CachedServeOpts {
+            devices,
+            heads,
+            head_dim,
+            chunk: 64,
+            decode_steps: 8,
+            engine: EngineOpts {
+                causal: true,
+                partition: Partition::Contiguous,
+                backend: BackendSpec::Native,
+                record: false,
+            },
+        },
+    )?;
+    let mean_ttft: f64 =
+        cached.iter().map(|m| m.ttft()).sum::<f64>() / cached.len() as f64;
+    let mean_tpot: f64 = cached.iter().map(|m| m.time_per_output_token()).sum::<f64>()
+        / cached.len() as f64;
+    println!(
+        "\ncache-backed serving ({} requests, chunked prefill @64 + 8 decode steps):",
+        cached.len()
+    );
+    println!(
+        "  mean TTFT {:.1} ms | mean time/output-token {:.2} ms",
+        mean_ttft * 1e3,
+        mean_tpot * 1e3
+    );
+    Ok(())
+}

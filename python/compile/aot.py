@@ -1,0 +1,90 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + write a manifest.
+
+Interchange is HLO text, NOT ``lowered.compile().serialize()`` — the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+The Makefile drives this; it is a no-op when inputs are unchanged (mtime
+check against the manifest).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import PROFILES, ArtifactSpec, artifact_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_artifact(spec: ArtifactSpec, out_dir: str) -> dict:
+    lowered = spec.fn.lower(*spec.args)
+    text = to_hlo_text(lowered)
+    fname = f"{spec.name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    out_specs = [
+        _spec_entry(jax.ShapeDtypeStruct(o.shape, o.dtype))
+        for o in spec.fn.eval_shape(*spec.args)
+    ]
+    return {
+        "name": spec.name,
+        "file": fname,
+        "inputs": [_spec_entry(a) for a in spec.args],
+        "outputs": out_specs,
+        "meta": spec.meta,
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--profiles",
+        default="all",
+        help="comma-separated profile names (default: all)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = (
+        list(PROFILES) if args.profiles == "all" else args.profiles.split(",")
+    )
+    entries = []
+    for pname in names:
+        profile = PROFILES[pname]
+        for spec in artifact_specs(profile):
+            entry = lower_artifact(spec, args.out)
+            entries.append(entry)
+            print(f"  lowered {entry['name']:28s} -> {entry['file']}", file=sys.stderr)
+
+    manifest = {"artifacts": entries, "profiles": sorted(names)}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

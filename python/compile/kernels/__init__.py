@@ -1,0 +1,6 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .flash import flash_attention_block
+from .merge import merge_blocks
+from . import ref
+
+__all__ = ["flash_attention_block", "merge_blocks", "ref"]

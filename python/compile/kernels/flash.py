@@ -1,0 +1,198 @@
+"""Layer-1 Pallas kernel: blockwise flash attention emitting (block_out, block_lse).
+
+This is the compute hot-spot of TokenRing (Wang et al., 2024). Each TokenRing
+micro-step computes attention of one circulating Q block against the
+device-resident KV block, producing the partial output ``block_out`` and the
+log-sum-exp vector ``block_lse`` that the coordinator merges with the online
+softmax update rule (see kernels/merge.py).
+
+Hardware adaptation (paper targets CUDA flash-attention 2):
+  * The KV tiling the paper expresses with threadblocks is expressed here as
+    a VMEM-resident online-softmax loop over KV tiles; on a real TPU the
+    ``block_k`` loop bound is the HBM->VMEM pipeline depth and the per-head
+    grid dimension maps to MXU-parallel cores.
+  * Matmuls accumulate in f32 (``preferred_element_type``) — the MXU path.
+  * Masking is *position based* (q_pos / k_pos int32 vectors), not
+    offset-based, so the same artifact serves contiguous, striped and zigzag
+    partitions (the positions encode the partition).
+
+Kernels MUST be lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mask value: large negative, but NOT -inf. A fully-masked row would give
+# softmax over all -inf -> NaN; with a finite mask value the row's lse is
+# ~MASK_VALUE + log(Skv) which the merge rule treats as "no contribution".
+MASK_VALUE = -1e30
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    qpos_ref,
+    kpos_ref,
+    o_ref,
+    lse_ref,
+    *,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+):
+    """One (head, q-tile) grid instance.
+
+    Ref shapes (leading 1 is the head-block dim):
+      q_ref:    (1, block_q, D)
+      k_ref:    (1, Skv, D)
+      v_ref:    (1, Skv, D)
+      qpos_ref: (block_q,)
+      kpos_ref: (Skv,)
+      o_ref:    (1, block_q, D)
+      lse_ref:  (1, block_q)
+    """
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (bq, D)
+    q_pos = qpos_ref[...]  # (bq,)
+    block_q, head_dim = q.shape
+    skv = k_ref.shape[1]
+    num_kv = skv // block_k
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        k_pos = kpos_ref[pl.dslice(i * block_k, block_k)]
+
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+
+        # Position-based masking: padding keys carry k_pos < 0.
+        valid = (k_pos >= 0)[None, :]
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(valid, s, MASK_VALUE)
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))  # (bq,)
+        alpha = jnp.exp(m_i - m_new)  # rescale of old accumulator
+        p = jnp.exp(s - m_new[:, None])  # (bq, bk)
+        # Keep fully-masked entries from contributing via exp(MASK - m).
+        p = jnp.where(valid, p, 0.0)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p,
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kv, body, (acc0, m0, l0))
+
+    # Rows with zero valid keys keep l == 0; emit out = 0, lse = MASK_VALUE
+    # so the merge rule gives them zero weight.
+    empty = l_i <= 0.0
+    l_safe = jnp.where(empty, 1.0, l_i)
+    out = acc / l_safe[:, None]
+    out = jnp.where(empty[:, None], 0.0, out)
+    lse = jnp.where(empty, MASK_VALUE, m_i + jnp.log(l_safe))
+
+    o_ref[0] = out.astype(o_ref.dtype)
+    lse_ref[0] = lse.astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_block(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Blockwise flash attention for one TokenRing micro-step.
+
+    Args:
+      q: (Sq, H, D) query block.
+      k: (Skv, H_kv, D) resident key block (H_kv <= H divides H: GQA/MQA).
+      v: (Skv, H_kv, D) resident value block.
+      q_pos: (Sq,) int32 global sequence positions of the queries.
+      k_pos: (Skv,) int32 global positions of the keys; entries < 0 are
+        padding and always masked.
+      causal: apply q_pos >= k_pos mask.
+      sm_scale: softmax scale; defaults to 1/sqrt(D).
+
+    Returns:
+      (block_out, block_lse): (Sq, H, D) partial outputs and (H, Sq)
+      log-sum-exp, both f32, ready for the TokenRing merge rule.
+    """
+    sq, h, d = q.shape
+    skv, h_kv, _ = k.shape
+    if h_kv <= 0 or h % h_kv != 0:
+        raise ValueError(f"GQA wants q heads {h} divisible by kv heads {h_kv}")
+    group = h // h_kv  # GQA: `group` query heads share one KV head
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq != 0:
+        raise ValueError(f"Sq={sq} not divisible by block_q={bq}")
+    if skv % bk != 0:
+        raise ValueError(f"Skv={skv} not divisible by block_k={bk}")
+
+    # (S, H, D) -> (H, S, D): head-major so the grid can block over heads.
+    qt = jnp.transpose(q, (1, 0, 2))
+    kt = jnp.transpose(k, (1, 0, 2))
+    vt = jnp.transpose(v, (1, 0, 2))
+
+    grid = (h, sq // bq)
+    kernel = functools.partial(
+        _flash_kernel, block_k=bk, sm_scale=float(sm_scale), causal=causal
+    )
+    out_t, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda ih, iq: (ih, iq, 0)),
+            # GQA: query-head block ih reads KV-head block ih // group
+            pl.BlockSpec((1, skv, d), lambda ih, iq: (ih // group, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda ih, iq: (ih // group, 0, 0)),
+            pl.BlockSpec((bq,), lambda ih, iq: (iq,)),
+            pl.BlockSpec((skv,), lambda ih, iq: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, bq), lambda ih, iq: (ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32))
+
+    return jnp.transpose(out_t, (1, 0, 2)), lse

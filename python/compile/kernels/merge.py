@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: TokenRing online-softmax merge (``Update`` in Alg. 1).
+
+Merges an incoming partial attention result (block_out, block_lse) into the
+running (out, lse) accumulator using the paper's update rule (§3.1):
+
+    out = out - sigmoid(block_lse - lse) * (out - block_out)
+    lse = lse - log(sigmoid(lse - block_lse))
+
+which is algebraically the two-way online-softmax combine
+
+    out' = (e^lse * out + e^blse * block_out) / (e^lse + e^blse)
+    lse' = logaddexp(lse, block_lse)
+
+The kernel is a pure elementwise VPU pass (no reductions, no matmuls) — on a
+real TPU this fuses into the surrounding dataflow; here it is lowered with
+interpret=True like every kernel in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(out_ref, lse_ref, bout_ref, blse_ref, o_ref, l_ref):
+    """One head-tile grid instance.
+
+    Ref shapes:
+      out_ref/bout_ref/o_ref: (1, S, D)
+      lse_ref/blse_ref/l_ref: (1, S)
+    """
+    out = out_ref[0].astype(jnp.float32)
+    bout = bout_ref[0].astype(jnp.float32)
+    lse = lse_ref[0].astype(jnp.float32)
+    blse = blse_ref[0].astype(jnp.float32)
+
+    # sigmoid(blse - lse) done stably via jax.nn.sigmoid; the paper's form.
+    w = jax.nn.sigmoid(blse - lse)  # (S,)
+    o_new = out - w[:, None] * (out - bout)
+    # lse - log(sigmoid(lse - blse)) == logaddexp(lse, blse); use the
+    # logaddexp form directly — same value, no catastrophic cancellation.
+    l_new = jnp.logaddexp(lse, blse)
+
+    o_ref[0] = o_new.astype(o_ref.dtype)
+    l_ref[0] = l_new.astype(l_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_blocks(
+    out: jax.Array,
+    lse: jax.Array,
+    block_out: jax.Array,
+    block_lse: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Merge one partial result into the accumulator.
+
+    Args:
+      out: (S, H, D) running output.
+      lse: (H, S) running log-sum-exp.
+      block_out: (S, H, D) incoming partial output.
+      block_lse: (H, S) incoming partial log-sum-exp.
+
+    Returns:
+      (out', lse') with the same shapes/dtypes (f32).
+    """
+    s, h, d = out.shape
+    out_t = jnp.transpose(out, (1, 0, 2))
+    bout_t = jnp.transpose(block_out, (1, 0, 2))
+
+    o_t, l_new = pl.pallas_call(
+        _merge_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda ih: (ih, 0, 0)),
+            pl.BlockSpec((1, s), lambda ih: (ih, 0)),
+            pl.BlockSpec((1, s, d), lambda ih: (ih, 0, 0)),
+            pl.BlockSpec((1, s), lambda ih: (ih, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, d), lambda ih: (ih, 0, 0)),
+            pl.BlockSpec((1, s), lambda ih: (ih, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(out_t, lse, bout_t, block_lse)
+
+    return jnp.transpose(o_t, (1, 0, 2)), l_new

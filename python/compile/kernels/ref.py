@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is straight-line jnp with no tiling — the correctness ground
+truth for flash.py / merge.py and for the Rust engine's numeric-equivalence
+tests (the Rust side checks its distributed outputs against HLO lowered from
+``attention_reference``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Unfused attention with positional masking.
+
+    Shapes: q (Sq,H,D); k,v (Skv,H_kv,D) with H_kv | H (GQA); q_pos (Sq,);
+    k_pos (Skv,).
+    Returns (out (Sq,H,D) f32, lse (H,Sq) f32). Fully-masked rows yield
+    out = 0, lse = MASK_VALUE, matching the kernel's convention.
+    """
+    d = q.shape[-1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # GQA/MQA: repeat KV heads so each query head sees its group's KV head
+    h, h_kv = q.shape[1], k.shape[1]
+    if h_kv != h:
+        assert h % h_kv == 0, f"q heads {h} not divisible by kv heads {h_kv}"
+        kf = jnp.repeat(kf, h // h_kv, axis=1)
+        vf = jnp.repeat(vf, h // h_kv, axis=1)
+
+    # (H, Sq, Skv)
+    s = jnp.einsum("qhd,khd->hqk", qf, kf) * sm_scale
+    valid = (k_pos >= 0)[None, None, :]
+    if causal:
+        valid = valid & (q_pos[None, :, None] >= k_pos[None, None, :])
+    s = jnp.where(valid, s, MASK_VALUE)
+
+    m = jnp.max(s, axis=-1)  # (H, Sq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1)  # (H, Sq)
+
+    empty = l <= 0.0
+    l_safe = jnp.where(empty, 1.0, l)
+    out = jnp.einsum("hqk,khd->qhd", p / l_safe[..., None], vf)
+    out = jnp.where(jnp.transpose(empty)[:, :, None], 0.0, out)
+    lse = jnp.where(empty, MASK_VALUE, m + jnp.log(l_safe))
+    return out, lse
+
+
+def merge_reference(
+    out: jax.Array,
+    lse: jax.Array,
+    block_out: jax.Array,
+    block_lse: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Paper's update rule, literal transcription (§3.1).
+
+    out (S,H,D); lse (H,S); same for the block_* pair.
+    """
+    out = out.astype(jnp.float32)
+    block_out = block_out.astype(jnp.float32)
+    w = jax.nn.sigmoid(block_lse - lse)  # (H, S)
+    out_new = out - jnp.transpose(w)[:, :, None] * (out - block_out)
+    lse_new = lse - jnp.log(jax.nn.sigmoid(lse - block_lse))
+    return out_new, lse_new
+
+
+def blockwise_attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    num_blocks: int,
+    *,
+    causal: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Compute attention by splitting KV into ``num_blocks`` and merging the
+    partials with merge_reference — the exact dataflow TokenRing distributes.
+    Used to validate that block partitioning + merge == full attention.
+    """
+    skv = k.shape[0]
+    assert skv % num_blocks == 0
+    step = skv // num_blocks
+    out, lse = None, None
+    for b in range(num_blocks):
+        sl = slice(b * step, (b + 1) * step)
+        bo, bl = attention_reference(
+            q, k[sl], v[sl], q_pos, k_pos[sl], causal=causal
+        )
+        if out is None:
+            out, lse = bo, bl
+        else:
+            out, lse = merge_reference(out, lse, bo, bl)
+    return out, lse

@@ -1,0 +1,244 @@
+"""Layer-2: JAX compute graphs lowered to AOT artifacts for the Rust engine.
+
+The Rust coordinator (L3) never runs Python; it loads the HLO text emitted by
+``aot.py`` for the functions defined here. Each function is shape-specialized
+at lowering time (PJRT executables are static-shape), so artifacts are
+generated per *profile* (tiny / small / ...), defined at the bottom.
+
+Graphs:
+  * ``attn_block``        — one TokenRing micro-step: the Pallas flash kernel
+                            (causal or full) producing (block_out, block_lse).
+  * ``merge``             — the paper's Update rule (Pallas merge kernel).
+  * ``layer_pre``         — RMSNorm + fused QKV projection for one sequence
+                            shard (the compute surrounding attention in the
+                            end-to-end transformer example).
+  * ``layer_post``        — output projection + residual + RMSNorm + SwiGLU
+                            MLP + residual for one shard.
+
+All artifacts take positions as explicit int32 inputs so one executable
+serves contiguous, striped and zigzag partitions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention_block, merge_blocks
+
+
+# ---------------------------------------------------------------------------
+# Attention micro-step + merge (the TokenRing hot path)
+# ---------------------------------------------------------------------------
+
+
+def attn_block(q, k, v, q_pos, k_pos, *, causal: bool):
+    """One TokenRing micro-step; returns a tuple for return_tuple lowering."""
+    out, lse = flash_attention_block(q, k, v, q_pos, k_pos, causal=causal)
+    return (out, lse)
+
+
+def merge(out, lse, block_out, block_lse):
+    """Paper §3.1 Update rule."""
+    o, l = merge_blocks(out, lse, block_out, block_lse)
+    return (o, l)
+
+
+# ---------------------------------------------------------------------------
+# Transformer layer shards (end-to-end serving example)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def layer_pre(x, norm_w, wqkv, *, num_heads: int, head_dim: int):
+    """RMSNorm + fused QKV projection on one sequence shard.
+
+    x: (S_loc, E); wqkv: (E, 3*H*D). Returns q, k, v each (S_loc, H, D).
+    """
+    s_loc, _ = x.shape
+    h = rmsnorm(x, norm_w)
+    qkv = h @ wqkv  # (S_loc, 3*H*D)
+    qkv = qkv.reshape(s_loc, 3, num_heads, head_dim)
+    return (qkv[:, 0], qkv[:, 1], qkv[:, 2])
+
+
+def layer_post(attn, x, wo, norm_w, w_gate, w_up, w_down):
+    """Output projection + residual + RMSNorm + SwiGLU MLP + residual.
+
+    attn: (S_loc, H, D); x: (S_loc, E) residual stream. Returns (y,) with
+    y: (S_loc, E).
+    """
+    s_loc = x.shape[0]
+    o = attn.reshape(s_loc, -1) @ wo  # (S_loc, E)
+    h = x + o
+    n = rmsnorm(h, norm_w)
+    mlp = (jax.nn.silu(n @ w_gate) * (n @ w_up)) @ w_down
+    return (h + mlp,)
+
+
+# ---------------------------------------------------------------------------
+# Artifact profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Profile:
+    """Shape specialization for one artifact family.
+
+    sq / skv are the per-step block lengths seen by one device; embed/ffn
+    sizes drive the layer_{pre,post} artifacts (embed == heads * head_dim).
+    """
+
+    name: str
+    sq: int
+    skv: int
+    heads: int
+    head_dim: int
+    ffn: int = 0  # 0 -> no layer artifacts for this profile
+    kv_heads: int = 0  # 0 -> same as heads; < heads = GQA/MQA
+
+    @property
+    def embed(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def kvh(self) -> int:
+        return self.kv_heads or self.heads
+
+
+# tiny: unit tests + engine equivalence (fast on CPU interpret mode).
+# small: examples + e2e serving driver.
+# tiny_full / small_full: whole-sequence reference attention (Sq = Skv = S)
+#   used by the Rust engine to check distributed == single-device.
+# ulysses_tiny: per-device head-sharded full-sequence attention (H/N heads).
+PROFILES: dict[str, Profile] = {
+    p.name: p
+    for p in [
+        Profile("tiny", sq=64, skv=64, heads=4, head_dim=32, ffn=512),
+        Profile("gqa_tiny", sq=64, skv=64, heads=4, head_dim=32, kv_heads=2),
+        Profile("tiny_full", sq=256, skv=256, heads=4, head_dim=32),
+        Profile("ulysses_tiny", sq=256, skv=256, heads=1, head_dim=32),
+        Profile("small", sq=256, skv=256, heads=8, head_dim=64, ffn=2048),
+        Profile("small_full", sq=1024, skv=1024, heads=8, head_dim=64),
+        Profile("ulysses_small", sq=1024, skv=1024, heads=2, head_dim=64),
+    ]
+}
+
+
+@dataclass
+class ArtifactSpec:
+    """One lowered executable: name, the jitted fn, example args, metadata."""
+
+    name: str
+    fn: object
+    args: tuple
+    meta: dict = field(default_factory=dict)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def artifact_specs(profile: Profile) -> list[ArtifactSpec]:
+    """All artifacts for one profile, with input/output specs for the manifest."""
+    p = profile
+    specs: list[ArtifactSpec] = []
+
+    qkv_args = (
+        _f32(p.sq, p.heads, p.head_dim),
+        _f32(p.skv, p.kvh, p.head_dim),
+        _f32(p.skv, p.kvh, p.head_dim),
+        _i32(p.sq),
+        _i32(p.skv),
+    )
+    for causal in (True, False):
+        tag = "causal" if causal else "full"
+        specs.append(
+            ArtifactSpec(
+                name=f"attn_{tag}_{p.name}",
+                fn=jax.jit(lambda q, k, v, qp, kp, c=causal: attn_block(q, k, v, qp, kp, causal=c)),
+                args=qkv_args,
+                meta={
+                    "kind": "attn_block",
+                    "causal": causal,
+                    "sq": p.sq,
+                    "skv": p.skv,
+                    "heads": p.heads,
+                    "kv_heads": p.kvh,
+                    "head_dim": p.head_dim,
+                },
+            )
+        )
+
+    specs.append(
+        ArtifactSpec(
+            name=f"merge_{p.name}",
+            fn=jax.jit(merge),
+            args=(
+                _f32(p.sq, p.heads, p.head_dim),
+                _f32(p.heads, p.sq),
+                _f32(p.sq, p.heads, p.head_dim),
+                _f32(p.heads, p.sq),
+            ),
+            meta={
+                "kind": "merge",
+                "sq": p.sq,
+                "heads": p.heads,
+                "head_dim": p.head_dim,
+            },
+        )
+    )
+
+    if p.ffn:
+        e, f = p.embed, p.ffn
+        specs.append(
+            ArtifactSpec(
+                name=f"layer_pre_{p.name}",
+                fn=jax.jit(
+                    lambda x, nw, wqkv: layer_pre(
+                        x, nw, wqkv, num_heads=p.heads, head_dim=p.head_dim
+                    )
+                ),
+                args=(_f32(p.sq, e), _f32(e), _f32(e, 3 * e)),
+                meta={
+                    "kind": "layer_pre",
+                    "sq": p.sq,
+                    "heads": p.heads,
+                    "head_dim": p.head_dim,
+                    "embed": e,
+                },
+            )
+        )
+        specs.append(
+            ArtifactSpec(
+                name=f"layer_post_{p.name}",
+                fn=jax.jit(layer_post),
+                args=(
+                    _f32(p.sq, p.heads, p.head_dim),
+                    _f32(p.sq, e),
+                    _f32(e, e),
+                    _f32(e),
+                    _f32(e, f),
+                    _f32(e, f),
+                    _f32(f, e),
+                ),
+                meta={
+                    "kind": "layer_post",
+                    "sq": p.sq,
+                    "embed": e,
+                    "ffn": f,
+                },
+            )
+        )
+
+    return specs

@@ -1,0 +1,102 @@
+"""Emit deterministic test vectors for the Rust runtime/engine tests.
+
+Writes JSON files (flat row-major f32 arrays) under <out>/testdata/ so the
+Rust side can assert its PJRT execution and native attention against the
+same oracle the Python tests use. Run by ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .model import PROFILES
+
+
+def _dump(path: str, obj: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+
+def _flat(a) -> list:
+    return [float(x) for x in jnp.ravel(a).tolist()]
+
+
+def attn_case(profile_name: str, causal: bool, seed: int) -> dict:
+    p = PROFILES[profile_name]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (p.sq, p.heads, p.head_dim), jnp.float32)
+    k = jax.random.normal(ks[1], (p.skv, p.heads, p.head_dim), jnp.float32)
+    v = jax.random.normal(ks[2], (p.skv, p.heads, p.head_dim), jnp.float32)
+    # Query block sits "after" the KV block, as in a TokenRing micro-step.
+    q_pos = jnp.arange(p.skv, p.skv + p.sq, dtype=jnp.int32)
+    k_pos = jnp.arange(p.skv, dtype=jnp.int32)
+    out, lse = ref.attention_reference(q, k, v, q_pos, k_pos, causal=causal)
+    return {
+        "profile": profile_name,
+        "causal": causal,
+        "sq": p.sq,
+        "skv": p.skv,
+        "heads": p.heads,
+        "head_dim": p.head_dim,
+        "q": _flat(q),
+        "k": _flat(k),
+        "v": _flat(v),
+        "q_pos": q_pos.tolist(),
+        "k_pos": k_pos.tolist(),
+        "expect_out": _flat(out),
+        "expect_lse": _flat(lse),
+    }
+
+
+def merge_case(profile_name: str, seed: int) -> dict:
+    p = PROFILES[profile_name]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    q = jax.random.normal(ks[0], (p.sq, p.heads, p.head_dim), jnp.float32)
+    k = jax.random.normal(ks[1], (2 * p.skv, p.heads, p.head_dim), jnp.float32)
+    v = jax.random.normal(ks[2], (2 * p.skv, p.heads, p.head_dim), jnp.float32)
+    q_pos = jnp.arange(2 * p.skv, 2 * p.skv + p.sq, dtype=jnp.int32)
+    k_pos = jnp.arange(2 * p.skv, dtype=jnp.int32)
+    o1, l1 = ref.attention_reference(
+        q, k[: p.skv], v[: p.skv], q_pos, k_pos[: p.skv], causal=True
+    )
+    o2, l2 = ref.attention_reference(
+        q, k[p.skv :], v[p.skv :], q_pos, k_pos[p.skv :], causal=True
+    )
+    om, lm = ref.merge_reference(o1, l1, o2, l2)
+    of, lf = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    return {
+        "profile": profile_name,
+        "sq": p.sq,
+        "heads": p.heads,
+        "head_dim": p.head_dim,
+        "out_a": _flat(o1),
+        "lse_a": _flat(l1),
+        "out_b": _flat(o2),
+        "lse_b": _flat(l2),
+        "expect_out": _flat(om),
+        "expect_lse": _flat(lm),
+        "expect_full_out": _flat(of),
+        "expect_full_lse": _flat(lf),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    td = os.path.join(args.out, "testdata")
+    os.makedirs(td, exist_ok=True)
+    _dump(os.path.join(td, "attn_causal_tiny.json"), attn_case("tiny", True, 7))
+    _dump(os.path.join(td, "attn_full_tiny.json"), attn_case("tiny", False, 8))
+    _dump(os.path.join(td, "merge_tiny.json"), merge_case("tiny", 9))
+    print(f"wrote testdata to {td}")
+
+
+if __name__ == "__main__":
+    main()

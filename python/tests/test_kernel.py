@@ -1,0 +1,274 @@
+"""L1 correctness: Pallas flash kernel vs the pure-jnp oracle.
+
+The CORE correctness signal for the whole stack: every number the Rust
+engine circulates comes from these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import flash_attention_block, merge_blocks, ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(seed, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype) * scale
+
+
+def _case(sq, skv, h, d, q_start=0, seed=0):
+    q = _rand(seed, (sq, h, d))
+    k = _rand(seed + 1, (skv, h, d))
+    v = _rand(seed + 2, (skv, h, d))
+    q_pos = jnp.arange(q_start, q_start + sq, dtype=jnp.int32)
+    k_pos = jnp.arange(skv, dtype=jnp.int32)
+    return q, k, v, q_pos, k_pos
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "sq,skv,h,d",
+    [
+        (32, 32, 1, 16),
+        (64, 64, 4, 32),
+        (64, 128, 2, 64),
+        (128, 64, 2, 32),
+        (256, 256, 4, 32),
+    ],
+)
+def test_flash_matches_reference(sq, skv, h, d, causal):
+    q, k, v, q_pos, k_pos = _case(sq, skv, h, d, q_start=skv)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=causal, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=causal)
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32), (64, 64)])
+def test_flash_block_size_invariance(bq, bk):
+    """Output must not depend on the tiling — the flash invariant."""
+    q, k, v, q_pos, k_pos = _case(64, 64, 2, 32, q_start=0, seed=3)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=True, block_q=bq, block_k=bk
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+def test_flash_fully_masked_rows():
+    """Q block strictly before the KV block: every row fully masked."""
+    q, k, v, _, k_pos = _case(32, 32, 2, 16, seed=4)
+    q_pos = jnp.arange(32, dtype=jnp.int32)  # positions 0..31
+    k_pos = k_pos + 1000  # keys at 1000..1031 — all in the future
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=True, block_q=32, block_k=32
+    )
+    assert np.all(np.asarray(out) == 0.0)
+    assert np.all(np.asarray(lse) <= ref.MASK_VALUE / 2)
+
+
+def test_flash_padding_keys_masked():
+    """k_pos < 0 marks padding; result equals attention over the valid prefix."""
+    q, k, v, q_pos, k_pos = _case(32, 64, 2, 16, q_start=64, seed=5)
+    k_pos_pad = k_pos.at[32:].set(-1)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos_pad, causal=True, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(
+        q, k[:32], v[:32], q_pos, k_pos[:32], causal=True
+    )
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+def test_flash_diagonal_block_causal():
+    """Q and KV cover the same positions — the self-block of a causal run."""
+    q, k, v, q_pos, k_pos = _case(64, 64, 2, 32, q_start=0, seed=6)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=True, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+def test_flash_zigzag_positions():
+    """Non-contiguous (zigzag) query positions: chunk 0 + chunk 2N-1."""
+    sq, h, d = 64, 2, 32
+    q = _rand(10, (sq, h, d))
+    k = _rand(11, (sq, h, d))
+    v = _rand(12, (sq, h, d))
+    # device 0 under zigzag with N=4, S=256, chunk=32: owns chunks 0 and 7
+    q_pos = jnp.concatenate(
+        [jnp.arange(0, 32), jnp.arange(224, 256)]
+    ).astype(jnp.int32)
+    k_pos = jnp.concatenate(
+        [jnp.arange(96, 128), jnp.arange(128, 160)]
+    ).astype(jnp.int32)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=True, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+def test_flash_scale_override():
+    q, k, v, q_pos, k_pos = _case(32, 32, 2, 16, q_start=32, seed=7)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=False, sm_scale=0.5, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(
+        q, k, v, q_pos, k_pos, causal=False, sm_scale=0.5
+    )
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+def test_flash_rejects_indivisible_blocks():
+    q, k, v, q_pos, k_pos = _case(48, 64, 1, 16)
+    with pytest.raises(ValueError, match="not divisible"):
+        flash_attention_block(
+            q, k, v, q_pos, k_pos, causal=True, block_q=32, block_k=32
+        )
+
+
+# ---------------------------------------------------------------------------
+# Merge kernel
+# ---------------------------------------------------------------------------
+
+
+def _partials(seed, sq=64, skv=64, h=2, d=32):
+    q, k, v, q_pos, _ = _case(sq, 2 * skv, h, d, q_start=2 * skv, seed=seed)
+    k = _rand(seed + 10, (2 * skv, h, d))
+    v = _rand(seed + 11, (2 * skv, h, d))
+    k_pos = jnp.arange(2 * skv, dtype=jnp.int32)
+    a = ref.attention_reference(q, k[:skv], v[:skv], q_pos, k_pos[:skv])
+    b = ref.attention_reference(q, k[skv:], v[skv:], q_pos, k_pos[skv:])
+    full = ref.attention_reference(q, k, v, q_pos, k_pos)
+    return a, b, full
+
+
+def test_merge_matches_reference():
+    (oa, la), (ob, lb), _ = _partials(20)
+    om, lm = merge_blocks(oa, la, ob, lb)
+    eo, el = ref.merge_reference(oa, la, ob, lb)
+    np.testing.assert_allclose(om, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lm, el, atol=ATOL, rtol=RTOL)
+
+
+def test_merge_recovers_full_attention():
+    (oa, la), (ob, lb), (of, lf) = _partials(21)
+    om, lm = merge_blocks(oa, la, ob, lb)
+    np.testing.assert_allclose(om, of, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(lm, lf, atol=1e-4, rtol=1e-4)
+
+
+def test_merge_commutative():
+    (oa, la), (ob, lb), _ = _partials(22)
+    o1, l1 = merge_blocks(oa, la, ob, lb)
+    o2, l2 = merge_blocks(ob, lb, oa, la)
+    np.testing.assert_allclose(o1, o2, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(l1, l2, atol=1e-4, rtol=1e-4)
+
+
+def test_merge_with_empty_partial_is_identity():
+    """Merging a fully-masked partial (out=0, lse=MASK) must be a no-op."""
+    (oa, la), _, _ = _partials(23)
+    zero_out = jnp.zeros_like(oa)
+    mask_lse = jnp.full_like(la, ref.MASK_VALUE)
+    om, lm = merge_blocks(oa, la, zero_out, mask_lse)
+    np.testing.assert_allclose(om, oa, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lm, la, atol=ATOL, rtol=RTOL)
+
+
+def test_merge_associative_three_way():
+    """(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) — the invariant TokenRing's out-of-order
+    arrivals rely on."""
+    h, d, sq, skv = 2, 16, 32, 32
+    q = _rand(30, (sq, h, d))
+    k = _rand(31, (3 * skv, h, d))
+    v = _rand(32, (3 * skv, h, d))
+    q_pos = jnp.arange(3 * skv, 3 * skv + sq, dtype=jnp.int32)
+    k_pos = jnp.arange(3 * skv, dtype=jnp.int32)
+    parts = [
+        ref.attention_reference(
+            q,
+            k[i * skv : (i + 1) * skv],
+            v[i * skv : (i + 1) * skv],
+            q_pos,
+            k_pos[i * skv : (i + 1) * skv],
+        )
+        for i in range(3)
+    ]
+    ab = merge_blocks(*parts[0], *parts[1])
+    left = merge_blocks(*ab, *parts[2])
+    bc = merge_blocks(*parts[1], *parts[2])
+    right = merge_blocks(*parts[0], *bc)
+    np.testing.assert_allclose(left[0], right[0], atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(left[1], right[1], atol=1e-4, rtol=1e-4)
+
+
+def test_blockwise_reference_equals_full():
+    q, k, v, q_pos, k_pos = _case(64, 256, 2, 32, q_start=256, seed=40)
+    ob, lb = ref.blockwise_attention_reference(
+        q, k, v, q_pos, k_pos, num_blocks=4
+    )
+    of, lf = ref.attention_reference(q, k, v, q_pos, k_pos)
+    np.testing.assert_allclose(ob, of, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(lb, lf, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA (the head-sharing regimes where Ulysses' degree cap bites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,h_kv", [(4, 2), (4, 1), (8, 2)])
+def test_flash_gqa_matches_reference(h, h_kv):
+    sq, skv, d = 64, 64, 32
+    q = _rand(60, (sq, h, d))
+    k = _rand(61, (skv, h_kv, d))
+    v = _rand(62, (skv, h_kv, d))
+    q_pos = jnp.arange(skv, skv + sq, dtype=jnp.int32)
+    k_pos = jnp.arange(skv, dtype=jnp.int32)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=True, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(out, eo, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(lse, el, atol=ATOL, rtol=RTOL)
+
+
+def test_flash_gqa_equals_repeated_kv():
+    """GQA result == MHA with explicitly repeated KV heads."""
+    sq, skv, h, h_kv, d = 32, 32, 4, 2, 16
+    q = _rand(63, (sq, h, d))
+    k = _rand(64, (skv, h_kv, d))
+    v = _rand(65, (skv, h_kv, d))
+    q_pos = jnp.arange(sq, dtype=jnp.int32)
+    k_pos = jnp.arange(skv, dtype=jnp.int32)
+    o1, l1 = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=False, block_q=32, block_k=32
+    )
+    k_rep = jnp.repeat(k, h // h_kv, axis=1)
+    v_rep = jnp.repeat(v, h // h_kv, axis=1)
+    o2, l2 = flash_attention_block(
+        q, k_rep, v_rep, q_pos, k_pos, causal=False, block_q=32, block_k=32
+    )
+    np.testing.assert_allclose(o1, o2, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(l1, l2, atol=1e-6, rtol=1e-6)
+
+
+def test_flash_gqa_rejects_uneven_groups():
+    q = _rand(66, (32, 3, 16))
+    k = _rand(67, (32, 2, 16))
+    pos = jnp.arange(32, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="divisible"):
+        flash_attention_block(q, k, k, pos, pos, causal=True)

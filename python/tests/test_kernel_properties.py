@@ -1,0 +1,119 @@
+"""Hypothesis sweeps over the Pallas kernel's shape/position space.
+
+These complement test_kernel.py's fixed cases: shapes, block sizes, position
+layouts and value scales are drawn randomly and the kernel must always agree
+with the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention_block, merge_blocks, ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _tile(draw_pow):
+    return st.sampled_from([16, 32, 64])
+
+
+@st.composite
+def attn_shapes(draw):
+    bq = draw(st.sampled_from([16, 32]))
+    bk = draw(st.sampled_from([16, 32]))
+    sq = bq * draw(st.integers(1, 3))
+    skv = bk * draw(st.integers(1, 3))
+    h = draw(st.sampled_from([1, 2, 4]))
+    d = draw(st.sampled_from([8, 16, 32]))
+    causal = draw(st.booleans())
+    q_start = draw(st.integers(0, 2 * skv))
+    seed = draw(st.integers(0, 2**16))
+    scale = draw(st.sampled_from([0.1, 1.0, 5.0]))
+    return bq, bk, sq, skv, h, d, causal, q_start, seed, scale
+
+
+@given(attn_shapes())
+@settings(**SETTINGS)
+def test_flash_random_shapes(params):
+    bq, bk, sq, skv, h, d, causal, q_start, seed, scale = params
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (sq, h, d), jnp.float32) * scale
+    k = jax.random.normal(ks[1], (skv, h, d), jnp.float32) * scale
+    v = jax.random.normal(ks[2], (skv, h, d), jnp.float32)
+    q_pos = jnp.arange(q_start, q_start + sq, dtype=jnp.int32)
+    k_pos = jnp.arange(skv, dtype=jnp.int32)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=causal, block_q=bq, block_k=bk
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=causal)
+    np.testing.assert_allclose(out, eo, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(lse, el, atol=5e-5, rtol=5e-5)
+
+
+@st.composite
+def permuted_positions(draw):
+    """Arbitrary position permutations — supersets of striped/zigzag."""
+    n = draw(st.sampled_from([32, 64]))
+    seed = draw(st.integers(0, 2**16))
+    return n, seed
+
+
+@given(permuted_positions())
+@settings(**SETTINGS)
+def test_flash_arbitrary_position_permutation(params):
+    n, seed = params
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h, d = 2, 16
+    q = jax.random.normal(ks[0], (n, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (n, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (n, h, d), jnp.float32)
+    q_pos = jnp.asarray(rng.permutation(4 * n)[:n], dtype=jnp.int32)
+    k_pos = jnp.asarray(rng.permutation(4 * n)[:n], dtype=jnp.int32)
+    out, lse = flash_attention_block(
+        q, k, v, q_pos, k_pos, causal=True, block_q=32, block_k=32
+    )
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(out, eo, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(lse, el, atol=5e-5, rtol=5e-5)
+
+
+@st.composite
+def merge_orders(draw):
+    nblocks = draw(st.integers(2, 5))
+    order = draw(st.permutations(list(range(nblocks))))
+    seed = draw(st.integers(0, 2**16))
+    return nblocks, list(order), seed
+
+
+@given(merge_orders())
+@settings(**SETTINGS)
+def test_merge_order_invariance(params):
+    """Merging partials in ANY order gives full attention — the invariant
+    that lets TokenRing ship block_out backwards asynchronously."""
+    nblocks, order, seed = params
+    sq, skv, h, d = 32, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (nblocks * skv, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (nblocks * skv, h, d), jnp.float32)
+    q_pos = jnp.arange(nblocks * skv, nblocks * skv + sq, dtype=jnp.int32)
+    k_pos = jnp.arange(nblocks * skv, dtype=jnp.int32)
+    parts = [
+        ref.attention_reference(
+            q,
+            k[i * skv : (i + 1) * skv],
+            v[i * skv : (i + 1) * skv],
+            q_pos,
+            k_pos[i * skv : (i + 1) * skv],
+        )
+        for i in range(nblocks)
+    ]
+    out, lse = parts[order[0]]
+    for idx in order[1:]:
+        out, lse = merge_blocks(out, lse, *parts[idx])
+    of, lf = ref.attention_reference(q, k, v, q_pos, k_pos)
+    np.testing.assert_allclose(out, of, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(lse, lf, atol=2e-4, rtol=2e-4)

@@ -1,0 +1,105 @@
+"""L2 tests: model graphs, profiles and the AOT manifest pipeline."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def test_profiles_well_formed():
+    for p in model.PROFILES.values():
+        assert p.sq > 0 and p.skv > 0 and p.heads > 0 and p.head_dim > 0
+        assert p.embed == p.heads * p.head_dim
+
+
+def test_attn_block_graph_matches_oracle():
+    p = model.PROFILES["tiny"]
+    q = _rand(0, (p.sq, p.heads, p.head_dim))
+    k = _rand(1, (p.skv, p.heads, p.head_dim))
+    v = _rand(2, (p.skv, p.heads, p.head_dim))
+    q_pos = jnp.arange(p.skv, p.skv + p.sq, dtype=jnp.int32)
+    k_pos = jnp.arange(p.skv, dtype=jnp.int32)
+    out, lse = model.attn_block(q, k, v, q_pos, k_pos, causal=True)
+    eo, el = ref.attention_reference(q, k, v, q_pos, k_pos, causal=True)
+    np.testing.assert_allclose(out, eo, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(lse, el, atol=2e-5, rtol=2e-5)
+
+
+def test_layer_pre_shapes_and_norm():
+    p = model.PROFILES["tiny"]
+    e = p.embed
+    x = _rand(3, (p.sq, e))
+    nw = jnp.ones((e,))
+    wqkv = _rand(4, (e, 3 * e)) * 0.02
+    q, k, v = model.layer_pre(x, nw, wqkv, num_heads=p.heads, head_dim=p.head_dim)
+    assert q.shape == (p.sq, p.heads, p.head_dim)
+    assert k.shape == v.shape == q.shape
+    # RMSNorm: unit-weight norm of x has ~unit RMS per row
+    h = model.rmsnorm(x, nw)
+    rms = jnp.sqrt(jnp.mean(jnp.square(h), axis=-1))
+    np.testing.assert_allclose(rms, np.ones(p.sq), atol=1e-3)
+
+
+def test_layer_post_residual_path():
+    p = model.PROFILES["tiny"]
+    e, f = p.embed, p.ffn
+    attn = jnp.zeros((p.sq, p.heads, p.head_dim))
+    x = _rand(5, (p.sq, e))
+    wo = _rand(6, (e, e)) * 0.02
+    nw = jnp.ones((e,))
+    wg = jnp.zeros((e, f))
+    wu = _rand(7, (e, f)) * 0.02
+    wd = _rand(8, (f, e)) * 0.02
+    (y,) = model.layer_post(attn, x, wo, nw, wg, wu, wd)
+    # zero attention + zero gate -> y == x (pure residual)
+    np.testing.assert_allclose(y, x, atol=1e-5)
+
+
+def test_artifact_specs_cover_expected_kinds():
+    specs = model.artifact_specs(model.PROFILES["tiny"])
+    kinds = sorted(s.meta["kind"] for s in specs)
+    assert kinds == ["attn_block", "attn_block", "layer_post", "layer_pre", "merge"]
+    # full-profile (no ffn) omits layer artifacts
+    specs_full = model.artifact_specs(model.PROFILES["tiny_full"])
+    kinds_full = sorted(s.meta["kind"] for s in specs_full)
+    assert kinds_full == ["attn_block", "attn_block", "merge"]
+
+
+def test_aot_lowering_roundtrip(tmp_path):
+    """Lower one artifact, check HLO text + manifest entry sanity."""
+    spec = model.artifact_specs(model.PROFILES["tiny"])[0]
+    entry = aot.lower_artifact(spec, str(tmp_path))
+    text = (tmp_path / entry["file"]).read_text()
+    assert "ENTRY" in text and "HloModule" in text
+    assert entry["inputs"][0]["shape"] == [64, 4, 32]
+    assert entry["outputs"][0]["shape"] == [64, 4, 32]
+    assert entry["outputs"][1]["shape"] == [4, 64]
+    assert len(entry["sha256"]) == 16
+
+
+def test_manifest_artifact_dir():
+    """The checked-in artifacts/ dir (built by `make artifacts`) is coherent."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built yet")
+    man = json.load(open(man_path))
+    for entry in man["artifacts"]:
+        assert os.path.exists(os.path.join(art, entry["file"])), entry["name"]
+        assert entry["meta"]["kind"] in {
+            "attn_block",
+            "merge",
+            "layer_pre",
+            "layer_post",
+        }

@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks — the instrument for the performance pass
+//! (EXPERIMENTS.md §Perf). Measures the L3 pieces that sit on the request
+//! path: the native attention micro-step, the merge Update rule, the full
+//! threaded engine round trip, and the simulator's scheduling throughput.
+//!
+//! Run: `cargo bench --bench engine_hotpath`
+
+use tokenring::attention::{attention_block, merge_into};
+use tokenring::comm::{AttnShape, ComputeModel, Dtype};
+use tokenring::engine::backend::BackendSpec;
+use tokenring::engine::{run_ring_attention, run_token_ring, EngineOpts};
+use tokenring::parallelism::partition::Partition;
+use tokenring::parallelism::token_ring::TokenRing;
+use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::tensor::Tensor;
+use tokenring::topology::Topology;
+use tokenring::util::rng::Rng;
+use tokenring::util::stats::{bench_fn, Table};
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
+}
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let mut t = Table::new(&["benchmark", "p50", "throughput"]);
+
+    // --- native attention micro-step (the per-device compute kernel)
+    for (sq, skv, h, d) in [(64usize, 64usize, 4usize, 32usize), (256, 256, 8, 64)] {
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        let s = bench_fn(3, 30, || {
+            let _ = attention_block(&q, &k, &v, &qp, &kp, true, None);
+        });
+        let flops = 4.0 * sq as f64 * skv as f64 * (h * d) as f64;
+        t.row(&[
+            format!("attn_block {sq}x{skv} H{h} D{d}"),
+            s.human_time(),
+            format!("{:.2} GFLOP/s", flops / s.p50 / 1e9),
+        ]);
+    }
+
+    // --- merge Update rule (the L3 hot loop; zero-alloc in-place)
+    for (s_len, h, d) in [(64usize, 4usize, 32usize), (256, 8, 64), (1024, 8, 64)] {
+        let mut out = rand_t(&mut rng, &[s_len, h, d]);
+        let mut lse = rand_t(&mut rng, &[h, s_len]);
+        let bo = rand_t(&mut rng, &[s_len, h, d]);
+        let bl = rand_t(&mut rng, &[h, s_len]);
+        let s = bench_fn(10, 100, || {
+            merge_into(&mut out, &mut lse, &bo, &bl);
+        });
+        let bytes = (out.size_bytes() * 2 + bo.size_bytes()) as f64;
+        t.row(&[
+            format!("merge_into S{s_len} H{h} D{d}"),
+            s.human_time(),
+            format!("{:.2} GB/s", bytes / s.p50 / 1e9),
+        ]);
+    }
+
+    // --- full threaded engine round trips
+    for (seq, h, d, n) in [(256usize, 4usize, 32usize, 4usize), (1024, 8, 64, 4)] {
+        let q = rand_t(&mut rng, &[seq, h, d]);
+        let k = rand_t(&mut rng, &[seq, h, d]);
+        let v = rand_t(&mut rng, &[seq, h, d]);
+        let opts = EngineOpts {
+            causal: true,
+            partition: Partition::Zigzag,
+            backend: BackendSpec::Native,
+            record: false,
+        };
+        let s = bench_fn(2, 10, || {
+            let _ = run_token_ring(&q, &k, &v, n, &opts).unwrap();
+        });
+        t.row(&[
+            format!("engine token_ring S{seq} N{n}"),
+            s.human_time(),
+            format!("{:.0} tok/s", seq as f64 / s.p50),
+        ]);
+        let s2 = bench_fn(2, 10, || {
+            let _ = run_ring_attention(&q, &k, &v, n, &opts).unwrap();
+        });
+        t.row(&[
+            format!("engine ring_attn  S{seq} N{n}"),
+            s2.human_time(),
+            format!("{:.0} tok/s", seq as f64 / s2.p50),
+        ]);
+    }
+
+    // --- simulator throughput (DESIGN.md §Perf: >= 1e6 tasks/s target)
+    let job = AttnJob {
+        shape: AttnShape::new(98_304, 32, 128, Dtype::F16),
+        compute: ComputeModel::a10(0.67),
+        causal: false,
+        partition: Partition::Contiguous,
+    };
+    let topo = Topology::oam_mesh(32, 1600.0);
+    let g = TokenRing::default().build(&topo, &job);
+    let n_tasks = g.len();
+    let s = bench_fn(2, 10, || {
+        let _ = tokenring::simulator::simulate(&g);
+    });
+    t.row(&[
+        format!("simulate N=32 graph ({n_tasks} tasks)"),
+        s.human_time(),
+        format!("{:.0}k tasks/s", n_tasks as f64 / s.p50 / 1e3),
+    ]);
+
+    println!("{}", t.render());
+}

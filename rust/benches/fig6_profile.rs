@@ -1,0 +1,40 @@
+//! Bench F6 — regenerates Figure 6: per-step attention profile, S=24000,
+//! 4×A10 (PIX/PXB), TokenRing vs Ring-Attention, plus sweep over nearby
+//! sequence lengths to show where the comm-bound regime begins.
+//!
+//! Run: `cargo bench --bench fig6_profile`
+
+use tokenring::reports;
+use tokenring::util::stats::{bench_fn, Table};
+
+fn main() {
+    let (report, tr, ra) = reports::fig6(24_000);
+    println!("{report}");
+
+    // sensitivity: the same profile across sequence lengths
+    let mut t = Table::new(&[
+        "S", "tokenring makespan (ms)", "ring makespan (ms)", "speedup",
+    ]);
+    for seq in [8_000usize, 16_000, 24_000, 48_000, 96_000] {
+        let (_, tr_p, ra_p) = reports::fig6(seq);
+        t.row(&[
+            seq.to_string(),
+            format!("{:.2}", tr_p.makespan * 1e3),
+            format!("{:.2}", ra_p.makespan * 1e3),
+            format!("{:.2}x", ra_p.makespan / tr_p.makespan),
+        ]);
+    }
+    println!("Sequence-length sensitivity (same A10 box):\n\n{}", t.render());
+
+    // how fast is the simulator itself (events/s — DESIGN.md §Perf target)
+    let n_tasks = tr.sim.graph.len() + ra.sim.graph.len();
+    let s = bench_fn(3, 20, || {
+        let _ = reports::fig6(24_000);
+    });
+    println!(
+        "harness: fig6 regeneration {} ({} sim tasks, ~{:.0}k tasks/s)",
+        s.human_time(),
+        n_tasks,
+        n_tasks as f64 / s.p50 / 1e3
+    );
+}

@@ -1,0 +1,14 @@
+//! Bench S1 — the §3.1 scaling claim: per-step compute shrinks ~1/N² while
+//! per-step communication shrinks ~1/N, so rings become comm-bound as N
+//! grows; TokenRing moves the crossover out by ~2×.
+//!
+//! Run: `cargo bench --bench scaling_gpus`
+
+use tokenring::reports;
+
+fn main() {
+    println!("{}", reports::scaling_gpus(49_152, &[2, 4, 8, 16, 32]));
+    // fixed per-device block (weak scaling): comm/compute ratio exposes the
+    // 1/N vs 1/N² argument directly
+    println!("{}", reports::scaling_gpus(98_304, &[2, 4, 8, 16, 32]));
+}

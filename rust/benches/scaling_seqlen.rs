@@ -1,0 +1,19 @@
+//! Bench S2 — long-context scaling: throughput (tokens/s) of each scheme
+//! as the sequence grows toward the paper's "infinite-context" regime.
+//!
+//! Run: `cargo bench --bench scaling_seqlen`
+
+use tokenring::reports;
+
+fn main() {
+    // weak scaling: fixed tokens/device, N grows with the context
+    for block in [4096usize, 8192] {
+        println!(
+            "{}",
+            reports::scaling_seqlen(
+                block,
+                &[8_192, 16_384, 32_768, 65_536, 131_072, 262_144],
+            )
+        );
+    }
+}

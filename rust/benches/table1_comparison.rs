@@ -1,0 +1,67 @@
+//! Bench T1 — regenerates Table 1: the parallelism comparison (TP /
+//! Ring-Attention / Ulysses / TokenRing) with measured per-step volumes,
+//! duplex utilization, degree caps and simulated makespans, across the
+//! §2.2 interconnects.
+//!
+//! Run: `cargo bench --bench table1_comparison`
+
+use tokenring::comm::{self, ComputeModel};
+use tokenring::config::A10_FLASH_EFFICIENCY;
+use tokenring::model::ModelConfig;
+use tokenring::parallelism::partition::Partition;
+use tokenring::parallelism::ring_attention::RingAttention;
+use tokenring::parallelism::tensor_parallel::TensorParallel;
+use tokenring::parallelism::token_ring::TokenRing;
+use tokenring::parallelism::ulysses::Ulysses;
+use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::reports;
+use tokenring::topology::Topology;
+use tokenring::util::stats::Table;
+
+fn main() {
+    let (report, _) = reports::table1(24_000, 4);
+    println!("{report}");
+
+    // the same comparison across interconnect architectures (§2.2)
+    let model = ModelConfig::llama2_7b();
+    let seq = 65_536;
+    let n = 8;
+    let topos: Vec<(&str, Topology)> = vec![
+        ("oam_mesh (HCCS/OAM)", Topology::oam_mesh(n, 400.0)),
+        ("nvswitch", Topology::nvswitch(n, 300.0)),
+        ("uniform 25GB/s", Topology::uniform_mesh(n, 25.0)),
+    ];
+    let mut t = Table::new(&[
+        "topology", "tensor_parallel (ms)", "ring_attention (ms)", "ulysses (ms)", "token_ring (ms)",
+    ]);
+    for (name, topo) in &topos {
+        let job = AttnJob {
+            shape: model.attn_shape(seq),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
+            causal: false,
+            partition: Partition::Contiguous,
+        };
+        let row: Vec<String> = vec![
+            name.to_string(),
+            format!("{:.2}", TensorParallel.simulate(topo, &job).makespan * 1e3),
+            format!("{:.2}", RingAttention.simulate(topo, &job).makespan * 1e3),
+            format!("{:.2}", Ulysses.simulate(topo, &job).makespan * 1e3),
+            format!("{:.2}", TokenRing::default().simulate(topo, &job).makespan * 1e3),
+        ];
+        t.row(&row);
+    }
+    println!(
+        "Cross-topology makespans (LLaMA2-7B, S={seq}, N={n}):\n\n{}",
+        t.render()
+    );
+
+    // GQA degree-cap demonstration (Table 1's Ulysses limitation)
+    let gqa = ModelConfig::llama3_8b_gqa();
+    println!(
+        "Ulysses degree cap: llama2_7b supports SP<= {} heads; {} KV-caps at {} (GQA)",
+        model.heads, gqa.name, gqa.kv_heads
+    );
+    let shape = gqa.attn_shape(seq);
+    let v = comm::volume_ulysses(&shape, 8);
+    println!("  at N=8 ulysses is legal for Q-heads but KV-shards limit degree to {}\n", v.max_degree.unwrap().min(gqa.kv_heads));
+}

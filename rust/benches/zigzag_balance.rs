@@ -1,0 +1,12 @@
+//! Bench Z1 — §3.3.2 ablation: causal load balance and Q-elision volume by
+//! partition strategy (contiguous vs striped vs zigzag).
+//!
+//! Run: `cargo bench --bench zigzag_balance`
+
+use tokenring::reports;
+
+fn main() {
+    for (seq, n) in [(32_768usize, 4usize), (65_536, 8), (131_072, 16)] {
+        println!("{}", reports::zigzag_balance(seq, n));
+    }
+}

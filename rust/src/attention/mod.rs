@@ -1,0 +1,465 @@
+//! Native blockwise attention + the TokenRing merge rule.
+//!
+//! This is (a) the oracle the engine tests compare against, and (b) the
+//! default compute backend when PJRT artifacts are not loaded (e.g. the
+//! threaded engine, where each device actor computes its own blocks).
+//!
+//! Layouts match the AOT artifacts: q/k/v/out are `(S, H, D)` row-major,
+//! lse is `(H, S)` — exactly what flash.py emits, so PJRT and native
+//! backends are interchangeable bit-for-bit at test tolerance.
+
+use crate::tensor::Tensor;
+
+/// Matches kernels/flash.py: finite "minus infinity" so fully-masked rows
+/// produce (out = 0, lse = MASK_VALUE) instead of NaN.
+pub const MASK_VALUE: f32 = -1e30;
+
+/// Attention of one query block against one KV block with positional
+/// causal masking. Returns `(block_out, block_lse)`.
+///
+/// q: (Sq,H,D); k,v: (Skv,H,D); q_pos: Sq positions; k_pos: Skv positions
+/// (entries < 0 are padding and always masked).
+pub fn attention_block(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    q_pos: &[i32],
+    k_pos: &[i32],
+    causal: bool,
+    sm_scale: Option<f32>,
+) -> (Tensor, Tensor) {
+    let (sq, h, d) = dims3(q);
+    let (skv, h_kv, dk) = dims3(k);
+    assert_eq!(d, dk, "q/k head_dim mismatch");
+    assert!(
+        h_kv > 0 && h % h_kv == 0,
+        "GQA wants q heads {h} divisible by kv heads {h_kv}"
+    );
+    assert_eq!(k.shape(), v.shape(), "k/v shape mismatch");
+    assert_eq!(q_pos.len(), sq, "q_pos length");
+    assert_eq!(k_pos.len(), skv, "k_pos length");
+    let group = h / h_kv; // GQA: `group` query heads share one KV head
+    let scale = sm_scale.unwrap_or(1.0 / (d as f32).sqrt());
+
+    let qd = q.data();
+    let kd = k.data();
+    let vd = v.data();
+    let mut out = Tensor::zeros(&[sq, h, d]);
+    let mut lse = Tensor::zeros(&[h, sq]);
+    let od = out.data_mut();
+    // score row buffer reused across (h, i)
+    let mut s = vec![0.0f32; skv];
+
+    for hi in 0..h {
+        let hk = hi / group;
+        for i in 0..sq {
+            let qrow = &qd[(i * h + hi) * d..(i * h + hi + 1) * d];
+            let qp = q_pos[i];
+            let mut m = MASK_VALUE;
+            let mut any = false;
+            for (j, sj) in s.iter_mut().enumerate() {
+                let masked = k_pos[j] < 0 || (causal && qp < k_pos[j]);
+                if masked {
+                    *sj = f32::NEG_INFINITY; // sentinel: skip in second pass
+                    continue;
+                }
+                let krow = &kd[(j * h_kv + hk) * d..(j * h_kv + hk + 1) * d];
+                let sc = dot(qrow, krow) * scale;
+                *sj = sc;
+                if sc > m {
+                    m = sc;
+                }
+                any = true;
+            }
+            let lse_ref = &mut lse.data_mut()[hi * sq + i];
+            let orow = &mut od[(i * h + hi) * d..(i * h + hi + 1) * d];
+            if !any {
+                // fully masked: out = 0 (already), lse = MASK_VALUE
+                *lse_ref = MASK_VALUE;
+                continue;
+            }
+            let mut l = 0.0f32;
+            orow.fill(0.0);
+            for (j, &sj) in s.iter().enumerate() {
+                if sj == f32::NEG_INFINITY {
+                    continue;
+                }
+                let p = (sj - m).exp();
+                l += p;
+                let vrow = &vd[(j * h_kv + hk) * d..(j * h_kv + hk + 1) * d];
+                axpy(orow, p, vrow);
+            }
+            let inv = 1.0 / l;
+            for t in orow.iter_mut() {
+                *t *= inv;
+            }
+            *lse_ref = m + l.ln();
+        }
+    }
+    (out, lse)
+}
+
+/// SIMD-friendly dot product: four independent accumulators so the
+/// autovectorizer emits packed FMAs instead of a serial reduction chain.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        let (x, y) = (&a[i..i + 8], &b[i..i + 8]);
+        for t in 0..8 {
+            acc[t] += x[t] * y[t];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Vectorizable y += a·x.
+#[inline]
+fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// The paper's Update rule (§3.1), in place — the L3 merge hot path.
+///
+///   out = out - sigmoid(block_lse - lse) * (out - block_out)
+///   lse = logaddexp(lse, block_lse)
+///
+/// out/lse are the accumulator; block_out/block_lse the arriving partial.
+pub fn merge_into(
+    out: &mut Tensor,
+    lse: &mut Tensor,
+    block_out: &Tensor,
+    block_lse: &Tensor,
+) {
+    let (s, h, d) = dims3(out);
+    assert_eq!(out.shape(), block_out.shape(), "out shape mismatch");
+    assert_eq!(lse.shape(), &[h, s], "lse shape mismatch");
+    assert_eq!(lse.shape(), block_lse.shape(), "block_lse shape mismatch");
+
+    let od = out.data_mut();
+    let ld = lse.data_mut();
+    let bod = block_out.data();
+    let bld = block_lse.data();
+
+    for hi in 0..h {
+        for i in 0..s {
+            let a = ld[hi * s + i];
+            let b = bld[hi * s + i];
+            // w = sigmoid(b - a), computed stably for |b-a| large.
+            let w = sigmoid(b - a);
+            let base = (i * h + hi) * d;
+            let orow = &mut od[base..base + d];
+            let brow = &bod[base..base + d];
+            for t in 0..d {
+                orow[t] -= w * (orow[t] - brow[t]);
+            }
+            ld[hi * s + i] = logaddexp(a, b);
+        }
+    }
+}
+
+/// Full attention over an entire sequence: the single-device reference the
+/// distributed engines must reproduce.
+pub fn full_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+) -> (Tensor, Tensor) {
+    let s = q.shape()[0];
+    let pos: Vec<i32> = (0..s as i32).collect();
+    attention_block(q, k, v, &pos, &pos, causal, None)
+}
+
+/// Per-(head,query) merge weight — exposed for tests.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+pub fn logaddexp(a: f32, b: f32) -> f32 {
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    if lo == MASK_VALUE || hi - lo > 80.0 {
+        return hi;
+    }
+    hi + (lo - hi).exp().ln_1p()
+}
+
+fn dims3(t: &Tensor) -> (usize, usize, usize) {
+    let sh = t.shape();
+    assert_eq!(sh.len(), 3, "expected rank-3 tensor, got {sh:?}");
+    (sh[0], sh[1], sh[2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
+    }
+
+    /// Brute-force softmax attention for cross-checking (independent code path).
+    fn naive(
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+        causal: bool,
+    ) -> Tensor {
+        let (sq, h, d) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+        let skv = k.shape()[0];
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = Tensor::zeros(&[sq, h, d]);
+        for hi in 0..h {
+            for i in 0..sq {
+                let mut ws = vec![0.0f64; skv];
+                let mut z = 0.0f64;
+                for j in 0..skv {
+                    if k_pos[j] < 0 || (causal && q_pos[i] < k_pos[j]) {
+                        continue;
+                    }
+                    let mut dot = 0.0f32;
+                    for t in 0..d {
+                        dot += q.data()[(i * h + hi) * d + t] * k.data()[(j * h + hi) * d + t];
+                    }
+                    ws[j] = ((dot * scale) as f64).exp();
+                    z += ws[j];
+                }
+                if z == 0.0 {
+                    continue;
+                }
+                for j in 0..skv {
+                    let w = (ws[j] / z) as f32;
+                    for t in 0..d {
+                        out.data_mut()[(i * h + hi) * d + t] +=
+                            w * v.data()[(j * h + hi) * d + t];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_noncausal() {
+        let mut rng = Rng::new(1);
+        let (sq, skv, h, d) = (16, 24, 2, 8);
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp: Vec<i32> = (0..sq as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        let (out, _) = attention_block(&q, &k, &v, &qp, &kp, false, None);
+        let exp = naive(&q, &k, &v, &qp, &kp, false);
+        assert!(out.allclose(&exp, 1e-5), "diff={}", out.max_abs_diff(&exp));
+    }
+
+    #[test]
+    fn matches_naive_causal() {
+        let mut rng = Rng::new(2);
+        let (sq, skv, h, d) = (12, 12, 2, 8);
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp: Vec<i32> = (0..sq as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        let (out, _) = attention_block(&q, &k, &v, &qp, &kp, true, None);
+        let exp = naive(&q, &k, &v, &qp, &kp, true);
+        assert!(out.allclose(&exp, 1e-5), "diff={}", out.max_abs_diff(&exp));
+    }
+
+    #[test]
+    fn fully_masked_rows_are_zero() {
+        let mut rng = Rng::new(3);
+        let (sq, skv, h, d) = (4, 4, 1, 4);
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp = [0, 1, 2, 3];
+        let kp = [100, 101, 102, 103]; // all in the future
+        let (out, lse) = attention_block(&q, &k, &v, &qp, &kp, true, None);
+        assert!(out.data().iter().all(|&x| x == 0.0));
+        assert!(lse.data().iter().all(|&x| x == MASK_VALUE));
+    }
+
+    #[test]
+    fn padding_keys_ignored() {
+        let mut rng = Rng::new(4);
+        let (sq, skv, h, d) = (8, 8, 2, 4);
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp: Vec<i32> = (8..16).collect();
+        let mut kp: Vec<i32> = (0..8).collect();
+        kp[4..].fill(-1);
+        let (out, lse) = attention_block(&q, &k, &v, &qp, &kp, true, None);
+        let (eo, el) = attention_block(
+            &q,
+            &k.slice_rows(0, 4),
+            &v.slice_rows(0, 4),
+            &qp,
+            &kp[..4],
+            true,
+            None,
+        );
+        assert!(out.allclose(&eo, 1e-6));
+        assert!(lse.allclose(&el, 1e-6));
+    }
+
+    #[test]
+    fn merge_two_halves_equals_full() {
+        let mut rng = Rng::new(5);
+        let (s, h, d) = (16, 2, 8);
+        let q = rand_t(&mut rng, &[s, h, d]);
+        let k = rand_t(&mut rng, &[s, h, d]);
+        let v = rand_t(&mut rng, &[s, h, d]);
+        let pos: Vec<i32> = (0..s as i32).collect();
+        let (mut out, mut lse) = attention_block(
+            &q,
+            &k.slice_rows(0, s / 2),
+            &v.slice_rows(0, s / 2),
+            &pos,
+            &pos[..s / 2],
+            true,
+            None,
+        );
+        let (bo, bl) = attention_block(
+            &q,
+            &k.slice_rows(s / 2, s),
+            &v.slice_rows(s / 2, s),
+            &pos,
+            &pos[s / 2..],
+            true,
+            None,
+        );
+        merge_into(&mut out, &mut lse, &bo, &bl);
+        let (fo, fl) = full_attention(&q, &k, &v, true);
+        assert!(out.allclose(&fo, 1e-5), "diff={}", out.max_abs_diff(&fo));
+        assert!(lse.allclose(&fl, 1e-4));
+    }
+
+    #[test]
+    fn merge_with_empty_partial_is_identity() {
+        let mut rng = Rng::new(6);
+        let (s, h, d) = (8, 2, 4);
+        let q = rand_t(&mut rng, &[s, h, d]);
+        let k = rand_t(&mut rng, &[s, h, d]);
+        let v = rand_t(&mut rng, &[s, h, d]);
+        let (mut out, mut lse) = full_attention(&q, &k, &v, false);
+        let before_o = out.clone();
+        let before_l = lse.clone();
+        let zero = Tensor::zeros(&[s, h, d]);
+        let mask = Tensor::full(&[h, s], MASK_VALUE);
+        merge_into(&mut out, &mut lse, &zero, &mask);
+        assert!(out.allclose(&before_o, 1e-6));
+        assert!(lse.allclose(&before_l, 1e-6));
+    }
+
+    #[test]
+    fn merge_order_invariance() {
+        // 4 partials merged in two different orders give the same result —
+        // the invariant TokenRing's asynchronous arrivals rely on.
+        let mut rng = Rng::new(7);
+        let (s, h, d, nb) = (8, 2, 4, 4);
+        let q = rand_t(&mut rng, &[s, h, d]);
+        let k = rand_t(&mut rng, &[nb * s, h, d]);
+        let v = rand_t(&mut rng, &[nb * s, h, d]);
+        let qp: Vec<i32> = ((nb * s) as i32..(nb * s + s) as i32).collect();
+        let kp: Vec<i32> = (0..(nb * s) as i32).collect();
+        let parts: Vec<(Tensor, Tensor)> = (0..nb)
+            .map(|b| {
+                attention_block(
+                    &q,
+                    &k.slice_rows(b * s, (b + 1) * s),
+                    &v.slice_rows(b * s, (b + 1) * s),
+                    &qp,
+                    &kp[b * s..(b + 1) * s],
+                    true,
+                    None,
+                )
+            })
+            .collect();
+        let run = |order: &[usize]| {
+            let (mut o, mut l) = parts[order[0]].clone();
+            for &i in &order[1..] {
+                merge_into(&mut o, &mut l, &parts[i].0, &parts[i].1);
+            }
+            (o, l)
+        };
+        let (o1, l1) = run(&[0, 1, 2, 3]);
+        let (o2, l2) = run(&[3, 1, 0, 2]);
+        assert!(o1.allclose(&o2, 1e-5));
+        assert!(l1.allclose(&l2, 1e-4));
+    }
+
+    #[test]
+    fn gqa_matches_repeated_kv() {
+        // GQA with group=2 must equal MHA with KV heads repeated.
+        let mut rng = Rng::new(8);
+        let (sq, skv, h, h_kv, d) = (8, 12, 4, 2, 8);
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k_small = rand_t(&mut rng, &[skv, h_kv, d]);
+        let v_small = rand_t(&mut rng, &[skv, h_kv, d]);
+        // repeat kv heads: head h uses kv head h/2
+        let mut k_big = Tensor::zeros(&[skv, h, d]);
+        let mut v_big = Tensor::zeros(&[skv, h, d]);
+        for j in 0..skv {
+            for hi in 0..h {
+                let hk = hi / 2;
+                for t in 0..d {
+                    k_big.data_mut()[(j * h + hi) * d + t] =
+                        k_small.data()[(j * h_kv + hk) * d + t];
+                    v_big.data_mut()[(j * h + hi) * d + t] =
+                        v_small.data()[(j * h_kv + hk) * d + t];
+                }
+            }
+        }
+        let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        let (o_gqa, l_gqa) = attention_block(&q, &k_small, &v_small, &qp, &kp, true, None);
+        let (o_mha, l_mha) = attention_block(&q, &k_big, &v_big, &qp, &kp, true, None);
+        assert!(o_gqa.allclose(&o_mha, 1e-6));
+        assert!(l_gqa.allclose(&l_mha, 1e-6));
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn gqa_rejects_uneven_groups() {
+        let q = Tensor::zeros(&[4, 3, 8]);
+        let kv = Tensor::zeros(&[4, 2, 8]);
+        attention_block(&q, &kv, &kv, &[0, 1, 2, 3], &[0, 1, 2, 3], true, None);
+    }
+
+    #[test]
+    fn logaddexp_stability() {
+        assert_eq!(logaddexp(MASK_VALUE, 1.0), 1.0);
+        assert_eq!(logaddexp(1.0, MASK_VALUE), 1.0);
+        assert!((logaddexp(0.0, 0.0) - 0.6931472).abs() < 1e-6);
+        assert_eq!(logaddexp(1000.0, 0.0), 1000.0);
+    }
+
+    #[test]
+    fn sigmoid_extremes() {
+        assert_eq!(sigmoid(1000.0), 1.0);
+        assert_eq!(sigmoid(-1000.0), 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+}

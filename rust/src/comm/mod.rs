@@ -1,0 +1,314 @@
+//! Communication cost model: message sizes, device compute rates, and
+//! analytic collective costs (AllReduce / AllGather / ReduceScatter /
+//! AllToAll) used by the Ulysses and tensor-parallel baselines and by the
+//! Table-1 accounting.
+
+use crate::topology::Topology;
+
+/// Element width on the wire. The paper's testbed runs fp16 activations;
+/// our artifacts compute in f32 — the simulator charges the configured
+/// width, the engine moves real f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F16,
+    Bf16,
+    F32,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F16 | Dtype::Bf16 => 2,
+            Dtype::F32 => 4,
+        }
+    }
+}
+
+/// Attention-shape parameters shared by every scheme's accounting.
+/// `seq` is the FULL sequence length; block sizes derive from the degree.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShape {
+    pub seq: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub dtype: Dtype,
+}
+
+impl AttnShape {
+    pub fn new(seq: usize, heads: usize, head_dim: usize, dtype: Dtype) -> Self {
+        AttnShape { seq, heads, head_dim, dtype }
+    }
+
+    /// Bytes of one (tokens, H, D) activation slab.
+    pub fn act_bytes(&self, tokens: usize) -> f64 {
+        (tokens * self.heads * self.head_dim * self.dtype.bytes()) as f64
+    }
+
+    /// Bytes of one (H, tokens) log-sum-exp slab (kept f32 for accuracy,
+    /// matching the kernels).
+    pub fn lse_bytes(&self, tokens: usize) -> f64 {
+        (tokens * self.heads * 4) as f64
+    }
+
+    /// FLOPs of attention of `sq` queries against `skv` keys over all
+    /// heads: QK^T and PV are each 2·sq·skv·D MACs per head.
+    pub fn attn_flops(&self, sq: usize, skv: usize) -> f64 {
+        4.0 * sq as f64 * skv as f64 * (self.heads * self.head_dim) as f64
+    }
+}
+
+/// Device compute model: a peak rate and a sustained-efficiency factor
+/// (flash-attention achieves well under peak on real parts).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeModel {
+    pub peak_flops: f64,
+    pub efficiency: f64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+}
+
+impl ComputeModel {
+    pub fn time_for_flops(&self, flops: f64) -> f64 {
+        self.launch_overhead + flops / (self.peak_flops * self.efficiency)
+    }
+
+    /// NVIDIA A10: 125 TFLOPS fp16 tensor-core peak. Effective flash-
+    /// attention efficiency calibrated in config::presets.
+    pub fn a10(efficiency: f64) -> ComputeModel {
+        ComputeModel { peak_flops: 125e12, efficiency, launch_overhead: 20e-6 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic collectives (baselines + Table 1)
+// ---------------------------------------------------------------------------
+
+/// Slowest direct link bandwidth in the topology (bottleneck for mesh
+/// collectives) and its latency.
+fn worst_link(topo: &Topology) -> (f64, f64) {
+    let mut bw = f64::INFINITY;
+    let mut lat: f64 = 0.0;
+    for a in 0..topo.num_devices {
+        for b in 0..topo.num_devices {
+            if a == b {
+                continue;
+            }
+            if let Some(l) = topo.link(a, b) {
+                bw = bw.min(l.bandwidth);
+                lat = lat.max(l.latency);
+            }
+        }
+    }
+    (bw, lat)
+}
+
+/// Ring AllReduce of `bytes` per device: 2(n-1)/n of the payload crosses
+/// the slowest link, in 2(n-1) latency-bearing steps.
+pub fn allreduce_time(topo: &Topology, bytes: f64) -> f64 {
+    let n = topo.num_devices as f64;
+    let (bw, lat) = worst_link(topo);
+    2.0 * (n - 1.0) / n * bytes / bw + 2.0 * (n - 1.0) * lat
+}
+
+/// Ring AllGather of `bytes` per device (each device ends with n·bytes).
+pub fn allgather_time(topo: &Topology, bytes: f64) -> f64 {
+    let n = topo.num_devices as f64;
+    let (bw, lat) = worst_link(topo);
+    (n - 1.0) / n * (bytes * n) / bw + (n - 1.0) * lat
+}
+
+/// ReduceScatter — same wire profile as AllGather.
+pub fn reduce_scatter_time(topo: &Topology, bytes: f64) -> f64 {
+    allgather_time(topo, bytes)
+}
+
+/// AllToAll of `bytes` total per device (each device sends bytes/n to every
+/// peer). On a full mesh all pairs proceed concurrently; on a shared-port
+/// fabric each device serializes its (n-1) sends through its egress.
+pub fn alltoall_time(topo: &Topology, bytes: f64) -> f64 {
+    let n = topo.num_devices as f64;
+    let per_peer = bytes / n;
+    let (bw, lat) = worst_link(topo);
+    if topo.shared_port {
+        (n - 1.0) * per_peer / bw + lat
+    } else {
+        per_peer / bw + lat
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-scheme communication volume accounting (Table 1)
+// ---------------------------------------------------------------------------
+
+/// Per-device per-microstep and total communication volumes for each
+/// scheme, in bytes — the quantitative backbone of Table 1.
+#[derive(Debug, Clone)]
+pub struct VolumeReport {
+    pub scheme: &'static str,
+    pub pattern: &'static str,
+    /// Bytes a device sends per micro-step (peak direction).
+    pub per_step_tx: f64,
+    /// Total bytes sent by one device over the whole attention.
+    pub total_tx: f64,
+    /// Peak concurrent utilization of a duplex link pair: 1.0 =
+    /// unidirectional only, 2.0 = both directions busy.
+    pub duplex_utilization: f64,
+    /// Hard cap on parallel degree, if any (Ulysses: #heads).
+    pub max_degree: Option<usize>,
+    pub limitation: &'static str,
+}
+
+/// Ring-Attention: each step ships the resident KV pair (K and V) one hop.
+pub fn volume_ring_attention(shape: &AttnShape, n: usize) -> VolumeReport {
+    let blk = shape.seq / n;
+    let per_step = 2.0 * shape.act_bytes(blk); // K + V
+    VolumeReport {
+        scheme: "ring_attention",
+        pattern: "single P2P sendrecv (unidirectional ring)",
+        per_step_tx: per_step,
+        total_tx: per_step * (n as f64 - 1.0),
+        duplex_utilization: 1.0,
+        max_degree: None,
+        limitation: "communication bandwidth (half the duplex wasted)",
+    }
+}
+
+/// TokenRing: Q forward each step; block_out+block_lse backward
+/// concurrently from step 2 on (+ the post-loop tail partial).
+pub fn volume_token_ring(shape: &AttnShape, n: usize) -> VolumeReport {
+    let blk = shape.seq / n;
+    let q = shape.act_bytes(blk);
+    let out = shape.act_bytes(blk) + shape.lse_bytes(blk);
+    // peak per-step egress: Q in one direction + partial in the other;
+    // per *direction* the peak is max(q, out) — duplex carries both.
+    let per_step = q.max(out);
+    let total = q * (n as f64 - 1.0) + out * (n as f64 - 1.0);
+    VolumeReport {
+        scheme: "token_ring",
+        pattern: "bidirectional P2P sendrecv (Q fwd, Out bwd)",
+        per_step_tx: per_step,
+        total_tx: total,
+        duplex_utilization: 2.0,
+        max_degree: None,
+        limitation: "full-mesh intra-node topology preferred",
+    }
+}
+
+/// DeepSpeed-Ulysses: two AllToAlls (scatter QKV to head-parallel, gather
+/// output back) per attention.
+pub fn volume_ulysses(shape: &AttnShape, n: usize) -> VolumeReport {
+    let local = shape.seq / n;
+    // Send 3 tensors (Q,K,V) of the local shard, then receive output: per
+    // device 4 · act(local) bytes cross the fabric per attention, in 2
+    // AllToAll phases.
+    let per_a2a = 3.0 * shape.act_bytes(local);
+    let total = per_a2a + shape.act_bytes(local);
+    VolumeReport {
+        scheme: "ulysses",
+        pattern: "AllToAll (head re-partitioning)",
+        per_step_tx: per_a2a,
+        total_tx: total,
+        duplex_utilization: 1.0,
+        max_degree: Some(shape.heads),
+        limitation: "degree capped by number of attention heads",
+    }
+}
+
+/// Megatron-style tensor parallelism: AllReduce of the full activation
+/// after the attention block (and after the MLP; we count attention only).
+pub fn volume_tensor_parallel(shape: &AttnShape, n: usize) -> VolumeReport {
+    let act = shape.act_bytes(shape.seq);
+    let n_f = n as f64;
+    VolumeReport {
+        scheme: "tensor_parallel",
+        pattern: "AllReduce (full activations)",
+        per_step_tx: 2.0 * (n_f - 1.0) / n_f * act,
+        total_tx: 2.0 * (n_f - 1.0) / n_f * act,
+        duplex_utilization: 1.0,
+        max_degree: None,
+        limitation: "memory: activations replicated in long context",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> AttnShape {
+        AttnShape::new(24_000, 32, 128, Dtype::F16)
+    }
+
+    #[test]
+    fn act_bytes_llama7b_block() {
+        // 6000 tokens × 32 heads × 128 dim × 2 B = 49.15 MB — the Figure 6
+        // per-step Q payload.
+        let s = shape();
+        let b = s.act_bytes(6000);
+        assert!((b - 49_152_000.0).abs() < 1.0, "b={b}");
+    }
+
+    #[test]
+    fn flops_symmetric() {
+        let s = shape();
+        assert_eq!(s.attn_flops(100, 200), s.attn_flops(200, 100));
+        // 4·sq·skv·H·D
+        assert_eq!(s.attn_flops(10, 10), 4.0 * 10.0 * 10.0 * 4096.0);
+    }
+
+    #[test]
+    fn compute_model_monotone() {
+        let m = ComputeModel::a10(0.4);
+        assert!(m.time_for_flops(1e12) < m.time_for_flops(2e12));
+        // launch overhead floors small kernels
+        assert!(m.time_for_flops(0.0) >= 20e-6);
+    }
+
+    #[test]
+    fn ring_vs_tokenring_per_step_volume() {
+        // Ring ships K+V (2 slabs); TokenRing's peak direction ships
+        // max(Q, Out+lse) ≈ 1 slab — the 2× the paper talks about.
+        let s = shape();
+        let ring = volume_ring_attention(&s, 4);
+        let tr = volume_token_ring(&s, 4);
+        let ratio = ring.per_step_tx / tr.per_step_tx;
+        assert!(ratio > 1.8 && ratio < 2.1, "ratio={ratio}");
+        assert_eq!(tr.duplex_utilization, 2.0);
+        assert_eq!(ring.duplex_utilization, 1.0);
+    }
+
+    #[test]
+    fn ulysses_head_cap() {
+        let s = shape();
+        let u = volume_ulysses(&s, 8);
+        assert_eq!(u.max_degree, Some(32));
+    }
+
+    #[test]
+    fn collective_costs_ordering() {
+        let topo = crate::topology::Topology::uniform_mesh(8, 50.0);
+        let bytes = 100e6;
+        let ar = allreduce_time(&topo, bytes);
+        // AllReduce(V) == ReduceScatter(V/n shard) + AllGather(V/n shard)
+        // on the wire (up to latency terms).
+        let ag_shard = allgather_time(&topo, bytes / 8.0);
+        assert!((ar - 2.0 * ag_shard).abs() < 1e-3, "ar={ar} 2ag={}", 2.0 * ag_shard);
+        // AllToAll on a mesh is far cheaper than AllReduce of the same payload.
+        let a2a = alltoall_time(&topo, bytes);
+        assert!(a2a < ar / 4.0, "a2a={a2a} ar={ar}");
+    }
+
+    #[test]
+    fn alltoall_shared_port_penalty() {
+        let mesh = crate::topology::Topology::oam_mesh(8, 400.0);
+        let sw = crate::topology::Topology::nvswitch(8, 50.0);
+        // same worst-link bw (400/7 vs 50): shared-port serializes n-1 sends
+        let b = 80e6;
+        assert!(alltoall_time(&sw, b) > alltoall_time(&mesh, b) * 3.0);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(Dtype::F16.bytes(), 2);
+        assert_eq!(Dtype::F32.bytes(), 4);
+    }
+}

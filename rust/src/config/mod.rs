@@ -1,0 +1,193 @@
+//! Run configuration: cluster presets, calibration constants, and a JSON
+//! config-file loader so experiments are reproducible from checked-in
+//! configs (configs/*.json) as well as CLI flags.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::{ComputeModel, Dtype};
+use crate::model::ModelConfig;
+use crate::parallelism::partition::Partition;
+use crate::topology::Topology;
+use crate::util::json::Json;
+
+/// Calibration used for the Figure-6 reproduction (EXPERIMENTS.md §F6):
+/// flash-attention-2 on A10 sustains ≈0.67 of tensor-core peak at the
+/// S=24k block sizes, PIX ≈ 14 GB/s and PXB ≈ 11 GB/s effective P2P.
+pub const A10_FLASH_EFFICIENCY: f64 = 0.67;
+pub const A10_PIX_GBPS: f64 = 14.0;
+pub const A10_PXB_GBPS: f64 = 11.0;
+
+/// Cluster preset = topology + per-device compute model.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub topology: Topology,
+    pub compute: ComputeModel,
+}
+
+impl Cluster {
+    /// The paper's testbed (§4.1): 4×A10 on PIX/PXB PCIe.
+    pub fn a10_pcie4() -> Cluster {
+        Cluster {
+            topology: Topology::pcie_a10(A10_PIX_GBPS, A10_PXB_GBPS),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        }
+    }
+
+    /// OAM/HCCS-style full mesh of `n` A10-class devices.
+    pub fn oam_mesh(n: usize) -> Cluster {
+        Cluster {
+            topology: Topology::oam_mesh(n, 50.0 * n as f64),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        }
+    }
+
+    /// NVSwitch box of `n` devices.
+    pub fn nvswitch(n: usize) -> Cluster {
+        Cluster {
+            topology: Topology::nvswitch(n, 300.0),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        }
+    }
+
+    /// Two-level cluster: `nodes`×`per_node`, 25 GE-class interconnect.
+    pub fn two_level(nodes: usize, per_node: usize) -> Cluster {
+        Cluster {
+            topology: Topology::two_level(nodes, per_node, 50.0 * per_node as f64, 25.0),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        }
+    }
+
+    pub fn by_name(name: &str, n: usize) -> Result<Cluster> {
+        Ok(match name {
+            "a10_pcie4" => {
+                if n != 4 {
+                    bail!("a10_pcie4 is a fixed 4-GPU preset");
+                }
+                Cluster::a10_pcie4()
+            }
+            "oam_mesh" => Cluster::oam_mesh(n),
+            "nvswitch" => Cluster::nvswitch(n),
+            "two_level" => {
+                if n % 4 != 0 {
+                    bail!("two_level wants a multiple of 4 devices");
+                }
+                Cluster::two_level(n / 4, 4)
+            }
+            _ => bail!("unknown cluster preset '{name}'"),
+        })
+    }
+}
+
+/// A fully-specified experiment run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub cluster: Cluster,
+    pub seq: usize,
+    pub devices: usize,
+    pub schedule: String,
+    pub partition: Partition,
+    pub dtype: Dtype,
+}
+
+impl RunConfig {
+    pub fn default_fig6() -> RunConfig {
+        RunConfig {
+            model: ModelConfig::llama2_7b(),
+            cluster: Cluster::a10_pcie4(),
+            seq: 24_000,
+            devices: 4,
+            schedule: "token_ring".into(),
+            partition: Partition::Zigzag,
+            dtype: Dtype::F16,
+        }
+    }
+
+    /// Load from a JSON config file, e.g.:
+    /// `{"model":"llama2_7b","cluster":"oam_mesh","devices":8,
+    ///   "seq":65536,"schedule":"token_ring","partition":"zigzag"}`
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let model_name = j.get("model").as_str().unwrap_or("llama2_7b");
+        let model = ModelConfig::by_name(model_name)
+            .ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
+        let devices = j.get("devices").as_usize().unwrap_or(4);
+        let cluster_name = j.get("cluster").as_str().unwrap_or("a10_pcie4");
+        let cluster = Cluster::by_name(cluster_name, devices)?;
+        let seq = j.get("seq").as_usize().unwrap_or(24_000);
+        let schedule = j.get("schedule").as_str().unwrap_or("token_ring").to_string();
+        let partition = parse_partition(j.get("partition").as_str().unwrap_or("zigzag"))?;
+        Ok(RunConfig {
+            model,
+            cluster,
+            seq,
+            devices,
+            schedule,
+            partition,
+            dtype: Dtype::F16,
+        })
+    }
+}
+
+pub fn parse_partition(s: &str) -> Result<Partition> {
+    Ok(match s {
+        "contiguous" => Partition::Contiguous,
+        "zigzag" => Partition::Zigzag,
+        "striped" => Partition::Striped { stripe: 1 },
+        other => {
+            if let Some(k) = other.strip_prefix("striped:") {
+                Partition::Striped {
+                    stripe: k.parse().map_err(|_| anyhow!("bad stripe '{k}'"))?,
+                }
+            } else {
+                bail!("unknown partition '{other}'")
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_build() {
+        assert_eq!(Cluster::a10_pcie4().topology.num_devices, 4);
+        assert_eq!(Cluster::oam_mesh(8).topology.num_devices, 8);
+        assert_eq!(Cluster::two_level(2, 4).topology.num_nodes(), 2);
+        assert!(Cluster::by_name("a10_pcie4", 8).is_err());
+        assert!(Cluster::by_name("bogus", 4).is_err());
+    }
+
+    #[test]
+    fn json_config_roundtrip() {
+        let cfg = RunConfig::from_json(
+            r#"{"model":"dit_xl","cluster":"oam_mesh","devices":8,
+                "seq":32768,"schedule":"ring_attention","partition":"striped:2"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model.name, "dit_xl");
+        assert_eq!(cfg.devices, 8);
+        assert_eq!(cfg.seq, 32_768);
+        assert_eq!(cfg.schedule, "ring_attention");
+        assert_eq!(cfg.partition, Partition::Striped { stripe: 2 });
+    }
+
+    #[test]
+    fn json_defaults_are_fig6() {
+        let cfg = RunConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.model.name, "llama2_7b");
+        assert_eq!(cfg.seq, 24_000);
+        assert_eq!(cfg.partition, Partition::Zigzag);
+    }
+
+    #[test]
+    fn partition_parser() {
+        assert!(matches!(parse_partition("zigzag").unwrap(), Partition::Zigzag));
+        assert!(matches!(
+            parse_partition("striped:4").unwrap(),
+            Partition::Striped { stripe: 4 }
+        ));
+        assert!(parse_partition("wat").is_err());
+    }
+}

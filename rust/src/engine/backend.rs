@@ -1,0 +1,178 @@
+//! Compute backends for the distributed engine.
+//!
+//! `Native` computes attention/merge in Rust (attention::*); `Pjrt` runs
+//! the AOT artifacts through the PJRT CPU client. Both produce the same
+//! numbers (rust/tests/pjrt_roundtrip.rs), so device actors can use either
+//! — PJRT wrapper types are not `Send`, hence each device thread builds its
+//! own backend from a `BackendSpec`.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::attention;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// How a device actor computes its blocks.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Pure-Rust attention (default; no artifacts needed).
+    Native,
+    /// AOT artifacts for `profile` loaded from `dir` via PJRT.
+    Pjrt { dir: PathBuf, profile: String },
+}
+
+impl BackendSpec {
+    pub fn build(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Native => Ok(Box::new(NativeBackend)),
+            BackendSpec::Pjrt { dir, profile } => {
+                Ok(Box::new(PjrtBackend::new(dir.clone(), profile.clone())?))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            BackendSpec::Native => "native".into(),
+            BackendSpec::Pjrt { profile, .. } => format!("pjrt:{profile}"),
+        }
+    }
+}
+
+/// One device's compute engine.
+pub trait Backend: Send {
+    /// One attention micro-step producing (block_out, block_lse).
+    fn attn_block(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+        causal: bool,
+    ) -> Result<(Tensor, Tensor)>;
+
+    /// Merge a partial into the accumulator (paper's Update rule).
+    fn merge(
+        &mut self,
+        out: &mut Tensor,
+        lse: &mut Tensor,
+        block_out: &Tensor,
+        block_lse: &Tensor,
+    ) -> Result<()>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn attn_block(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+        causal: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        Ok(attention::attention_block(q, k, v, q_pos, k_pos, causal, None))
+    }
+
+    fn merge(
+        &mut self,
+        out: &mut Tensor,
+        lse: &mut Tensor,
+        block_out: &Tensor,
+        block_lse: &Tensor,
+    ) -> Result<()> {
+        attention::merge_into(out, lse, block_out, block_lse);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT-artifact backend. Holds its own client (not `Send`-shared).
+pub struct PjrtBackend {
+    rt: Runtime,
+    profile: String,
+}
+
+// SAFETY-free Send: PjrtBackend owns its Runtime exclusively; the xla crate
+// types are only !Send because of raw pointers, and the PJRT CPU client is
+// thread-safe for single-owner use. We never share a Runtime across
+// threads — each device thread constructs its own via BackendSpec::build.
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new(dir: PathBuf, profile: String) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::new(dir)?, profile })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn attn_block(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+        causal: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        let artifact = self.rt.manifest().attn_name(&self.profile, causal);
+        self.rt.attn_block(&artifact, q, k, v, q_pos, k_pos)
+    }
+
+    fn merge(
+        &mut self,
+        out: &mut Tensor,
+        lse: &mut Tensor,
+        block_out: &Tensor,
+        block_lse: &Tensor,
+    ) -> Result<()> {
+        let artifact = format!("merge_{}", self.profile);
+        let (o, l) = self.rt.merge(&artifact, out, lse, block_out, block_lse)?;
+        *out = o;
+        *lse = l;
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_backend_matches_oracle() {
+        let mut rng = Rng::new(3);
+        let (s, h, d) = (16, 2, 8);
+        let q = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
+        let k = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
+        let v = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
+        let pos: Vec<i32> = (0..s as i32).collect();
+        let mut b = NativeBackend;
+        let (out, lse) = b.attn_block(&q, &k, &v, &pos, &pos, true).unwrap();
+        let (eo, el) = attention::full_attention(&q, &k, &v, true);
+        assert!(out.allclose(&eo, 1e-6));
+        assert!(lse.allclose(&el, 1e-6));
+    }
+
+    #[test]
+    fn spec_labels() {
+        assert_eq!(BackendSpec::Native.label(), "native");
+        let p = BackendSpec::Pjrt { dir: "x".into(), profile: "tiny".into() };
+        assert_eq!(p.label(), "pjrt:tiny");
+    }
+}

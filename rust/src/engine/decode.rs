@@ -1,0 +1,335 @@
+//! Batched TokenRing decode: each request's query block circulates the
+//! ring once, computing against the 1/N of its KV cache resident on every
+//! device, while partials fly straight home on the reverse direction —
+//! Algorithm 1 applied to the decode phase over the paged KV cache.
+//!
+//! With a batch of requests, blocks pipeline around the ring exactly like
+//! prefill Q blocks: at any step every device is busy with a different
+//! request's query.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::MASK_VALUE;
+use crate::metrics::{Clock, Event, Timeline};
+use crate::simulator::SpanTag;
+use crate::tensor::Tensor;
+
+use super::kv_cache::KvCache;
+use super::EngineOpts;
+
+/// One decode query: the request's current query block (usually one token,
+/// more under speculative/chunked decode).
+#[derive(Debug, Clone)]
+pub struct DecodeQuery {
+    pub request: usize,
+    pub q: Tensor, // (T, H, D)
+    pub q_pos: Vec<i32>,
+}
+
+/// Decode result per request.
+pub struct DecodeResult {
+    pub outputs: HashMap<usize, (Tensor, Tensor)>,
+    pub timeline: Timeline,
+    pub wall: f64,
+}
+
+enum Msg {
+    /// A batch of queries hopping forward (the home rank's whole batch).
+    QBatch(Vec<DecodeQuery>),
+    /// A partial flying home.
+    Partial { request: usize, out: Tensor, lse: Tensor },
+}
+
+/// Run one batched decode step over `n` device threads.
+///
+/// `views[device]` maps request-id → (K, V, positions) resident there
+/// (from `KvCache::device_view`). Requests are homed at `request % n`.
+pub fn run_decode_ring(
+    queries: Vec<DecodeQuery>,
+    cache: &KvCache,
+    n: usize,
+    opts: &EngineOpts,
+) -> Result<DecodeResult> {
+    let heads = cache.heads;
+    let head_dim = cache.head_dim;
+
+    // home batches
+    let mut batches: Vec<Vec<DecodeQuery>> = vec![Vec::new(); n];
+    let mut expected: Vec<usize> = vec![0; n];
+    for q in queries {
+        let home = q.request % n;
+        batches[home].push(q);
+    }
+    for j in 0..n {
+        expected[j] = batches[j].len() * (n - 1);
+    }
+
+    // per-device cache views, materialized up front (threads own them)
+    let mut views: Vec<HashMap<usize, (Tensor, Tensor, Vec<i32>)>> =
+        (0..n).map(|_| HashMap::new()).collect();
+    for (j, batch) in batches.iter().enumerate() {
+        for q in batch {
+            for (dev, view) in views.iter_mut().enumerate() {
+                view.insert(q.request, cache.device_view(q.request, dev)?);
+            }
+        }
+        let _ = j;
+    }
+
+    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let clock = Clock::new();
+
+    let mut handles = Vec::with_capacity(n);
+    for j in (0..n).rev() {
+        let txs = senders.clone();
+        let rx = receivers.pop().unwrap();
+        let my_batch = batches[j].clone();
+        let my_expected = expected[j];
+        let view = views.pop().unwrap();
+        let opts = opts.clone();
+        handles.push(thread::spawn(move || -> Result<_> {
+            let mut backend = opts.backend.build()?;
+            let mut tl = Timeline::new();
+            // accumulators for my home requests
+            let mut acc: HashMap<usize, (Tensor, Tensor)> = HashMap::new();
+            let mut merged = 0usize;
+            let mut pending_batches: Vec<Vec<DecodeQuery>> = Vec::new();
+
+            let mut cur = my_batch;
+            for step in 0..n {
+                // forward the batch we are about to consume
+                if step < n - 1 {
+                    let dst = (j + 1) % n;
+                    let bytes: usize = cur.iter().map(|q| q.q.size_bytes()).sum();
+                    let t = clock.now();
+                    tl.push(Event {
+                        device: j,
+                        tag: SpanTag::SendQ,
+                        step,
+                        name: format!("decode batch -> d{dst}"),
+                        t0: t,
+                        t1: t,
+                        bytes,
+                    });
+                    txs[dst]
+                        .send(Msg::QBatch(cur.clone()))
+                        .map_err(|_| anyhow!("send qbatch"))?;
+                }
+
+                for dq in &cur {
+                    let (k, v, kpos) = view
+                        .get(&dq.request)
+                        .ok_or_else(|| anyhow!("no cache view for req {}", dq.request))?;
+                    let (bo, bl) = if kpos.is_empty() {
+                        // this device holds no pages for the request
+                        (
+                            Tensor::zeros(&[dq.q.shape()[0], heads, head_dim]),
+                            Tensor::full(&[heads, dq.q.shape()[0]], MASK_VALUE),
+                        )
+                    } else {
+                        let t0 = clock.now();
+                        let r = backend.attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal)?;
+                        tl.push(Event {
+                            device: j,
+                            tag: SpanTag::Compute,
+                            step,
+                            name: format!("decode req {}", dq.request),
+                            t0,
+                            t1: clock.now(),
+                            bytes: 0,
+                        });
+                        r
+                    };
+                    let home = dq.request % n;
+                    if home == j {
+                        merge_acc(&mut acc, backend.as_mut(), dq.request, bo, bl)?;
+                    } else {
+                        txs[home]
+                            .send(Msg::Partial { request: dq.request, out: bo, lse: bl })
+                            .map_err(|_| anyhow!("send partial"))?;
+                    }
+                }
+
+                if step < n - 1 {
+                    // wait for the next batch, merging partials as they land
+                    loop {
+                        if let Some(b) = pending_batches.pop() {
+                            cur = b;
+                            break;
+                        }
+                        match rx.recv().map_err(|_| anyhow!("recv"))? {
+                            Msg::QBatch(b) => {
+                                cur = b;
+                                break;
+                            }
+                            Msg::Partial { request, out, lse } => {
+                                merge_acc(&mut acc, backend.as_mut(), request, out, lse)?;
+                                merged += 1;
+                            }
+                        }
+                    }
+                }
+            }
+
+            while merged < my_expected {
+                match rx.recv().map_err(|_| anyhow!("recv tail"))? {
+                    Msg::Partial { request, out, lse } => {
+                        merge_acc(&mut acc, backend.as_mut(), request, out, lse)?;
+                        merged += 1;
+                    }
+                    Msg::QBatch(b) => pending_batches.push(b),
+                }
+            }
+            Ok((acc, tl))
+        }));
+    }
+
+    let mut outputs = HashMap::new();
+    let mut timelines = Vec::new();
+    for h in handles {
+        let (acc, tl) = h.join().map_err(|_| anyhow!("decode thread panicked"))??;
+        outputs.extend(acc);
+        timelines.push(tl);
+    }
+    Ok(DecodeResult { outputs, timeline: Timeline::merge(timelines), wall: clock.now() })
+}
+
+fn merge_acc(
+    acc: &mut HashMap<usize, (Tensor, Tensor)>,
+    backend: &mut dyn super::backend::Backend,
+    request: usize,
+    out: Tensor,
+    lse: Tensor,
+) -> Result<()> {
+    match acc.get_mut(&request) {
+        None => {
+            acc.insert(request, (out, lse));
+        }
+        Some((o, l)) => backend.merge(o, l, &out, &lse)?,
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_block;
+    use crate::engine::backend::BackendSpec;
+    use crate::parallelism::partition::Partition;
+    use crate::util::rng::Rng;
+
+    fn opts() -> EngineOpts {
+        EngineOpts {
+            causal: true,
+            partition: Partition::Contiguous,
+            backend: BackendSpec::Native,
+            record: false,
+        }
+    }
+
+    fn fill_cache(cache: &mut KvCache, rng: &mut Rng, req: usize, ctx: usize) -> (Tensor, Tensor) {
+        let k = Tensor::new(&[ctx, cache.heads, cache.head_dim], rng.normal_vec(ctx * cache.heads * cache.head_dim, 1.0));
+        let v = Tensor::new(&[ctx, cache.heads, cache.head_dim], rng.normal_vec(ctx * cache.heads * cache.head_dim, 1.0));
+        cache.append(req, &k, &v).unwrap();
+        (k, v)
+    }
+
+    #[test]
+    fn single_request_decode_matches_direct() {
+        let mut rng = Rng::new(50);
+        let mut cache = KvCache::new(4, 2, 8, 8);
+        let ctx = 64;
+        let (k, v) = fill_cache(&mut cache, &mut rng, 3, ctx);
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let q_pos = vec![ctx as i32];
+
+        let res = run_decode_ring(
+            vec![DecodeQuery { request: 3, q: q.clone(), q_pos: q_pos.clone() }],
+            &cache,
+            4,
+            &opts(),
+        )
+        .unwrap();
+        let (got_o, got_l) = &res.outputs[&3];
+        let kpos: Vec<i32> = (0..ctx as i32).collect();
+        let (eo, el) = attention_block(&q, &k, &v, &q_pos, &kpos, true, None);
+        assert!(got_o.allclose(&eo, 1e-4), "diff={}", got_o.max_abs_diff(&eo));
+        assert!(got_l.allclose(&el, 1e-3));
+    }
+
+    #[test]
+    fn batched_decode_all_requests_correct() {
+        let mut rng = Rng::new(51);
+        let mut cache = KvCache::new(4, 2, 8, 8);
+        let mut truth = HashMap::new();
+        for req in 0..6 {
+            let ctx = 32 + 16 * (req % 3);
+            let (k, v) = fill_cache(&mut cache, &mut rng, req, ctx);
+            truth.insert(req, (k, v, ctx));
+        }
+        let queries: Vec<DecodeQuery> = (0..6)
+            .map(|req| {
+                let ctx = truth[&req].2;
+                DecodeQuery {
+                    request: req,
+                    q: Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0)),
+                    q_pos: vec![ctx as i32],
+                }
+            })
+            .collect();
+        let res = run_decode_ring(queries.clone(), &cache, 4, &opts()).unwrap();
+        assert_eq!(res.outputs.len(), 6);
+        for dq in &queries {
+            let (k, v, ctx) = &truth[&dq.request];
+            let kpos: Vec<i32> = (0..*ctx as i32).collect();
+            let (eo, _) = attention_block(&dq.q, k, v, &dq.q_pos, &kpos, true, None);
+            let (got, _) = &res.outputs[&dq.request];
+            assert!(
+                got.allclose(&eo, 1e-4),
+                "req {} diff={}",
+                dq.request,
+                got.max_abs_diff(&eo)
+            );
+        }
+    }
+
+    #[test]
+    fn decode_after_incremental_appends() {
+        // grow the cache token by token (as real decode does), then attend
+        let mut rng = Rng::new(52);
+        let mut cache = KvCache::new(2, 2, 8, 4);
+        let mut all_k: Vec<Tensor> = Vec::new();
+        let mut all_v: Vec<Tensor> = Vec::new();
+        for _ in 0..13 {
+            let k = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+            let v = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+            cache.append(9, &k, &v).unwrap();
+            all_k.push(k);
+            all_v.push(v);
+        }
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let res = run_decode_ring(
+            vec![DecodeQuery { request: 9, q: q.clone(), q_pos: vec![13] }],
+            &cache,
+            2,
+            &opts(),
+        )
+        .unwrap();
+        let kf = Tensor::concat_rows(&all_k.iter().collect::<Vec<_>>());
+        let vf = Tensor::concat_rows(&all_v.iter().collect::<Vec<_>>());
+        let kpos: Vec<i32> = (0..13).collect();
+        let (eo, _) = attention_block(&q, &kf, &vf, &vec![13], &kpos, true, None);
+        let (got, _) = &res.outputs[&9];
+        assert!(got.allclose(&eo, 1e-4), "diff={}", got.max_abs_diff(&eo));
+    }
+}

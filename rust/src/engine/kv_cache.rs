@@ -1,0 +1,232 @@
+//! Sequence-sharded paged KV cache — the serving substrate for the decode
+//! path (§2.3: long-context inference = prefill + decode over a resident
+//! KV cache).
+//!
+//! Pages of `page_tokens` tokens are dealt round-robin across devices, so
+//! every device holds ~1/N of every request's context — exactly the layout
+//! TokenRing decode (engine::decode) expects: the query visits each device
+//! once and covers the whole context.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+
+/// One page: `tokens` consecutive positions of K and V for one request.
+#[derive(Debug, Clone)]
+struct Page {
+    k: Tensor, // (tokens, H, D)
+    v: Tensor,
+    positions: Vec<i32>,
+}
+
+/// Per-request, per-device page lists.
+#[derive(Debug, Default)]
+struct SeqEntry {
+    /// pages[device] = pages resident on that device, in append order
+    pages: Vec<Vec<Page>>,
+    next_pos: usize,
+    /// round-robin cursor: device receiving the next page
+    cursor: usize,
+}
+
+/// The cache manager.
+#[derive(Debug)]
+pub struct KvCache {
+    pub devices: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub page_tokens: usize,
+    seqs: HashMap<usize, SeqEntry>,
+}
+
+impl KvCache {
+    pub fn new(devices: usize, heads: usize, head_dim: usize, page_tokens: usize) -> KvCache {
+        assert!(devices > 0 && page_tokens > 0);
+        KvCache { devices, heads, head_dim, page_tokens, seqs: HashMap::new() }
+    }
+
+    /// Append `k`/`v` of shape (T, H, D) for request `id` at the request's
+    /// current end position. T must be a multiple of page_tokens (pad the
+    /// tail at the model level) except for single-token decode appends,
+    /// which extend the open page.
+    pub fn append(&mut self, id: usize, k: &Tensor, v: &Tensor) -> Result<()> {
+        let t = k.shape()[0];
+        if k.shape() != [t, self.heads, self.head_dim] || k.shape() != v.shape() {
+            bail!("kv append shape mismatch: {:?}", k.shape());
+        }
+        let devices = self.devices;
+        let page_tokens = self.page_tokens;
+        let entry = self.seqs.entry(id).or_insert_with(|| SeqEntry {
+            pages: vec![Vec::new(); devices],
+            next_pos: 0,
+            cursor: 0,
+        });
+        let mut off = 0;
+        while off < t {
+            let take = page_tokens.min(t - off);
+            let dev = entry.cursor;
+            let positions: Vec<i32> =
+                (entry.next_pos as i32..(entry.next_pos + take) as i32).collect();
+            entry.pages[dev].push(Page {
+                k: k.slice_rows(off, off + take),
+                v: v.slice_rows(off, off + take),
+                positions,
+            });
+            entry.next_pos += take;
+            entry.cursor = (entry.cursor + 1) % devices;
+            off += take;
+        }
+        Ok(())
+    }
+
+    /// Total tokens cached for a request.
+    pub fn seq_len(&self, id: usize) -> usize {
+        self.seqs.get(&id).map_or(0, |e| e.next_pos)
+    }
+
+    /// Concatenated (K, V, positions) resident on `device` for request
+    /// `id`. Empty tensors when the device holds nothing.
+    pub fn device_view(&self, id: usize, device: usize) -> Result<(Tensor, Tensor, Vec<i32>)> {
+        let e = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown request {id}"))?;
+        let pages = &e.pages[device];
+        if pages.is_empty() {
+            return Ok((
+                Tensor::zeros(&[0, self.heads, self.head_dim]),
+                Tensor::zeros(&[0, self.heads, self.head_dim]),
+                Vec::new(),
+            ));
+        }
+        let ks: Vec<&Tensor> = pages.iter().map(|p| &p.k).collect();
+        let vs: Vec<&Tensor> = pages.iter().map(|p| &p.v).collect();
+        let mut pos = Vec::new();
+        for p in pages {
+            pos.extend_from_slice(&p.positions);
+        }
+        Ok((Tensor::concat_rows(&ks), Tensor::concat_rows(&vs), pos))
+    }
+
+    /// Release a request's pages.
+    pub fn free(&mut self, id: usize) -> bool {
+        self.seqs.remove(&id).is_some()
+    }
+
+    /// Resident KV bytes per device (capacity accounting / Table 1 memory
+    /// column).
+    pub fn bytes_per_device(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.devices];
+        for e in self.seqs.values() {
+            for (d, pages) in e.pages.iter().enumerate() {
+                out[d] += pages
+                    .iter()
+                    .map(|p| p.k.size_bytes() + p.v.size_bytes())
+                    .sum::<usize>();
+            }
+        }
+        out
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.seqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn kv(rng: &mut Rng, t: usize) -> (Tensor, Tensor) {
+        (
+            Tensor::new(&[t, 2, 8], rng.normal_vec(t * 16, 1.0)),
+            Tensor::new(&[t, 2, 8], rng.normal_vec(t * 16, 1.0)),
+        )
+    }
+
+    #[test]
+    fn pages_deal_round_robin() {
+        let mut c = KvCache::new(4, 2, 8, 16);
+        let mut rng = Rng::new(1);
+        let (k, v) = kv(&mut rng, 64); // 4 pages → one per device
+        c.append(7, &k, &v).unwrap();
+        assert_eq!(c.seq_len(7), 64);
+        for d in 0..4 {
+            let (kd, _, pos) = c.device_view(7, d).unwrap();
+            assert_eq!(kd.shape()[0], 16);
+            assert_eq!(pos, ((d * 16) as i32..(d * 16 + 16) as i32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn views_reconstruct_everything() {
+        let mut c = KvCache::new(3, 2, 8, 8);
+        let mut rng = Rng::new(2);
+        let (k, v) = kv(&mut rng, 40); // 5 pages over 3 devices
+        c.append(1, &k, &v).unwrap();
+        let mut seen = vec![false; 40];
+        for d in 0..3 {
+            let (kd, vd, pos) = c.device_view(1, d).unwrap();
+            assert_eq!(kd.shape()[0], pos.len());
+            assert_eq!(vd.shape()[0], pos.len());
+            for (i, &p) in pos.iter().enumerate() {
+                seen[p as usize] = true;
+                // row matches the original K row
+                let orig = k.slice_rows(p as usize, p as usize + 1);
+                let got = kd.slice_rows(i, i + 1);
+                assert_eq!(orig, got);
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn decode_appends_extend_positions() {
+        let mut c = KvCache::new(2, 2, 8, 4);
+        let mut rng = Rng::new(3);
+        let (k, v) = kv(&mut rng, 8);
+        c.append(5, &k, &v).unwrap();
+        // single-token decode appends
+        for step in 0..3 {
+            let (k1, v1) = kv(&mut rng, 1);
+            c.append(5, &k1, &v1).unwrap();
+            assert_eq!(c.seq_len(5), 9 + step);
+        }
+        // positions stay globally unique and dense
+        let mut all: Vec<i32> = (0..2)
+            .flat_map(|d| c.device_view(5, d).unwrap().2)
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..11).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn free_and_accounting() {
+        let mut c = KvCache::new(2, 2, 8, 4);
+        let mut rng = Rng::new(4);
+        let (k, v) = kv(&mut rng, 16);
+        c.append(1, &k, &v).unwrap();
+        c.append(2, &k, &v).unwrap();
+        assert_eq!(c.active_requests(), 2);
+        let bytes = c.bytes_per_device();
+        assert_eq!(bytes.len(), 2);
+        assert!(bytes.iter().all(|&b| b > 0));
+        // balanced within a page
+        assert_eq!(bytes[0], bytes[1]);
+        assert!(c.free(1));
+        assert!(!c.free(1));
+        assert_eq!(c.active_requests(), 1);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut c = KvCache::new(2, 2, 8, 4);
+        let bad = Tensor::zeros(&[4, 3, 8]);
+        let good = Tensor::zeros(&[4, 2, 8]);
+        assert!(c.append(1, &bad, &good).is_err());
+        assert!(c.device_view(99, 0).is_err());
+    }
+}

@@ -1,0 +1,782 @@
+//! Threaded distributed execution engine — real numerics over real message
+//! passing.
+//!
+//! Each simulated device is an OS thread with an mpsc mailbox (the NCCL
+//! substitute of DESIGN.md §2): channel sends are the async_send of
+//! Algorithm 1, per-sender FIFO order mirrors a P2P stream. Device actors
+//! compute blocks through a `Backend` (native Rust or PJRT artifacts) and
+//! the driver reassembles and verifies the distributed output.
+//!
+//! Three schedules are implemented for real execution:
+//! * `run_token_ring`      — Algorithm 1 (Q forward, partials homeward)
+//! * `run_ring_attention`  — KV-circulating baseline
+//! * `run_hybrid`          — case study III (TokenRing intra-node, ring KV
+//!                           exchange inter-node)
+
+pub mod backend;
+pub mod decode;
+pub mod kv_cache;
+pub mod ulysses;
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::{Clock, Event, Timeline};
+use crate::parallelism::partition::Partition;
+use crate::simulator::SpanTag;
+use crate::tensor::Tensor;
+use backend::{Backend, BackendSpec};
+
+/// Inter-device message. Tensors are moved, not copied — a channel send is
+/// the zero-copy device-to-device DMA of the real system.
+enum Msg {
+    /// A circulating query block (TokenRing forward direction).
+    Q { owner: usize, q: Tensor, pos: Vec<i32> },
+    /// A partial result flying home (TokenRing backward direction).
+    Partial { out: Tensor, lse: Tensor },
+    /// A circulating KV block (Ring-Attention / hybrid inter-node).
+    Kv { k: Tensor, v: Tensor, pos: Vec<i32> },
+}
+
+impl Msg {
+    fn bytes(&self) -> usize {
+        match self {
+            Msg::Q { q, pos, .. } => q.size_bytes() + pos.len() * 4,
+            Msg::Partial { out, lse } => out.size_bytes() + lse.size_bytes(),
+            Msg::Kv { k, v, pos } => k.size_bytes() + v.size_bytes() + pos.len() * 4,
+        }
+    }
+}
+
+/// Options shared by all engine runs.
+#[derive(Debug, Clone)]
+pub struct EngineOpts {
+    pub causal: bool,
+    pub partition: Partition,
+    pub backend: BackendSpec,
+    /// Record a timeline (small overhead; on by default).
+    pub record: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            causal: true,
+            partition: Partition::Zigzag,
+            backend: BackendSpec::Native,
+            record: true,
+        }
+    }
+}
+
+/// Result of a distributed attention pass.
+pub struct EngineOutput {
+    /// (S, H, D) output in global sequence order.
+    pub out: Tensor,
+    /// (H, S) log-sum-exp in global order.
+    pub lse: Tensor,
+    pub timeline: Timeline,
+    pub wall: f64,
+}
+
+/// Per-device slice of the problem.
+struct Shard {
+    positions: Vec<usize>,
+    pos_i32: Vec<i32>,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+}
+
+fn make_shards(q: &Tensor, k: &Tensor, v: &Tensor, parts: &[Vec<u32>]) -> Vec<Shard> {
+    parts
+        .iter()
+        .map(|p| {
+            let idx: Vec<usize> = p.iter().map(|&x| x as usize).collect();
+            Shard {
+                pos_i32: p.iter().map(|&x| x as i32).collect(),
+                q: q.gather_rows(&idx),
+                k: k.gather_rows(&idx),
+                v: v.gather_rows(&idx),
+                positions: idx,
+            }
+        })
+        .collect()
+}
+
+/// Scatter per-device (out, lse) back into global order.
+fn assemble(
+    seq: usize,
+    heads: usize,
+    head_dim: usize,
+    parts: Vec<(Vec<usize>, Tensor, Tensor)>,
+) -> (Tensor, Tensor) {
+    let mut out = Tensor::zeros(&[seq, heads, head_dim]);
+    let mut lse = Tensor::zeros(&[heads, seq]);
+    for (positions, o, l) in parts {
+        o.scatter_rows_into(&mut out, &positions);
+        let s_loc = positions.len();
+        for h in 0..heads {
+            for (i, &p) in positions.iter().enumerate() {
+                lse.data_mut()[h * seq + p] = l.data()[h * s_loc + i];
+            }
+        }
+    }
+    (out, lse)
+}
+
+/// Per-thread recording helper.
+struct Recorder {
+    device: usize,
+    clock: Clock,
+    timeline: Timeline,
+    enabled: bool,
+}
+
+impl Recorder {
+    fn span<T>(
+        &mut self,
+        tag: SpanTag,
+        step: usize,
+        name: &str,
+        bytes: usize,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = self.clock.now();
+        let r = f();
+        let t1 = self.clock.now();
+        self.timeline.push(Event {
+            device: self.device,
+            tag,
+            step,
+            name: name.to_string(),
+            t0,
+            t1,
+            bytes,
+        });
+        r
+    }
+
+    /// Zero-duration marker (channel sends are effectively instant).
+    fn mark(&mut self, tag: SpanTag, step: usize, name: &str, bytes: usize) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now();
+        self.timeline.push(Event {
+            device: self.device,
+            tag,
+            step,
+            name: name.to_string(),
+            t0: t,
+            t1: t,
+            bytes,
+        });
+    }
+}
+
+/// Buffered mailbox: lets an actor wait for one message kind while
+/// banking early arrivals of the others (partials merge eagerly upstream).
+struct Mailbox {
+    rx: Receiver<Msg>,
+    q: VecDeque<(usize, Tensor, Vec<i32>)>,
+    kv: VecDeque<(Tensor, Tensor, Vec<i32>)>,
+    partials: VecDeque<(Tensor, Tensor)>,
+}
+
+impl Mailbox {
+    fn new(rx: Receiver<Msg>) -> Mailbox {
+        Mailbox { rx, q: VecDeque::new(), kv: VecDeque::new(), partials: VecDeque::new() }
+    }
+
+    fn bank(&mut self, m: Msg) {
+        match m {
+            Msg::Q { owner, q, pos } => self.q.push_back((owner, q, pos)),
+            Msg::Kv { k, v, pos } => self.kv.push_back((k, v, pos)),
+            Msg::Partial { out, lse } => self.partials.push_back((out, lse)),
+        }
+    }
+
+    fn next_q(&mut self) -> Result<(usize, Tensor, Vec<i32>)> {
+        loop {
+            if let Some(x) = self.q.pop_front() {
+                return Ok(x);
+            }
+            let m = self.rx.recv().context("peer hung up awaiting Q")?;
+            self.bank(m);
+        }
+    }
+
+    fn next_kv(&mut self) -> Result<(Tensor, Tensor, Vec<i32>)> {
+        loop {
+            if let Some(x) = self.kv.pop_front() {
+                return Ok(x);
+            }
+            let m = self.rx.recv().context("peer hung up awaiting KV")?;
+            self.bank(m);
+        }
+    }
+
+    fn next_partial(&mut self) -> Result<(Tensor, Tensor)> {
+        loop {
+            if let Some(x) = self.partials.pop_front() {
+                return Ok(x);
+            }
+            let m = self.rx.recv().context("peer hung up awaiting partial")?;
+            self.bank(m);
+        }
+    }
+
+    /// Non-blocking drain of any already-arrived messages.
+    fn poll(&mut self) {
+        while let Ok(m) = self.rx.try_recv() {
+            self.bank(m);
+        }
+    }
+}
+
+/// Accumulator wrapper: first partial initializes, rest merge via backend.
+struct Accumulator {
+    state: Option<(Tensor, Tensor)>,
+}
+
+impl Accumulator {
+    fn new() -> Accumulator {
+        Accumulator { state: None }
+    }
+
+    fn add(
+        &mut self,
+        backend: &mut dyn Backend,
+        out: Tensor,
+        lse: Tensor,
+    ) -> Result<()> {
+        match &mut self.state {
+            None => {
+                self.state = Some((out, lse));
+                Ok(())
+            }
+            Some((acc_o, acc_l)) => backend.merge(acc_o, acc_l, &out, &lse),
+        }
+    }
+
+    fn finish(self) -> Result<(Tensor, Tensor)> {
+        self.state.ok_or_else(|| anyhow!("no partials merged"))
+    }
+}
+
+fn spawn_mesh(n: usize) -> (Vec<Vec<Sender<Msg>>>, Vec<Receiver<Msg>>) {
+    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let mesh = (0..n).map(|_| senders.clone()).collect();
+    (mesh, receivers)
+}
+
+fn shape3(t: &Tensor) -> (usize, usize, usize) {
+    (t.shape()[0], t.shape()[1], t.shape()[2])
+}
+
+// ---------------------------------------------------------------------------
+// TokenRing (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+/// Run distributed TokenRing attention over `n` device threads.
+///
+/// q/k/v: (S, H, D) global tensors. Returns globally-ordered (out, lse).
+pub fn run_token_ring(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    n: usize,
+    opts: &EngineOpts,
+) -> Result<EngineOutput> {
+    let (seq, heads, head_dim) = shape3(q);
+    let parts = opts.partition.assign(seq, n);
+    let shards = make_shards(q, k, v, &parts);
+    let (mesh, mut receivers) = spawn_mesh(n);
+    let clock = Clock::new();
+
+    let mut handles = Vec::with_capacity(n);
+    for (j, shard) in shards.into_iter().enumerate() {
+        let txs = mesh[j].clone();
+        let rx = receivers.remove(0);
+        let opts = opts.clone();
+        handles.push(thread::spawn(move || -> Result<_> {
+            let mut backend = opts.backend.build()?;
+            let mut rec = Recorder {
+                device: j,
+                clock,
+                timeline: Timeline::new(),
+                enabled: opts.record,
+            };
+            let mut mbox = Mailbox::new(rx);
+            let mut acc = Accumulator::new();
+            let mut merged_remote = 0usize;
+
+            let mut cur_owner = j;
+            let mut cur_q = shard.q.clone();
+            let mut cur_pos = shard.pos_i32.clone();
+
+            for step in 0..n {
+                // forward the Q we are about to consume (async overlap)
+                if step < n - 1 {
+                    let dst = (j + 1) % n;
+                    let msg = Msg::Q {
+                        owner: cur_owner,
+                        q: cur_q.clone(),
+                        pos: cur_pos.clone(),
+                    };
+                    rec.mark(SpanTag::SendQ, step, &format!("q[{cur_owner}]->d{dst}"), msg.bytes());
+                    txs[dst].send(msg).map_err(|_| anyhow!("send Q failed"))?;
+                }
+
+                // compute the micro-step
+                let (bo, bl) = rec.span(
+                    SpanTag::Compute,
+                    step,
+                    &format!("attn q{cur_owner} kv{j}"),
+                    0,
+                    || backend.attn_block(&cur_q, &shard.k, &shard.v, &cur_pos, &shard.pos_i32, opts.causal),
+                )?;
+
+                // route the partial home
+                if cur_owner == j {
+                    rec.span(SpanTag::Merge, step, "update self", 0, || -> Result<()> {
+                        acc.add(backend.as_mut(), bo, bl)
+                    })?;
+                } else {
+                    let msg = Msg::Partial { out: bo, lse: bl };
+                    rec.mark(
+                        SpanTag::SendOut,
+                        step,
+                        &format!("out[q{cur_owner}]->d{cur_owner}"),
+                        msg.bytes(),
+                    );
+                    txs[cur_owner].send(msg).map_err(|_| anyhow!("send partial failed"))?;
+                }
+
+                // merge any partials that already arrived (overlap)
+                mbox.poll();
+                while let Some((po, pl)) = mbox.partials.pop_front() {
+                    rec.span(SpanTag::Merge, step, "update remote", 0, || -> Result<()> {
+                        acc.add(backend.as_mut(), po, pl)
+                    })?;
+                    merged_remote += 1;
+                }
+
+                // receive next Q
+                if step < n - 1 {
+                    let (owner, nq, npos) = mbox.next_q()?;
+                    cur_owner = owner;
+                    cur_q = nq;
+                    cur_pos = npos;
+                }
+            }
+
+            // straggler partials
+            while merged_remote < n - 1 {
+                let (po, pl) = mbox.next_partial()?;
+                rec.span(SpanTag::Merge, n, "update tail", 0, || -> Result<()> {
+                    acc.add(backend.as_mut(), po, pl)
+                })?;
+                merged_remote += 1;
+            }
+
+            let (out, lse) = acc.finish()?;
+            Ok((shard.positions, out, lse, rec.timeline))
+        }));
+    }
+
+    collect(seq, heads, head_dim, handles, clock)
+}
+
+// ---------------------------------------------------------------------------
+// Ring-Attention baseline
+// ---------------------------------------------------------------------------
+
+/// Run distributed Ring-Attention (KV circulates, Q stays home).
+pub fn run_ring_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    n: usize,
+    opts: &EngineOpts,
+) -> Result<EngineOutput> {
+    let (seq, heads, head_dim) = shape3(q);
+    let parts = opts.partition.assign(seq, n);
+    let shards = make_shards(q, k, v, &parts);
+    let (mesh, mut receivers) = spawn_mesh(n);
+    let clock = Clock::new();
+
+    let mut handles = Vec::with_capacity(n);
+    for (j, shard) in shards.into_iter().enumerate() {
+        let txs = mesh[j].clone();
+        let rx = receivers.remove(0);
+        let opts = opts.clone();
+        handles.push(thread::spawn(move || -> Result<_> {
+            let mut backend = opts.backend.build()?;
+            let mut rec = Recorder {
+                device: j,
+                clock,
+                timeline: Timeline::new(),
+                enabled: opts.record,
+            };
+            let mut mbox = Mailbox::new(rx);
+            let mut acc = Accumulator::new();
+
+            let mut cur_k = shard.k.clone();
+            let mut cur_v = shard.v.clone();
+            let mut cur_pos = shard.pos_i32.clone();
+
+            for step in 0..n {
+                if step < n - 1 {
+                    let dst = (j + 1) % n;
+                    let msg = Msg::Kv {
+                        k: cur_k.clone(),
+                        v: cur_v.clone(),
+                        pos: cur_pos.clone(),
+                    };
+                    rec.mark(SpanTag::SendKv, step, &format!("kv->d{dst}"), msg.bytes());
+                    txs[dst].send(msg).map_err(|_| anyhow!("send KV failed"))?;
+                }
+
+                let (bo, bl) = rec.span(
+                    SpanTag::Compute,
+                    step,
+                    &format!("attn q{j} s{step}"),
+                    0,
+                    || backend.attn_block(&shard.q, &cur_k, &cur_v, &shard.pos_i32, &cur_pos, opts.causal),
+                )?;
+                rec.span(SpanTag::Merge, step, "update", 0, || -> Result<()> {
+                    acc.add(backend.as_mut(), bo, bl)
+                })?;
+
+                if step < n - 1 {
+                    let (nk, nv, npos) = mbox.next_kv()?;
+                    cur_k = nk;
+                    cur_v = nv;
+                    cur_pos = npos;
+                }
+            }
+
+            let (out, lse) = acc.finish()?;
+            Ok((shard.positions, out, lse, rec.timeline))
+        }));
+    }
+
+    collect(seq, heads, head_dim, handles, clock)
+}
+
+// ---------------------------------------------------------------------------
+// Hybrid multi-node (case study III)
+// ---------------------------------------------------------------------------
+
+/// Run the hybrid schedule: TokenRing within each of `nodes` equal node
+/// groups, Ring-Attention-style KV rotation between nodes.
+pub fn run_hybrid(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    nodes: usize,
+    per_node: usize,
+    opts: &EngineOpts,
+) -> Result<EngineOutput> {
+    let n = nodes * per_node;
+    let (seq, heads, head_dim) = shape3(q);
+    let parts = opts.partition.assign(seq, n);
+    let shards = make_shards(q, k, v, &parts);
+    let (mesh, mut receivers) = spawn_mesh(n);
+    let clock = Clock::new();
+
+    let mut handles = Vec::with_capacity(n);
+    for (j, shard) in shards.into_iter().enumerate() {
+        let txs = mesh[j].clone();
+        let rx = receivers.remove(0);
+        let opts = opts.clone();
+        handles.push(thread::spawn(move || -> Result<_> {
+            let node = j / per_node;
+            let lane = j % per_node;
+            let ring_next = node * per_node + (lane + 1) % per_node;
+            let kv_peer = ((node + 1) % nodes) * per_node + lane;
+
+            let mut backend = opts.backend.build()?;
+            let mut rec = Recorder {
+                device: j,
+                clock,
+                timeline: Timeline::new(),
+                enabled: opts.record,
+            };
+            let mut mbox = Mailbox::new(rx);
+            let mut acc = Accumulator::new();
+            let mut merged_remote = 0usize;
+            let expected_remote = nodes * (per_node - 1);
+
+            let mut cur_k = shard.k.clone();
+            let mut cur_v = shard.v.clone();
+            let mut cur_kpos = shard.pos_i32.clone();
+
+            for outer in 0..nodes {
+                let step_base = outer * per_node;
+                let mut cur_owner = j;
+                let mut cur_q = shard.q.clone();
+                let mut cur_pos = shard.pos_i32.clone();
+
+                // double-buffered inter-node KV: ship a COPY at pass start
+                // so the slow hop overlaps the whole intra-node pass.
+                if outer < nodes - 1 {
+                    let msg = Msg::Kv {
+                        k: cur_k.clone(),
+                        v: cur_v.clone(),
+                        pos: cur_kpos.clone(),
+                    };
+                    rec.mark(SpanTag::SendKv, step_base, &format!("kv->d{kv_peer}"), msg.bytes());
+                    txs[kv_peer].send(msg).map_err(|_| anyhow!("send KV failed"))?;
+                }
+
+                for i in 0..per_node {
+                    let step = step_base + i;
+                    if i < per_node - 1 {
+                        let msg = Msg::Q {
+                            owner: cur_owner,
+                            q: cur_q.clone(),
+                            pos: cur_pos.clone(),
+                        };
+                        rec.mark(SpanTag::SendQ, step, &format!("q[{cur_owner}]->d{ring_next}"), msg.bytes());
+                        txs[ring_next].send(msg).map_err(|_| anyhow!("send Q failed"))?;
+                    }
+
+                    let (bo, bl) = rec.span(
+                        SpanTag::Compute,
+                        step,
+                        &format!("attn q{cur_owner} o{outer}"),
+                        0,
+                        || backend.attn_block(&cur_q, &cur_k, &cur_v, &cur_pos, &cur_kpos, opts.causal),
+                    )?;
+
+                    if cur_owner == j {
+                        rec.span(SpanTag::Merge, step, "update self", 0, || -> Result<()> {
+                            acc.add(backend.as_mut(), bo, bl)
+                        })?;
+                    } else {
+                        let msg = Msg::Partial { out: bo, lse: bl };
+                        rec.mark(SpanTag::SendOut, step, &format!("out->d{cur_owner}"), msg.bytes());
+                        txs[cur_owner].send(msg).map_err(|_| anyhow!("send partial failed"))?;
+                    }
+
+                    mbox.poll();
+                    while let Some((po, pl)) = mbox.partials.pop_front() {
+                        rec.span(SpanTag::Merge, step, "update remote", 0, || -> Result<()> {
+                            acc.add(backend.as_mut(), po, pl)
+                        })?;
+                        merged_remote += 1;
+                    }
+
+                    if i < per_node - 1 {
+                        let (owner, nq, npos) = mbox.next_q()?;
+                        cur_owner = owner;
+                        cur_q = nq;
+                        cur_pos = npos;
+                    }
+                }
+
+                // swap in the next node's KV block (sent at ITS pass start)
+                if outer < nodes - 1 {
+                    let (nk, nv, npos) = mbox.next_kv()?;
+                    cur_k = nk;
+                    cur_v = nv;
+                    cur_kpos = npos;
+                }
+            }
+
+            while merged_remote < expected_remote {
+                let (po, pl) = mbox.next_partial()?;
+                rec.span(SpanTag::Merge, nodes * per_node, "update tail", 0, || -> Result<()> {
+                    acc.add(backend.as_mut(), po, pl)
+                })?;
+                merged_remote += 1;
+            }
+
+            let (out, lse) = acc.finish()?;
+            Ok((shard.positions, out, lse, rec.timeline))
+        }));
+    }
+
+    collect(seq, heads, head_dim, handles, clock)
+}
+
+type DeviceResult = Result<(Vec<usize>, Tensor, Tensor, Timeline)>;
+
+fn collect(
+    seq: usize,
+    heads: usize,
+    head_dim: usize,
+    handles: Vec<thread::JoinHandle<DeviceResult>>,
+    clock: Clock,
+) -> Result<EngineOutput> {
+    let mut parts = Vec::with_capacity(handles.len());
+    let mut timelines = Vec::with_capacity(handles.len());
+    for h in handles {
+        let (positions, out, lse, tl) =
+            h.join().map_err(|_| anyhow!("device thread panicked"))??;
+        parts.push((positions, out, lse));
+        timelines.push(tl);
+    }
+    let wall = clock.now();
+    let (out, lse) = assemble(seq, heads, head_dim, parts);
+    Ok(EngineOutput { out, lse, timeline: Timeline::merge(timelines), wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full_attention;
+    use crate::util::rng::Rng;
+
+    fn rand_qkv(seq: usize, h: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor::new(&[seq, h, d], rng.normal_vec(seq * h * d, 1.0)),
+            Tensor::new(&[seq, h, d], rng.normal_vec(seq * h * d, 1.0)),
+            Tensor::new(&[seq, h, d], rng.normal_vec(seq * h * d, 1.0)),
+        )
+    }
+
+    fn check_against_oracle(run: impl Fn(&Tensor, &Tensor, &Tensor) -> EngineOutput, seed: u64, causal: bool) {
+        let (q, k, v) = rand_qkv(64, 2, 16, seed);
+        let got = run(&q, &k, &v);
+        let (eo, el) = full_attention(&q, &k, &v, causal);
+        assert!(
+            got.out.allclose(&eo, 1e-4),
+            "out diff={}",
+            got.out.max_abs_diff(&eo)
+        );
+        assert!(
+            got.lse.allclose(&el, 1e-3),
+            "lse diff={}",
+            got.lse.max_abs_diff(&el)
+        );
+    }
+
+    #[test]
+    fn token_ring_matches_oracle_all_partitions() {
+        for (causal, partition) in [
+            (false, Partition::Contiguous),
+            (true, Partition::Contiguous),
+            (true, Partition::Striped { stripe: 2 }),
+            (true, Partition::Zigzag),
+        ] {
+            let opts = EngineOpts {
+                causal,
+                partition,
+                backend: BackendSpec::Native,
+                record: true,
+            };
+            check_against_oracle(
+                |q, k, v| run_token_ring(q, k, v, 4, &opts).unwrap(),
+                7,
+                causal,
+            );
+        }
+    }
+
+    #[test]
+    fn ring_attention_matches_oracle() {
+        for causal in [false, true] {
+            let opts = EngineOpts {
+                causal,
+                partition: Partition::Zigzag,
+                backend: BackendSpec::Native,
+                record: false,
+            };
+            check_against_oracle(
+                |q, k, v| run_ring_attention(q, k, v, 4, &opts).unwrap(),
+                8,
+                causal,
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_matches_oracle() {
+        for (nodes, per_node) in [(2, 2), (2, 4), (4, 2)] {
+            let opts = EngineOpts {
+                causal: true,
+                partition: Partition::Zigzag,
+                backend: BackendSpec::Native,
+                record: false,
+            };
+            check_against_oracle(
+                |q, k, v| run_hybrid(q, k, v, nodes, per_node, &opts).unwrap(),
+                9,
+                true,
+            );
+        }
+    }
+
+    #[test]
+    fn token_ring_and_ring_agree() {
+        let (q, k, v) = rand_qkv(64, 2, 16, 11);
+        let opts = EngineOpts::default();
+        let a = run_token_ring(&q, &k, &v, 4, &opts).unwrap();
+        let b = run_ring_attention(&q, &k, &v, 4, &opts).unwrap();
+        assert!(a.out.allclose(&b.out, 1e-4));
+        assert!(a.lse.allclose(&b.lse, 1e-3));
+    }
+
+    #[test]
+    fn degree_two_and_eight() {
+        for n in [2usize, 8] {
+            let opts = EngineOpts {
+                causal: true,
+                partition: Partition::Zigzag,
+                backend: BackendSpec::Native,
+                record: false,
+            };
+            let (q, k, v) = rand_qkv(64, 2, 16, 13 + n as u64);
+            let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
+            let (eo, _) = full_attention(&q, &k, &v, true);
+            assert!(got.out.allclose(&eo, 1e-4), "n={n}");
+        }
+    }
+
+    #[test]
+    fn timeline_has_expected_traffic() {
+        let (q, k, v) = rand_qkv(64, 2, 16, 17);
+        let opts = EngineOpts::default();
+        let r = run_token_ring(&q, &k, &v, 4, &opts).unwrap();
+        let sends_q = r
+            .timeline
+            .events
+            .iter()
+            .filter(|e| e.tag == SpanTag::SendQ)
+            .count();
+        let sends_out = r
+            .timeline
+            .events
+            .iter()
+            .filter(|e| e.tag == SpanTag::SendOut)
+            .count();
+        let computes = r
+            .timeline
+            .events
+            .iter()
+            .filter(|e| e.tag == SpanTag::Compute)
+            .count();
+        assert_eq!(computes, 16);
+        assert_eq!(sends_q, 12);
+        assert_eq!(sends_out, 12);
+        assert!(r.timeline.comm_bytes() > 0);
+        assert!(r.wall > 0.0);
+    }
+}

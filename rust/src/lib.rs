@@ -1,0 +1,34 @@
+//! # TokenRing
+//!
+//! Reproduction of *TokenRing: An Efficient Parallelism Framework for
+//! Infinite-Context LLMs via Bidirectional Communication* (Wang et al.,
+//! 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas blockwise flash-attention
+//!   kernel emitting `(block_out, block_lse)` plus the online-softmax merge.
+//! * **L2** (`python/compile/model.py`): jax graphs AOT-lowered to HLO text.
+//! * **L3** (this crate): the coordinator — parallelism schedules
+//!   (TokenRing + Ring-Attention / Ulysses / TP baselines), an interconnect
+//!   topology model, a discrete-event cluster simulator (the paper's
+//!   hardware is substituted per DESIGN.md §2), a threaded message-passing
+//!   engine executing real numerics, and the bench harness regenerating
+//!   every table/figure in the paper.
+//!
+//! Quick start: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- fig6`.
+
+pub mod attention;
+pub mod comm;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod parallelism;
+pub mod reports;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod tensor;
+pub mod topology;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,308 @@
+//! `tokenring` — CLI for the TokenRing reproduction.
+//!
+//! Subcommands regenerate every evaluation artifact (DESIGN.md §4) and run
+//! the real distributed engine:
+//!
+//! ```text
+//! tokenring fig6      [--seq 24000] [--trace out.json]
+//! tokenring table1    [--seq 24000] [--devices 4]
+//! tokenring scaling   [--mode gpus|seq] [--seq N] [--devices N]
+//! tokenring zigzag    [--seq 32768] [--devices 4]
+//! tokenring hybrid    [--seq 49152] [--nodes 2] [--per-node 4]
+//! tokenring validate  [--backend native|pjrt] [--profile tiny]
+//! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
+//! tokenring trace     --schedule token_ring --out trace.json
+//! ```
+
+use std::process::ExitCode;
+
+use tokenring::engine::backend::BackendSpec;
+use tokenring::engine::{self, EngineOpts};
+use tokenring::parallelism::partition::Partition;
+use tokenring::reports;
+use tokenring::runtime::default_artifact_dir;
+use tokenring::scheduler::{serve, ServeOpts, ServeSchedule};
+use tokenring::tensor::Tensor;
+use tokenring::util::cli::{render_help, Args, OptSpec};
+use tokenring::util::rng::Rng;
+use tokenring::workload::{LenDist, WorkloadGen};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "fig6" => cmd_fig6(rest),
+        "table1" => cmd_table1(rest),
+        "scaling" => cmd_scaling(rest),
+        "zigzag" => cmd_zigzag(rest),
+        "hybrid" => cmd_hybrid(rest),
+        "validate" => cmd_validate(rest),
+        "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "tokenring — bidirectional sequence parallelism (paper reproduction)\n\
+     commands: fig6 | table1 | scaling | zigzag | hybrid | validate | serve | trace\n\
+     run `tokenring <cmd> --help` for options"
+        .to_string()
+}
+
+fn parse_or_help(
+    argv: &[String],
+    cmd: &str,
+    about: &str,
+    specs: &[OptSpec],
+) -> Result<Option<Args>, String> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", render_help(cmd, about, specs));
+        return Ok(None);
+    }
+    Args::parse(argv, specs).map(Some)
+}
+
+fn cmd_fig6(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "seq", help: "sequence length", default: Some("24000"), is_flag: false },
+        OptSpec { name: "trace", help: "write chrome traces to this prefix", default: None, is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "fig6", "Figure 6 per-step profile", &specs)? else {
+        return Ok(());
+    };
+    let seq = args.get_usize("seq")?;
+    let (report, tr, ra) = reports::fig6(seq);
+    println!("{report}");
+    if let Some(prefix) = args.get("trace") {
+        for (name, prof) in [("token_ring", &tr), ("ring_attention", &ra)] {
+            let tl = tokenring::metrics::timeline_from_sim(&prof.sim);
+            let path = format!("{prefix}.{name}.json");
+            std::fs::write(&path, tl.chrome_trace()).map_err(|e| e.to_string())?;
+            println!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table1(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "seq", help: "sequence length", default: Some("24000"), is_flag: false },
+        OptSpec { name: "devices", help: "SP degree", default: Some("4"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "table1", "Table 1 comparison", &specs)? else {
+        return Ok(());
+    };
+    let (report, _) = reports::table1(args.get_usize("seq")?, args.get_usize("devices")?);
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_scaling(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "mode", help: "gpus | seq", default: Some("gpus"), is_flag: false },
+        OptSpec { name: "seq", help: "sequence length (gpus mode)", default: Some("49152"), is_flag: false },
+        OptSpec { name: "block", help: "tokens per device (seq mode, weak scaling)", default: Some("4096"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "scaling", "S1/S2 sweeps", &specs)? else {
+        return Ok(());
+    };
+    match args.get_str("mode")? {
+        "gpus" => println!("{}", reports::scaling_gpus(args.get_usize("seq")?, &[2, 4, 8, 16, 32])),
+        "seq" => println!(
+            "{}",
+            reports::scaling_seqlen(
+                args.get_usize("block")?,
+                &[8_192, 16_384, 32_768, 65_536, 131_072, 262_144],
+            )
+        ),
+        other => return Err(format!("unknown mode '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_zigzag(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "seq", help: "sequence length", default: Some("32768"), is_flag: false },
+        OptSpec { name: "devices", help: "SP degree", default: Some("4"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "zigzag", "Z1 causal load balance", &specs)? else {
+        return Ok(());
+    };
+    println!(
+        "{}",
+        reports::zigzag_balance(args.get_usize("seq")?, args.get_usize("devices")?)
+    );
+    Ok(())
+}
+
+fn cmd_hybrid(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "seq", help: "sequence length", default: Some("49152"), is_flag: false },
+        OptSpec { name: "nodes", help: "node count", default: Some("2"), is_flag: false },
+        OptSpec { name: "per-node", help: "devices per node", default: Some("4"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "hybrid", "M1 multi-node hybrid", &specs)? else {
+        return Ok(());
+    };
+    println!(
+        "{}",
+        reports::hybrid_multinode(
+            args.get_usize("seq")?,
+            args.get_usize("nodes")?,
+            args.get_usize("per-node")?,
+        )
+    );
+    Ok(())
+}
+
+fn cmd_validate(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "backend", help: "native | pjrt", default: Some("native"), is_flag: false },
+        OptSpec { name: "profile", help: "artifact profile (pjrt)", default: Some("tiny"), is_flag: false },
+        OptSpec { name: "devices", help: "SP degree", default: Some("4"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "validate", "engine numeric equivalence", &specs)? else {
+        return Ok(());
+    };
+    let n = args.get_usize("devices")?;
+    let profile = args.get_str("profile")?.to_string();
+    let backend = match args.get_str("backend")? {
+        "native" => BackendSpec::Native,
+        "pjrt" => BackendSpec::Pjrt { dir: default_artifact_dir(), profile: profile.clone() },
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    // dims must match the artifact profile when using pjrt
+    let (blk, heads, head_dim) = match profile.as_str() {
+        "tiny" => (64, 4, 32),
+        "small" => (256, 8, 64),
+        other => return Err(format!("unknown profile '{other}'")),
+    };
+    let seq = blk * n;
+    let mut rng = Rng::new(42);
+    let sz = seq * heads * head_dim;
+    let q = Tensor::new(&[seq, heads, head_dim], rng.normal_vec(sz, 1.0));
+    let k = Tensor::new(&[seq, heads, head_dim], rng.normal_vec(sz, 1.0));
+    let v = Tensor::new(&[seq, heads, head_dim], rng.normal_vec(sz, 1.0));
+    let (eo, el) = tokenring::attention::full_attention(&q, &k, &v, true);
+
+    type RunFn = fn(&Tensor, &Tensor, &Tensor, usize, &EngineOpts) -> anyhow::Result<engine::EngineOutput>;
+    for (label, partition) in [
+        ("contiguous", Partition::Contiguous),
+        ("zigzag", Partition::Zigzag),
+    ] {
+        let opts = EngineOpts {
+            causal: true,
+            partition,
+            backend: backend.clone(),
+            record: false,
+        };
+        let runs: [(&str, RunFn); 2] = [
+            ("token_ring", engine::run_token_ring),
+            ("ring_attention", engine::run_ring_attention),
+        ];
+        for (sched, run) in runs {
+            let got = run(&q, &k, &v, n, &opts).map_err(|e| e.to_string())?;
+            let diff_o = got.out.max_abs_diff(&eo);
+            let diff_l = got.lse.max_abs_diff(&el);
+            let ok = diff_o < 1e-3 && diff_l < 1e-3;
+            println!(
+                "{sched:>15} {label:>10} backend={:<10} out_diff={diff_o:.2e} lse_diff={diff_l:.2e} {}",
+                backend.label(),
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                return Err(format!("{sched}/{label} diverged from single-device oracle"));
+            }
+        }
+    }
+    println!("validate: distributed outputs match single-device attention");
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "requests", help: "request count", default: Some("16"), is_flag: false },
+        OptSpec { name: "devices", help: "SP degree", default: Some("4"), is_flag: false },
+        OptSpec { name: "schedule", help: "token_ring | ring_attention", default: Some("token_ring"), is_flag: false },
+        OptSpec { name: "rate", help: "arrival rate (req/s)", default: Some("8"), is_flag: false },
+        OptSpec { name: "layers", help: "attention passes per request", default: Some("2"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "serve", "e2e serving driver", &specs)? else {
+        return Ok(());
+    };
+    let n = args.get_usize("devices")?;
+    let schedule = match args.get_str("schedule")? {
+        "token_ring" => ServeSchedule::TokenRing,
+        "ring_attention" => ServeSchedule::RingAttention,
+        other => return Err(format!("unknown schedule '{other}'")),
+    };
+    let gen = WorkloadGen {
+        rate: args.get_f64("rate")?,
+        dist: LenDist::Bimodal { short: 256, long: 1024, long_frac: 0.25 },
+        multiple: 2 * n * 8,
+    };
+    let reqs = gen.generate(args.get_usize("requests")?, 7);
+    let opts = ServeOpts {
+        devices: n,
+        heads: 4,
+        head_dim: 32,
+        layers: args.get_usize("layers")?,
+        schedule,
+        engine: EngineOpts {
+            causal: true,
+            partition: Partition::Zigzag,
+            backend: BackendSpec::Native,
+            record: false,
+        },
+    };
+    let rep = serve(&reqs, &opts).map_err(|e| e.to_string())?;
+    let lat = rep.latency_summary();
+    println!(
+        "served {} requests / {} tokens in {:.2}s over {} devices ({:?})",
+        rep.requests.len(),
+        rep.total_tokens,
+        rep.wall,
+        n,
+        schedule
+    );
+    println!(
+        "throughput {:.0} tok/s | latency p50 {:.1} ms p95 {:.1} ms | service p50 {:.1} ms",
+        rep.throughput_tokens_per_s(),
+        lat.p50 * 1e3,
+        lat.p95 * 1e3,
+        rep.service_p50() * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "schedule", help: "token_ring | ring_attention | ulysses | tensor_parallel", default: Some("token_ring"), is_flag: false },
+        OptSpec { name: "seq", help: "sequence length", default: Some("24000"), is_flag: false },
+        OptSpec { name: "out", help: "output file", default: Some("trace.json"), is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "trace", "chrome trace of a schedule", &specs)? else {
+        return Ok(());
+    };
+    let (_, trace) = reports::trace_schedule(args.get_str("schedule")?, args.get_usize("seq")?)
+        .map_err(|e| e.to_string())?;
+    let out = args.get_str("out")?;
+    std::fs::write(out, trace).map_err(|e| e.to_string())?;
+    println!("wrote {out} — open in chrome://tracing or Perfetto");
+    Ok(())
+}

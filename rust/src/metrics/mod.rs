@@ -1,0 +1,232 @@
+//! Timelines, chrome-trace export, and summary statistics — the repo's
+//! stand-in for the paper's Nsight Systems profiling (Figure 6).
+//!
+//! Both the discrete-event simulator and the real threaded engine emit
+//! `Timeline`s, so simulated and measured runs render identically in
+//! `chrome://tracing` / Perfetto.
+
+use std::time::Instant;
+
+use crate::json_obj;
+use crate::simulator::{SimResult, SpanTag};
+use crate::util::json::Json;
+
+/// One recorded span (seconds relative to run start).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub device: usize,
+    pub tag: SpanTag,
+    pub step: usize,
+    pub name: String,
+    pub t0: f64,
+    pub t1: f64,
+    pub bytes: usize,
+}
+
+/// A run's worth of events.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub events: Vec<Event>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.events.iter().map(|e| e.t1).fold(0.0, f64::max)
+    }
+
+    /// Merge per-device timelines (from engine threads) into one.
+    pub fn merge(parts: Vec<Timeline>) -> Timeline {
+        let mut all = Timeline::new();
+        for p in parts {
+            all.events.extend(p.events);
+        }
+        all.events.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        all
+    }
+
+    /// Total bytes moved by communication events.
+    pub fn comm_bytes(&self) -> usize {
+        self.events.iter().filter(|e| e.tag.is_comm()).map(|e| e.bytes).sum()
+    }
+
+    /// Busy compute seconds per device.
+    pub fn compute_busy(&self, device: usize) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.device == device && !e.tag.is_comm())
+            .map(|e| e.t1 - e.t0)
+            .sum()
+    }
+
+    /// Chrome trace event format (one "process" per device, comm on a
+    /// separate track). Load in chrome://tracing or Perfetto.
+    pub fn chrome_trace(&self) -> String {
+        let mut events = Vec::with_capacity(self.events.len());
+        for e in &self.events {
+            let track: i64 = if e.tag.is_comm() { 1 } else { 0 };
+            events.push(json_obj![
+                ("name", format!("{} [{}]", e.name, e.tag.label())),
+                ("cat", e.tag.label()),
+                ("ph", "X"),
+                ("ts", e.t0 * 1e6),
+                ("dur", (e.t1 - e.t0) * 1e6),
+                ("pid", e.device),
+                ("tid", track),
+                ("args", json_obj![("step", e.step), ("bytes", e.bytes)]),
+            ]);
+        }
+        Json::Obj(
+            [("traceEvents".to_string(), Json::Arr(events))]
+                .into_iter()
+                .collect(),
+        )
+        .to_string()
+    }
+
+    /// Per-step (step, wall, compute, comm) summary rows (Figure 6 shape).
+    pub fn step_rows(&self) -> Vec<(usize, f64, f64, f64)> {
+        let max_step = self.events.iter().map(|e| e.step).max().unwrap_or(0);
+        (0..=max_step)
+            .map(|s| {
+                let evs: Vec<&Event> =
+                    self.events.iter().filter(|e| e.step == s).collect();
+                if evs.is_empty() {
+                    return (s, 0.0, 0.0, 0.0);
+                }
+                let start = evs.iter().map(|e| e.t0).fold(f64::INFINITY, f64::min);
+                let end = evs.iter().map(|e| e.t1).fold(0.0f64, f64::max);
+                let compute = evs
+                    .iter()
+                    .filter(|e| !e.tag.is_comm())
+                    .map(|e| e.t1 - e.t0)
+                    .fold(0.0f64, f64::max);
+                let comm = evs
+                    .iter()
+                    .filter(|e| e.tag.is_comm())
+                    .map(|e| e.t1 - e.t0)
+                    .fold(0.0f64, f64::max);
+                (s, end - start, compute, comm)
+            })
+            .collect()
+    }
+}
+
+/// Convert a simulator result into a Timeline (for unified reporting).
+pub fn timeline_from_sim(r: &SimResult) -> Timeline {
+    let mut t = Timeline::new();
+    for s in &r.spans {
+        let task = &r.graph.tasks[s.task];
+        t.push(Event {
+            device: task.device,
+            tag: task.tag,
+            step: task.step,
+            name: task.name.clone(),
+            t0: s.start,
+            t1: s.end,
+            bytes: 0,
+        });
+    }
+    t
+}
+
+/// Wall-clock stopwatch for engine threads: records spans against a shared
+/// epoch so per-thread timelines align.
+#[derive(Debug, Clone, Copy)]
+pub struct Clock {
+    epoch: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { epoch: Instant::now() }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(device: usize, tag: SpanTag, step: usize, t0: f64, t1: f64) -> Event {
+        Event { device, tag, step, name: "x".into(), t0, t1, bytes: 100 }
+    }
+
+    #[test]
+    fn makespan_and_busy() {
+        let mut t = Timeline::new();
+        t.push(ev(0, SpanTag::Compute, 0, 0.0, 1.0));
+        t.push(ev(0, SpanTag::Compute, 1, 1.5, 2.0));
+        t.push(ev(1, SpanTag::SendQ, 0, 0.0, 0.4));
+        assert_eq!(t.makespan(), 2.0);
+        assert!((t.compute_busy(0) - 1.5).abs() < 1e-12);
+        assert_eq!(t.compute_busy(1), 0.0);
+        assert_eq!(t.comm_bytes(), 100);
+    }
+
+    #[test]
+    fn merge_sorts_by_start() {
+        let mut a = Timeline::new();
+        a.push(ev(0, SpanTag::Compute, 0, 1.0, 2.0));
+        let mut b = Timeline::new();
+        b.push(ev(1, SpanTag::Compute, 0, 0.0, 0.5));
+        let m = Timeline::merge(vec![a, b]);
+        assert_eq!(m.events.len(), 2);
+        assert_eq!(m.events[0].device, 1);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let mut t = Timeline::new();
+        t.push(ev(0, SpanTag::Compute, 0, 0.0, 1.0));
+        t.push(ev(2, SpanTag::SendOut, 3, 0.5, 0.9));
+        let s = t.chrome_trace();
+        let j = Json::parse(&s).unwrap();
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").as_str(), Some("X"));
+        assert_eq!(evs[1].get("pid").as_usize(), Some(2));
+        assert_eq!(evs[1].get("args").get("step").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn step_rows_aggregate() {
+        let mut t = Timeline::new();
+        t.push(ev(0, SpanTag::Compute, 0, 0.0, 1.0));
+        t.push(ev(1, SpanTag::SendQ, 0, 0.2, 1.5));
+        t.push(ev(0, SpanTag::Compute, 1, 1.5, 2.5));
+        let rows = t.step_rows();
+        assert_eq!(rows.len(), 2);
+        let (s, wall, compute, comm) = rows[0];
+        assert_eq!(s, 0);
+        assert!((wall - 1.5).abs() < 1e-12);
+        assert!((compute - 1.0).abs() < 1e-12);
+        assert!((comm - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_timeline_roundtrip() {
+        let mut g = crate::simulator::TaskGraph::new();
+        g.compute(0, 0, "a", 1.0, &[]);
+        let r = crate::simulator::simulate(&g);
+        let t = timeline_from_sim(&r);
+        assert_eq!(t.events.len(), 1);
+        assert_eq!(t.makespan(), 1.0);
+    }
+}

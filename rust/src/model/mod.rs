@@ -1,0 +1,150 @@
+//! Model presets: the attention shapes the paper evaluates (LLaMA2-7B) plus
+//! the DiT case-study shape and the tiny/small profiles matching the AOT
+//! artifacts in `python/compile/model.py`.
+
+use crate::comm::{AttnShape, Dtype};
+
+/// Transformer-model description (attention-relevant fields only; the e2e
+/// example adds the MLP dims from the artifact metadata).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub heads: usize,
+    /// KV heads (< heads under GQA/MQA — the Ulysses degree cap the paper
+    /// highlights applies to THIS number for KV-parallel schemes).
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    pub ffn: usize,
+    pub dtype: Dtype,
+    /// Whether attention is causal (LLMs) or full (DiT).
+    pub causal: bool,
+}
+
+impl ModelConfig {
+    pub fn embed(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Attention shape at a given sequence length.
+    pub fn attn_shape(&self, seq: usize) -> AttnShape {
+        AttnShape::new(seq, self.heads, self.head_dim, self.dtype)
+    }
+
+    /// §4.1: "LLaMA2-7B model configuration, with d=128 and nheads=32".
+    pub fn llama2_7b() -> ModelConfig {
+        ModelConfig {
+            name: "llama2_7b",
+            heads: 32,
+            kv_heads: 32,
+            head_dim: 128,
+            layers: 32,
+            ffn: 11_008,
+            dtype: Dtype::F16,
+            causal: true,
+        }
+    }
+
+    /// LLaMA3-8B-style GQA variant: 8 KV heads — exhibits the Ulysses
+    /// degree cap (Table 1's "number of attention heads" limitation).
+    pub fn llama3_8b_gqa() -> ModelConfig {
+        ModelConfig {
+            name: "llama3_8b_gqa",
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            layers: 32,
+            ffn: 14_336,
+            dtype: Dtype::Bf16,
+            causal: true,
+        }
+    }
+
+    /// DiT-XL/2-style non-causal model (case study I / xDIT).
+    pub fn dit_xl() -> ModelConfig {
+        ModelConfig {
+            name: "dit_xl",
+            heads: 16,
+            kv_heads: 16,
+            head_dim: 72,
+            layers: 28,
+            ffn: 4608,
+            dtype: Dtype::F16,
+            causal: false,
+        }
+    }
+
+    /// Matches the `tiny` AOT profile (python/compile/model.py).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny",
+            heads: 4,
+            kv_heads: 4,
+            head_dim: 32,
+            layers: 2,
+            ffn: 512,
+            dtype: Dtype::F32,
+            causal: true,
+        }
+    }
+
+    /// Matches the `small` AOT profile.
+    pub fn small() -> ModelConfig {
+        ModelConfig {
+            name: "small",
+            heads: 8,
+            kv_heads: 8,
+            head_dim: 64,
+            layers: 4,
+            ffn: 2048,
+            dtype: Dtype::F32,
+            causal: true,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        Some(match name {
+            "llama2_7b" => Self::llama2_7b(),
+            "llama3_8b_gqa" => Self::llama3_8b_gqa(),
+            "dit_xl" => Self::dit_xl(),
+            "tiny" => Self::tiny(),
+            "small" => Self::small(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_matches_paper_config() {
+        let m = ModelConfig::llama2_7b();
+        assert_eq!(m.heads, 32);
+        assert_eq!(m.head_dim, 128);
+        assert_eq!(m.embed(), 4096);
+        assert!(m.causal);
+    }
+
+    #[test]
+    fn gqa_kv_heads_below_q_heads() {
+        let m = ModelConfig::llama3_8b_gqa();
+        assert!(m.kv_heads < m.heads);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["llama2_7b", "llama3_8b_gqa", "dit_xl", "tiny", "small"] {
+            assert_eq!(ModelConfig::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn attn_shape_carries_dims() {
+        let s = ModelConfig::llama2_7b().attn_shape(24_000);
+        assert_eq!(s.seq, 24_000);
+        assert_eq!(s.heads, 32);
+    }
+}

@@ -1,0 +1,210 @@
+//! Case study III (§3.3.3, Figure 5): hybrid multi-node schedule —
+//! TokenRing inside each node's full mesh, classic Ring-Attention KV
+//! exchange between nodes.
+//!
+//! Outer step o ∈ [0, nodes): every node runs a full intra-node TokenRing
+//! pass of its local Q blocks against the KV super-block currently resident
+//! in the node; then each device lane-forwards its KV block to the peer
+//! device of the next node and the next outer step begins.
+
+use crate::simulator::{SpanTag, TaskGraph, TaskId};
+use crate::topology::Topology;
+
+use super::{token_ring, AttnJob, Schedule};
+
+#[derive(Debug, Clone, Copy)]
+pub struct HybridTokenRing {
+    pub elide_q: bool,
+    /// Double-buffer the inter-node KV exchange: each device sends a COPY
+    /// of its resident KV block at pass START, so the (slow) inter-node
+    /// transfer hides behind the whole intra-node pass instead of sitting
+    /// exposed at the pass boundary.
+    pub overlap_kv: bool,
+}
+
+impl Default for HybridTokenRing {
+    fn default() -> Self {
+        HybridTokenRing { elide_q: false, overlap_kv: true }
+    }
+}
+
+impl Schedule for HybridTokenRing {
+    fn name(&self) -> &'static str {
+        "hybrid_token_ring"
+    }
+
+    fn build(&self, topo: &Topology, job: &AttnJob) -> TaskGraph {
+        let nodes = topo.num_nodes();
+        assert!(nodes >= 1);
+        let n = topo.num_devices;
+        let per_node = n / nodes;
+        assert_eq!(n % nodes, 0, "uneven node sizes unsupported");
+
+        // Global partition: device d owns positions[d] (its Q block AND its
+        // initial KV block).
+        let positions = job.partition.assign(job.shape.seq, n);
+        let mut g = TaskGraph::new();
+
+        // kv_home[d] = rank whose KV block device d currently holds.
+        let mut kv_home: Vec<usize> = (0..n).collect();
+        // deps gating each device's next pass (KV arrival / previous pass)
+        let mut entry: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+
+        for outer in 0..nodes {
+            let step_base = outer * (per_node + 2);
+            // per-device completion task of this pass
+            let mut pass_final: Vec<Option<TaskId>> = vec![None; n];
+            for node in 0..nodes {
+                let devices = topo.node_members(node);
+                let q_pos: Vec<Vec<u32>> =
+                    devices.iter().map(|&d| positions[d].clone()).collect();
+                let kv_pos: Vec<Vec<u32>> =
+                    devices.iter().map(|&d| positions[kv_home[d]].clone()).collect();
+                let deps: Vec<TaskId> = devices
+                    .iter()
+                    .flat_map(|&d| entry[d].iter().copied())
+                    .collect();
+                let finals = token_ring::build_into(
+                    &mut g,
+                    topo,
+                    job,
+                    &devices,
+                    &q_pos,
+                    &kv_pos,
+                    self.elide_q,
+                    step_base,
+                    &deps,
+                );
+                for (r, &d) in devices.iter().enumerate() {
+                    pass_final[d] = Some(finals[r]);
+                }
+            }
+
+            // Inter-node KV rotation (except after the last outer step).
+            if outer + 1 < nodes {
+                let mut new_entry: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+                let mut new_home = kv_home.clone();
+                for node in 0..nodes {
+                    let next = (node + 1) % nodes;
+                    let members = topo.node_members(node);
+                    let peers = topo.node_members(next);
+                    for (&src, &dst) in members.iter().zip(&peers) {
+                        let kv_rank = kv_home[src];
+                        let bytes = 2.0 * job.shape.act_bytes(positions[kv_rank].len());
+                        // overlap_kv: a copy leaves at pass START (gated
+                        // only on the block's own arrival), hiding the
+                        // inter-node hop behind the intra pass. Otherwise
+                        // it waits for the holder to finish computing.
+                        let deps: Vec<TaskId> = if self.overlap_kv {
+                            entry[src].clone()
+                        } else {
+                            vec![pass_final[src].expect("pass built")]
+                        };
+                        let t = g.transfer(
+                            topo,
+                            src,
+                            dst,
+                            bytes,
+                            SpanTag::SendKv,
+                            step_base + per_node,
+                            format!("kv[{kv_rank}] n{node}->n{next} o{outer}"),
+                            &deps,
+                        );
+                        new_entry[dst].push(t);
+                        new_home[dst] = kv_rank;
+                    }
+                }
+                kv_home = new_home;
+                entry = new_entry;
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{AttnShape, ComputeModel, Dtype};
+    use crate::parallelism::partition::Partition;
+    use crate::simulator::simulate;
+    use crate::topology::Topology;
+
+    fn job(seq: usize) -> AttnJob {
+        AttnJob {
+            shape: AttnShape::new(seq, 32, 128, Dtype::F16),
+            compute: ComputeModel::a10(0.45),
+            causal: false,
+            partition: Partition::Contiguous,
+        }
+    }
+
+    #[test]
+    fn covers_all_qkv_pairs() {
+        // Every (q_rank, kv_rank) pair must be computed exactly once.
+        let topo = Topology::two_level(2, 4, 400.0, 25.0);
+        let g = HybridTokenRing::default().build(&topo, &job(32_000));
+        let computes = g
+            .tasks
+            .iter()
+            .filter(|t| t.tag == SpanTag::Compute)
+            .count();
+        assert_eq!(computes, 8 * 8);
+    }
+
+    #[test]
+    fn single_node_reduces_to_token_ring_makespan() {
+        let topo = Topology::two_level(1, 4, 400.0, 25.0);
+        let j = job(24_000);
+        let hy = simulate(&HybridTokenRing::default().build(&topo, &j)).makespan;
+        let tr = simulate(
+            &crate::parallelism::token_ring::TokenRing { elide_q: false }.build(&topo, &j),
+        )
+        .makespan;
+        assert!((hy - tr).abs() / tr < 1e-9, "hy={hy} tr={tr}");
+    }
+
+    #[test]
+    fn beats_flat_ring_across_nodes() {
+        // The point of the hybrid: a flat 8-rank ring crosses the slow
+        // inter-node network twice per step cycle; the hybrid crosses it
+        // once per OUTER step and keeps all micro-steps on the fast mesh.
+        // Flat ring embedding on the two-level topology: 0→1→2→3 (intra),
+        // 3→7 (lane-3 inter), 7→6→5→4 (intra), 4→0 (lane-0 inter).
+        let topo = Topology::two_level(2, 4, 400.0, 5.0);
+        let j = job(48_000);
+        let hy = simulate(&HybridTokenRing::default().build(&topo, &j)).makespan;
+        let ring_order = [0usize, 1, 2, 3, 7, 6, 5, 4];
+        let parts = j.partition.assign(j.shape.seq, 8);
+        let positions: Vec<Vec<u32>> =
+            ring_order.iter().map(|&d| parts[d].clone()).collect();
+        let g = crate::parallelism::ring_attention::build_on_devices(
+            &topo, &j, &ring_order, &positions,
+        );
+        let flat = simulate(&g).makespan;
+        assert!(
+            hy < flat * 0.8,
+            "hybrid {hy} not clearly faster than flat ring {flat}"
+        );
+    }
+
+    #[test]
+    fn causal_zigzag_hybrid_runs() {
+        let topo = Topology::two_level(2, 2, 200.0, 25.0);
+        let mut j = job(16_000);
+        j.causal = true;
+        j.partition = Partition::Zigzag;
+        let r = simulate(
+            &HybridTokenRing { elide_q: true, overlap_kv: true }.build(&topo, &j),
+        );
+        assert!(r.makespan > 0.0);
+        assert_eq!(
+            r.graph
+                .tasks
+                .iter()
+                .filter(|t| t.tag == SpanTag::Compute)
+                .count(),
+            16
+        );
+    }
+}

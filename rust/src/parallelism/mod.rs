@@ -1,0 +1,161 @@
+//! The parallelism schedules: TokenRing (the paper's contribution) plus the
+//! baselines it is evaluated against (Ring-Attention, DeepSpeed-Ulysses,
+//! Megatron-style tensor parallelism) and the multi-node hybrid.
+//!
+//! Every schedule compiles an attention pass into a `simulator::TaskGraph`
+//! whose tasks carry durations from the comm/compute cost models, and also
+//! reports analytic communication volumes for the Table-1 accounting.
+
+pub mod hybrid;
+pub mod partition;
+pub mod ring_attention;
+pub mod token_ring;
+pub mod tensor_parallel;
+pub mod ulysses;
+
+use crate::comm::{AttnShape, ComputeModel};
+use crate::simulator::{simulate_owned, SimResult, TaskGraph};
+use crate::topology::Topology;
+use partition::Partition;
+
+/// Everything a schedule needs to cost one attention pass.
+#[derive(Debug, Clone)]
+pub struct AttnJob {
+    pub shape: AttnShape,
+    pub compute: ComputeModel,
+    pub causal: bool,
+    pub partition: Partition,
+}
+
+impl AttnJob {
+    /// Per-device block length (sequence split evenly over `n`).
+    pub fn block_len(&self, n: usize) -> usize {
+        assert_eq!(
+            self.shape.seq % n,
+            0,
+            "seq {} not divisible by {} devices",
+            self.shape.seq,
+            n
+        );
+        self.shape.seq / n
+    }
+
+    /// Duration of one attention micro-step: `sq` queries against `skv`
+    /// keys, scaled by the causal work fraction (1.0 when non-causal).
+    pub fn attn_time(&self, sq: usize, skv: usize, work_fraction: f64) -> f64 {
+        self.compute
+            .time_for_flops(self.shape.attn_flops(sq, skv) * work_fraction)
+    }
+
+    /// Duration of one Update/merge pass over a block accumulator — an
+    /// elementwise pass, ~6 flops per (token, head, dim) element.
+    pub fn merge_time(&self, tokens: usize) -> f64 {
+        let elems = (tokens * self.shape.heads * self.shape.head_dim) as f64;
+        self.compute.time_for_flops(6.0 * elems)
+    }
+}
+
+/// A named schedule that can be compiled to a simulator graph.
+pub trait Schedule {
+    fn name(&self) -> &'static str;
+
+    /// Build the task DAG for one attention pass on `topo`.
+    fn build(&self, topo: &Topology, job: &AttnJob) -> TaskGraph;
+
+    /// Convenience: build then simulate (graph handed over, no clone).
+    fn simulate(&self, topo: &Topology, job: &AttnJob) -> SimResult {
+        simulate_owned(self.build(topo, job))
+    }
+}
+
+/// Fraction of (q, k) pairs with `q_pos >= k_pos` — the causal work share
+/// of one micro-step. Both inputs must be sorted ascending.
+pub fn causal_work_fraction(q_pos: &[u32], k_pos: &[u32]) -> f64 {
+    if q_pos.is_empty() || k_pos.is_empty() {
+        return 0.0;
+    }
+    // two-pointer: for each q, count keys <= q
+    let mut count: u64 = 0;
+    let mut ki = 0usize;
+    for &q in q_pos {
+        while ki < k_pos.len() && k_pos[ki] <= q {
+            ki += 1;
+        }
+        count += ki as u64;
+    }
+    count as f64 / (q_pos.len() as f64 * k_pos.len() as f64)
+}
+
+/// Fraction of q rows still "alive" (able to attend) given the minimum key
+/// position among all not-yet-visited KV blocks — TokenRing's zigzag
+/// Q-elision (§3.3.2): rows below every remaining key need not be shipped.
+pub fn alive_fraction(q_pos: &[u32], remaining_min_kpos: Option<u32>) -> f64 {
+    let Some(min_k) = remaining_min_kpos else {
+        return 0.0;
+    };
+    if q_pos.is_empty() {
+        return 0.0;
+    }
+    let alive = q_pos.iter().filter(|&&p| p >= min_k).count();
+    alive as f64 / q_pos.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Dtype;
+
+    fn job(seq: usize, causal: bool) -> AttnJob {
+        AttnJob {
+            shape: AttnShape::new(seq, 4, 32, Dtype::F16),
+            compute: ComputeModel { peak_flops: 1e12, efficiency: 1.0, launch_overhead: 0.0 },
+            causal,
+            partition: Partition::Contiguous,
+        }
+    }
+
+    #[test]
+    fn block_len_divides() {
+        assert_eq!(job(1024, false).block_len(4), 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn block_len_rejects_remainder() {
+        job(1000, false).block_len(3);
+    }
+
+    #[test]
+    fn causal_fraction_full_and_empty() {
+        let q: Vec<u32> = (100..200).collect();
+        let k_lo: Vec<u32> = (0..100).collect();
+        let k_hi: Vec<u32> = (200..300).collect();
+        assert_eq!(causal_work_fraction(&q, &k_lo), 1.0);
+        assert_eq!(causal_work_fraction(&q, &k_hi), 0.0);
+    }
+
+    #[test]
+    fn causal_fraction_diagonal() {
+        let p: Vec<u32> = (0..64).collect();
+        let f = causal_work_fraction(&p, &p);
+        // (n+1)/(2n) for the self block
+        assert!((f - 65.0 / 128.0).abs() < 1e-9, "f={f}");
+    }
+
+    #[test]
+    fn alive_fraction_cases() {
+        let q: Vec<u32> = (0..10).chain(90..100).collect();
+        assert_eq!(alive_fraction(&q, Some(50)), 0.5); // only the 90s survive
+        assert_eq!(alive_fraction(&q, Some(0)), 1.0);
+        assert_eq!(alive_fraction(&q, Some(1000)), 0.0);
+        assert_eq!(alive_fraction(&q, None), 0.0);
+    }
+
+    #[test]
+    fn attn_time_scales_with_fraction() {
+        let j = job(1024, true);
+        let full = j.attn_time(256, 256, 1.0);
+        let half = j.attn_time(256, 256, 0.5);
+        assert!((full - 2.0 * half).abs() < 1e-12);
+    }
+}

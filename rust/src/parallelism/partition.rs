@@ -1,0 +1,175 @@
+//! Sequence partitioning strategies (§3.3.2): contiguous, striped
+//! (Brandon et al. 2023) and zigzag (Zhu 2024, the one the paper adopts).
+//!
+//! A partition maps each device to the *global positions* of the tokens it
+//! owns. Positions drive (a) causal work-fraction accounting in the
+//! simulator, (b) the position vectors handed to the kernels in the real
+//! engine, and (c) zigzag Q-elision volumes.
+
+/// Strategy for splitting a sequence across N devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Device j owns tokens [j·S/N, (j+1)·S/N).
+    Contiguous,
+    /// Tokens dealt round-robin at `stripe` granularity.
+    Striped { stripe: usize },
+    /// 2N chunks; device j owns chunks j and 2N-1-j — balances the causal
+    /// triangle.
+    Zigzag,
+}
+
+impl Partition {
+    /// Global positions owned by each device, sorted ascending per device.
+    pub fn assign(&self, seq: usize, n: usize) -> Vec<Vec<u32>> {
+        assert!(n > 0 && seq % n == 0, "seq {seq} not divisible by {n}");
+        let blk = seq / n;
+        match self {
+            Partition::Contiguous => (0..n)
+                .map(|j| ((j * blk) as u32..((j + 1) * blk) as u32).collect())
+                .collect(),
+            Partition::Striped { stripe } => {
+                assert!(*stripe > 0 && blk % stripe == 0, "stripe must divide block");
+                let mut out = vec![Vec::with_capacity(blk); n];
+                for chunk in 0..(seq / stripe) {
+                    let dev = chunk % n;
+                    let base = chunk * stripe;
+                    out[dev].extend((base as u32)..(base + stripe) as u32);
+                }
+                out
+            }
+            Partition::Zigzag => {
+                assert!(
+                    seq % (2 * n) == 0,
+                    "zigzag needs seq divisible by 2N (seq={seq}, N={n})"
+                );
+                let half = seq / (2 * n);
+                (0..n)
+                    .map(|j| {
+                        let lo = j * half;
+                        let hi = (2 * n - 1 - j) * half;
+                        let mut v: Vec<u32> = ((lo as u32)..(lo + half) as u32).collect();
+                        v.extend((hi as u32)..(hi + half) as u32);
+                        v
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Partition::Contiguous => "contiguous",
+            Partition::Striped { .. } => "striped",
+            Partition::Zigzag => "zigzag",
+        }
+    }
+}
+
+/// Causal-work totals per device for one full attention pass under a
+/// KV-stationary ring schedule (each device's queries visit every KV
+/// block). Used by the Z1 load-balance bench.
+pub fn causal_flops_per_device(
+    partition: &Partition,
+    seq: usize,
+    n: usize,
+) -> Vec<f64> {
+    let assign = partition.assign(seq, n);
+    let mut totals = vec![0.0f64; n];
+    for (qd, q_pos) in assign.iter().enumerate() {
+        for k_pos in &assign {
+            totals[qd] += super::causal_work_fraction(q_pos, k_pos)
+                * (q_pos.len() * k_pos.len()) as f64;
+        }
+    }
+    totals
+}
+
+/// max/mean imbalance ratio of per-device work (1.0 = perfectly balanced).
+pub fn imbalance(work: &[f64]) -> f64 {
+    let mean = work.iter().sum::<f64>() / work.len() as f64;
+    let max = work.iter().copied().fold(0.0, f64::max);
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_sorted(assign: &[Vec<u32>]) -> Vec<u32> {
+        let mut all: Vec<u32> = assign.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn contiguous_covers_sequence() {
+        let a = Partition::Contiguous.assign(16, 4);
+        assert_eq!(a[1], vec![4, 5, 6, 7]);
+        assert_eq!(flat_sorted(&a), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn striped_deals_round_robin() {
+        let a = Partition::Striped { stripe: 2 }.assign(16, 4);
+        assert_eq!(a[0], vec![0, 1, 8, 9]);
+        assert_eq!(a[3], vec![6, 7, 14, 15]);
+        assert_eq!(flat_sorted(&a), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zigzag_pairs_extremes() {
+        // N=4, S=16: half=2; device 0 gets chunks 0 and 7 → [0,1,14,15]
+        let a = Partition::Zigzag.assign(16, 4);
+        assert_eq!(a[0], vec![0, 1, 14, 15]);
+        assert_eq!(a[3], vec![6, 7, 8, 9]);
+        assert_eq!(flat_sorted(&a), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_device_sorted() {
+        for p in [
+            Partition::Contiguous,
+            Partition::Striped { stripe: 2 },
+            Partition::Zigzag,
+        ] {
+            for dev in p.assign(32, 4) {
+                let mut s = dev.clone();
+                s.sort_unstable();
+                assert_eq!(dev, s);
+            }
+        }
+    }
+
+    #[test]
+    fn zigzag_balances_causal_work() {
+        let n = 4;
+        let seq = 1024;
+        let naive = causal_flops_per_device(&Partition::Contiguous, seq, n);
+        let zig = causal_flops_per_device(&Partition::Zigzag, seq, n);
+        let ib_naive = imbalance(&naive);
+        let ib_zig = imbalance(&zig);
+        // contiguous: last device does ~(2N-1)/N of mean; zigzag ≈ 1
+        assert!(ib_naive > 1.5, "naive imbalance {ib_naive}");
+        assert!(ib_zig < 1.05, "zigzag imbalance {ib_zig}");
+        // total work identical (same causal triangle)
+        let tn: f64 = naive.iter().sum();
+        let tz: f64 = zig.iter().sum();
+        assert!((tn - tz).abs() / tn < 1e-12);
+    }
+
+    #[test]
+    fn striped_also_balances() {
+        let ib = imbalance(&causal_flops_per_device(
+            &Partition::Striped { stripe: 1 },
+            512,
+            4,
+        ));
+        assert!(ib < 1.05, "striped imbalance {ib}");
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible by 2N")]
+    fn zigzag_rejects_odd_split() {
+        Partition::Zigzag.assign(12, 4); // 12 % 8 != 0
+    }
+}

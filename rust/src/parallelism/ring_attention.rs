@@ -1,0 +1,214 @@
+//! Ring-Attention baseline (Liu & Abbeel 2024): KV blocks circulate the
+//! ring one hop per micro-step while Q stays home.
+//!
+//! The inefficiency the paper attacks: each step every device sends K and V
+//! (2 activation slabs) in ONE ring direction, so (a) per-step traffic is
+//! ~2× TokenRing's peak direction, and (b) the reverse direction of every
+//! duplex link idles.
+
+use crate::simulator::{SpanTag, TaskGraph, TaskId};
+use crate::topology::Topology;
+
+use super::{causal_work_fraction, AttnJob, Schedule};
+
+/// KV-circulating ring schedule over all devices of the topology.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RingAttention;
+
+impl Schedule for RingAttention {
+    fn name(&self) -> &'static str {
+        "ring_attention"
+    }
+
+    fn build(&self, topo: &Topology, job: &AttnJob) -> TaskGraph {
+        build_on_devices(
+            topo,
+            job,
+            &(0..topo.num_devices).collect::<Vec<_>>(),
+            &job.partition.assign(job.shape.seq, topo.num_devices),
+        )
+    }
+}
+
+/// Build the ring over an explicit device subset (used standalone and as
+/// the inter-node layer of the hybrid schedule). `positions[r]` are the
+/// global token positions whose KV block STARTS at ring rank `r`.
+pub fn build_on_devices(
+    topo: &Topology,
+    job: &AttnJob,
+    devices: &[usize],
+    positions: &[Vec<u32>],
+) -> TaskGraph {
+    let n = devices.len();
+    assert_eq!(positions.len(), n);
+    let mut g = TaskGraph::new();
+    if n == 1 {
+        let blk = positions[0].len();
+        let f = work_fraction(job, &positions[0], &positions[0]);
+        g.compute(devices[0], 0, "attn[s0]", job.attn_time(blk, blk, f), &[]);
+        return g;
+    }
+    let kv_bytes = |r: usize| 2.0 * job.shape.act_bytes(positions[r].len());
+
+    // last compute / last KV-send per ring rank
+    let mut last_compute: Vec<Option<TaskId>> = vec![None; n];
+    let mut kv_arrival: Vec<Option<TaskId>> = vec![None; n]; // transfer that delivered current KV
+    let mut last_send: Vec<Option<TaskId>> = vec![None; n];
+
+    for step in 0..n {
+        // Each device forwards its current KV block while computing on it.
+        // Send for step+1 happens during step `step`.
+        let mut new_arrival: Vec<Option<TaskId>> = vec![None; n];
+        if step < n - 1 {
+            for r in 0..n {
+                let kv_rank = (r + n - step) % n; // KV block resident at r
+                let dst = (r + 1) % n;
+                let mut deps = Vec::new();
+                if let Some(t) = kv_arrival[r] {
+                    deps.push(t); // must hold the block before forwarding
+                }
+                if let Some(t) = last_send[r] {
+                    deps.push(t);
+                }
+                let t = g.transfer(
+                    topo,
+                    devices[r],
+                    devices[dst],
+                    kv_bytes(kv_rank),
+                    SpanTag::SendKv,
+                    step,
+                    format!("kv[{kv_rank}] r{r}->r{dst} s{step}"),
+                    &deps,
+                );
+                last_send[r] = Some(t);
+                new_arrival[dst] = Some(t);
+            }
+        }
+
+        for r in 0..n {
+            let kv_rank = (r + n - step) % n;
+            let f = work_fraction(job, &positions[r], &positions[kv_rank]);
+            let mut deps = Vec::new();
+            if let Some(t) = last_compute[r] {
+                deps.push(t);
+            }
+            if let Some(t) = kv_arrival[r] {
+                deps.push(t);
+            }
+            let blk_q = positions[r].len();
+            let blk_k = positions[kv_rank].len();
+            let c = g.compute(
+                devices[r],
+                step,
+                format!("attn q{r} kv{kv_rank} s{step}"),
+                job.attn_time(blk_q, blk_k, f),
+                &deps,
+            );
+            // local merge of the new partial into the accumulator
+            if step > 0 {
+                let m = g.add(crate::simulator::SimTask {
+                    name: format!("merge q{r} s{step}"),
+                    device: devices[r],
+                    step,
+                    tag: SpanTag::Merge,
+                    duration: job.merge_time(blk_q),
+                    resources: vec![crate::simulator::ResourceId::Compute(devices[r])],
+                    deps: vec![c],
+                });
+                last_compute[r] = Some(m);
+            } else {
+                last_compute[r] = Some(c);
+            }
+        }
+        kv_arrival = new_arrival;
+    }
+    g
+}
+
+fn work_fraction(job: &AttnJob, q_pos: &[u32], k_pos: &[u32]) -> f64 {
+    if job.causal {
+        causal_work_fraction(q_pos, k_pos)
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{AttnShape, ComputeModel, Dtype};
+    use crate::parallelism::partition::Partition;
+    use crate::simulator::simulate;
+    use crate::topology::Topology;
+
+    fn job() -> AttnJob {
+        // Figure-6 calibration: see token_ring::tests::job.
+        AttnJob {
+            shape: AttnShape::new(24_000, 32, 128, Dtype::F16),
+            compute: ComputeModel::a10(0.67),
+            causal: true,
+            partition: Partition::Zigzag,
+        }
+    }
+
+    #[test]
+    fn task_count_structure() {
+        let topo = Topology::pcie_a10_default();
+        let g = RingAttention.build(&topo, &job());
+        // per step: 4 computes; steps>0 add 4 merges; n-1 rounds of 4 sends
+        let computes = g.tasks.iter().filter(|t| t.tag == SpanTag::Compute).count();
+        let merges = g.tasks.iter().filter(|t| t.tag == SpanTag::Merge).count();
+        let sends = g.tasks.iter().filter(|t| t.tag == SpanTag::SendKv).count();
+        assert_eq!(computes, 16);
+        assert_eq!(merges, 12);
+        assert_eq!(sends, 12);
+    }
+
+    #[test]
+    fn communication_bound_on_pcie() {
+        // Figure 6's right side: on the A10 PCIe box at S=24k, ring steps
+        // are dominated by the 2-slab KV transfer (~7-9 ms vs ~3 ms compute)
+        let topo = Topology::pcie_a10_default();
+        let r = simulate(&RingAttention.build(&topo, &job()));
+        let stats = r.step_stats();
+        for s in &stats[..stats.len() - 1] {
+            // all but the final step (which has no sends) are comm-bound
+            assert!(
+                s.comm > s.compute,
+                "step {} comm {} <= compute {}",
+                s.step,
+                s.comm,
+                s.compute
+            );
+            assert!(s.exposed_comm > 0.0);
+        }
+    }
+
+    #[test]
+    fn single_device_trivial() {
+        let topo = Topology::uniform_mesh(1, 10.0);
+        let mut j = job();
+        j.shape.seq = 1024;
+        let r = simulate(&RingAttention.build(&topo, &j));
+        assert_eq!(r.graph.len(), 1);
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn causal_zigzag_balances_step_compute() {
+        let topo = Topology::oam_mesh(4, 400.0);
+        let mut j = job();
+        j.causal = true;
+        j.shape.seq = 4096;
+        j.partition = Partition::Zigzag;
+        let g = RingAttention.build(&topo, &j);
+        // every device's total compute should be near-equal
+        let r = simulate(&g);
+        let busy: Vec<f64> = (0..4)
+            .map(|d| r.resource_busy(crate::simulator::ResourceId::Compute(d)))
+            .collect();
+        let max = busy.iter().copied().fold(0.0, f64::max);
+        let min = busy.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.1, "busy={busy:?}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Megatron-style tensor parallelism baseline: heads are split across
+//! devices for the whole pass (no sequence sharding), and the attention
+//! output is AllReduced. Table 1's "memory in long context" limitation:
+//! every device holds the FULL sequence's KV — the simulator reports that
+//! footprint alongside the timing.
+
+use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph};
+use crate::topology::Topology;
+
+use super::{AttnJob, Schedule};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TensorParallel;
+
+impl TensorParallel {
+    /// Per-device KV-cache bytes — the memory wall Table 1 cites.
+    pub fn kv_bytes_per_device(job: &AttnJob) -> f64 {
+        // full-sequence K and V, all heads resident (activations for the
+        // local head shard still require the full-sequence KV of the shard;
+        // with replication of inputs the dominant term is 2·S·H·D/n plus
+        // the replicated activations — we report the KV shard term).
+        2.0 * job.shape.act_bytes(job.shape.seq)
+    }
+}
+
+impl Schedule for TensorParallel {
+    fn name(&self) -> &'static str {
+        "tensor_parallel"
+    }
+
+    fn build(&self, topo: &Topology, job: &AttnJob) -> TaskGraph {
+        let n = topo.num_devices;
+        let mut g = TaskGraph::new();
+        let frac = if job.causal { 0.5 } else { 1.0 };
+
+        // Head-sharded attention over the full sequence.
+        let computes: Vec<_> = (0..n)
+            .map(|d| {
+                g.compute(
+                    d,
+                    0,
+                    format!("attn heads d{d}"),
+                    job.attn_time(job.shape.seq, job.shape.seq, frac / n as f64),
+                    &[],
+                )
+            })
+            .collect();
+
+        // AllReduce of the projected output activation (S, H·D).
+        let t = crate::comm::allreduce_time(topo, job.shape.act_bytes(job.shape.seq));
+        for d in 0..n {
+            g.add(SimTask {
+                name: format!("allreduce d{d}"),
+                device: d,
+                step: 1,
+                tag: SpanTag::Collective,
+                duration: t,
+                resources: vec![ResourceId::Egress(d), ResourceId::Ingress(d)],
+                deps: computes.clone(),
+            });
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{AttnShape, ComputeModel, Dtype};
+    use crate::parallelism::partition::Partition;
+    use crate::simulator::simulate;
+    use crate::topology::Topology;
+
+    fn job() -> AttnJob {
+        AttnJob {
+            shape: AttnShape::new(24_000, 32, 128, Dtype::F16),
+            compute: ComputeModel::a10(0.45),
+            causal: false,
+            partition: Partition::Contiguous,
+        }
+    }
+
+    #[test]
+    fn allreduce_follows_compute() {
+        let topo = Topology::oam_mesh(4, 400.0);
+        let r = simulate(&TensorParallel.build(&topo, &job()));
+        let stats = r.step_stats();
+        assert_eq!(stats.len(), 2);
+        assert!(stats[1].start >= stats[0].end - 1e-12);
+    }
+
+    #[test]
+    fn kv_footprint_independent_of_degree() {
+        // The memory limitation: KV per device does NOT shrink with n.
+        let j = job();
+        let b = TensorParallel::kv_bytes_per_device(&j);
+        assert!((b - 2.0 * 24_000.0 * 32.0 * 128.0 * 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn comm_grows_with_seq() {
+        let topo = Topology::oam_mesh(4, 400.0);
+        let mut j1 = job();
+        j1.shape.seq = 12_000;
+        let m1 = simulate(&TensorParallel.build(&topo, &j1)).makespan;
+        let m2 = simulate(&TensorParallel.build(&topo, &job())).makespan;
+        assert!(m2 > m1);
+    }
+}

@@ -1,0 +1,136 @@
+//! DeepSpeed-Ulysses baseline (Jacobs et al. 2023): AllToAll re-partitions
+//! (sequence-sharded → head-sharded), full-sequence attention per head
+//! group, AllToAll back. Parallel degree is capped by the head count — the
+//! limitation Table 1 records.
+
+use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph};
+use crate::topology::Topology;
+
+use super::{AttnJob, Schedule};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ulysses;
+
+impl Schedule for Ulysses {
+    fn name(&self) -> &'static str {
+        "ulysses"
+    }
+
+    fn build(&self, topo: &Topology, job: &AttnJob) -> TaskGraph {
+        let n = topo.num_devices;
+        assert!(
+            n <= job.shape.heads,
+            "ulysses degree {n} exceeds head count {}",
+            job.shape.heads
+        );
+        let mut g = TaskGraph::new();
+        let local = job.block_len(n);
+
+        // Phase 1: AllToAll of Q,K,V — each device redistributes its
+        // (local, H, D) shard so it ends holding (S, H/n, D).
+        let a2a_bytes = 3.0 * job.shape.act_bytes(local);
+        let t1 = crate::comm::alltoall_time(topo, a2a_bytes);
+        let phase1: Vec<_> = (0..n)
+            .map(|d| {
+                g.add(SimTask {
+                    name: format!("a2a qkv d{d}"),
+                    device: d,
+                    step: 0,
+                    tag: SpanTag::Collective,
+                    duration: t1,
+                    resources: vec![ResourceId::Egress(d), ResourceId::Ingress(d)],
+                    deps: vec![],
+                })
+            })
+            .collect();
+
+        // Phase 2: full-sequence attention over H/n heads. Causality halves
+        // the work but is balanced across devices (every device sees the
+        // whole sequence).
+        let frac = if job.causal { 0.5 } else { 1.0 };
+        let head_share = 1.0 / n as f64;
+        let computes: Vec<_> = (0..n)
+            .map(|d| {
+                g.compute(
+                    d,
+                    1,
+                    format!("attn heads d{d}"),
+                    job.attn_time(job.shape.seq, job.shape.seq, frac * head_share),
+                    &phase1.clone(),
+                )
+            })
+            .collect();
+
+        // Phase 3: AllToAll of the output back to sequence sharding.
+        let t3 = crate::comm::alltoall_time(topo, job.shape.act_bytes(local));
+        for d in 0..n {
+            g.add(SimTask {
+                name: format!("a2a out d{d}"),
+                device: d,
+                step: 2,
+                tag: SpanTag::Collective,
+                duration: t3,
+                resources: vec![ResourceId::Egress(d), ResourceId::Ingress(d)],
+                deps: computes.clone(),
+            });
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{AttnShape, ComputeModel, Dtype};
+    use crate::parallelism::partition::Partition;
+    use crate::simulator::simulate;
+    use crate::topology::Topology;
+
+    fn job() -> AttnJob {
+        AttnJob {
+            shape: AttnShape::new(24_000, 32, 128, Dtype::F16),
+            compute: ComputeModel::a10(0.45),
+            causal: false,
+            partition: Partition::Contiguous,
+        }
+    }
+
+    #[test]
+    fn three_phase_structure() {
+        let topo = Topology::oam_mesh(4, 400.0);
+        let g = Ulysses.build(&topo, &job());
+        assert_eq!(g.tasks.iter().filter(|t| t.tag == SpanTag::Collective).count(), 8);
+        assert_eq!(g.tasks.iter().filter(|t| t.tag == SpanTag::Compute).count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds head count")]
+    fn rejects_degree_over_heads() {
+        let topo = Topology::oam_mesh(64, 400.0);
+        let mut j = job();
+        j.shape.heads = 32;
+        j.shape.seq = 64 * 1024;
+        Ulysses.build(&topo, &j);
+    }
+
+    #[test]
+    fn compute_matches_single_device_total() {
+        // Ulysses does the same total attention FLOPs, split by heads.
+        let topo = Topology::oam_mesh(4, 400.0);
+        let j = job();
+        let r = simulate(&Ulysses.build(&topo, &j));
+        let per_dev = j.attn_time(j.shape.seq, j.shape.seq, 0.25);
+        let total = r.total_compute_busy();
+        assert!((total - 4.0 * per_dev).abs() / total < 1e-6);
+    }
+
+    #[test]
+    fn mesh_a2a_cheaper_than_switch() {
+        let j = job();
+        let mesh = Topology::oam_mesh(8, 400.0);
+        let sw = Topology::nvswitch(8, 400.0 / 7.0);
+        let rm = simulate(&Ulysses.build(&mesh, &j)).makespan;
+        let rs = simulate(&Ulysses.build(&sw, &j)).makespan;
+        assert!(rm < rs, "mesh {rm} switch {rs}");
+    }
+}

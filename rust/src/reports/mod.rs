@@ -1,0 +1,390 @@
+//! Report generators for every table and figure in the paper's evaluation
+//! (DESIGN.md §4 experiment index). Shared by the CLI (`tokenring <cmd>`)
+//! and the bench harness (`cargo bench`), so EXPERIMENTS.md rows come from
+//! one code path.
+
+use crate::comm::{self, AttnShape, VolumeReport};
+use crate::config::{Cluster, A10_FLASH_EFFICIENCY};
+use crate::metrics::{timeline_from_sim, Timeline};
+use crate::model::ModelConfig;
+use crate::parallelism::hybrid::HybridTokenRing;
+use crate::parallelism::partition::{causal_flops_per_device, imbalance, Partition};
+use crate::parallelism::ring_attention::RingAttention;
+use crate::parallelism::token_ring::TokenRing;
+use crate::parallelism::tensor_parallel::TensorParallel;
+use crate::parallelism::ulysses::Ulysses;
+use crate::parallelism::{AttnJob, Schedule};
+use crate::simulator::SimResult;
+use crate::topology::Topology;
+use crate::util::stats::Table;
+
+/// The Figure-6 job: LLaMA2-7B attention, S=24000, 4×A10 (§4.1/§4.2).
+pub fn fig6_job(seq: usize, causal: bool) -> AttnJob {
+    let model = ModelConfig::llama2_7b();
+    AttnJob {
+        shape: model.attn_shape(seq),
+        compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        causal,
+        partition: if causal { Partition::Zigzag } else { Partition::Contiguous },
+    }
+}
+
+/// Per-step profile of one schedule (Figure 6 rows).
+pub struct StepProfile {
+    pub schedule: &'static str,
+    /// (step, wall, compute, comm, exposed_comm) seconds
+    pub rows: Vec<(usize, f64, f64, f64, f64)>,
+    pub makespan: f64,
+    pub sim: SimResult,
+}
+
+pub fn step_profile(schedule: &dyn Schedule, topo: &Topology, job: &AttnJob) -> StepProfile {
+    let sim = schedule.simulate(topo, job);
+    let rows = sim
+        .step_stats()
+        .iter()
+        .map(|s| (s.step, s.end - s.start, s.compute, s.comm, s.exposed_comm))
+        .collect();
+    StepProfile { schedule: schedule.name(), rows, makespan: sim.makespan, sim }
+}
+
+/// Figure 6: TokenRing vs Ring-Attention per-step profile on the A10 box.
+pub fn fig6(seq: usize) -> (String, StepProfile, StepProfile) {
+    let cluster = Cluster::a10_pcie4();
+    let job = fig6_job(seq, true);
+    let tr = step_profile(&TokenRing::default(), &cluster.topology, &job);
+    let ra = step_profile(&RingAttention, &cluster.topology, &job);
+
+    let mut t = Table::new(&[
+        "schedule", "step", "wall (ms)", "compute (ms)", "comm (ms)", "exposed comm (ms)",
+    ]);
+    for p in [&tr, &ra] {
+        for &(step, wall, compute, comms, exposed) in &p.rows {
+            t.row(&[
+                p.schedule.into(),
+                step.to_string(),
+                format!("{:.2}", wall * 1e3),
+                format!("{:.2}", compute * 1e3),
+                format!("{:.2}", comms * 1e3),
+                format!("{:.2}", exposed * 1e3),
+            ]);
+        }
+    }
+    let mut s = format!(
+        "Figure 6 reproduction — attention step profile, S={seq}, 4xA10 (PIX/PXB)\n\
+         paper: TokenRing ≈3.5 ms (steps 0-1) / ≈4.6 ms (step 2); Ring ≈7.6 ms comm-bound\n\n"
+    );
+    s.push_str(&t.render());
+    s.push_str(&format!(
+        "\nmakespan: token_ring {:.2} ms vs ring_attention {:.2} ms ({:.2}x)\n",
+        tr.makespan * 1e3,
+        ra.makespan * 1e3,
+        ra.makespan / tr.makespan
+    ));
+    (s, tr, ra)
+}
+
+/// Table 1: parallelism comparison with measured volumes and constraints.
+pub fn table1(seq: usize, n: usize) -> (String, Vec<VolumeReport>) {
+    let model = ModelConfig::llama2_7b();
+    let shape: AttnShape = model.attn_shape(seq);
+    let reports = vec![
+        comm::volume_tensor_parallel(&shape, n),
+        comm::volume_ring_attention(&shape, n),
+        comm::volume_ulysses(&shape, n),
+        comm::volume_token_ring(&shape, n),
+    ];
+
+    // measured makespans on a uniform mesh for the timing column
+    let cluster = Cluster::oam_mesh(n);
+    let job = AttnJob {
+        shape,
+        compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        causal: false,
+        partition: Partition::Contiguous,
+    };
+    let schedules: Vec<(&str, Box<dyn Schedule>)> = vec![
+        ("tensor_parallel", Box::new(TensorParallel)),
+        ("ring_attention", Box::new(RingAttention)),
+        ("ulysses", Box::new(Ulysses)),
+        ("token_ring", Box::new(TokenRing::default())),
+    ];
+    let mut t = Table::new(&[
+        "parallelism", "communication", "per-step TX (MB)", "total TX (MB)",
+        "duplex use", "max degree", "limitation", "makespan (ms)",
+    ]);
+    for (rep, (_, sched)) in reports.iter().zip(&schedules) {
+        let mk = sched.simulate(&cluster.topology, &job).makespan;
+        t.row(&[
+            rep.scheme.into(),
+            rep.pattern.into(),
+            format!("{:.1}", rep.per_step_tx / 1e6),
+            format!("{:.1}", rep.total_tx / 1e6),
+            format!("{:.0}x", rep.duplex_utilization),
+            rep.max_degree.map_or("-".into(), |d| d.to_string()),
+            rep.limitation.into(),
+            format!("{:.2}", mk * 1e3),
+        ]);
+    }
+    let mut s = format!(
+        "Table 1 reproduction — parallelism comparison (LLaMA2-7B, S={seq}, N={n}, OAM mesh)\n\n"
+    );
+    s.push_str(&t.render());
+    (s, reports)
+}
+
+/// S1: compute ∝ 1/N² vs comm ∝ 1/N — step ratio sweep over device count.
+///
+/// The sweep runs on a PCIe-class mesh (fixed ~12 GB/s per pair — the
+/// paper's cost-constrained setting) so the crossover is visible: on very
+/// fat links everything is compute-bound and all ring schemes tie.
+pub fn scaling_gpus(seq: usize, ns: &[usize]) -> String {
+    let mut t = Table::new(&[
+        "N", "compute/step (ms)", "comm/step (ms)", "comm/compute",
+        "ring makespan (ms)", "tokenring makespan (ms)", "speedup",
+    ]);
+    for &n in ns {
+        let topo = crate::topology::Topology::uniform_mesh(n, 12.0);
+        let job = AttnJob {
+            shape: ModelConfig::llama2_7b().attn_shape(seq),
+            compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+            causal: false,
+            partition: Partition::Contiguous,
+        };
+        let blk = seq / n;
+        let compute = job.attn_time(blk, blk, 1.0);
+        let kv_bytes = 2.0 * job.shape.act_bytes(blk);
+        let link = topo.link_or_die(0, 1);
+        let comm = link.transfer_time(kv_bytes);
+        let ra = RingAttention.simulate(&topo, &job).makespan;
+        let tr = TokenRing::default().simulate(&topo, &job).makespan;
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", compute * 1e3),
+            format!("{:.2}", comm * 1e3),
+            format!("{:.2}", comm / compute),
+            format!("{:.2}", ra * 1e3),
+            format!("{:.2}", tr * 1e3),
+            format!("{:.2}x", ra / tr),
+        ]);
+    }
+    format!(
+        "S1 — quadratic-compute vs linear-comm crossover (S={seq}, 12 GB/s mesh)\n\n{}",
+        t.render()
+    )
+}
+
+/// S2: "infinite-context" weak scaling — the per-device block stays fixed
+/// (`block` tokens) and the device count grows with the sequence, the
+/// regime the paper's title targets. On a PCIe-class mesh the ring schemes
+/// are comm-bound and TokenRing's duplex advantage is the gap.
+pub fn scaling_seqlen(block: usize, seqs: &[usize]) -> String {
+    let mut t = Table::new(&[
+        "S", "N", "ring (ms)", "ulysses (ms)", "tokenring (ms)",
+        "ring tok/s", "tokenring tok/s", "speedup",
+    ]);
+    for &seq in seqs {
+        let n = (seq / block).max(2);
+        let topo = crate::topology::Topology::uniform_mesh(n, 12.0);
+        let job = AttnJob {
+            shape: ModelConfig::llama2_7b().attn_shape(seq),
+            compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+            causal: false,
+            partition: Partition::Contiguous,
+        };
+        let ra = RingAttention.simulate(&topo, &job).makespan;
+        let ul = if n <= job.shape.heads {
+            format!("{:.2}", Ulysses.simulate(&topo, &job).makespan * 1e3)
+        } else {
+            "cap".into() // degree exceeds head count — Table 1's limitation
+        };
+        let tr = TokenRing::default().simulate(&topo, &job).makespan;
+        t.row(&[
+            seq.to_string(),
+            n.to_string(),
+            format!("{:.2}", ra * 1e3),
+            ul,
+            format!("{:.2}", tr * 1e3),
+            format!("{:.0}", seq as f64 / ra),
+            format!("{:.0}", seq as f64 / tr),
+            format!("{:.2}x", ra / tr),
+        ]);
+    }
+    format!(
+        "S2 — infinite-context weak scaling (block={block}/device, 12 GB/s mesh)\n\n{}",
+        t.render()
+    )
+}
+
+/// Z1: causal load balance across partition strategies.
+pub fn zigzag_balance(seq: usize, n: usize) -> String {
+    let mut t = Table::new(&[
+        "partition", "max/mean imbalance", "makespan (ms)", "q-volume saved",
+    ]);
+    let cluster = Cluster::a10_pcie4();
+    for p in [Partition::Contiguous, Partition::Striped { stripe: 1 }, Partition::Zigzag] {
+        let job = AttnJob {
+            shape: ModelConfig::llama2_7b().attn_shape(seq),
+            compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+            causal: true,
+            partition: p,
+        };
+        let ib = imbalance(&causal_flops_per_device(&p, seq, n));
+        let mk = TokenRing::default().simulate(&cluster.topology, &job).makespan;
+        // volume saved by elision vs not
+        let vol = |elide: bool| -> f64 {
+            TokenRing { elide_q: elide }
+                .build(&cluster.topology, &job)
+                .tasks
+                .iter()
+                .filter(|t| t.tag == crate::simulator::SpanTag::SendQ)
+                .map(|t| t.duration)
+                .sum()
+        };
+        let saved = 1.0 - vol(true) / vol(false);
+        t.row(&[
+            p.label().into(),
+            format!("{ib:.3}"),
+            format!("{:.2}", mk * 1e3),
+            format!("{:.1}%", saved * 100.0),
+        ]);
+    }
+    format!(
+        "Z1 — causal load balance by partition (LLaMA2-7B, S={seq}, N={n}, 4xA10)\n\n{}",
+        t.render()
+    )
+}
+
+/// M1: hybrid multi-node vs flat ring embedding.
+pub fn hybrid_multinode(seq: usize, nodes: usize, per_node: usize) -> String {
+    let cluster = Cluster::two_level(nodes, per_node);
+    let job = AttnJob {
+        shape: ModelConfig::llama2_7b().attn_shape(seq),
+        compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        causal: false,
+        partition: Partition::Contiguous,
+    };
+    let hy = HybridTokenRing::default()
+        .simulate(&cluster.topology, &job)
+        .makespan;
+
+    // flat ring embedding: snake through nodes so every hop exists
+    let n = nodes * per_node;
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    for node in 0..nodes {
+        let members = cluster.topology.node_members(node);
+        if node % 2 == 0 {
+            order.extend(members);
+        } else {
+            order.extend(members.into_iter().rev());
+        }
+    }
+    let parts = job.partition.assign(seq, n);
+    let positions: Vec<Vec<u32>> = order.iter().map(|&d| parts[d].clone()).collect();
+    let flat = if flat_ring_possible(&cluster.topology, &order) {
+        let g = crate::parallelism::ring_attention::build_on_devices(
+            &cluster.topology,
+            &job,
+            &order,
+            &positions,
+        );
+        Some(crate::simulator::simulate(&g).makespan)
+    } else {
+        None
+    };
+
+    let mut t = Table::new(&["schedule", "makespan (ms)"]);
+    t.row(&["hybrid (TokenRing intra + ring inter)".into(), format!("{:.2}", hy * 1e3)]);
+    match flat {
+        Some(f) => t.row(&["flat ring embedding".into(), format!("{:.2}", f * 1e3)]),
+        None => t.row(&["flat ring embedding".into(), "n/a (no ring embedding)".into()]),
+    }
+    format!(
+        "M1 — multi-node hybrid (S={seq}, {nodes} nodes x {per_node} GPUs)\n\n{}",
+        t.render()
+    )
+}
+
+fn flat_ring_possible(topo: &Topology, order: &[usize]) -> bool {
+    (0..order.len()).all(|i| {
+        let a = order[i];
+        let b = order[(i + 1) % order.len()];
+        topo.link(a, b).is_some()
+    })
+}
+
+/// Chrome trace for a named schedule on the Figure-6 setup.
+pub fn trace_schedule(name: &str, seq: usize) -> anyhow::Result<(Timeline, String)> {
+    let cluster = Cluster::a10_pcie4();
+    let job = fig6_job(seq, true);
+    let sched: Box<dyn Schedule> = match name {
+        "token_ring" => Box::new(TokenRing::default()),
+        "ring_attention" => Box::new(RingAttention),
+        "ulysses" => Box::new(Ulysses),
+        "tensor_parallel" => Box::new(TensorParallel),
+        other => anyhow::bail!("unknown schedule '{other}'"),
+    };
+    let sim = sched.simulate(&cluster.topology, &job);
+    let tl = timeline_from_sim(&sim);
+    let trace = tl.chrome_trace();
+    Ok((tl, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shape_holds() {
+        let (report, tr, ra) = fig6(24_000);
+        assert!(report.contains("token_ring"));
+        // the paper's headline: ring is slower overall
+        assert!(ra.makespan > tr.makespan * 1.2, "ra={} tr={}", ra.makespan, tr.makespan);
+        // ring steps are comm-bound
+        let comm_bound = ra
+            .rows
+            .iter()
+            .take(3)
+            .all(|&(_, _, compute, comm, _)| comm > compute);
+        assert!(comm_bound);
+    }
+
+    #[test]
+    fn table1_contains_all_schemes() {
+        let (report, vols) = table1(24_000, 4);
+        for s in ["tensor_parallel", "ring_attention", "ulysses", "token_ring"] {
+            assert!(report.contains(s), "missing {s}");
+        }
+        assert_eq!(vols.len(), 4);
+    }
+
+    #[test]
+    fn scaling_reports_render() {
+        let s1 = scaling_gpus(49_152, &[4, 8]);
+        assert!(s1.contains("comm/compute"));
+        let s2 = scaling_seqlen(4096, &[8_192, 16_384]);
+        assert!(s2.contains("tokenring tok/s"));
+    }
+
+    #[test]
+    fn zigzag_report_shows_balance() {
+        let z = zigzag_balance(4096, 4);
+        assert!(z.contains("zigzag"));
+        assert!(z.contains("contiguous"));
+    }
+
+    #[test]
+    fn hybrid_report_renders() {
+        let m = hybrid_multinode(32_768, 2, 4);
+        assert!(m.contains("hybrid"));
+    }
+
+    #[test]
+    fn trace_schedule_produces_json() {
+        let (tl, trace) = trace_schedule("token_ring", 24_000).unwrap();
+        assert!(!tl.events.is_empty());
+        let j = crate::util::json::Json::parse(&trace).unwrap();
+        assert!(!j.get("traceEvents").as_arr().unwrap().is_empty());
+        assert!(trace_schedule("bogus", 24_000).is_err());
+    }
+}

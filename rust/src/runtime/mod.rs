@@ -1,0 +1,336 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! `make artifacts` lowers the L2 jax graphs to `artifacts/*.hlo.txt` plus a
+//! `manifest.json` describing shapes/dtypes. This module is the only place
+//! the `xla` crate is touched: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! Executables are compiled lazily and cached per `Runtime`. PJRT wrapper
+//! types are not `Send`, so threaded device actors each build their own
+//! `Runtime` (compilation of the tiny/small profiles is sub-second).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Input/output slot description from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled executable's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// kind: attn_block | merge | layer_pre | layer_post
+    pub kind: String,
+    pub causal: Option<bool>,
+    pub meta: Json,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+fn parse_iospec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        shape: j
+            .get("shape")
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad shape in manifest"))?,
+        dtype: j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("bad dtype in manifest"))?
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing artifacts array"))?
+        {
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: missing inputs"))?
+                .iter()
+                .map(parse_iospec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest: missing outputs"))?
+                .iter()
+                .map(parse_iospec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactEntry {
+                name: a
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("manifest: missing name"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("manifest: missing file"))?
+                    .to_string(),
+                inputs,
+                outputs,
+                kind: a.get("meta").get("kind").as_str().unwrap_or("").to_string(),
+                causal: a.get("meta").get("causal").as_bool(),
+                meta: a.get("meta").clone(),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Find the attention artifact for a (profile, causal) pair.
+    pub fn attn_name(&self, profile: &str, causal: bool) -> String {
+        format!("attn_{}_{}", if causal { "causal" } else { "full" }, profile)
+    }
+}
+
+/// Argument to an executable: f32 tensor or i32 position vector.
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32]),
+}
+
+/// PJRT CPU runtime with a lazy executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, manifest, exes: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable by artifact name.
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest; the
+    /// tuple output is unpacked into row-major f32 tensors.
+    pub fn execute(&mut self, name: &str, args: &[ArgValue<'_>]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name)?.clone();
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "'{name}': expected {} args, got {}",
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match arg {
+                ArgValue::F32(t) => {
+                    if spec.dtype != "float32" {
+                        bail!("'{name}' arg {i}: manifest wants {}, got f32", spec.dtype);
+                    }
+                    if t.shape() != spec.shape.as_slice() {
+                        bail!(
+                            "'{name}' arg {i}: shape {:?} != manifest {:?}",
+                            t.shape(),
+                            spec.shape
+                        );
+                    }
+                    xla::Literal::vec1(t.data())
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape arg {i}: {e}"))?
+                }
+                ArgValue::I32(v) => {
+                    if spec.dtype != "int32" {
+                        bail!("'{name}' arg {i}: manifest wants {}, got i32", spec.dtype);
+                    }
+                    if v.len() != spec.shape.iter().product::<usize>() {
+                        bail!(
+                            "'{name}' arg {i}: {} elems != manifest {:?}",
+                            v.len(),
+                            spec.shape
+                        );
+                    }
+                    xla::Literal::vec1(v)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape arg {i}: {e}"))?
+                }
+            };
+            literals.push(lit);
+        }
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of '{name}': {e}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "'{name}': manifest promises {} outputs, runtime returned {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&entry.outputs) {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output of '{name}' not f32: {e}"))?;
+            out.push(Tensor::new(&spec.shape, data));
+        }
+        Ok(out)
+    }
+
+    /// Convenience: one attention micro-step via the named artifact.
+    pub fn attn_block(
+        &mut self,
+        artifact: &str,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        q_pos: &[i32],
+        k_pos: &[i32],
+    ) -> Result<(Tensor, Tensor)> {
+        let mut r = self.execute(
+            artifact,
+            &[
+                ArgValue::F32(q),
+                ArgValue::F32(k),
+                ArgValue::F32(v),
+                ArgValue::I32(q_pos),
+                ArgValue::I32(k_pos),
+            ],
+        )?;
+        let lse = r.pop().unwrap();
+        let out = r.pop().unwrap();
+        Ok((out, lse))
+    }
+
+    /// Convenience: the merge Update rule via the named artifact.
+    pub fn merge(
+        &mut self,
+        artifact: &str,
+        out: &Tensor,
+        lse: &Tensor,
+        block_out: &Tensor,
+        block_lse: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        let mut r = self.execute(
+            artifact,
+            &[
+                ArgValue::F32(out),
+                ArgValue::F32(lse),
+                ArgValue::F32(block_out),
+                ArgValue::F32(block_lse),
+            ],
+        )?;
+        let l = r.pop().unwrap();
+        let o = r.pop().unwrap();
+        Ok((o, l))
+    }
+}
+
+/// Default artifact directory: `$TOKENRING_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("TOKENRING_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(default_artifact_dir()).unwrap();
+        assert!(!m.artifacts.is_empty());
+        let e = m.entry("attn_causal_tiny").unwrap();
+        assert_eq!(e.kind, "attn_block");
+        assert_eq!(e.causal, Some(true));
+        assert_eq!(e.inputs.len(), 5);
+        assert_eq!(e.outputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![64, 4, 32]);
+        assert_eq!(e.outputs[1].shape, vec![4, 64]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(default_artifact_dir()).unwrap();
+        assert!(m.entry("nope").is_err());
+        assert_eq!(m.attn_name("tiny", true), "attn_causal_tiny");
+        assert_eq!(m.attn_name("tiny", false), "attn_full_tiny");
+    }
+}

@@ -1,0 +1,350 @@
+//! Prefill serving scheduler: drives the distributed engine over a request
+//! workload and reports latency/throughput — the end-to-end driver the
+//! system-prompt requires for a serving paper.
+//!
+//! The paper's regime (§2.3) is prefill-dominated long-context inference:
+//! each request's prompt runs one distributed attention pass per layer.
+//! The scheduler admits requests FIFO by arrival time, executes them on the
+//! engine (real numerics, real threads), and advances a virtual clock with
+//! the measured wall time, so latency statistics are meaningful without
+//! real-time sleeping.
+
+use anyhow::{bail, Result};
+
+use crate::engine::{self, EngineOpts};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, Summary};
+use crate::workload::Request;
+
+/// Which distributed schedule serves the requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeSchedule {
+    TokenRing,
+    RingAttention,
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub devices: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Attention passes per request (≈ model layers exercised).
+    pub layers: usize,
+    pub schedule: ServeSchedule,
+    pub engine: EngineOpts,
+}
+
+/// Measured life of one request.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: usize,
+    pub seq_len: usize,
+    pub arrival: f64,
+    pub start: f64,
+    pub finish: f64,
+}
+
+impl RequestMetrics {
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    pub fn service_time(&self) -> f64 {
+        self.finish - self.start
+    }
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: Vec<RequestMetrics>,
+    pub total_tokens: usize,
+    pub wall: f64,
+}
+
+impl ServeReport {
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        self.total_tokens as f64 / self.wall
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from_samples(self.requests.iter().map(|r| r.latency()).collect())
+    }
+
+    pub fn service_p50(&self) -> f64 {
+        let mut xs: Vec<f64> = self.requests.iter().map(|r| r.service_time()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&xs, 0.5)
+    }
+}
+
+/// Serve a workload to completion.
+pub fn serve(requests: &[Request], opts: &ServeOpts) -> Result<ServeReport> {
+    if requests.is_empty() {
+        bail!("empty workload");
+    }
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut clock = 0.0f64; // virtual time
+    let mut metrics = Vec::with_capacity(requests.len());
+    let mut total_tokens = 0usize;
+
+    for req in requests {
+        let start = clock.max(req.arrival);
+        // synthesize the request's activations
+        let n = req.seq_len * opts.heads * opts.head_dim;
+        let q = Tensor::new(&[req.seq_len, opts.heads, opts.head_dim], rng.normal_vec(n, 1.0));
+        let k = Tensor::new(&[req.seq_len, opts.heads, opts.head_dim], rng.normal_vec(n, 1.0));
+        let v = Tensor::new(&[req.seq_len, opts.heads, opts.head_dim], rng.normal_vec(n, 1.0));
+
+        let mut service = 0.0;
+        for _layer in 0..opts.layers {
+            let out = match opts.schedule {
+                ServeSchedule::TokenRing => {
+                    engine::run_token_ring(&q, &k, &v, opts.devices, &opts.engine)?
+                }
+                ServeSchedule::RingAttention => {
+                    engine::run_ring_attention(&q, &k, &v, opts.devices, &opts.engine)?
+                }
+            };
+            service += out.wall;
+        }
+        let finish = start + service;
+        clock = finish;
+        total_tokens += req.seq_len;
+        metrics.push(RequestMetrics {
+            id: req.id,
+            seq_len: req.seq_len,
+            arrival: req.arrival,
+            start,
+            finish,
+        });
+    }
+
+    Ok(ServeReport { requests: metrics, total_tokens, wall: clock })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::BackendSpec;
+    use crate::parallelism::partition::Partition;
+    use crate::workload::{LenDist, WorkloadGen};
+
+    fn opts() -> ServeOpts {
+        ServeOpts {
+            devices: 4,
+            heads: 2,
+            head_dim: 16,
+            layers: 1,
+            schedule: ServeSchedule::TokenRing,
+            engine: EngineOpts {
+                causal: true,
+                partition: Partition::Zigzag,
+                backend: BackendSpec::Native,
+                record: false,
+            },
+        }
+    }
+
+    #[test]
+    fn serves_workload_fifo() {
+        let gen = WorkloadGen { rate: 100.0, dist: LenDist::Fixed(64), multiple: 8 };
+        let reqs = gen.generate(5, 1);
+        let rep = serve(&reqs, &opts()).unwrap();
+        assert_eq!(rep.requests.len(), 5);
+        assert_eq!(rep.total_tokens, 5 * 64);
+        assert!(rep.throughput_tokens_per_s() > 0.0);
+        // FIFO: starts are monotone, no request starts before arrival
+        for w in rep.requests.windows(2) {
+            assert!(w[1].start >= w[0].start);
+        }
+        for r in &rep.requests {
+            assert!(r.start >= r.arrival);
+            assert!(r.latency() >= r.service_time());
+        }
+    }
+
+    #[test]
+    fn empty_workload_errors() {
+        assert!(serve(&[], &opts()).is_err());
+    }
+
+    #[test]
+    fn latency_summary_present() {
+        let gen = WorkloadGen { rate: 1000.0, dist: LenDist::Fixed(32), multiple: 8 };
+        let reqs = gen.generate(4, 2);
+        let rep = serve(&reqs, &opts()).unwrap();
+        let s = rep.latency_summary();
+        assert_eq!(s.n, 4);
+        assert!(s.p50 > 0.0);
+        assert!(rep.service_p50() > 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache-backed serving: chunked prefill (§2.3, Agrawal et al.) + decode
+// ---------------------------------------------------------------------------
+
+use crate::engine::decode::{run_decode_ring, DecodeQuery};
+use crate::engine::kv_cache::KvCache;
+
+/// Options for the cache-backed (prefill + decode) serving path.
+#[derive(Debug, Clone)]
+pub struct CachedServeOpts {
+    pub devices: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Prefill chunk size in tokens (chunked prefill: the prompt enters the
+    /// cache chunk by chunk, each chunk attending to the whole prefix).
+    pub chunk: usize,
+    /// Decode steps generated per request after prefill.
+    pub decode_steps: usize,
+    pub engine: EngineOpts,
+}
+
+/// Timing breakdown of one cache-backed request.
+#[derive(Debug, Clone)]
+pub struct CachedRequestMetrics {
+    pub id: usize,
+    pub seq_len: usize,
+    pub prefill_time: f64,
+    pub decode_time: f64,
+    pub decode_steps: usize,
+}
+
+impl CachedRequestMetrics {
+    /// Time to first token ≈ prefill completion.
+    pub fn ttft(&self) -> f64 {
+        self.prefill_time
+    }
+
+    pub fn time_per_output_token(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_time / self.decode_steps as f64
+        }
+    }
+}
+
+/// Serve requests through the paged KV cache: chunked prefill (each chunk's
+/// queries ring over the growing distributed cache) followed by
+/// `decode_steps` batched decode-ring steps. Numerics are exact — the
+/// decode-ring tests pin them against single-device attention.
+pub fn serve_cached(
+    requests: &[Request],
+    opts: &CachedServeOpts,
+) -> Result<Vec<CachedRequestMetrics>> {
+    if requests.is_empty() {
+        bail!("empty workload");
+    }
+    let n = opts.devices;
+    let mut rng = Rng::new(0xDEC0DE);
+    let mut cache = KvCache::new(n, opts.heads, opts.head_dim, opts.chunk.max(1));
+    let mut out = Vec::with_capacity(requests.len());
+
+    for req in requests {
+        if req.seq_len % opts.chunk != 0 {
+            bail!(
+                "request {} length {} not divisible by chunk {}",
+                req.id,
+                req.seq_len,
+                opts.chunk
+            );
+        }
+        // --- chunked prefill: chunk enters the cache, then its queries
+        //     attend to the whole prefix (including itself) via the ring.
+        let t0 = std::time::Instant::now();
+        let elem = opts.chunk * opts.heads * opts.head_dim;
+        for c in 0..req.seq_len / opts.chunk {
+            let start = c * opts.chunk;
+            let k = Tensor::new(&[opts.chunk, opts.heads, opts.head_dim], rng.normal_vec(elem, 1.0));
+            let v = Tensor::new(&[opts.chunk, opts.heads, opts.head_dim], rng.normal_vec(elem, 1.0));
+            cache.append(req.id, &k, &v)?;
+            let q = Tensor::new(&[opts.chunk, opts.heads, opts.head_dim], rng.normal_vec(elem, 1.0));
+            let q_pos: Vec<i32> = (start as i32..(start + opts.chunk) as i32).collect();
+            let res = run_decode_ring(
+                vec![DecodeQuery { request: req.id, q, q_pos }],
+                &cache,
+                n,
+                &opts.engine,
+            )?;
+            debug_assert!(res.outputs.contains_key(&req.id));
+        }
+        let prefill_time = t0.elapsed().as_secs_f64();
+
+        // --- decode: one token at a time, appending to the cache
+        let t1 = std::time::Instant::now();
+        let one = opts.heads * opts.head_dim;
+        for _ in 0..opts.decode_steps {
+            let pos = cache.seq_len(req.id);
+            let q = Tensor::new(&[1, opts.heads, opts.head_dim], rng.normal_vec(one, 1.0));
+            let res = run_decode_ring(
+                vec![DecodeQuery { request: req.id, q, q_pos: vec![pos as i32] }],
+                &cache,
+                n,
+                &opts.engine,
+            )?;
+            debug_assert!(res.outputs.contains_key(&req.id));
+            let k = Tensor::new(&[1, opts.heads, opts.head_dim], rng.normal_vec(one, 1.0));
+            let v = Tensor::new(&[1, opts.heads, opts.head_dim], rng.normal_vec(one, 1.0));
+            cache.append(req.id, &k, &v)?;
+        }
+        let decode_time = t1.elapsed().as_secs_f64();
+
+        cache.free(req.id);
+        out.push(CachedRequestMetrics {
+            id: req.id,
+            seq_len: req.seq_len,
+            prefill_time,
+            decode_time,
+            decode_steps: opts.decode_steps,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod cached_tests {
+    use super::*;
+    use crate::engine::backend::BackendSpec;
+    use crate::parallelism::partition::Partition;
+    use crate::workload::{LenDist, WorkloadGen};
+
+    fn copts() -> CachedServeOpts {
+        CachedServeOpts {
+            devices: 4,
+            heads: 2,
+            head_dim: 16,
+            chunk: 16,
+            decode_steps: 3,
+            engine: EngineOpts {
+                causal: true,
+                partition: Partition::Contiguous,
+                backend: BackendSpec::Native,
+                record: false,
+            },
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_plus_decode_completes() {
+        let gen = WorkloadGen { rate: 100.0, dist: LenDist::Fixed(64), multiple: 16 };
+        let reqs = gen.generate(3, 1);
+        let ms = serve_cached(&reqs, &copts()).unwrap();
+        assert_eq!(ms.len(), 3);
+        for m in &ms {
+            assert!(m.ttft() > 0.0);
+            assert!(m.time_per_output_token() > 0.0);
+            assert_eq!(m.decode_steps, 3);
+        }
+    }
+
+    #[test]
+    fn rejects_unaligned_chunk() {
+        let reqs = vec![crate::workload::Request { id: 0, seq_len: 50, arrival: 0.0 }];
+        assert!(serve_cached(&reqs, &copts()).is_err());
+    }
+}

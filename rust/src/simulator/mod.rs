@@ -1,0 +1,452 @@
+//! Discrete-event cluster simulator.
+//!
+//! Parallelism schedules compile to a `TaskGraph`: tasks with precomputed
+//! durations (from the comm/compute cost models), dependency edges, and the
+//! *resources* they occupy. Resources serialize their tasks; everything
+//! else overlaps. This models exactly what the paper's Nsight profile
+//! (Figure 6) measures — which transfers hide behind which computes on
+//! which link directions:
+//!
+//! * `Compute(d)` — device d's compute engine (one kernel at a time).
+//! * `Link{src,dst}` — ONE DIRECTION of a physical connection. The reverse
+//!   direction is a distinct resource; that independence is the
+//!   bidirectional bandwidth TokenRing exploits.
+//! * `Egress(d)`/`Ingress(d)` — optional shared port (NVSwitch-style
+//!   fabrics where all of a device's traffic funnels through one NVLink
+//!   port; see `Topology::shared_port`).
+//!
+//! The scheduler is deterministic greedy list scheduling: among dep-ready
+//! tasks, always start the one with the earliest feasible start time. For
+//! the series-parallel graphs our schedules build this is conservative and
+//! reproducible.
+
+use std::collections::HashMap;
+
+use crate::topology::Topology;
+
+pub type TaskId = usize;
+
+/// A serializing resource in the simulated cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceId {
+    Compute(usize),
+    /// Directed link src→dst.
+    Link { src: usize, dst: usize },
+    Egress(usize),
+    Ingress(usize),
+}
+
+/// What a span means — drives per-step reporting and the chrome trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanTag {
+    Compute,
+    Merge,
+    SendQ,
+    SendKv,
+    SendOut,
+    Collective,
+}
+
+impl SpanTag {
+    pub fn is_comm(self) -> bool {
+        !matches!(self, SpanTag::Compute | SpanTag::Merge)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanTag::Compute => "compute",
+            SpanTag::Merge => "merge",
+            SpanTag::SendQ => "send_q",
+            SpanTag::SendKv => "send_kv",
+            SpanTag::SendOut => "send_out",
+            SpanTag::Collective => "collective",
+        }
+    }
+}
+
+/// One schedulable unit.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    pub name: String,
+    /// Device this task is attributed to in reports (for transfers: the
+    /// sender).
+    pub device: usize,
+    /// Micro-step index for per-step aggregation (Figure 6 rows).
+    pub step: usize,
+    pub tag: SpanTag,
+    pub duration: f64,
+    pub resources: Vec<ResourceId>,
+    pub deps: Vec<TaskId>,
+}
+
+/// Dependency graph under construction.
+#[derive(Debug, Default, Clone)]
+pub struct TaskGraph {
+    pub tasks: Vec<SimTask>,
+}
+
+impl TaskGraph {
+    pub fn new() -> TaskGraph {
+        TaskGraph::default()
+    }
+
+    pub fn add(&mut self, task: SimTask) -> TaskId {
+        for &d in &task.deps {
+            assert!(d < self.tasks.len(), "dep {d} of '{}' not yet added", task.name);
+        }
+        assert!(task.duration >= 0.0, "negative duration for '{}'", task.name);
+        self.tasks.push(task);
+        self.tasks.len() - 1
+    }
+
+    /// Compute task on device `dev`.
+    pub fn compute(
+        &mut self,
+        dev: usize,
+        step: usize,
+        name: impl Into<String>,
+        duration: f64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        self.add(SimTask {
+            name: name.into(),
+            device: dev,
+            step,
+            tag: SpanTag::Compute,
+            duration,
+            resources: vec![ResourceId::Compute(dev)],
+            deps: deps.to_vec(),
+        })
+    }
+
+    /// P2P transfer src→dst of `bytes`, on the topology's directed link
+    /// (plus shared ports if the fabric multiplexes them).
+    #[allow(clippy::too_many_arguments)]
+    pub fn transfer(
+        &mut self,
+        topo: &Topology,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        tag: SpanTag,
+        step: usize,
+        name: impl Into<String>,
+        deps: &[TaskId],
+    ) -> TaskId {
+        let link = topo.link_or_die(src, dst);
+        let mut resources = vec![ResourceId::Link { src, dst }];
+        if topo.shared_port {
+            resources.push(ResourceId::Egress(src));
+            resources.push(ResourceId::Ingress(dst));
+        }
+        self.add(SimTask {
+            name: name.into(),
+            device: src,
+            step,
+            tag,
+            duration: link.transfer_time(bytes),
+            resources,
+            deps: deps.to_vec(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+/// Executed span.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub task: TaskId,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Aggregated per-micro-step timing (the Figure 6 rows).
+#[derive(Debug, Clone)]
+pub struct StepStat {
+    pub step: usize,
+    pub start: f64,
+    pub end: f64,
+    /// Max busy compute time of any device within the step.
+    pub compute: f64,
+    /// Max busy communication time of any single resource within the step.
+    pub comm: f64,
+    /// Communication time NOT hidden behind compute (end-start-compute, ≥0).
+    pub exposed_comm: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub spans: Vec<Span>,
+    pub makespan: f64,
+    pub graph: TaskGraph,
+}
+
+/// Run the deterministic greedy scheduler.
+///
+/// Implementation: indegree-tracked ready set — each iteration scans only
+/// dep-complete tasks (O(width)) instead of all remaining tasks, keeping
+/// large sweep graphs fast (see EXPERIMENTS.md §Perf).
+pub fn simulate(graph: &TaskGraph) -> SimResult {
+    simulate_owned(graph.clone())
+}
+
+/// `simulate` without the graph clone — callers that built the graph just
+/// for this run (every Schedule::simulate) hand it over.
+pub fn simulate_owned(graph: TaskGraph) -> SimResult {
+    let n = graph.tasks.len();
+    let mut spans: Vec<Option<Span>> = vec![None; n];
+    let mut resource_free: HashMap<ResourceId, f64> = HashMap::new();
+
+    // dependency bookkeeping
+    let mut indeg: Vec<usize> = vec![0; n];
+    let mut children: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for (tid, t) in graph.tasks.iter().enumerate() {
+        indeg[tid] = t.deps.len();
+        for &d in &t.deps {
+            children[d].push(tid);
+        }
+    }
+    // latest finished-dep end per task, folded in as deps complete
+    let mut dep_end: Vec<f64> = vec![0.0; n];
+    let mut ready: Vec<TaskId> = (0..n).filter(|&t| indeg[t] == 0).collect();
+    let mut done = 0usize;
+
+    while done < n {
+        // earliest feasible start among ready tasks; tie-break lowest id
+        let mut best: Option<(f64, TaskId, usize)> = None;
+        for (pos, &tid) in ready.iter().enumerate() {
+            let t = &graph.tasks[tid];
+            let res_free = t
+                .resources
+                .iter()
+                .map(|r| resource_free.get(r).copied().unwrap_or(0.0))
+                .fold(0.0f64, f64::max);
+            let start = dep_end[tid].max(res_free);
+            let better = match best {
+                None => true,
+                Some((bs, btid, _)) => start < bs || (start == bs && tid < btid),
+            };
+            if better {
+                best = Some((start, tid, pos));
+            }
+        }
+        let (start, tid, pos) = best.expect("cycle in task graph");
+        let t = &graph.tasks[tid];
+        let end = start + t.duration;
+        for r in &t.resources {
+            resource_free.insert(*r, end);
+        }
+        spans[tid] = Some(Span { task: tid, start, end });
+        ready.swap_remove(pos);
+        done += 1;
+        for &c in &children[tid] {
+            dep_end[c] = dep_end[c].max(end);
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                ready.push(c);
+            }
+        }
+    }
+
+    let spans: Vec<Span> = spans.into_iter().map(Option::unwrap).collect();
+    let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
+    SimResult { spans, makespan, graph }
+}
+
+impl SimResult {
+    /// Group spans into per-step stats (sorted by step index).
+    pub fn step_stats(&self) -> Vec<StepStat> {
+        let mut by_step: HashMap<usize, Vec<&Span>> = HashMap::new();
+        for s in &self.spans {
+            by_step.entry(self.graph.tasks[s.task].step).or_default().push(s);
+        }
+        let mut steps: Vec<usize> = by_step.keys().copied().collect();
+        steps.sort_unstable();
+        steps
+            .into_iter()
+            .map(|step| {
+                let spans = &by_step[&step];
+                let start = spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
+                let end = spans.iter().map(|s| s.end).fold(0.0f64, f64::max);
+                // busy time per device (compute) / per resource (comm)
+                let mut compute_busy: HashMap<usize, f64> = HashMap::new();
+                let mut comm_busy: HashMap<ResourceId, f64> = HashMap::new();
+                for s in spans {
+                    let t = &self.graph.tasks[s.task];
+                    if t.tag.is_comm() {
+                        for r in &t.resources {
+                            *comm_busy.entry(*r).or_default() += s.end - s.start;
+                        }
+                    } else {
+                        *compute_busy.entry(t.device).or_default() += s.end - s.start;
+                    }
+                }
+                let compute = compute_busy.values().copied().fold(0.0, f64::max);
+                let comm = comm_busy.values().copied().fold(0.0, f64::max);
+                StepStat {
+                    step,
+                    start,
+                    end,
+                    compute,
+                    comm,
+                    exposed_comm: ((end - start) - compute).max(0.0),
+                }
+            })
+            .collect()
+    }
+
+    /// Total busy time of one resource.
+    pub fn resource_busy(&self, r: ResourceId) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| self.graph.tasks[s.task].resources.contains(&r))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Span of a given task id.
+    pub fn span(&self, tid: TaskId) -> Span {
+        self.spans.iter().copied().find(|s| s.task == tid).unwrap()
+    }
+
+    /// Sum of compute busy time across devices (for utilization metrics).
+    pub fn total_compute_busy(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| !self.graph.tasks[s.task].tag.is_comm())
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn serial_chain_accumulates() {
+        let mut g = TaskGraph::new();
+        let a = g.compute(0, 0, "a", 1.0, &[]);
+        let b = g.compute(0, 1, "b", 2.0, &[a]);
+        let _c = g.compute(0, 2, "c", 3.0, &[b]);
+        let r = simulate(&g);
+        assert_eq!(r.makespan, 6.0);
+    }
+
+    #[test]
+    fn same_resource_serializes_without_deps() {
+        let mut g = TaskGraph::new();
+        g.compute(0, 0, "a", 1.0, &[]);
+        g.compute(0, 0, "b", 1.0, &[]);
+        let r = simulate(&g);
+        assert_eq!(r.makespan, 2.0);
+    }
+
+    #[test]
+    fn different_devices_overlap() {
+        let mut g = TaskGraph::new();
+        g.compute(0, 0, "a", 1.0, &[]);
+        g.compute(1, 0, "b", 1.0, &[]);
+        let r = simulate(&g);
+        assert_eq!(r.makespan, 1.0);
+    }
+
+    #[test]
+    fn duplex_directions_are_independent() {
+        // The property TokenRing relies on: 0→1 and 1→0 overlap fully.
+        let topo = Topology::uniform_mesh(2, 10.0);
+        let mut g = TaskGraph::new();
+        g.transfer(&topo, 0, 1, 10e9, SpanTag::SendQ, 0, "fwd", &[]);
+        g.transfer(&topo, 1, 0, 10e9, SpanTag::SendOut, 0, "bwd", &[]);
+        let r = simulate(&g);
+        assert!(r.makespan < 1.1, "makespan={}", r.makespan);
+    }
+
+    #[test]
+    fn same_direction_serializes() {
+        let topo = Topology::uniform_mesh(2, 10.0);
+        let mut g = TaskGraph::new();
+        g.transfer(&topo, 0, 1, 10e9, SpanTag::SendQ, 0, "q", &[]);
+        g.transfer(&topo, 0, 1, 10e9, SpanTag::SendKv, 0, "kv", &[]);
+        let r = simulate(&g);
+        assert!(r.makespan > 1.9, "makespan={}", r.makespan);
+    }
+
+    #[test]
+    fn shared_port_contends_across_destinations() {
+        // NVSwitch-style: sends to two different peers share the egress.
+        let sw = Topology::nvswitch(4, 10.0);
+        let mut g = TaskGraph::new();
+        g.transfer(&sw, 0, 1, 10e9, SpanTag::SendQ, 0, "a", &[]);
+        g.transfer(&sw, 0, 2, 10e9, SpanTag::SendOut, 0, "b", &[]);
+        let r = simulate(&g);
+        assert!(r.makespan > 1.9, "makespan={}", r.makespan);
+
+        // OAM mesh: independent wires, full overlap.
+        let mesh = Topology::oam_mesh(4, 30.0);
+        let mut g2 = TaskGraph::new();
+        g2.transfer(&mesh, 0, 1, 10e9, SpanTag::SendQ, 0, "a", &[]);
+        g2.transfer(&mesh, 0, 2, 10e9, SpanTag::SendOut, 0, "b", &[]);
+        let r2 = simulate(&g2);
+        assert!(r2.makespan < 1.1, "makespan={}", r2.makespan);
+    }
+
+    #[test]
+    fn transfer_overlaps_compute() {
+        let topo = Topology::uniform_mesh(2, 10.0);
+        let mut g = TaskGraph::new();
+        g.compute(0, 0, "c", 1.0, &[]);
+        g.transfer(&topo, 0, 1, 10e9, SpanTag::SendQ, 0, "t", &[]);
+        let r = simulate(&g);
+        assert!(r.makespan < 1.1, "makespan={}", r.makespan);
+    }
+
+    #[test]
+    fn step_stats_aggregate() {
+        let topo = Topology::uniform_mesh(2, 10.0);
+        let mut g = TaskGraph::new();
+        let c0 = g.compute(0, 0, "c0", 2.0, &[]);
+        g.transfer(&topo, 0, 1, 10e9, SpanTag::SendQ, 0, "t0", &[]);
+        g.compute(0, 1, "c1", 1.0, &[c0]);
+        let r = simulate(&g);
+        let stats = r.step_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].step, 0);
+        assert!((stats[0].compute - 2.0).abs() < 1e-9);
+        assert!(stats[0].comm > 0.9);
+        // comm (1s) hides fully behind compute (2s)
+        assert!(stats[0].exposed_comm < 1e-9);
+    }
+
+    #[test]
+    fn dependencies_across_devices() {
+        let topo = Topology::uniform_mesh(2, 1.0);
+        let mut g = TaskGraph::new();
+        let c = g.compute(0, 0, "produce", 1.0, &[]);
+        let t = g.transfer(&topo, 0, 1, 1e9, SpanTag::SendQ, 0, "ship", &[c]);
+        let c2 = g.compute(1, 1, "consume", 1.0, &[t]);
+        let r = simulate(&g);
+        let s = r.span(c2);
+        assert!(s.start >= 2.0, "start={}", s.start);
+        assert!((r.makespan - 3.000003).abs() < 1e-3);
+    }
+
+    #[test]
+    fn resource_busy_accounting() {
+        let mut g = TaskGraph::new();
+        g.compute(0, 0, "a", 1.5, &[]);
+        g.compute(0, 0, "b", 0.5, &[]);
+        let r = simulate(&g);
+        assert!((r.resource_busy(ResourceId::Compute(0)) - 2.0).abs() < 1e-9);
+        assert_eq!(r.total_compute_busy(), 2.0);
+    }
+}

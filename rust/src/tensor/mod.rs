@@ -1,0 +1,226 @@
+//! Minimal dense f32 tensor for the coordinator hot path.
+//!
+//! The engine circulates attention blocks as row-major `(S, H, D)` tensors
+//! and `(H, S)` log-sum-exp matrices. This type deliberately supports only
+//! what the request path needs — construction, row slicing/concat along dim
+//! 0, and flat access — so the hot loops stay allocation-transparent.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bytes on the wire — what the comm simulator charges for transfers.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?} changes element count",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Number of rows (dim-0 extent).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Elements per dim-0 row.
+    pub fn row_stride(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Slice rows `[start, end)` along dim 0 (copies).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Tensor {
+        assert!(start <= end && end <= self.shape[0], "bad row slice {start}..{end}");
+        let stride = self.row_stride();
+        let mut shape = self.shape.clone();
+        shape[0] = end - start;
+        Tensor::new(&shape, self.data[start * stride..end * stride].to_vec())
+    }
+
+    /// Gather rows by index along dim 0 (zigzag/striped reordering).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let stride = self.row_stride();
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        let mut data = Vec::with_capacity(idx.len() * stride);
+        for &i in idx {
+            assert!(i < self.shape[0], "gather index {i} out of range");
+            data.extend_from_slice(&self.data[i * stride..(i + 1) * stride]);
+        }
+        Tensor::new(&shape, data)
+    }
+
+    /// Scatter this tensor's rows into `dst` at the given dim-0 indices.
+    pub fn scatter_rows_into(&self, dst: &mut Tensor, idx: &[usize]) {
+        assert_eq!(idx.len(), self.shape[0]);
+        assert_eq!(self.row_stride(), dst.row_stride(), "row stride mismatch");
+        let stride = self.row_stride();
+        for (r, &i) in idx.iter().enumerate() {
+            dst.data[i * stride..(i + 1) * stride]
+                .copy_from_slice(&self.data[r * stride..(r + 1) * stride]);
+        }
+    }
+
+    /// Concatenate along dim 0.
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let stride = parts[0].row_stride();
+        let mut shape = parts[0].shape.clone();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(p.row_stride(), stride, "row stride mismatch in concat");
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        shape[0] = rows;
+        Tensor::new(&shape, data)
+    }
+
+    /// Max |a - b| over all elements (allclose support).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row_stride(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn rejects_bad_shape() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn slice_rows_copies_correct_range() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
+        let idx = [3, 1, 0, 2];
+        let g = t.gather_rows(&idx);
+        assert_eq!(g.data(), &[6., 7., 2., 3., 0., 1., 4., 5.]);
+        let mut back = Tensor::zeros(&[4, 2]);
+        g.scatter_rows_into(&mut back, &idx);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat_rows_matches_slices() {
+        let t = Tensor::new(&[4, 3], (0..12).map(|i| i as f32).collect());
+        let a = t.slice_rows(0, 2);
+        let b = t.slice_rows(2, 4);
+        assert_eq!(Tensor::concat_rows(&[&a, &b]), t);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]);
+        let b = Tensor::new(&[2], vec![1.0, 2.1]);
+        assert!((a.max_abs_diff(&b) - 0.1).abs() < 1e-6);
+        assert!(a.allclose(&b, 0.2));
+        assert!(!a.allclose(&b, 0.05));
+    }
+}

@@ -1,0 +1,291 @@
+//! Interconnect topology models (DESIGN.md §2 substitution for real GPUs).
+//!
+//! The paper evaluates on 4×A10 over PCIe (PIX/PXB) and argues TokenRing's
+//! advantage grows on full-mesh fabrics (OAM/NVLink, Huawei HCCS) versus
+//! switch fabrics (NVSwitch). Each constructor below encodes one of those
+//! §2.2 architectures as a set of *directed* point-to-point links with
+//! per-direction bandwidth — the property TokenRing exploits is precisely
+//! that the two directions of a link are independent resources.
+
+use std::collections::HashMap;
+
+/// One direction of a physical connection between two devices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Effective bandwidth, bytes/second (not bits).
+    pub bandwidth: f64,
+    /// One-way message latency, seconds.
+    pub latency: f64,
+}
+
+impl LinkSpec {
+    pub fn gbps(bandwidth_gb: f64, latency_us: f64) -> LinkSpec {
+        LinkSpec { bandwidth: bandwidth_gb * 1e9, latency: latency_us * 1e-6 }
+    }
+
+    /// Time to push `bytes` through this link direction.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bandwidth
+    }
+}
+
+/// PCIe connection class on the paper's A10 testbed (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcieClass {
+    /// At most one PCIe bridge between the devices.
+    Pix,
+    /// Multiple bridges, not crossing the host bridge.
+    Pxb,
+}
+
+/// Directed-link interconnect over `num_devices` devices.
+///
+/// `node_of[d]` groups devices into nodes for multi-node (case study III);
+/// intra-node links come from the node fabric, inter-node links from the
+/// network spec.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub num_devices: usize,
+    pub node_of: Vec<usize>,
+    links: HashMap<(usize, usize), LinkSpec>,
+    /// When true, concurrent transfers out of one device to *different*
+    /// destinations contend for a shared egress port (PCIe host-bridge
+    /// style) instead of using independent per-pair wires (OAM mesh style).
+    pub shared_port: bool,
+}
+
+impl Topology {
+    fn empty(name: &str, n: usize) -> Topology {
+        Topology {
+            name: name.to_string(),
+            num_devices: n,
+            node_of: vec![0; n],
+            links: HashMap::new(),
+            shared_port: false,
+        }
+    }
+
+    fn add_duplex(&mut self, a: usize, b: usize, spec: LinkSpec) {
+        self.links.insert((a, b), spec);
+        self.links.insert((b, a), spec);
+    }
+
+    /// Directed link a→b, if the devices are connected.
+    pub fn link(&self, a: usize, b: usize) -> Option<LinkSpec> {
+        self.links.get(&(a, b)).copied()
+    }
+
+    /// Panic-on-missing variant for schedule builders.
+    pub fn link_or_die(&self, a: usize, b: usize) -> LinkSpec {
+        self.link(a, b).unwrap_or_else(|| {
+            panic!("topology '{}': no link {a}->{b}", self.name)
+        })
+    }
+
+    pub fn is_full_mesh(&self) -> bool {
+        (0..self.num_devices).all(|a| {
+            (0..self.num_devices).all(|b| a == b || self.links.contains_key(&(a, b)))
+        })
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// Devices of one node, in rank order.
+    pub fn node_members(&self, node: usize) -> Vec<usize> {
+        (0..self.num_devices).filter(|&d| self.node_of[d] == node).collect()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.node_of.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    // ---------------------------------------------------------------------
+    // §2.2 architectures
+    // ---------------------------------------------------------------------
+
+    /// The paper's testbed: 4×A10, pairs (0,1) and (2,3) via PIX, the other
+    /// pairs via PXB (§4.1). Bandwidths are effective-P2P estimates for
+    /// PCIe Gen4 x16 through one vs. several bridges; each direction of a
+    /// connection is independent (PCIe is full duplex) but all traffic of a
+    /// device funnels through its root-port pair, so `shared_port` is on.
+    pub fn pcie_a10(pix_gbps: f64, pxb_gbps: f64) -> Topology {
+        let mut t = Topology::empty("pcie_a10_4", 4);
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let class = if (a, b) == (0, 1) || (a, b) == (2, 3) {
+                    PcieClass::Pix
+                } else {
+                    PcieClass::Pxb
+                };
+                let bw = match class {
+                    PcieClass::Pix => pix_gbps,
+                    PcieClass::Pxb => pxb_gbps,
+                };
+                t.add_duplex(a, b, LinkSpec::gbps(bw, 8.0));
+            }
+        }
+        // P2P between different pairs flows through DIFFERENT PCIe bridges
+        // (that is what PIX/PXB classify), so concurrent transfers to
+        // distinct peers do not share one egress port — the pair links
+        // themselves carry the PIX-vs-PXB penalty.
+        t
+    }
+
+    /// Default-calibrated A10 testbed (see config::presets).
+    pub fn pcie_a10_default() -> Topology {
+        Topology::pcie_a10(14.0, 11.0)
+    }
+
+    /// OAM-style full mesh (Figure 1): every pair has a direct wire whose
+    /// bandwidth is ~1/(n-1) of the package's aggregate. Used by Ascend
+    /// HCCS and non-NVIDIA OAM designs. Per-pair wires are independent —
+    /// the regime where TokenRing's bidirectional scheme shines.
+    pub fn oam_mesh(n: usize, aggregate_gbps: f64) -> Topology {
+        assert!(n >= 2);
+        let per_pair = aggregate_gbps / (n as f64 - 1.0);
+        let mut t = Topology::empty(&format!("oam_mesh_{n}"), n);
+        for a in 0..n {
+            for b in (a + 1)..n {
+                t.add_duplex(a, b, LinkSpec::gbps(per_pair, 3.0));
+            }
+        }
+        t
+    }
+
+    /// NVSwitch fabric (Figure 2): every pair sees full NVLink bandwidth,
+    /// but all of a device's traffic shares its NVLink port into the
+    /// switch (the congestion the paper notes in §2.2), so `shared_port`.
+    pub fn nvswitch(n: usize, per_gpu_gbps: f64) -> Topology {
+        let mut t = Topology::empty(&format!("nvswitch_{n}"), n);
+        for a in 0..n {
+            for b in (a + 1)..n {
+                t.add_duplex(a, b, LinkSpec::gbps(per_gpu_gbps, 2.0));
+            }
+        }
+        t.shared_port = true;
+        t
+    }
+
+    /// Two-level: `nodes` nodes of `per_node` devices. Intra-node fabric is
+    /// an OAM mesh; same-lane ranks across neighbouring nodes are joined by
+    /// a network link (Figure 5's hybrid setting).
+    pub fn two_level(
+        nodes: usize,
+        per_node: usize,
+        intra_aggregate_gbps: f64,
+        inter_gbps: f64,
+    ) -> Topology {
+        let n = nodes * per_node;
+        let mut t = Topology::empty(&format!("two_level_{nodes}x{per_node}"), n);
+        let per_pair = intra_aggregate_gbps / (per_node as f64 - 1.0).max(1.0);
+        for node in 0..nodes {
+            let base = node * per_node;
+            for a in 0..per_node {
+                for b in (a + 1)..per_node {
+                    t.add_duplex(base + a, base + b, LinkSpec::gbps(per_pair, 3.0));
+                }
+            }
+        }
+        // ring of nodes: same-lane devices joined across neighbouring nodes
+        for node in 0..nodes {
+            let next = (node + 1) % nodes;
+            if next == node {
+                continue;
+            }
+            for lane in 0..per_node {
+                let a = node * per_node + lane;
+                let b = next * per_node + lane;
+                if t.links.contains_key(&(a, b)) {
+                    continue; // nodes == 2: forward and backward coincide
+                }
+                t.add_duplex(a, b, LinkSpec::gbps(inter_gbps, 15.0));
+            }
+        }
+        for d in 0..n {
+            t.node_of[d] = d / per_node;
+        }
+        t
+    }
+
+    /// Uniform full mesh for unit tests / sweeps.
+    pub fn uniform_mesh(n: usize, gbps: f64) -> Topology {
+        let mut t = Topology::empty(&format!("uniform_mesh_{n}"), n);
+        for a in 0..n {
+            for b in (a + 1)..n {
+                t.add_duplex(a, b, LinkSpec::gbps(gbps, 3.0));
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_spec_transfer_time() {
+        let l = LinkSpec::gbps(10.0, 5.0);
+        // 10 GB over 10 GB/s + 5µs
+        let t = l.transfer_time(10e9);
+        assert!((t - 1.000005).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn pcie_a10_classes() {
+        let t = Topology::pcie_a10(14.0, 11.0);
+        assert_eq!(t.num_devices, 4);
+        assert!(t.is_full_mesh());
+        assert!(!t.shared_port);
+        let pix = t.link(0, 1).unwrap();
+        let pxb = t.link(0, 2).unwrap();
+        assert!(pix.bandwidth > pxb.bandwidth);
+        // duplex: both directions present and equal
+        assert_eq!(t.link(1, 0).unwrap(), pix);
+        assert_eq!(t.link(3, 2).unwrap(), t.link(2, 3).unwrap());
+    }
+
+    #[test]
+    fn oam_mesh_divides_aggregate() {
+        let t = Topology::oam_mesh(8, 350.0);
+        assert!(t.is_full_mesh());
+        assert!(!t.shared_port);
+        let per_pair = t.link(0, 7).unwrap().bandwidth;
+        assert!((per_pair - 50e9).abs() < 1e6, "per_pair={per_pair}");
+    }
+
+    #[test]
+    fn nvswitch_uniform_and_shared() {
+        let t = Topology::nvswitch(8, 300.0);
+        assert!(t.is_full_mesh());
+        assert!(t.shared_port);
+        assert_eq!(t.link(2, 6).unwrap().bandwidth, 300e9);
+    }
+
+    #[test]
+    fn two_level_structure() {
+        let t = Topology::two_level(2, 4, 300.0, 25.0);
+        assert_eq!(t.num_devices, 8);
+        assert_eq!(t.num_nodes(), 2);
+        assert!(t.same_node(0, 3));
+        assert!(!t.same_node(3, 4));
+        assert_eq!(t.node_members(1), vec![4, 5, 6, 7]);
+        // intra-node link exists, cross-node non-lane link does not
+        assert!(t.link(0, 3).is_some());
+        assert!(t.link(0, 4).is_some()); // lane 0 joined across nodes
+        assert!(t.link(0, 5).is_none());
+        assert!(!t.is_full_mesh());
+        // inter links slower than intra
+        assert!(t.link(0, 4).unwrap().bandwidth < t.link(0, 1).unwrap().bandwidth);
+    }
+
+    #[test]
+    #[should_panic(expected = "no link")]
+    fn link_or_die_panics() {
+        let t = Topology::two_level(2, 2, 100.0, 10.0);
+        t.link_or_die(0, 3);
+    }
+}

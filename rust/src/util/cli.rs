@@ -1,0 +1,164 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Each subcommand declares its options; `--help` output is generated.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments: options + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand names) against specs.
+    pub fn parse(
+        argv: &[String],
+        specs: &[OptSpec],
+    ) -> Result<Args, String> {
+        let mut a = Args { specs: specs.to_vec(), ..Default::default() };
+        let known = |n: &str| specs.iter().find(|s| s.name == n);
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known(&key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    a.flags.push(key);
+                } else if let Some(v) = inline_val {
+                    a.opts.insert(key, v);
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("--{key} needs a value"))?;
+                    a.opts.insert(key, v.clone());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?;
+        v.parse().map_err(|_| format!("--{name}: bad integer '{v}'"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?;
+        v.parse().map_err(|_| format!("--{name}: bad float '{v}'"))
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str, String> {
+        self.get(name).ok_or_else(|| format!("missing --{name}"))
+    }
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nOptions:\n");
+    for o in specs {
+        let d = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        let kind = if o.is_flag { "" } else { " <value>" };
+        s.push_str(&format!("  --{}{}\n      {}{}\n", o.name, kind, o.help, d));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "devices", help: "n", default: Some("4"), is_flag: false },
+            OptSpec { name: "seq", help: "s", default: None, is_flag: false },
+            OptSpec { name: "verbose", help: "v", default: None, is_flag: true },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = Args::parse(&sv(&["--devices", "8", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("devices").unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&sv(&["--seq=24000"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("seq").unwrap(), 24000);
+    }
+
+    #[test]
+    fn applies_defaults() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_usize("devices").unwrap(), 4);
+        assert!(a.get("seq").is_none());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--seq"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn help_renders_all_options() {
+        let h = render_help("run", "does things", &specs());
+        assert!(h.contains("--devices"));
+        assert!(h.contains("[default: 4]"));
+        assert!(h.contains("--verbose"));
+    }
+}

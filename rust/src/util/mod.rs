@@ -1,0 +1,7 @@
+//! Substrate utilities the offline crate set forces us to own: JSON,
+//! deterministic PRNG, CLI parsing, stats/timing for the bench harness.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

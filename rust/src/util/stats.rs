@@ -1,0 +1,188 @@
+//! Timing + summary statistics for the bench harness (no `criterion` offline).
+//!
+//! `bench_fn` runs warmups then timed iterations and reports mean/median/p95
+//! with a simple outlier-robust summary, mirroring what our benches need
+//! from criterion: stable medians and visible variance.
+
+use std::time::Instant;
+
+/// Summary of a sample of durations (seconds) or any positive metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_samples(mut xs: Vec<f64>) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: percentile(&xs, 0.50),
+            p95: percentile(&xs, 0.95),
+            max: xs[n - 1],
+        }
+    }
+
+    /// "12.3 µs ± 0.4" style rendering for bench tables.
+    pub fn human_time(&self) -> String {
+        format!("{} ± {}", fmt_time(self.p50), fmt_time(self.std))
+    }
+}
+
+/// Interpolated percentile on a sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `iters` timed runs.
+pub fn bench_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(samples)
+}
+
+/// Fixed-width bench table writer: consistent formatting across benches so
+/// EXPERIMENTS.md can quote rows verbatim.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = Summary::from_samples(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p95, 2.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let s = Summary::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.p95 - 95.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5).contains("s"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn bench_fn_runs_expected_count() {
+        let mut count = 0;
+        let s = bench_fn(3, 10, || count += 1);
+        assert_eq!(count, 13);
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["scheme", "time"]);
+        t.row(&["token_ring".into(), "3.5 ms".into()]);
+        t.row(&["ring".into(), "7.6 ms".into()]);
+        let r = t.render();
+        assert!(r.contains("| scheme     | time   |"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Workload generation for the serving benches: Poisson request arrivals
+//! with configurable context-length distributions (the "infinite-context"
+//! regimes the paper motivates).
+
+use crate::util::rng::Rng;
+
+/// One inference request (prefill-dominated, as in the paper's §2.3 regime).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    /// Prompt length in tokens.
+    pub seq_len: usize,
+    /// Arrival time, seconds from workload start.
+    pub arrival: f64,
+}
+
+/// Context-length distribution.
+#[derive(Debug, Clone, Copy)]
+pub enum LenDist {
+    /// All requests the same length.
+    Fixed(usize),
+    /// Uniform in [lo, hi], rounded to `multiple`.
+    Uniform { lo: usize, hi: usize },
+    /// Bimodal: short chats + occasional long documents (long fraction).
+    Bimodal { short: usize, long: usize, long_frac: f64 },
+}
+
+/// Poisson-arrival workload generator.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub rate: f64,
+    pub dist: LenDist,
+    /// Sequence lengths are rounded up to a multiple of this (so every
+    /// request divides evenly across 2N zigzag chunks).
+    pub multiple: usize,
+}
+
+impl WorkloadGen {
+    pub fn generate(&self, count: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..count)
+            .map(|id| {
+                t += rng.exponential(self.rate);
+                let raw = match self.dist {
+                    LenDist::Fixed(n) => n,
+                    LenDist::Uniform { lo, hi } => rng.range(lo, hi),
+                    LenDist::Bimodal { short, long, long_frac } => {
+                        if rng.uniform() < long_frac {
+                            long
+                        } else {
+                            short
+                        }
+                    }
+                };
+                let seq_len = raw.div_ceil(self.multiple) * self.multiple;
+                Request { id, seq_len, arrival: t }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_rounded() {
+        let g = WorkloadGen {
+            rate: 10.0,
+            dist: LenDist::Uniform { lo: 100, hi: 999 },
+            multiple: 64,
+        };
+        let a = g.generate(50, 3);
+        let b = g.generate(50, 3);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seq_len, y.seq_len);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.seq_len % 64, 0);
+            assert!(x.seq_len >= 128 && x.seq_len <= 1024);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_with_poisson_mean() {
+        let g = WorkloadGen { rate: 5.0, dist: LenDist::Fixed(256), multiple: 64 };
+        let reqs = g.generate(2000, 1);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+        let total = reqs.last().unwrap().arrival;
+        let rate = 2000.0 / total;
+        assert!((rate - 5.0).abs() < 0.5, "rate={rate}");
+    }
+
+    #[test]
+    fn bimodal_fractions() {
+        let g = WorkloadGen {
+            rate: 1.0,
+            dist: LenDist::Bimodal { short: 256, long: 4096, long_frac: 0.2 },
+            multiple: 64,
+        };
+        let reqs = g.generate(5000, 7);
+        let longs = reqs.iter().filter(|r| r.seq_len == 4096).count();
+        let frac = longs as f64 / 5000.0;
+        assert!((frac - 0.2).abs() < 0.03, "frac={frac}");
+    }
+}

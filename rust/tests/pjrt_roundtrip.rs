@@ -1,0 +1,137 @@
+//! Integration: AOT artifacts (jax/pallas → HLO text) executed via PJRT in
+//! Rust must reproduce the Python oracle's numbers (testdata emitted by
+//! `python -m compile.testdata`).
+
+use tokenring::runtime::{default_artifact_dir, ArgValue, Runtime};
+use tokenring::tensor::Tensor;
+use tokenring::util::json::Json;
+
+fn load_case(name: &str) -> Option<Json> {
+    let p = default_artifact_dir().join("testdata").join(name);
+    let text = std::fs::read_to_string(&p).ok()?;
+    Some(Json::parse(&text).expect("testdata parses"))
+}
+
+fn tens(j: &Json, key: &str, shape: &[usize]) -> Tensor {
+    Tensor::new(shape, j.get(key).as_f32_vec().expect(key))
+}
+
+#[test]
+fn attn_causal_tiny_matches_python_oracle() {
+    let Some(c) = load_case("attn_causal_tiny.json") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let (sq, skv) = (c.get("sq").as_usize().unwrap(), c.get("skv").as_usize().unwrap());
+    let (h, d) = (c.get("heads").as_usize().unwrap(), c.get("head_dim").as_usize().unwrap());
+    let q = tens(&c, "q", &[sq, h, d]);
+    let k = tens(&c, "k", &[skv, h, d]);
+    let v = tens(&c, "v", &[skv, h, d]);
+    let q_pos = c.get("q_pos").as_i32_vec().unwrap();
+    let k_pos = c.get("k_pos").as_i32_vec().unwrap();
+
+    let mut rt = Runtime::new(default_artifact_dir()).unwrap();
+    let (out, lse) = rt.attn_block("attn_causal_tiny", &q, &k, &v, &q_pos, &k_pos).unwrap();
+
+    let eo = tens(&c, "expect_out", &[sq, h, d]);
+    let el = tens(&c, "expect_lse", &[h, sq]);
+    assert!(out.allclose(&eo, 1e-4), "out diff={}", out.max_abs_diff(&eo));
+    assert!(lse.allclose(&el, 1e-4), "lse diff={}", lse.max_abs_diff(&el));
+}
+
+#[test]
+fn attn_full_tiny_matches_python_oracle() {
+    let Some(c) = load_case("attn_full_tiny.json") else {
+        return;
+    };
+    let (sq, skv) = (c.get("sq").as_usize().unwrap(), c.get("skv").as_usize().unwrap());
+    let (h, d) = (c.get("heads").as_usize().unwrap(), c.get("head_dim").as_usize().unwrap());
+    let q = tens(&c, "q", &[sq, h, d]);
+    let k = tens(&c, "k", &[skv, h, d]);
+    let v = tens(&c, "v", &[skv, h, d]);
+    let q_pos = c.get("q_pos").as_i32_vec().unwrap();
+    let k_pos = c.get("k_pos").as_i32_vec().unwrap();
+
+    let mut rt = Runtime::new(default_artifact_dir()).unwrap();
+    let (out, lse) = rt.attn_block("attn_full_tiny", &q, &k, &v, &q_pos, &k_pos).unwrap();
+
+    let eo = tens(&c, "expect_out", &[sq, h, d]);
+    let el = tens(&c, "expect_lse", &[h, sq]);
+    assert!(out.allclose(&eo, 1e-4), "out diff={}", out.max_abs_diff(&eo));
+    assert!(lse.allclose(&el, 1e-4), "lse diff={}", lse.max_abs_diff(&el));
+}
+
+#[test]
+fn merge_tiny_matches_python_oracle_and_full_attention() {
+    let Some(c) = load_case("merge_tiny.json") else {
+        return;
+    };
+    let (sq, h, d) = (
+        c.get("sq").as_usize().unwrap(),
+        c.get("heads").as_usize().unwrap(),
+        c.get("head_dim").as_usize().unwrap(),
+    );
+    let oa = tens(&c, "out_a", &[sq, h, d]);
+    let la = tens(&c, "lse_a", &[h, sq]);
+    let ob = tens(&c, "out_b", &[sq, h, d]);
+    let lb = tens(&c, "lse_b", &[h, sq]);
+
+    let mut rt = Runtime::new(default_artifact_dir()).unwrap();
+    let (om, lm) = rt.merge("merge_tiny", &oa, &la, &ob, &lb).unwrap();
+
+    let eo = tens(&c, "expect_out", &[sq, h, d]);
+    let el = tens(&c, "expect_lse", &[h, sq]);
+    assert!(om.allclose(&eo, 1e-4), "merge out diff={}", om.max_abs_diff(&eo));
+    assert!(lm.allclose(&el, 1e-4), "merge lse diff={}", lm.max_abs_diff(&el));
+
+    // merged partials == full attention (the TokenRing invariant end-to-end)
+    let fo = tens(&c, "expect_full_out", &[sq, h, d]);
+    let fl = tens(&c, "expect_full_lse", &[h, sq]);
+    assert!(om.allclose(&fo, 1e-3), "full out diff={}", om.max_abs_diff(&fo));
+    assert!(lm.allclose(&fl, 1e-3), "full lse diff={}", lm.max_abs_diff(&fl));
+}
+
+#[test]
+fn native_attention_matches_pjrt_artifact() {
+    // The native Rust backend and the PJRT artifact must be interchangeable.
+    let Some(c) = load_case("attn_causal_tiny.json") else {
+        return;
+    };
+    let (sq, skv) = (c.get("sq").as_usize().unwrap(), c.get("skv").as_usize().unwrap());
+    let (h, d) = (c.get("heads").as_usize().unwrap(), c.get("head_dim").as_usize().unwrap());
+    let q = tens(&c, "q", &[sq, h, d]);
+    let k = tens(&c, "k", &[skv, h, d]);
+    let v = tens(&c, "v", &[skv, h, d]);
+    let q_pos = c.get("q_pos").as_i32_vec().unwrap();
+    let k_pos = c.get("k_pos").as_i32_vec().unwrap();
+
+    let (no, nl) =
+        tokenring::attention::attention_block(&q, &k, &v, &q_pos, &k_pos, true, None);
+    let eo = tens(&c, "expect_out", &[sq, h, d]);
+    let el = tens(&c, "expect_lse", &[h, sq]);
+    assert!(no.allclose(&eo, 1e-4), "native out diff={}", no.max_abs_diff(&eo));
+    assert!(nl.allclose(&el, 1e-4), "native lse diff={}", nl.max_abs_diff(&el));
+}
+
+#[test]
+fn runtime_rejects_shape_mismatch() {
+    if !default_artifact_dir().join("manifest.json").exists() {
+        return;
+    }
+    let mut rt = Runtime::new(default_artifact_dir()).unwrap();
+    let bad = Tensor::zeros(&[2, 2, 2]);
+    let pos = vec![0i32; 64];
+    let err = rt
+        .execute(
+            "attn_causal_tiny",
+            &[
+                ArgValue::F32(&bad),
+                ArgValue::F32(&bad),
+                ArgValue::F32(&bad),
+                ArgValue::I32(&pos),
+                ArgValue::I32(&pos),
+            ],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "unexpected error: {err}");
+}
