@@ -12,6 +12,7 @@ use tokenring::engine::{run_ring_attention, run_token_ring, EngineOpts};
 use tokenring::parallelism::partition::Partition;
 use tokenring::parallelism::token_ring::TokenRing;
 use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::simulator::{sweep, CompiledGraph};
 use tokenring::tensor::Tensor;
 use tokenring::topology::Topology;
 use tokenring::util::rng::Rng;
@@ -106,6 +107,61 @@ fn main() {
         format!("simulate N=32 graph ({n_tasks} tasks)"),
         s.human_time(),
         format!("{:.0}k tasks/s", n_tasks as f64 / s.p50 / 1e3),
+    ]);
+
+    // the pre-change O(n·width) ready-set scan, kept as the oracle — the
+    // EXPERIMENTS.md §Perf before/after pair comes from these two rows
+    let s_ref = bench_fn(1, 5, || {
+        let _ = tokenring::simulator::simulate_reference(&g);
+    });
+    t.row(&[
+        format!("  vs reference scan ({n_tasks} tasks)"),
+        s_ref.human_time(),
+        format!(
+            "{:.0}k tasks/s ({:.1}x slower)",
+            n_tasks as f64 / s_ref.p50 / 1e3,
+            s_ref.p50 / s.p50
+        ),
+    ]);
+
+    // compile-once / schedule-many: the sweep path skips graph building
+    let compiled = CompiledGraph::compile(&g);
+    let s_c = bench_fn(2, 10, || {
+        let _ = compiled.schedule();
+    });
+    t.row(&[
+        format!("schedule compiled N=32 ({n_tasks} tasks)"),
+        s_c.human_time(),
+        format!("{:.0}k tasks/s", n_tasks as f64 / s_c.p50 / 1e3),
+    ]);
+
+    // parallel sweep runner over independent grid points
+    let points: Vec<usize> = vec![4, 8, 12, 16, 20, 24, 28, 32];
+    let sweep_job = |n: usize| AttnJob {
+        shape: AttnShape::new(3_072 * n, 32, 128, Dtype::F16),
+        compute: ComputeModel::a10(0.67),
+        causal: false,
+        partition: Partition::Contiguous,
+    };
+    let s_par = bench_fn(1, 5, || {
+        let _ = sweep::par_map(&points, |&n| {
+            let topo = Topology::oam_mesh(n, 50.0 * n as f64);
+            TokenRing::default().simulate(&topo, &sweep_job(n)).makespan
+        });
+    });
+    let s_ser = bench_fn(1, 5, || {
+        let _: Vec<f64> = points
+            .iter()
+            .map(|&n| {
+                let topo = Topology::oam_mesh(n, 50.0 * n as f64);
+                TokenRing::default().simulate(&topo, &sweep_job(n)).makespan
+            })
+            .collect();
+    });
+    t.row(&[
+        format!("sweep {} points (parallel)", points.len()),
+        s_par.human_time(),
+        format!("{:.1}x vs serial", s_ser.p50 / s_par.p50),
     ]);
 
     println!("{}", t.render());

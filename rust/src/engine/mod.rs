@@ -137,11 +137,13 @@ struct Recorder {
 }
 
 impl Recorder {
+    /// `name` is a closure so the request path never pays the `format!`
+    /// allocation when recording is disabled (the common serving case).
     fn span<T>(
         &mut self,
         tag: SpanTag,
         step: usize,
-        name: &str,
+        name: impl FnOnce() -> String,
         bytes: usize,
         f: impl FnOnce() -> T,
     ) -> T {
@@ -155,7 +157,7 @@ impl Recorder {
             device: self.device,
             tag,
             step,
-            name: name.to_string(),
+            name: name(),
             t0,
             t1,
             bytes,
@@ -164,7 +166,7 @@ impl Recorder {
     }
 
     /// Zero-duration marker (channel sends are effectively instant).
-    fn mark(&mut self, tag: SpanTag, step: usize, name: &str, bytes: usize) {
+    fn mark(&mut self, tag: SpanTag, step: usize, name: impl FnOnce() -> String, bytes: usize) {
         if !self.enabled {
             return;
         }
@@ -173,7 +175,7 @@ impl Recorder {
             device: self.device,
             tag,
             step,
-            name: name.to_string(),
+            name: name(),
             t0: t,
             t1: t,
             bytes,
@@ -337,7 +339,7 @@ pub fn run_token_ring(
                         q: cur_q.clone(),
                         pos: cur_pos.clone(),
                     };
-                    rec.mark(SpanTag::SendQ, step, &format!("q[{cur_owner}]->d{dst}"), msg.bytes());
+                    rec.mark(SpanTag::SendQ, step, || format!("q[{cur_owner}]->d{dst}"), msg.bytes());
                     txs[dst].send(msg).map_err(|_| anyhow!("send Q failed"))?;
                 }
 
@@ -345,14 +347,14 @@ pub fn run_token_ring(
                 let (bo, bl) = rec.span(
                     SpanTag::Compute,
                     step,
-                    &format!("attn q{cur_owner} kv{j}"),
+                    || format!("attn q{cur_owner} kv{j}"),
                     0,
                     || backend.attn_block(&cur_q, &shard.k, &shard.v, &cur_pos, &shard.pos_i32, opts.causal),
                 )?;
 
                 // route the partial home
                 if cur_owner == j {
-                    rec.span(SpanTag::Merge, step, "update self", 0, || -> Result<()> {
+                    rec.span(SpanTag::Merge, step, || "update self".into(), 0, || -> Result<()> {
                         acc.add(backend.as_mut(), bo, bl)
                     })?;
                 } else {
@@ -360,7 +362,7 @@ pub fn run_token_ring(
                     rec.mark(
                         SpanTag::SendOut,
                         step,
-                        &format!("out[q{cur_owner}]->d{cur_owner}"),
+                        || format!("out[q{cur_owner}]->d{cur_owner}"),
                         msg.bytes(),
                     );
                     txs[cur_owner].send(msg).map_err(|_| anyhow!("send partial failed"))?;
@@ -369,7 +371,7 @@ pub fn run_token_ring(
                 // merge any partials that already arrived (overlap)
                 mbox.poll();
                 while let Some((po, pl)) = mbox.partials.pop_front() {
-                    rec.span(SpanTag::Merge, step, "update remote", 0, || -> Result<()> {
+                    rec.span(SpanTag::Merge, step, || "update remote".into(), 0, || -> Result<()> {
                         acc.add(backend.as_mut(), po, pl)
                     })?;
                     merged_remote += 1;
@@ -387,7 +389,7 @@ pub fn run_token_ring(
             // straggler partials
             while merged_remote < n - 1 {
                 let (po, pl) = mbox.next_partial()?;
-                rec.span(SpanTag::Merge, n, "update tail", 0, || -> Result<()> {
+                rec.span(SpanTag::Merge, n, || "update tail".into(), 0, || -> Result<()> {
                     acc.add(backend.as_mut(), po, pl)
                 })?;
                 merged_remote += 1;
@@ -447,18 +449,18 @@ pub fn run_ring_attention(
                         v: cur_v.clone(),
                         pos: cur_pos.clone(),
                     };
-                    rec.mark(SpanTag::SendKv, step, &format!("kv->d{dst}"), msg.bytes());
+                    rec.mark(SpanTag::SendKv, step, || format!("kv->d{dst}"), msg.bytes());
                     txs[dst].send(msg).map_err(|_| anyhow!("send KV failed"))?;
                 }
 
                 let (bo, bl) = rec.span(
                     SpanTag::Compute,
                     step,
-                    &format!("attn q{j} s{step}"),
+                    || format!("attn q{j} s{step}"),
                     0,
                     || backend.attn_block(&shard.q, &cur_k, &cur_v, &shard.pos_i32, &cur_pos, opts.causal),
                 )?;
-                rec.span(SpanTag::Merge, step, "update", 0, || -> Result<()> {
+                rec.span(SpanTag::Merge, step, || "update".into(), 0, || -> Result<()> {
                     acc.add(backend.as_mut(), bo, bl)
                 })?;
 
@@ -540,7 +542,7 @@ pub fn run_hybrid(
                         v: cur_v.clone(),
                         pos: cur_kpos.clone(),
                     };
-                    rec.mark(SpanTag::SendKv, step_base, &format!("kv->d{kv_peer}"), msg.bytes());
+                    rec.mark(SpanTag::SendKv, step_base, || format!("kv->d{kv_peer}"), msg.bytes());
                     txs[kv_peer].send(msg).map_err(|_| anyhow!("send KV failed"))?;
                 }
 
@@ -552,31 +554,31 @@ pub fn run_hybrid(
                             q: cur_q.clone(),
                             pos: cur_pos.clone(),
                         };
-                        rec.mark(SpanTag::SendQ, step, &format!("q[{cur_owner}]->d{ring_next}"), msg.bytes());
+                        rec.mark(SpanTag::SendQ, step, || format!("q[{cur_owner}]->d{ring_next}"), msg.bytes());
                         txs[ring_next].send(msg).map_err(|_| anyhow!("send Q failed"))?;
                     }
 
                     let (bo, bl) = rec.span(
                         SpanTag::Compute,
                         step,
-                        &format!("attn q{cur_owner} o{outer}"),
+                        || format!("attn q{cur_owner} o{outer}"),
                         0,
                         || backend.attn_block(&cur_q, &cur_k, &cur_v, &cur_pos, &cur_kpos, opts.causal),
                     )?;
 
                     if cur_owner == j {
-                        rec.span(SpanTag::Merge, step, "update self", 0, || -> Result<()> {
+                        rec.span(SpanTag::Merge, step, || "update self".into(), 0, || -> Result<()> {
                             acc.add(backend.as_mut(), bo, bl)
                         })?;
                     } else {
                         let msg = Msg::Partial { out: bo, lse: bl };
-                        rec.mark(SpanTag::SendOut, step, &format!("out->d{cur_owner}"), msg.bytes());
+                        rec.mark(SpanTag::SendOut, step, || format!("out->d{cur_owner}"), msg.bytes());
                         txs[cur_owner].send(msg).map_err(|_| anyhow!("send partial failed"))?;
                     }
 
                     mbox.poll();
                     while let Some((po, pl)) = mbox.partials.pop_front() {
-                        rec.span(SpanTag::Merge, step, "update remote", 0, || -> Result<()> {
+                        rec.span(SpanTag::Merge, step, || "update remote".into(), 0, || -> Result<()> {
                             acc.add(backend.as_mut(), po, pl)
                         })?;
                         merged_remote += 1;
@@ -601,7 +603,7 @@ pub fn run_hybrid(
 
             while merged_remote < expected_remote {
                 let (po, pl) = mbox.next_partial()?;
-                rec.span(SpanTag::Merge, nodes * per_node, "update tail", 0, || -> Result<()> {
+                rec.span(SpanTag::Merge, nodes * per_node, || "update tail".into(), 0, || -> Result<()> {
                     acc.add(backend.as_mut(), po, pl)
                 })?;
                 merged_remote += 1;

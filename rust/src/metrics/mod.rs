@@ -128,7 +128,7 @@ pub fn timeline_from_sim(r: &SimResult) -> Timeline {
             device: task.device,
             tag: task.tag,
             step: task.step,
-            name: task.name.clone(),
+            name: task.name(),
             t0: s.start,
             t1: s.end,
             bytes: 0,

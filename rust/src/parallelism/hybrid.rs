@@ -7,7 +7,7 @@
 //! in the node; then each device lane-forwards its KV block to the peer
 //! device of the next node and the next outer step begins.
 
-use crate::simulator::{SpanTag, TaskGraph, TaskId};
+use crate::simulator::{SpanTag, TaskGraph, TaskId, TaskLabel};
 use crate::topology::Topology;
 
 use super::{token_ring, AttnJob, Schedule};
@@ -107,7 +107,12 @@ impl Schedule for HybridTokenRing {
                             bytes,
                             SpanTag::SendKv,
                             step_base + per_node,
-                            format!("kv[{kv_rank}] n{node}->n{next} o{outer}"),
+                            TaskLabel::SendKvInter {
+                                block: kv_rank as u32,
+                                src: node as u32,
+                                dst: next as u32,
+                                outer: outer as u32,
+                            },
                             &deps,
                         );
                         new_entry[dst].push(t);

@@ -6,7 +6,7 @@
 //! ~2× TokenRing's peak direction, and (b) the reverse direction of every
 //! duplex link idles.
 
-use crate::simulator::{SpanTag, TaskGraph, TaskId};
+use crate::simulator::{SpanTag, TaskGraph, TaskId, TaskLabel};
 use crate::topology::Topology;
 
 use super::{causal_work_fraction, AttnJob, Schedule};
@@ -77,7 +77,12 @@ pub fn build_on_devices(
                     kv_bytes(kv_rank),
                     SpanTag::SendKv,
                     step,
-                    format!("kv[{kv_rank}] r{r}->r{dst} s{step}"),
+                    TaskLabel::SendKv {
+                        block: kv_rank as u32,
+                        src: r as u32,
+                        dst: dst as u32,
+                        step: step as u32,
+                    },
                     &deps,
                 );
                 last_send[r] = Some(t);
@@ -100,14 +105,14 @@ pub fn build_on_devices(
             let c = g.compute(
                 devices[r],
                 step,
-                format!("attn q{r} kv{kv_rank} s{step}"),
+                TaskLabel::Attn { q: r as u32, kv: kv_rank as u32, step: step as u32 },
                 job.attn_time(blk_q, blk_k, f),
                 &deps,
             );
             // local merge of the new partial into the accumulator
             if step > 0 {
                 let m = g.add(crate::simulator::SimTask {
-                    name: format!("merge q{r} s{step}"),
+                    label: TaskLabel::Merge { q: r as u32, step: step as u32 },
                     device: devices[r],
                     step,
                     tag: SpanTag::Merge,

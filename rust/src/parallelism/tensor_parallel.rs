@@ -4,7 +4,7 @@
 //! every device holds the FULL sequence's KV — the simulator reports that
 //! footprint alongside the timing.
 
-use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph};
+use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph, TaskLabel};
 use crate::topology::Topology;
 
 use super::{AttnJob, Schedule};
@@ -39,7 +39,7 @@ impl Schedule for TensorParallel {
                 g.compute(
                     d,
                     0,
-                    format!("attn heads d{d}"),
+                    TaskLabel::AttnHeads { dev: d as u32 },
                     job.attn_time(job.shape.seq, job.shape.seq, frac / n as f64),
                     &[],
                 )
@@ -50,7 +50,7 @@ impl Schedule for TensorParallel {
         let t = crate::comm::allreduce_time(topo, job.shape.act_bytes(job.shape.seq));
         for d in 0..n {
             g.add(SimTask {
-                name: format!("allreduce d{d}"),
+                label: TaskLabel::AllReduce { dev: d as u32 },
                 device: d,
                 step: 1,
                 tag: SpanTag::Collective,

@@ -16,7 +16,7 @@
 //! rows that can no longer attend to any remaining KV block (§3.3.2) — the
 //! `elide_q` knob accounts that volume reduction.
 
-use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph, TaskId};
+use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph, TaskId, TaskLabel};
 use crate::topology::Topology;
 
 use super::{alive_fraction, causal_work_fraction, AttnJob, Schedule};
@@ -117,8 +117,12 @@ pub fn build_into(
     };
 
     let mut last_compute: Vec<Option<TaskId>> = vec![None; n];
-    // pending merge dependency chain per owner (accumulator exclusivity)
-    let mut merge_chain: Vec<Option<TaskId>> = vec![None; n];
+    // Pending dependencies of each owner's NEXT accumulator update
+    // (accumulator exclusivity). After a merge runs, it collapses to that
+    // single merge; the step-0 self partial joins the set instead of
+    // racing it — "later of the two in dependency order" is expressed by
+    // depending on BOTH, never by comparing raw task ids.
+    let mut merge_deps: Vec<Vec<TaskId>> = vec![Vec::new(); n];
     // arrival task of the Q block each rank will compute on next
     let mut q_arrival: Vec<Option<TaskId>> = vec![None; n];
     let mut last_q_send: Vec<Option<TaskId>> = vec![None; n];
@@ -167,7 +171,12 @@ pub fn build_into(
                     bytes,
                     SpanTag::SendQ,
                     step_base + step,
-                    format!("q[{owner}] r{r}->r{dst} s{step}"),
+                    TaskLabel::SendQ {
+                        owner: owner as u32,
+                        src: r as u32,
+                        dst: dst as u32,
+                        step: step as u32,
+                    },
                     &deps,
                 );
                 last_q_send[r] = Some(t);
@@ -181,11 +190,9 @@ pub fn build_into(
         for r in 0..n {
             if let Some((ctask, owner)) = prev_partial[r].take() {
                 if owner == r {
-                    // step-0 self partial: initializes the accumulator
-                    merge_chain[r] = Some(match merge_chain[r] {
-                        None => ctask,
-                        Some(prev) => prev.max(ctask),
-                    });
+                    // step-0 self partial: initializes the accumulator —
+                    // every later update must also wait for it.
+                    merge_deps[r].push(ctask);
                     continue;
                 }
                 let t = g.transfer(
@@ -195,7 +202,12 @@ pub fn build_into(
                     out_bytes(owner),
                     SpanTag::SendOut,
                     step_base + step,
-                    format!("out[q{owner}] r{r}->r{owner} s{step}"),
+                    TaskLabel::SendOut {
+                        owner: owner as u32,
+                        src: r as u32,
+                        dst: owner as u32,
+                        step: Some(step as u32),
+                    },
                     &[ctask],
                 );
                 arriving_partial[owner].push(t);
@@ -219,7 +231,7 @@ pub fn build_into(
             let c = g.compute(
                 devices[r],
                 step_base + step,
-                format!("attn q{owner} kv{r} s{step}"),
+                TaskLabel::Attn { q: owner as u32, kv: r as u32, step: step as u32 },
                 job.attn_time(q_positions[owner].len(), kv_positions[r].len(), f),
                 &deps,
             );
@@ -231,11 +243,12 @@ pub fn build_into(
         for owner in 0..n {
             for &arr in &arriving_partial[owner] {
                 let mut deps = vec![arr];
-                if let Some(prev) = merge_chain[owner] {
-                    deps.push(prev);
-                }
+                deps.append(&mut merge_deps[owner]);
                 let m = g.add(SimTask {
-                    name: format!("update q{owner} s{step}"),
+                    label: TaskLabel::Update {
+                        owner: owner as u32,
+                        step: Some(step as u32),
+                    },
                     device: devices[owner],
                     step: step_base + step,
                     tag: SpanTag::Merge,
@@ -243,7 +256,7 @@ pub fn build_into(
                     resources: vec![ResourceId::Compute(devices[owner])],
                     deps,
                 });
-                merge_chain[owner] = Some(m);
+                merge_deps[owner] = vec![m];
             }
         }
 
@@ -252,11 +265,12 @@ pub fn build_into(
 
     // ---- tail: final partials (computed at step n-1) fly home + merge ----
     let tail_step = step_base + n;
-    let mut finals: Vec<Option<TaskId>> = vec![None; n];
     for r in 0..n {
         if let Some((ctask, owner)) = prev_partial[r].take() {
             if owner == r {
-                finals[r] = merge_chain[r].or(Some(ctask));
+                // only reachable for degenerate rings; the accumulator's
+                // completion now also waits on this compute
+                merge_deps[r].push(ctask);
                 continue;
             }
             let t = g.transfer(
@@ -266,15 +280,18 @@ pub fn build_into(
                 out_bytes(owner),
                 SpanTag::SendOut,
                 tail_step,
-                format!("out[q{owner}] r{r}->r{owner} tail"),
+                TaskLabel::SendOut {
+                    owner: owner as u32,
+                    src: r as u32,
+                    dst: owner as u32,
+                    step: None,
+                },
                 &[ctask],
             );
             let mut deps = vec![t];
-            if let Some(prev) = merge_chain[owner] {
-                deps.push(prev);
-            }
+            deps.append(&mut merge_deps[owner]);
             let m = g.add(SimTask {
-                name: format!("update q{owner} tail"),
+                label: TaskLabel::Update { owner: owner as u32, step: None },
                 device: devices[owner],
                 step: tail_step,
                 tag: SpanTag::Merge,
@@ -282,11 +299,28 @@ pub fn build_into(
                 resources: vec![ResourceId::Compute(devices[owner])],
                 deps,
             });
-            merge_chain[owner] = Some(m);
+            merge_deps[owner] = vec![m];
         }
     }
     (0..n)
-        .map(|r| finals[r].or(merge_chain[r]).expect("rank finished"))
+        .map(|r| match merge_deps[r][..] {
+            [single] => single,
+            // >1 pending with no merge to join them: add a zero-duration
+            // barrier so the rank's completion depends on all of them
+            // (unreachable for the ring builders; kept for composability).
+            _ => {
+                assert!(!merge_deps[r].is_empty(), "rank finished");
+                g.add(SimTask {
+                    label: TaskLabel::Update { owner: r as u32, step: None },
+                    device: devices[r],
+                    step: tail_step,
+                    tag: SpanTag::Merge,
+                    duration: 0.0,
+                    resources: vec![ResourceId::Compute(devices[r])],
+                    deps: merge_deps[r].clone(),
+                })
+            }
+        })
         .collect()
 }
 

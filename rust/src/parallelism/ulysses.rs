@@ -3,7 +3,7 @@
 //! group, AllToAll back. Parallel degree is capped by the head count — the
 //! limitation Table 1 records.
 
-use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph};
+use crate::simulator::{ResourceId, SimTask, SpanTag, TaskGraph, TaskLabel};
 use crate::topology::Topology;
 
 use super::{AttnJob, Schedule};
@@ -33,7 +33,7 @@ impl Schedule for Ulysses {
         let phase1: Vec<_> = (0..n)
             .map(|d| {
                 g.add(SimTask {
-                    name: format!("a2a qkv d{d}"),
+                    label: TaskLabel::A2aQkv { dev: d as u32 },
                     device: d,
                     step: 0,
                     tag: SpanTag::Collective,
@@ -54,9 +54,9 @@ impl Schedule for Ulysses {
                 g.compute(
                     d,
                     1,
-                    format!("attn heads d{d}"),
+                    TaskLabel::AttnHeads { dev: d as u32 },
                     job.attn_time(job.shape.seq, job.shape.seq, frac * head_share),
-                    &phase1.clone(),
+                    &phase1,
                 )
             })
             .collect();
@@ -65,7 +65,7 @@ impl Schedule for Ulysses {
         let t3 = crate::comm::alltoall_time(topo, job.shape.act_bytes(local));
         for d in 0..n {
             g.add(SimTask {
-                name: format!("a2a out d{d}"),
+                label: TaskLabel::A2aOut { dev: d as u32 },
                 device: d,
                 step: 2,
                 tag: SpanTag::Collective,

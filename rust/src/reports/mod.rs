@@ -14,7 +14,7 @@ use crate::parallelism::token_ring::TokenRing;
 use crate::parallelism::tensor_parallel::TensorParallel;
 use crate::parallelism::ulysses::Ulysses;
 use crate::parallelism::{AttnJob, Schedule};
-use crate::simulator::SimResult;
+use crate::simulator::{sweep, SimResult};
 use crate::topology::Topology;
 use crate::util::stats::Table;
 
@@ -49,11 +49,19 @@ pub fn step_profile(schedule: &dyn Schedule, topo: &Topology, job: &AttnJob) -> 
 }
 
 /// Figure 6: TokenRing vs Ring-Attention per-step profile on the A10 box.
+/// The two schedule simulations are independent points — they run on the
+/// sweep pool.
 pub fn fig6(seq: usize) -> (String, StepProfile, StepProfile) {
     let cluster = Cluster::a10_pcie4();
     let job = fig6_job(seq, true);
-    let tr = step_profile(&TokenRing::default(), &cluster.topology, &job);
-    let ra = step_profile(&RingAttention, &cluster.topology, &job);
+    let token_ring = TokenRing::default();
+    let ring = RingAttention;
+    let schedules: [&(dyn Schedule + Sync); 2] = [&token_ring, &ring];
+    let mut profiles = sweep::par_map(&schedules, |s| step_profile(*s, &cluster.topology, &job))
+        .into_iter();
+    // positional: profiles come back in `schedules` order
+    let tr = profiles.next().expect("token_ring profile");
+    let ra = profiles.next().expect("ring_attention profile");
 
     let mut t = Table::new(&[
         "schedule", "step", "wall (ms)", "compute (ms)", "comm (ms)", "exposed comm (ms)",
@@ -103,18 +111,21 @@ pub fn table1(seq: usize, n: usize) -> (String, Vec<VolumeReport>) {
         causal: false,
         partition: Partition::Contiguous,
     };
-    let schedules: Vec<(&str, Box<dyn Schedule>)> = vec![
+    let schedules: Vec<(&str, Box<dyn Schedule + Sync>)> = vec![
         ("tensor_parallel", Box::new(TensorParallel)),
         ("ring_attention", Box::new(RingAttention)),
         ("ulysses", Box::new(Ulysses)),
         ("token_ring", Box::new(TokenRing::default())),
     ];
+    // one independent simulation per scheme — sweep them in parallel
+    let makespans = sweep::par_map(&schedules, |(_, sched)| {
+        sched.simulate(&cluster.topology, &job).makespan
+    });
     let mut t = Table::new(&[
         "parallelism", "communication", "per-step TX (MB)", "total TX (MB)",
         "duplex use", "max degree", "limitation", "makespan (ms)",
     ]);
-    for (rep, (_, sched)) in reports.iter().zip(&schedules) {
-        let mk = sched.simulate(&cluster.topology, &job).makespan;
+    for (rep, mk) in reports.iter().zip(makespans) {
         t.row(&[
             rep.scheme.into(),
             rep.pattern.into(),
@@ -139,11 +150,9 @@ pub fn table1(seq: usize, n: usize) -> (String, Vec<VolumeReport>) {
 /// paper's cost-constrained setting) so the crossover is visible: on very
 /// fat links everything is compute-bound and all ring schemes tie.
 pub fn scaling_gpus(seq: usize, ns: &[usize]) -> String {
-    let mut t = Table::new(&[
-        "N", "compute/step (ms)", "comm/step (ms)", "comm/compute",
-        "ring makespan (ms)", "tokenring makespan (ms)", "speedup",
-    ]);
-    for &n in ns {
+    // Every N is an independent (schedule, topology, job) point; the whole
+    // grid fans out over the sweep pool and rows come back in input order.
+    let rows = sweep::par_map(ns, |&n| {
         let topo = crate::topology::Topology::uniform_mesh(n, 12.0);
         let job = AttnJob {
             shape: ModelConfig::llama2_7b().attn_shape(seq),
@@ -158,6 +167,13 @@ pub fn scaling_gpus(seq: usize, ns: &[usize]) -> String {
         let comm = link.transfer_time(kv_bytes);
         let ra = RingAttention.simulate(&topo, &job).makespan;
         let tr = TokenRing::default().simulate(&topo, &job).makespan;
+        (n, compute, comm, ra, tr)
+    });
+    let mut t = Table::new(&[
+        "N", "compute/step (ms)", "comm/step (ms)", "comm/compute",
+        "ring makespan (ms)", "tokenring makespan (ms)", "speedup",
+    ]);
+    for (n, compute, comm, ra, tr) in rows {
         t.row(&[
             n.to_string(),
             format!("{:.2}", compute * 1e3),
@@ -179,11 +195,8 @@ pub fn scaling_gpus(seq: usize, ns: &[usize]) -> String {
 /// regime the paper's title targets. On a PCIe-class mesh the ring schemes
 /// are comm-bound and TokenRing's duplex advantage is the gap.
 pub fn scaling_seqlen(block: usize, seqs: &[usize]) -> String {
-    let mut t = Table::new(&[
-        "S", "N", "ring (ms)", "ulysses (ms)", "tokenring (ms)",
-        "ring tok/s", "tokenring tok/s", "speedup",
-    ]);
-    for &seq in seqs {
+    // Independent weak-scaling points — fan out over the sweep pool.
+    let rows = sweep::par_map(seqs, |&seq| {
         let n = (seq / block).max(2);
         let topo = crate::topology::Topology::uniform_mesh(n, 12.0);
         let job = AttnJob {
@@ -199,6 +212,13 @@ pub fn scaling_seqlen(block: usize, seqs: &[usize]) -> String {
             "cap".into() // degree exceeds head count — Table 1's limitation
         };
         let tr = TokenRing::default().simulate(&topo, &job).makespan;
+        (seq, n, ra, ul, tr)
+    });
+    let mut t = Table::new(&[
+        "S", "N", "ring (ms)", "ulysses (ms)", "tokenring (ms)",
+        "ring tok/s", "tokenring tok/s", "speedup",
+    ]);
+    for (seq, n, ra, ul, tr) in rows {
         t.row(&[
             seq.to_string(),
             n.to_string(),
@@ -218,11 +238,10 @@ pub fn scaling_seqlen(block: usize, seqs: &[usize]) -> String {
 
 /// Z1: causal load balance across partition strategies.
 pub fn zigzag_balance(seq: usize, n: usize) -> String {
-    let mut t = Table::new(&[
-        "partition", "max/mean imbalance", "makespan (ms)", "q-volume saved",
-    ]);
     let cluster = Cluster::a10_pcie4();
-    for p in [Partition::Contiguous, Partition::Striped { stripe: 1 }, Partition::Zigzag] {
+    let partitions =
+        [Partition::Contiguous, Partition::Striped { stripe: 1 }, Partition::Zigzag];
+    let rows = sweep::par_map(&partitions, |&p| {
         let job = AttnJob {
             shape: ModelConfig::llama2_7b().attn_shape(seq),
             compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
@@ -242,6 +261,12 @@ pub fn zigzag_balance(seq: usize, n: usize) -> String {
                 .sum()
         };
         let saved = 1.0 - vol(true) / vol(false);
+        (p, ib, mk, saved)
+    });
+    let mut t = Table::new(&[
+        "partition", "max/mean imbalance", "makespan (ms)", "q-volume saved",
+    ]);
+    for (p, ib, mk, saved) in rows {
         t.row(&[
             p.label().into(),
             format!("{ib:.3}"),

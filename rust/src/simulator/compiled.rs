@@ -1,0 +1,301 @@
+//! Compiled task graphs and the event-driven scheduler.
+//!
+//! `TaskGraph` is the builder-friendly representation: one `SimTask` per
+//! node, each with its own `Vec`s of deps and resources and a `HashMap`
+//! lookup per resource probe at schedule time. For the (N, seqlen,
+//! topology) sweeps that regenerate the paper's figures, that layout is
+//! the bottleneck — so a finalization pass converts it into a
+//! structure-of-arrays `CompiledGraph`:
+//!
+//! * durations / indegrees in flat arrays,
+//! * children and resources CSR-packed (`off`/`idx` pairs),
+//! * resources interned once into dense `u32` indices, turning every
+//!   schedule-time probe into an array load.
+//!
+//! Scheduling is a binary-heap event loop keyed on feasible start time with
+//! `(start, task-id)` tie-breaking. It reproduces the reference greedy list
+//! scheduler *exactly* (same spans, same makespan — see
+//! `tests/scheduler_equivalence.rs`): a task's key is a lower bound on its
+//! true feasible start (resource-free times only ever advance), so a popped
+//! task whose recomputed start still equals its key is provably the
+//! lexicographic `(start, id)` minimum of the whole ready set; otherwise it
+//! lost a resource race and is re-enqueued at its advanced start. Total
+//! cost is O(n log n) instead of the reference's O(n · ready-width).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+use super::{ResourceId, Span, TaskGraph};
+
+/// f64 schedule times ordered via `total_cmp` so they can key a heap.
+/// Times are finite and non-negative (durations/latencies are asserted
+/// non-negative at graph build), so `total_cmp` agrees with numeric order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct TimeKey(f64);
+
+impl Eq for TimeKey {}
+
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &TimeKey) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimeKey {
+    fn cmp(&self, other: &TimeKey) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Structure-of-arrays form of a `TaskGraph`, ready for repeated
+/// scheduling. Compile once with [`CompiledGraph::compile`], then call
+/// [`CompiledGraph::schedule`] as many times as the sweep needs.
+#[derive(Debug, Clone)]
+pub struct CompiledGraph {
+    len: usize,
+    duration: Box<[f64]>,
+    indegree: Box<[u32]>,
+    /// CSR of dependent tasks: children of `t` are
+    /// `child_idx[child_off[t]..child_off[t + 1]]`.
+    child_off: Box<[u32]>,
+    child_idx: Box<[u32]>,
+    /// CSR of dense resource indices occupied by each task.
+    res_off: Box<[u32]>,
+    res_idx: Box<[u32]>,
+    /// Dense index → original resource id (for debugging/reporting).
+    resources: Box<[ResourceId]>,
+}
+
+impl CompiledGraph {
+    /// Finalize a built graph: CSR-pack deps/children/resources and intern
+    /// every distinct `ResourceId` into a dense `u32` index.
+    pub fn compile(graph: &TaskGraph) -> CompiledGraph {
+        let n = graph.tasks.len();
+        assert!(n < u32::MAX as usize, "graph too large for u32 indices");
+
+        let mut duration = Vec::with_capacity(n);
+        let mut indegree = vec![0u32; n];
+
+        // children CSR: count, prefix-sum, fill
+        let mut child_off = vec![0u32; n + 1];
+        for t in &graph.tasks {
+            for &d in &t.deps {
+                child_off[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            child_off[i + 1] += child_off[i];
+        }
+        let mut child_idx = vec![0u32; child_off[n] as usize];
+        let mut cursor: Vec<u32> = child_off[..n].to_vec();
+
+        let mut interner: HashMap<ResourceId, u32> = HashMap::new();
+        let mut resources: Vec<ResourceId> = Vec::new();
+        let mut res_off = Vec::with_capacity(n + 1);
+        res_off.push(0u32);
+        let mut res_idx: Vec<u32> = Vec::new();
+
+        for (tid, t) in graph.tasks.iter().enumerate() {
+            duration.push(t.duration);
+            indegree[tid] = t.deps.len() as u32;
+            for &d in &t.deps {
+                child_idx[cursor[d] as usize] = tid as u32;
+                cursor[d] += 1;
+            }
+            for &r in &t.resources {
+                let next = resources.len() as u32;
+                let dense = *interner.entry(r).or_insert_with(|| {
+                    resources.push(r);
+                    next
+                });
+                res_idx.push(dense);
+            }
+            res_off.push(res_idx.len() as u32);
+        }
+
+        CompiledGraph {
+            len: n,
+            duration: duration.into_boxed_slice(),
+            indegree: indegree.into_boxed_slice(),
+            child_off: child_off.into_boxed_slice(),
+            child_idx: child_idx.into_boxed_slice(),
+            res_off: res_off.into_boxed_slice(),
+            res_idx: res_idx.into_boxed_slice(),
+            resources: resources.into_boxed_slice(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of distinct serializing resources in the graph.
+    pub fn num_resources(&self) -> usize {
+        self.resources.len()
+    }
+
+    /// The `ResourceId` behind a dense index.
+    pub fn resource(&self, dense: u32) -> ResourceId {
+        self.resources[dense as usize]
+    }
+
+    #[inline]
+    fn res_of(&self, t: usize) -> &[u32] {
+        &self.res_idx[self.res_off[t] as usize..self.res_off[t + 1] as usize]
+    }
+
+    #[inline]
+    fn children_of(&self, t: usize) -> &[u32] {
+        &self.child_idx[self.child_off[t] as usize..self.child_off[t + 1] as usize]
+    }
+
+    /// Run the event-driven scheduler. Returns spans indexed by `TaskId`
+    /// (`spans[t].task == t`) and the makespan.
+    pub fn schedule(&self) -> (Vec<Span>, f64) {
+        let n = self.len;
+        let mut resource_free = vec![0.0f64; self.resources.len()];
+        let mut indeg: Vec<u32> = self.indegree.to_vec();
+        // latest finished-dep end per task, folded in as deps complete
+        let mut dep_end = vec![0.0f64; n];
+        let mut spans = vec![Span { task: 0, start: 0.0, end: 0.0 }; n];
+
+        let feasible = |resource_free: &[f64], dep_end: &[f64], t: usize| -> f64 {
+            let mut s = dep_end[t];
+            for &r in self.res_of(t) {
+                s = s.max(resource_free[r as usize]);
+            }
+            s
+        };
+
+        let mut heap: BinaryHeap<Reverse<(TimeKey, usize)>> = BinaryHeap::with_capacity(64);
+        for t in 0..n {
+            if indeg[t] == 0 {
+                heap.push(Reverse((TimeKey(feasible(&resource_free, &dep_end, t)), t)));
+            }
+        }
+
+        let mut done = 0usize;
+        let mut makespan = 0.0f64;
+        while let Some(Reverse((TimeKey(key), t))) = heap.pop() {
+            // The key was computed against an earlier resource state; if a
+            // resource this task wanted has advanced since, the task lost
+            // the race — re-enqueue it at its new feasible start.
+            let start = feasible(&resource_free, &dep_end, t);
+            if start > key {
+                heap.push(Reverse((TimeKey(start), t)));
+                continue;
+            }
+            let end = start + self.duration[t];
+            for &r in self.res_of(t) {
+                resource_free[r as usize] = end;
+            }
+            spans[t] = Span { task: t, start, end };
+            makespan = makespan.max(end);
+            done += 1;
+            for &c in self.children_of(t) {
+                let c = c as usize;
+                dep_end[c] = dep_end[c].max(end);
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    heap.push(Reverse((TimeKey(feasible(&resource_free, &dep_end, c)), c)));
+                }
+            }
+        }
+        assert_eq!(done, n, "cycle in task graph");
+        (spans, makespan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{simulate, simulate_reference, SpanTag};
+    use crate::topology::Topology;
+
+    #[test]
+    fn compile_interns_resources_densely() {
+        let topo = Topology::nvswitch(4, 100.0);
+        let mut g = TaskGraph::new();
+        g.compute(0, 0, "a", 1.0, &[]);
+        g.compute(0, 0, "b", 1.0, &[]);
+        g.transfer(&topo, 0, 1, 1e9, SpanTag::SendQ, 0, "t", &[]);
+        let cg = CompiledGraph::compile(&g);
+        assert_eq!(cg.len(), 3);
+        // Compute(0) shared by a/b + {Link 0->1, Egress 0, Ingress 1}
+        assert_eq!(cg.num_resources(), 4);
+        assert_eq!(cg.resource(0), ResourceId::Compute(0));
+    }
+
+    #[test]
+    fn schedule_reusable_and_deterministic() {
+        let mut g = TaskGraph::new();
+        let a = g.compute(0, 0, "a", 1.0, &[]);
+        g.compute(0, 1, "b", 2.0, &[a]);
+        g.compute(1, 0, "c", 0.5, &[]);
+        let cg = CompiledGraph::compile(&g);
+        let (s1, m1) = cg.schedule();
+        let (s2, m2) = cg.schedule();
+        assert_eq!(m1, 3.0);
+        assert_eq!(m1, m2);
+        for (x, y) in s1.iter().zip(&s2) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+        }
+    }
+
+    #[test]
+    fn lost_resource_race_reenqueues() {
+        // Three tasks on one resource with staggered dep releases: task 2
+        // becomes ready early with a stale key and must be re-enqueued
+        // after 0 and 1 claim the resource.
+        let mut g = TaskGraph::new();
+        g.compute(0, 0, "a", 1.0, &[]);
+        g.compute(0, 0, "b", 1.0, &[]);
+        g.compute(0, 0, "c", 1.0, &[]);
+        let r = simulate(&g);
+        assert_eq!(r.makespan, 3.0);
+        // deterministic id-order tie-break at t=0
+        assert_eq!(r.span(0).start, 0.0);
+        assert_eq!(r.span(1).start, 1.0);
+        assert_eq!(r.span(2).start, 2.0);
+    }
+
+    #[test]
+    fn matches_reference_on_contended_graph() {
+        let topo = Topology::pcie_a10_default();
+        let mut g = TaskGraph::new();
+        let mut prev = Vec::new();
+        for step in 0..4usize {
+            let mut next = Vec::new();
+            for d in 0..4usize {
+                let c = g.compute(d, step, "c", 0.5 + d as f64 * 0.1, &prev);
+                let t = g.transfer(
+                    &topo,
+                    d,
+                    (d + 1) % 4,
+                    1e9,
+                    SpanTag::SendQ,
+                    step,
+                    "t",
+                    &[c],
+                );
+                next.push(t);
+            }
+            prev = next;
+        }
+        let a = simulate(&g);
+        let b = simulate_reference(&g);
+        assert_eq!(a.makespan, b.makespan);
+        for (x, y) in a.spans.iter().zip(&b.spans) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+        }
+    }
+}

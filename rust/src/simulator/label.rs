@@ -1,0 +1,121 @@
+//! Interned task labels.
+//!
+//! Schedule builders used to `format!` a `String` name per task — a heap
+//! allocation on the hottest path of every sweep, paid even though nobody
+//! reads the name unless a report or chrome trace is rendered. `TaskLabel`
+//! replaces that with a `Copy` structured code: builders record the small
+//! integers they already have (ranks, steps, owners) and the string is
+//! materialized lazily by `render()`/`Display` only when asked for.
+
+use std::fmt;
+
+/// Cheap, copyable task label. `render()` reproduces the exact strings the
+/// old `format!`-based builders emitted, so traces are unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskLabel {
+    /// Free-form label for tests and one-off tasks.
+    Static(&'static str),
+    /// `attn q{q} kv{kv} s{step}` — one attention micro-step.
+    Attn { q: u32, kv: u32, step: u32 },
+    /// `q[{owner}] r{src}->r{dst} s{step}` — TokenRing forward-Q hop.
+    SendQ { owner: u32, src: u32, dst: u32, step: u32 },
+    /// `out[q{owner}] r{src}->r{dst} s{step}` (or `... tail`) — a partial
+    /// result flying home on the backward direction.
+    SendOut { owner: u32, src: u32, dst: u32, step: Option<u32> },
+    /// `update q{owner} s{step}` (or `... tail`) — accumulator merge.
+    Update { owner: u32, step: Option<u32> },
+    /// `kv[{block}] r{src}->r{dst} s{step}` — Ring-Attention KV hop.
+    SendKv { block: u32, src: u32, dst: u32, step: u32 },
+    /// `kv[{block}] n{src}->n{dst} o{outer}` — hybrid inter-node KV hop.
+    SendKvInter { block: u32, src: u32, dst: u32, outer: u32 },
+    /// `merge q{q} s{step}` — Ring-Attention local merge.
+    Merge { q: u32, step: u32 },
+    /// `attn heads d{dev}` — head-sharded full-sequence attention.
+    AttnHeads { dev: u32 },
+    /// `a2a qkv d{dev}` — Ulysses phase-1 AllToAll.
+    A2aQkv { dev: u32 },
+    /// `a2a out d{dev}` — Ulysses phase-3 AllToAll.
+    A2aOut { dev: u32 },
+    /// `allreduce d{dev}` — tensor-parallel output AllReduce.
+    AllReduce { dev: u32 },
+}
+
+impl TaskLabel {
+    /// Materialize the human-readable name (allocates; call only from
+    /// reporting paths).
+    pub fn render(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl fmt::Display for TaskLabel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            TaskLabel::Static(s) => f.write_str(s),
+            TaskLabel::Attn { q, kv, step } => write!(f, "attn q{q} kv{kv} s{step}"),
+            TaskLabel::SendQ { owner, src, dst, step } => {
+                write!(f, "q[{owner}] r{src}->r{dst} s{step}")
+            }
+            TaskLabel::SendOut { owner, src, dst, step: Some(step) } => {
+                write!(f, "out[q{owner}] r{src}->r{dst} s{step}")
+            }
+            TaskLabel::SendOut { owner, src, dst, step: None } => {
+                write!(f, "out[q{owner}] r{src}->r{dst} tail")
+            }
+            TaskLabel::Update { owner, step: Some(step) } => {
+                write!(f, "update q{owner} s{step}")
+            }
+            TaskLabel::Update { owner, step: None } => write!(f, "update q{owner} tail"),
+            TaskLabel::SendKv { block, src, dst, step } => {
+                write!(f, "kv[{block}] r{src}->r{dst} s{step}")
+            }
+            TaskLabel::SendKvInter { block, src, dst, outer } => {
+                write!(f, "kv[{block}] n{src}->n{dst} o{outer}")
+            }
+            TaskLabel::Merge { q, step } => write!(f, "merge q{q} s{step}"),
+            TaskLabel::AttnHeads { dev } => write!(f, "attn heads d{dev}"),
+            TaskLabel::A2aQkv { dev } => write!(f, "a2a qkv d{dev}"),
+            TaskLabel::A2aOut { dev } => write!(f, "a2a out d{dev}"),
+            TaskLabel::AllReduce { dev } => write!(f, "allreduce d{dev}"),
+        }
+    }
+}
+
+impl From<&'static str> for TaskLabel {
+    fn from(s: &'static str) -> TaskLabel {
+        TaskLabel::Static(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_match_legacy_format_strings() {
+        assert_eq!(TaskLabel::Attn { q: 3, kv: 1, step: 2 }.render(), "attn q3 kv1 s2");
+        assert_eq!(
+            TaskLabel::SendQ { owner: 0, src: 1, dst: 2, step: 1 }.render(),
+            "q[0] r1->r2 s1"
+        );
+        assert_eq!(
+            TaskLabel::SendOut { owner: 2, src: 3, dst: 2, step: None }.render(),
+            "out[q2] r3->r2 tail"
+        );
+        assert_eq!(TaskLabel::Update { owner: 1, step: Some(4) }.render(), "update q1 s4");
+        assert_eq!(
+            TaskLabel::SendKvInter { block: 5, src: 0, dst: 1, outer: 2 }.render(),
+            "kv[5] n0->n1 o2"
+        );
+        assert_eq!(TaskLabel::Static("attn[s0]").render(), "attn[s0]");
+    }
+
+    #[test]
+    fn label_is_small_and_copy() {
+        // The whole point: labels stay off the heap.
+        assert!(std::mem::size_of::<TaskLabel>() <= 24);
+        let l = TaskLabel::Merge { q: 1, step: 2 };
+        let m = l; // Copy
+        assert_eq!(l, m);
+    }
+}

@@ -19,10 +19,28 @@
 //! tasks, always start the one with the earliest feasible start time. For
 //! the series-parallel graphs our schedules build this is conservative and
 //! reproducible.
+//!
+//! Two implementations share those semantics exactly:
+//!
+//! * [`simulate`]/[`simulate_owned`] — the production path: the graph is
+//!   finalized into a SoA [`CompiledGraph`] (dense resource indices, CSR
+//!   deps/children) and scheduled by an O(n log n) binary-heap event loop.
+//! * [`simulate_reference`] — the original O(n · ready-width) ready-set
+//!   scan, kept as the oracle for the equivalence property tests.
+//!
+//! Sweeps over many (schedule, topology, job) points fan out across
+//! threads via [`sweep::par_map`] — each point is independent.
 
 use std::collections::HashMap;
 
 use crate::topology::Topology;
+
+mod compiled;
+mod label;
+pub mod sweep;
+
+pub use compiled::CompiledGraph;
+pub use label::TaskLabel;
 
 pub type TaskId = usize;
 
@@ -65,9 +83,12 @@ impl SpanTag {
 }
 
 /// One schedulable unit.
+///
+/// `label` is a `Copy` structured code, not a `String` — builders on the
+/// sweep hot path must not allocate per task (see [`TaskLabel`]).
 #[derive(Debug, Clone)]
 pub struct SimTask {
-    pub name: String,
+    pub label: TaskLabel,
     /// Device this task is attributed to in reports (for transfers: the
     /// sender).
     pub device: usize,
@@ -77,6 +98,13 @@ pub struct SimTask {
     pub duration: f64,
     pub resources: Vec<ResourceId>,
     pub deps: Vec<TaskId>,
+}
+
+impl SimTask {
+    /// Materialized human-readable name (allocates; reporting paths only).
+    pub fn name(&self) -> String {
+        self.label.render()
+    }
 }
 
 /// Dependency graph under construction.
@@ -92,9 +120,9 @@ impl TaskGraph {
 
     pub fn add(&mut self, task: SimTask) -> TaskId {
         for &d in &task.deps {
-            assert!(d < self.tasks.len(), "dep {d} of '{}' not yet added", task.name);
+            assert!(d < self.tasks.len(), "dep {d} of '{}' not yet added", task.label);
         }
-        assert!(task.duration >= 0.0, "negative duration for '{}'", task.name);
+        assert!(task.duration >= 0.0, "negative duration for '{}'", task.label);
         self.tasks.push(task);
         self.tasks.len() - 1
     }
@@ -104,12 +132,12 @@ impl TaskGraph {
         &mut self,
         dev: usize,
         step: usize,
-        name: impl Into<String>,
+        label: impl Into<TaskLabel>,
         duration: f64,
         deps: &[TaskId],
     ) -> TaskId {
         self.add(SimTask {
-            name: name.into(),
+            label: label.into(),
             device: dev,
             step,
             tag: SpanTag::Compute,
@@ -130,7 +158,7 @@ impl TaskGraph {
         bytes: f64,
         tag: SpanTag,
         step: usize,
-        name: impl Into<String>,
+        label: impl Into<TaskLabel>,
         deps: &[TaskId],
     ) -> TaskId {
         let link = topo.link_or_die(src, dst);
@@ -140,7 +168,7 @@ impl TaskGraph {
             resources.push(ResourceId::Ingress(dst));
         }
         self.add(SimTask {
-            name: name.into(),
+            label: label.into(),
             device: src,
             step,
             tag,
@@ -181,7 +209,8 @@ pub struct StepStat {
     pub exposed_comm: f64,
 }
 
-/// Simulation output.
+/// Simulation output. `spans` is indexed by `TaskId`
+/// (`spans[t].task == t`), which is what makes [`SimResult::span`] O(1).
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub spans: Vec<Span>,
@@ -189,18 +218,29 @@ pub struct SimResult {
     pub graph: TaskGraph,
 }
 
-/// Run the deterministic greedy scheduler.
+/// Run the deterministic greedy scheduler (event-driven engine).
 ///
-/// Implementation: indegree-tracked ready set — each iteration scans only
-/// dep-complete tasks (O(width)) instead of all remaining tasks, keeping
-/// large sweep graphs fast (see EXPERIMENTS.md §Perf).
+/// The graph is compiled to SoA form and scheduled by the binary-heap
+/// event loop in [`CompiledGraph::schedule`] — O(n log n), no hashing on
+/// the hot path (see EXPERIMENTS.md §Perf).
 pub fn simulate(graph: &TaskGraph) -> SimResult {
-    simulate_owned(graph.clone())
+    let (spans, makespan) = CompiledGraph::compile(graph).schedule();
+    SimResult { spans, makespan, graph: graph.clone() }
 }
 
 /// `simulate` without the graph clone — callers that built the graph just
 /// for this run (every Schedule::simulate) hand it over.
 pub fn simulate_owned(graph: TaskGraph) -> SimResult {
+    let (spans, makespan) = CompiledGraph::compile(&graph).schedule();
+    SimResult { spans, makespan, graph }
+}
+
+/// The original O(n · ready-width) greedy scan, kept verbatim as the
+/// reference oracle: each iteration re-scans every dep-ready task and
+/// probes resource-free times through a `HashMap`. The event-driven
+/// scheduler must reproduce its spans and makespan exactly
+/// (`tests/scheduler_equivalence.rs`).
+pub fn simulate_reference(graph: &TaskGraph) -> SimResult {
     let n = graph.tasks.len();
     let mut spans: Vec<Option<Span>> = vec![None; n];
     let mut resource_free: HashMap<ResourceId, f64> = HashMap::new();
@@ -258,7 +298,7 @@ pub fn simulate_owned(graph: TaskGraph) -> SimResult {
 
     let spans: Vec<Span> = spans.into_iter().map(Option::unwrap).collect();
     let makespan = spans.iter().map(|s| s.end).fold(0.0, f64::max);
-    SimResult { spans, makespan, graph }
+    SimResult { spans, makespan, graph: graph.clone() }
 }
 
 impl SimResult {
@@ -312,9 +352,11 @@ impl SimResult {
             .sum()
     }
 
-    /// Span of a given task id.
+    /// Span of a given task id — O(1): spans are indexed by `TaskId`.
     pub fn span(&self, tid: TaskId) -> Span {
-        self.spans.iter().copied().find(|s| s.task == tid).unwrap()
+        let s = self.spans[tid];
+        debug_assert_eq!(s.task, tid);
+        s
     }
 
     /// Sum of compute busy time across devices (for utilization metrics).
@@ -448,5 +490,36 @@ mod tests {
         let r = simulate(&g);
         assert!((r.resource_busy(ResourceId::Compute(0)) - 2.0).abs() < 1e-9);
         assert_eq!(r.total_compute_busy(), 2.0);
+    }
+
+    #[test]
+    fn span_lookup_is_positional() {
+        let mut g = TaskGraph::new();
+        for i in 0..10 {
+            g.compute(i % 3, 0, "t", 0.25, &[]);
+        }
+        let r = simulate(&g);
+        for tid in 0..10 {
+            assert_eq!(r.span(tid).task, tid);
+        }
+    }
+
+    #[test]
+    fn event_loop_matches_reference_scan() {
+        let topo = Topology::pcie_a10_default();
+        let mut g = TaskGraph::new();
+        let a = g.compute(0, 0, "a", 1.0, &[]);
+        let b = g.transfer(&topo, 0, 1, 5e9, SpanTag::SendQ, 0, "t", &[a]);
+        g.compute(1, 1, "c", 2.0, &[b]);
+        g.compute(1, 0, "d", 0.5, &[]);
+        g.compute(0, 0, "e", 0.5, &[]);
+        let fast = simulate(&g);
+        let slow = simulate_reference(&g);
+        assert_eq!(fast.makespan, slow.makespan);
+        for (x, y) in fast.spans.iter().zip(&slow.spans) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.end, y.end);
+        }
     }
 }
