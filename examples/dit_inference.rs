@@ -14,9 +14,7 @@ use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{run_ring_attention, run_token_ring, EngineOpts, EngineOutput};
 use tokenring::model::ModelConfig;
 use tokenring::parallelism::partition::Partition;
-use tokenring::parallelism::ring_attention::RingAttention;
-use tokenring::parallelism::token_ring::TokenRing;
-use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
 use tokenring::tensor::Tensor;
 use tokenring::topology::Topology;
 use tokenring::util::rng::Rng;
@@ -75,8 +73,8 @@ fn main() -> anyhow::Result<()> {
         partition: Partition::Contiguous,
     };
     let topo = Topology::oam_mesh(8, 200.0);
-    let tr = TokenRing::default().simulate(&topo, &job).makespan;
-    let ra = RingAttention.simulate(&topo, &job).makespan;
+    let tr = ScheduleSpec::TokenRing { elide_q: true }.build().simulate(&topo, &job).makespan;
+    let ra = ScheduleSpec::RingAttention.build().simulate(&topo, &job).makespan;
     println!("  token_ring      {:.2} ms / attention", tr * 1e3);
     println!("  ring_attention  {:.2} ms / attention   ({:.2}x slower)", ra * 1e3, ra / tr);
     Ok(())

@@ -13,8 +13,9 @@ use tokenring::attention::full_attention;
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{run_token_ring, EngineOpts};
 use tokenring::parallelism::partition::Partition;
+use tokenring::parallelism::ScheduleSpec;
 use tokenring::runtime::default_artifact_dir;
-use tokenring::scheduler::{serve, ServeOpts, ServeSchedule};
+use tokenring::scheduler::{serve, ServeOpts};
 use tokenring::tensor::Tensor;
 use tokenring::util::rng::Rng;
 use tokenring::util::stats::Table;
@@ -81,10 +82,8 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&[
         "schedule", "tokens/s", "latency p50 (ms)", "latency p95 (ms)", "service p50 (ms)",
     ]);
-    for (name, schedule) in [
-        ("token_ring", ServeSchedule::TokenRing),
-        ("ring_attention", ServeSchedule::RingAttention),
-    ] {
+    for name in ["token_ring", "ring_attention"] {
+        let schedule = ScheduleSpec::parse(name)?;
         let opts = ServeOpts {
             devices,
             heads,

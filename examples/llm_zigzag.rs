@@ -62,6 +62,6 @@ fn main() -> anyhow::Result<()> {
     println!("  {computes} compute events; per-device busy: [{}]", balance.join(" "));
 
     // 3. The Z1 report at paper scale (simulated A10 box).
-    println!("\n{}", reports::zigzag_balance(32_768, devices));
+    println!("\n{}", reports::zigzag_balance(32_768, devices)?);
     Ok(())
 }

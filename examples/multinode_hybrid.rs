@@ -53,6 +53,6 @@ fn main() -> anyhow::Result<()> {
     assert!(got.out.max_abs_diff(&eo) < 1e-4);
 
     // simulator at paper scale
-    println!("\n{}", reports::hybrid_multinode(49_152, nodes, per_node));
+    println!("\n{}", reports::hybrid_multinode(49_152, nodes, per_node)?);
     Ok(())
 }

@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     assert!(diff < 1e-4, "numeric divergence!");
 
     // 4. Preview the paper's headline experiment on the simulated A10 box.
-    let (report, _, _) = reports::fig6(24_000);
+    let (report, _, _) = reports::fig6(24_000)?;
     println!("\n{report}");
     Ok(())
 }

@@ -10,8 +10,7 @@ use tokenring::comm::{AttnShape, ComputeModel, Dtype};
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{run_ring_attention, run_token_ring, EngineOpts};
 use tokenring::parallelism::partition::Partition;
-use tokenring::parallelism::token_ring::TokenRing;
-use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
 use tokenring::simulator::{sweep, CompiledGraph};
 use tokenring::tensor::Tensor;
 use tokenring::topology::Topology;
@@ -98,7 +97,7 @@ fn main() {
         partition: Partition::Contiguous,
     };
     let topo = Topology::oam_mesh(32, 1600.0);
-    let g = TokenRing::default().build(&topo, &job);
+    let g = ScheduleSpec::TokenRing { elide_q: true }.build().build(&topo, &job);
     let n_tasks = g.len();
     let s = bench_fn(2, 10, || {
         let _ = tokenring::simulator::simulate(&g);
@@ -143,10 +142,11 @@ fn main() {
         causal: false,
         partition: Partition::Contiguous,
     };
+    let token_ring = ScheduleSpec::TokenRing { elide_q: true }.build();
     let s_par = bench_fn(1, 5, || {
         let _ = sweep::par_map(&points, |&n| {
             let topo = Topology::oam_mesh(n, 50.0 * n as f64);
-            TokenRing::default().simulate(&topo, &sweep_job(n)).makespan
+            token_ring.simulate(&topo, &sweep_job(n)).makespan
         });
     });
     let s_ser = bench_fn(1, 5, || {
@@ -154,7 +154,7 @@ fn main() {
             .iter()
             .map(|&n| {
                 let topo = Topology::oam_mesh(n, 50.0 * n as f64);
-                TokenRing::default().simulate(&topo, &sweep_job(n)).makespan
+                token_ring.simulate(&topo, &sweep_job(n)).makespan
             })
             .collect();
     });

@@ -8,7 +8,7 @@ use tokenring::reports;
 use tokenring::util::stats::{bench_fn, Table};
 
 fn main() {
-    let (report, tr, ra) = reports::fig6(24_000);
+    let (report, tr, ra) = reports::fig6(24_000).expect("fig6 grid");
     println!("{report}");
 
     // sensitivity: the same profile across sequence lengths
@@ -16,7 +16,7 @@ fn main() {
         "S", "tokenring makespan (ms)", "ring makespan (ms)", "speedup",
     ]);
     for seq in [8_000usize, 16_000, 24_000, 48_000, 96_000] {
-        let (_, tr_p, ra_p) = reports::fig6(seq);
+        let (_, tr_p, ra_p) = reports::fig6(seq).expect("fig6 sweep point");
         t.row(&[
             seq.to_string(),
             format!("{:.2}", tr_p.makespan * 1e3),

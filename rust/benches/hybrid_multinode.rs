@@ -7,16 +7,15 @@
 use tokenring::comm::ComputeModel;
 use tokenring::config::A10_FLASH_EFFICIENCY;
 use tokenring::model::ModelConfig;
-use tokenring::parallelism::hybrid::HybridTokenRing;
 use tokenring::parallelism::partition::Partition;
-use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
 use tokenring::reports;
 use tokenring::topology::Topology;
 use tokenring::util::stats::Table;
 
 fn main() {
-    println!("{}", reports::hybrid_multinode(49_152, 2, 4));
-    println!("{}", reports::hybrid_multinode(98_304, 4, 4));
+    println!("{}", reports::hybrid_multinode(49_152, 2, 4).expect("M1 run"));
+    println!("{}", reports::hybrid_multinode(98_304, 4, 4).expect("M1 run"));
 
     // inter-node bandwidth sensitivity: hybrid vs flat-ring embedding.
     // Hybrid pays the slow hop once per OUTER pass (overlapped via KV
@@ -35,7 +34,10 @@ fn main() {
             causal: false,
             partition: Partition::Contiguous,
         };
-        let hy = HybridTokenRing::default().simulate(&topo, &job).makespan;
+        let hy = ScheduleSpec::Hybrid { nodes: 2, per_node: 4 }
+            .build()
+            .simulate(&topo, &job)
+            .makespan;
         // snake-order flat ring embedding (every hop exists in the topo)
         let order = [0usize, 1, 2, 3, 7, 6, 5, 4];
         let parts = job.partition.assign(job.shape.seq, 8);

@@ -7,8 +7,8 @@
 use tokenring::reports;
 
 fn main() {
-    println!("{}", reports::scaling_gpus(49_152, &[2, 4, 8, 16, 32]));
+    println!("{}", reports::scaling_gpus(49_152, &[2, 4, 8, 16, 32]).expect("S1 grid"));
     // fixed per-device block (weak scaling): comm/compute ratio exposes the
     // 1/N vs 1/N² argument directly
-    println!("{}", reports::scaling_gpus(98_304, &[2, 4, 8, 16, 32]));
+    println!("{}", reports::scaling_gpus(98_304, &[2, 4, 8, 16, 32]).expect("S1 grid"));
 }

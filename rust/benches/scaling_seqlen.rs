@@ -1,6 +1,10 @@
 //! Bench S2 — long-context scaling: throughput (tokens/s) of each scheme
 //! as the sequence grows toward the paper's "infinite-context" regime.
 //!
+//! `reports::scaling_seqlen(block_per_device, seqs)` takes a PER-DEVICE
+//! block size (the CLI's `--block`, not `--seq`): each entry of `seqs` is
+//! a total sequence length simulated at N = S / block devices.
+//!
 //! Run: `cargo bench --bench scaling_seqlen`
 
 use tokenring::reports;
@@ -14,6 +18,7 @@ fn main() {
                 block,
                 &[8_192, 16_384, 32_768, 65_536, 131_072, 262_144],
             )
+            .expect("S2 sweep")
         );
     }
 }

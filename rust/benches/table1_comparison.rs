@@ -9,17 +9,13 @@ use tokenring::comm::{self, ComputeModel};
 use tokenring::config::A10_FLASH_EFFICIENCY;
 use tokenring::model::ModelConfig;
 use tokenring::parallelism::partition::Partition;
-use tokenring::parallelism::ring_attention::RingAttention;
-use tokenring::parallelism::tensor_parallel::TensorParallel;
-use tokenring::parallelism::token_ring::TokenRing;
-use tokenring::parallelism::ulysses::Ulysses;
-use tokenring::parallelism::{AttnJob, Schedule};
+use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
 use tokenring::reports;
 use tokenring::topology::Topology;
 use tokenring::util::stats::Table;
 
 fn main() {
-    let (report, _) = reports::table1(24_000, 4);
+    let (report, _) = reports::table1(24_000, 4).expect("table1 grid");
     println!("{report}");
 
     // the same comparison across interconnect architectures (§2.2)
@@ -41,13 +37,17 @@ fn main() {
             causal: false,
             partition: Partition::Contiguous,
         };
-        let row: Vec<String> = vec![
-            name.to_string(),
-            format!("{:.2}", TensorParallel.simulate(topo, &job).makespan * 1e3),
-            format!("{:.2}", RingAttention.simulate(topo, &job).makespan * 1e3),
-            format!("{:.2}", Ulysses.simulate(topo, &job).makespan * 1e3),
-            format!("{:.2}", TokenRing::default().simulate(topo, &job).makespan * 1e3),
-        ];
+        // the same four schemes Table 1 compares, via the registry
+        let mut row: Vec<String> = vec![name.to_string()];
+        for spec in [
+            ScheduleSpec::TensorParallel,
+            ScheduleSpec::RingAttention,
+            ScheduleSpec::Ulysses,
+            ScheduleSpec::TokenRing { elide_q: true },
+        ] {
+            let mk = spec.build().simulate(topo, &job).makespan;
+            row.push(format!("{:.2}", mk * 1e3));
+        }
         t.row(&row);
     }
     println!(

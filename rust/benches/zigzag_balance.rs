@@ -7,6 +7,6 @@ use tokenring::reports;
 
 fn main() {
     for (seq, n) in [(32_768usize, 4usize), (65_536, 8), (131_072, 16)] {
-        println!("{}", reports::zigzag_balance(seq, n));
+        println!("{}", reports::zigzag_balance(seq, n).expect("Z1 grid"));
     }
 }

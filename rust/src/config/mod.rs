@@ -1,14 +1,16 @@
-//! Run configuration: cluster presets, calibration constants, and a JSON
-//! config-file loader so experiments are reproducible from checked-in
-//! configs (configs/*.json) as well as CLI flags.
+//! Run configuration: cluster presets, calibration constants, and the JSON
+//! experiment-config loader behind `tokenring run --config configs/<x>.json`
+//! — every checked-in config expands to a declarative experiment grid
+//! (see `experiment::Experiment::from_config`).
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comm::{ComputeModel, Dtype};
-use crate::model::ModelConfig;
+use crate::comm::ComputeModel;
 use crate::parallelism::partition::Partition;
+use crate::parallelism::ScheduleSpec;
 use crate::topology::Topology;
 use crate::util::json::Json;
+use crate::json_obj;
 
 /// Calibration used for the Figure-6 reproduction (EXPERIMENTS.md §F6):
 /// flash-attention-2 on A10 sustains ≈0.67 of tensor-core peak at the
@@ -57,11 +59,23 @@ impl Cluster {
         }
     }
 
+    /// Uniform full mesh of `n` devices at `gbps` per directed link — the
+    /// PCIe-class setting the §3.1 scaling sweeps run on.
+    pub fn uniform(n: usize, gbps: f64) -> Cluster {
+        Cluster {
+            topology: Topology::uniform_mesh(n, gbps),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
+        }
+    }
+
+    /// Resolve a cluster preset name at `n` devices. Parameterized forms:
+    /// `two_level:<per_node>` (node count derived as n/per_node) and
+    /// `uniform:<gbps>`.
     pub fn by_name(name: &str, n: usize) -> Result<Cluster> {
         Ok(match name {
             "a10_pcie4" => {
                 if n != 4 {
-                    bail!("a10_pcie4 is a fixed 4-GPU preset");
+                    bail!("a10_pcie4 is a fixed 4-GPU preset (got {n} devices)");
                 }
                 Cluster::a10_pcie4()
             }
@@ -69,66 +83,39 @@ impl Cluster {
             "nvswitch" => Cluster::nvswitch(n),
             "two_level" => {
                 if n % 4 != 0 {
-                    bail!("two_level wants a multiple of 4 devices");
+                    bail!("two_level wants a multiple of 4 devices (got {n})");
                 }
                 Cluster::two_level(n / 4, 4)
             }
-            _ => bail!("unknown cluster preset '{name}'"),
+            other => {
+                if let Some(p) = other.strip_prefix("two_level:") {
+                    let per_node: usize = p
+                        .parse()
+                        .map_err(|_| anyhow!("bad per-node count '{p}'"))?;
+                    if per_node == 0 || n % per_node != 0 {
+                        bail!("two_level:{per_node} wants a multiple of {per_node} devices (got {n})");
+                    }
+                    Cluster::two_level(n / per_node, per_node)
+                } else if let Some(g) = other.strip_prefix("uniform:") {
+                    let gbps: f64 =
+                        g.parse().map_err(|_| anyhow!("bad bandwidth '{g}'"))?;
+                    if !gbps.is_finite() || gbps <= 0.0 {
+                        bail!("uniform mesh bandwidth must be positive (got {g})");
+                    }
+                    Cluster::uniform(n, gbps)
+                } else {
+                    bail!(
+                        "unknown cluster preset '{name}' (valid: a10_pcie4, oam_mesh, \
+                         nvswitch, two_level, two_level:<per_node>, uniform:<gbps>)"
+                    );
+                }
+            }
         })
     }
 }
 
-/// A fully-specified experiment run.
-#[derive(Debug, Clone)]
-pub struct RunConfig {
-    pub model: ModelConfig,
-    pub cluster: Cluster,
-    pub seq: usize,
-    pub devices: usize,
-    pub schedule: String,
-    pub partition: Partition,
-    pub dtype: Dtype,
-}
-
-impl RunConfig {
-    pub fn default_fig6() -> RunConfig {
-        RunConfig {
-            model: ModelConfig::llama2_7b(),
-            cluster: Cluster::a10_pcie4(),
-            seq: 24_000,
-            devices: 4,
-            schedule: "token_ring".into(),
-            partition: Partition::Zigzag,
-            dtype: Dtype::F16,
-        }
-    }
-
-    /// Load from a JSON config file, e.g.:
-    /// `{"model":"llama2_7b","cluster":"oam_mesh","devices":8,
-    ///   "seq":65536,"schedule":"token_ring","partition":"zigzag"}`
-    pub fn from_json(text: &str) -> Result<RunConfig> {
-        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
-        let model_name = j.get("model").as_str().unwrap_or("llama2_7b");
-        let model = ModelConfig::by_name(model_name)
-            .ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
-        let devices = j.get("devices").as_usize().unwrap_or(4);
-        let cluster_name = j.get("cluster").as_str().unwrap_or("a10_pcie4");
-        let cluster = Cluster::by_name(cluster_name, devices)?;
-        let seq = j.get("seq").as_usize().unwrap_or(24_000);
-        let schedule = j.get("schedule").as_str().unwrap_or("token_ring").to_string();
-        let partition = parse_partition(j.get("partition").as_str().unwrap_or("zigzag"))?;
-        Ok(RunConfig {
-            model,
-            cluster,
-            seq,
-            devices,
-            schedule,
-            partition,
-            dtype: Dtype::F16,
-        })
-    }
-}
-
+/// Parse a partition name: `contiguous`, `zigzag`, `striped` (stripe 1) or
+/// `striped:<k>`.
 pub fn parse_partition(s: &str) -> Result<Partition> {
     Ok(match s {
         "contiguous" => Partition::Contiguous,
@@ -140,10 +127,183 @@ pub fn parse_partition(s: &str) -> Result<Partition> {
                     stripe: k.parse().map_err(|_| anyhow!("bad stripe '{k}'"))?,
                 }
             } else {
-                bail!("unknown partition '{other}'")
+                bail!("unknown partition '{other}' (valid: contiguous, zigzag, striped, striped:<k>)")
             }
         }
     })
+}
+
+/// Serialized partition name; round-trips through [`parse_partition`].
+pub fn partition_name(p: &Partition) -> String {
+    match p {
+        Partition::Contiguous => "contiguous".to_string(),
+        Partition::Zigzag => "zigzag".to_string(),
+        Partition::Striped { stripe } => format!("striped:{stripe}"),
+    }
+}
+
+/// Renderers a config may name in its `render` field. Kept next to the
+/// loader's validation; `experiment::render::render` dispatches on exactly
+/// this set (a drift test there keeps the two in sync).
+pub const RENDER_KINDS: &[&str] = &["comparison", "steps", "volumes"];
+
+/// A declarative experiment grid, as checked into `configs/*.json`.
+///
+/// Axis fields (`seq`, `devices`, `causal`, `partition`, `schedules`)
+/// accept a scalar or an array in the JSON; the grid is their cartesian
+/// product. Names stay as strings here so a parsed config re-serializes
+/// byte-equivalently; `experiment::Experiment::from_config` resolves them
+/// into `ScheduleSpec`/`ModelConfig`/`Partition` values.
+///
+/// ```json
+/// {"name":"fig6","model":"llama2_7b","cluster":"a10_pcie4",
+///  "schedules":["token_ring","ring_attention"],"seq":24000,
+///  "devices":4,"causal":true,"partition":"zigzag","render":"steps"}
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub model: String,
+    pub cluster: String,
+    pub schedules: Vec<String>,
+    pub seqs: Vec<usize>,
+    pub devices: Vec<usize>,
+    pub causal: Vec<bool>,
+    pub partitions: Vec<String>,
+    /// Renderer for the text report: `comparison` | `steps` | `volumes`.
+    pub render: String,
+}
+
+fn axis_usize(j: &Json, key: &str, default: usize) -> Result<Vec<usize>> {
+    let vals = match j.get(key) {
+        Json::Null => vec![default],
+        v => {
+            if let Some(u) = v.as_usize() {
+                vec![u]
+            } else {
+                v.as_usize_vec()
+                    .filter(|xs| !xs.is_empty())
+                    .ok_or_else(|| {
+                        anyhow!("config: '{key}' must be a positive integer or non-empty array")
+                    })?
+            }
+        }
+    };
+    if vals.contains(&0) {
+        bail!("config: '{key}' entries must be positive");
+    }
+    Ok(vals)
+}
+
+fn axis_bool(j: &Json, key: &str, default: bool) -> Result<Vec<bool>> {
+    match j.get(key) {
+        Json::Null => Ok(vec![default]),
+        Json::Bool(b) => Ok(vec![*b]),
+        Json::Arr(a) => {
+            let out: Option<Vec<bool>> = a.iter().map(Json::as_bool).collect();
+            out.filter(|xs| !xs.is_empty())
+                .ok_or_else(|| anyhow!("config: '{key}' must be a bool or non-empty bool array"))
+        }
+        _ => Err(anyhow!("config: '{key}' must be a bool or bool array")),
+    }
+}
+
+fn axis_str(j: &Json, key: &str, default: &str) -> Result<Vec<String>> {
+    match j.get(key) {
+        Json::Null => Ok(vec![default.to_string()]),
+        Json::Str(s) => Ok(vec![s.clone()]),
+        Json::Arr(a) => {
+            let out: Option<Vec<String>> =
+                a.iter().map(|v| v.as_str().map(str::to_string)).collect();
+            out.filter(|xs| !xs.is_empty())
+                .ok_or_else(|| anyhow!("config: '{key}' must be a string or non-empty string array"))
+        }
+        _ => Err(anyhow!("config: '{key}' must be a string or string array")),
+    }
+}
+
+impl ExperimentConfig {
+    /// The built-in default: one Figure-6 TokenRing point.
+    pub fn default_fig6() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "run".to_string(),
+            model: "llama2_7b".to_string(),
+            cluster: "a10_pcie4".to_string(),
+            schedules: vec!["token_ring".to_string()],
+            seqs: vec![24_000],
+            devices: vec![4],
+            causal: vec![true],
+            partitions: vec!["zigzag".to_string()],
+            render: "comparison".to_string(),
+        }
+    }
+
+    /// Every key a config file may contain.
+    pub const KEYS: &'static [&'static str] = &[
+        "name", "model", "cluster", "schedules", "seq", "devices", "causal",
+        "partition", "render",
+    ];
+
+    /// Load from JSON text. Missing fields fall back to the fig6 defaults;
+    /// unknown keys are rejected (a misspelled axis must not silently run
+    /// the default grid) and schedule/partition names are validated against
+    /// the registries, so a bad config fails at load time, not mid-sweep.
+    pub fn from_json(text: &str) -> Result<ExperimentConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        for k in obj.keys() {
+            if !Self::KEYS.contains(&k.as_str()) {
+                bail!(
+                    "unknown config key '{k}' (valid: {})",
+                    Self::KEYS.join(", ")
+                );
+            }
+        }
+        let d = ExperimentConfig::default_fig6();
+        let cfg = ExperimentConfig {
+            name: j.get("name").as_str().unwrap_or(&d.name).to_string(),
+            model: j.get("model").as_str().unwrap_or(&d.model).to_string(),
+            cluster: j.get("cluster").as_str().unwrap_or(&d.cluster).to_string(),
+            schedules: axis_str(&j, "schedules", &d.schedules[0])?,
+            seqs: axis_usize(&j, "seq", d.seqs[0])?,
+            devices: axis_usize(&j, "devices", d.devices[0])?,
+            causal: axis_bool(&j, "causal", d.causal[0])?,
+            partitions: axis_str(&j, "partition", &d.partitions[0])?,
+            render: j.get("render").as_str().unwrap_or(&d.render).to_string(),
+        };
+        for s in &cfg.schedules {
+            ScheduleSpec::parse(s)?;
+        }
+        for p in &cfg.partitions {
+            parse_partition(p)?;
+        }
+        if !RENDER_KINDS.contains(&cfg.render.as_str()) {
+            bail!(
+                "unknown render '{}' (valid: {})",
+                cfg.render,
+                RENDER_KINDS.join(", ")
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize back to JSON (axes always as arrays); `from_json` of the
+    /// output reproduces `self` exactly.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("name", self.name.clone()),
+            ("model", self.model.clone()),
+            ("cluster", self.cluster.clone()),
+            ("schedules", self.schedules.clone()),
+            ("seq", self.seqs.clone()),
+            ("devices", self.devices.clone()),
+            ("causal", self.causal.clone()),
+            ("partition", self.partitions.clone()),
+            ("render", self.render.clone()),
+        ]
+    }
 }
 
 #[cfg(test)]
@@ -160,25 +320,23 @@ mod tests {
     }
 
     #[test]
-    fn json_config_roundtrip() {
-        let cfg = RunConfig::from_json(
-            r#"{"model":"dit_xl","cluster":"oam_mesh","devices":8,
-                "seq":32768,"schedule":"ring_attention","partition":"striped:2"}"#,
-        )
-        .unwrap();
-        assert_eq!(cfg.model.name, "dit_xl");
-        assert_eq!(cfg.devices, 8);
-        assert_eq!(cfg.seq, 32_768);
-        assert_eq!(cfg.schedule, "ring_attention");
-        assert_eq!(cfg.partition, Partition::Striped { stripe: 2 });
+    fn parameterized_presets() {
+        let c = Cluster::by_name("two_level:8", 16).unwrap();
+        assert_eq!(c.topology.num_nodes(), 2);
+        assert_eq!(c.topology.num_devices, 16);
+        assert!(Cluster::by_name("two_level:8", 12).is_err());
+        let u = Cluster::by_name("uniform:12", 6).unwrap();
+        assert_eq!(u.topology.num_devices, 6);
+        assert!(Cluster::by_name("uniform:-3", 6).is_err());
+        assert!(Cluster::by_name("uniform:x", 6).is_err());
     }
 
     #[test]
-    fn json_defaults_are_fig6() {
-        let cfg = RunConfig::from_json("{}").unwrap();
-        assert_eq!(cfg.model.name, "llama2_7b");
-        assert_eq!(cfg.seq, 24_000);
-        assert_eq!(cfg.partition, Partition::Zigzag);
+    fn unknown_cluster_error_lists_presets() {
+        let e = Cluster::by_name("wat", 4).unwrap_err().to_string();
+        for name in ["a10_pcie4", "oam_mesh", "nvswitch", "two_level", "uniform"] {
+            assert!(e.contains(name), "error should list '{name}': {e}");
+        }
     }
 
     #[test]
@@ -189,5 +347,73 @@ mod tests {
             Partition::Striped { stripe: 4 }
         ));
         assert!(parse_partition("wat").is_err());
+    }
+
+    #[test]
+    fn partition_names_round_trip() {
+        for p in [
+            Partition::Contiguous,
+            Partition::Zigzag,
+            Partition::Striped { stripe: 1 },
+            Partition::Striped { stripe: 4 },
+        ] {
+            assert_eq!(parse_partition(&partition_name(&p)).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn json_config_round_trips() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"name":"sweep","model":"dit_xl","cluster":"oam_mesh",
+                "schedules":["ring_attention","token_ring"],
+                "seq":[16384,32768],"devices":[4,8],"causal":false,
+                "partition":"striped:2","render":"comparison"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "dit_xl");
+        assert_eq!(cfg.seqs, vec![16_384, 32_768]);
+        assert_eq!(cfg.devices, vec![4, 8]);
+        assert_eq!(cfg.causal, vec![false]);
+        assert_eq!(cfg.partitions, vec!["striped:2"]);
+        // parse → serialize → parse is the identity
+        let again = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(again, cfg);
+    }
+
+    #[test]
+    fn json_defaults_are_fig6() {
+        let cfg = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(cfg, ExperimentConfig::default_fig6());
+        assert_eq!(cfg.seqs, vec![24_000]);
+        assert_eq!(cfg.partitions, vec!["zigzag"]);
+    }
+
+    #[test]
+    fn scalar_axes_accepted() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"schedules":"ulysses","seq":8192,"devices":8,"causal":true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.schedules, vec!["ulysses"]);
+        assert_eq!(cfg.seqs, vec![8192]);
+        assert_eq!(cfg.devices, vec![8]);
+    }
+
+    #[test]
+    fn bad_configs_rejected_at_load() {
+        assert!(ExperimentConfig::from_json(r#"{"schedules":"warp_drive"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"partition":"diagonal"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"render":"hologram"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"seq":[]}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"seq":0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"devices":[4,0]}"#).is_err());
+        assert!(ExperimentConfig::from_json("not json").is_err());
+        assert!(ExperimentConfig::from_json("[1,2]").is_err());
+        // misspelled keys must not silently fall back to the default grid
+        let e = ExperimentConfig::from_json(r#"{"schedule":"ulysses"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("schedules"), "{e}");
+        assert!(ExperimentConfig::from_json(r#"{"partitions":["zigzag"]}"#).is_err());
     }
 }

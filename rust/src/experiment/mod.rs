@@ -1,0 +1,489 @@
+//! The unified experiment API.
+//!
+//! The paper's evaluation is one grid — schedules × clusters × axes
+//! (sequence length, device count, causal masking, partition strategy) —
+//! and this module is the single way to walk it:
+//!
+//! * [`Experiment`]: a builder over cluster presets, [`ScheduleSpec`]s and
+//!   axis values that expands to the cartesian product of [`RunSpec`]s.
+//! * [`RunSpec`]: one fully-specified simulation point; `execute()` builds
+//!   the schedule through the registry, simulates it on the named cluster
+//!   preset, and returns a structured [`RunRecord`].
+//! * [`RunRecord`]: makespan, per-phase time breakdown, analytic comm
+//!   volumes and an echo of every axis — renderable as text tables, JSON
+//!   artifacts or chrome traces via [`render`].
+//!
+//! Every figure/table report (`reports::*`), every bench, and the
+//! `tokenring run --config` subcommand are thin layers over this module,
+//! so a new scenario is one `Experiment` (or one `configs/*.json`) away.
+
+pub mod render;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::VolumeReport;
+use crate::config::{parse_partition, partition_name, Cluster, ExperimentConfig};
+use crate::json_obj;
+use crate::model::ModelConfig;
+use crate::parallelism::partition::Partition;
+use crate::parallelism::{AttnJob, Schedule, ScheduleSpec};
+use crate::simulator::{sweep, SimResult, SpanTag, StepStat};
+use crate::util::json::Json;
+
+/// Declarative experiment grid: schedules × seq × devices × causal ×
+/// partition on one cluster preset. Defaults reproduce the Figure-6
+/// setting (LLaMA2-7B, S=24000, 4×A10, causal, zigzag).
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub name: String,
+    pub model: ModelConfig,
+    /// Cluster preset name, resolved per-point via [`Cluster::by_name`]
+    /// (so a `devices` axis can instantiate the preset at several sizes).
+    pub cluster: String,
+    pub schedules: Vec<ScheduleSpec>,
+    pub seqs: Vec<usize>,
+    pub devices: Vec<usize>,
+    pub causal: Vec<bool>,
+    pub partitions: Vec<Partition>,
+}
+
+impl Experiment {
+    pub fn new(name: &str) -> Experiment {
+        Experiment {
+            name: name.to_string(),
+            model: ModelConfig::llama2_7b(),
+            cluster: "a10_pcie4".to_string(),
+            schedules: vec![ScheduleSpec::TokenRing { elide_q: true }],
+            seqs: vec![24_000],
+            devices: vec![4],
+            causal: vec![true],
+            partitions: vec![Partition::Zigzag],
+        }
+    }
+
+    pub fn model(mut self, model: ModelConfig) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn cluster(mut self, preset: &str) -> Self {
+        self.cluster = preset.to_string();
+        self
+    }
+
+    pub fn schedules(mut self, specs: &[ScheduleSpec]) -> Self {
+        self.schedules = specs.to_vec();
+        self
+    }
+
+    pub fn seqs(mut self, seqs: &[usize]) -> Self {
+        self.seqs = seqs.to_vec();
+        self
+    }
+
+    pub fn devices(mut self, devices: &[usize]) -> Self {
+        self.devices = devices.to_vec();
+        self
+    }
+
+    pub fn causal(mut self, causal: &[bool]) -> Self {
+        self.causal = causal.to_vec();
+        self
+    }
+
+    pub fn partitions(mut self, partitions: &[Partition]) -> Self {
+        self.partitions = partitions.to_vec();
+        self
+    }
+
+    /// Resolve a checked-in [`ExperimentConfig`] (names → registry values).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Experiment> {
+        let model = ModelConfig::by_name(&cfg.model).ok_or_else(|| {
+            anyhow!(
+                "unknown model '{}' (valid: {})",
+                cfg.model,
+                ModelConfig::names().join(", ")
+            )
+        })?;
+        let schedules = cfg
+            .schedules
+            .iter()
+            .map(|s| ScheduleSpec::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+        let partitions = cfg
+            .partitions
+            .iter()
+            .map(|p| parse_partition(p))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Experiment {
+            name: cfg.name.clone(),
+            model,
+            cluster: cfg.cluster.clone(),
+            schedules,
+            seqs: cfg.seqs.clone(),
+            devices: cfg.devices.clone(),
+            causal: cfg.causal.clone(),
+            partitions,
+        })
+    }
+
+    /// Expand to the cartesian product of all axes, schedule-major (every
+    /// point of schedule 0 first, then schedule 1, …). Each point is
+    /// validated so an impossible grid fails before any simulation runs.
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        if self.schedules.is_empty()
+            || self.seqs.is_empty()
+            || self.devices.is_empty()
+            || self.causal.is_empty()
+            || self.partitions.is_empty()
+        {
+            return Err(anyhow!("experiment '{}' has an empty axis", self.name));
+        }
+        let mut specs = Vec::new();
+        for &schedule in &self.schedules {
+            for &seq in &self.seqs {
+                for &devices in &self.devices {
+                    for &causal in &self.causal {
+                        for &partition in &self.partitions {
+                            let spec = RunSpec {
+                                schedule,
+                                cluster: self.cluster.clone(),
+                                model: self.model.clone(),
+                                seq,
+                                devices,
+                                causal,
+                                partition,
+                            };
+                            spec.validate()
+                                .map_err(|e| e.context(format!("experiment '{}'", self.name)))?;
+                            specs.push(spec);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(specs)
+    }
+
+    /// Expand and execute the whole grid on the sweep thread pool,
+    /// returning records in expansion order.
+    pub fn run(&self) -> Result<Vec<RunRecord>> {
+        run_specs(&self.expand()?)
+    }
+}
+
+/// Execute an explicit list of run points (for sweeps that are not a plain
+/// cartesian grid, e.g. weak scaling where N is derived from S). Records
+/// come back in input order.
+pub fn run_specs(specs: &[RunSpec]) -> Result<Vec<RunRecord>> {
+    sweep::par_map(specs, RunSpec::execute)
+        .into_iter()
+        .collect()
+}
+
+/// One fully-specified simulation point.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub schedule: ScheduleSpec,
+    pub cluster: String,
+    pub model: ModelConfig,
+    pub seq: usize,
+    pub devices: usize,
+    pub causal: bool,
+    pub partition: Partition,
+}
+
+impl RunSpec {
+    /// Check the point is simulable (cluster compatibility, divisibility,
+    /// degree caps) with a descriptive error instead of a mid-sweep builder
+    /// panic. Returns the instantiated cluster so `execute` does not build
+    /// the topology twice.
+    pub fn validate(&self) -> Result<Cluster> {
+        if self.devices == 0 {
+            return Err(anyhow!("run needs at least one device"));
+        }
+        if self.seq % self.devices != 0 {
+            return Err(anyhow!(
+                "seq {} not divisible by {} devices ({})",
+                self.seq,
+                self.devices,
+                self.schedule.name()
+            ));
+        }
+        if self.partition == Partition::Zigzag && self.seq % (2 * self.devices) != 0 {
+            return Err(anyhow!(
+                "zigzag partition needs seq divisible by 2N (seq={}, N={})",
+                self.seq,
+                self.devices
+            ));
+        }
+        if let Partition::Striped { stripe } = self.partition {
+            let blk = self.seq / self.devices;
+            if stripe == 0 || blk % stripe != 0 {
+                return Err(anyhow!(
+                    "stripe {stripe} must divide the per-device block {blk}"
+                ));
+            }
+        }
+        if self.schedule == ScheduleSpec::Ulysses && self.devices > self.model.heads {
+            return Err(anyhow!(
+                "ulysses degree {} exceeds {} attention heads of {}",
+                self.devices,
+                self.model.heads,
+                self.model.name
+            ));
+        }
+        // the preset must exist and instantiate at this device count —
+        // catch it here so a bad grid fails at expansion, not mid-sweep
+        self.cluster_preset()
+    }
+
+    /// The cluster preset instantiated at this point's device count.
+    pub fn cluster_preset(&self) -> Result<Cluster> {
+        Cluster::by_name(&self.cluster, self.devices)
+    }
+
+    /// The attention job this point simulates.
+    pub fn job(&self, cluster: &Cluster) -> AttnJob {
+        AttnJob {
+            shape: self.model.attn_shape(self.seq),
+            compute: cluster.compute,
+            causal: self.causal,
+            partition: self.partition,
+        }
+    }
+
+    /// Build the schedule through the registry, simulate it on the cluster
+    /// preset, and collect the structured record.
+    pub fn execute(&self) -> Result<RunRecord> {
+        let cluster = self.validate()?;
+        let job = self.job(&cluster);
+        let sim = self.schedule.build().simulate(&cluster.topology, &job);
+        let phases = PhaseBreakdown::from_sim(&sim);
+        let volume = self.schedule.volume(&job.shape, self.devices);
+        Ok(RunRecord {
+            schedule: self.schedule.name().to_string(),
+            cluster: self.cluster.clone(),
+            model: self.model.name.to_string(),
+            seq: self.seq,
+            devices: self.devices,
+            causal: self.causal,
+            partition: partition_name(&self.partition),
+            makespan: sim.makespan,
+            phases,
+            volume,
+            sim,
+        })
+    }
+}
+
+/// Total busy seconds by span kind over one simulation, plus the exposed
+/// (not compute-hidden) communication time summed over micro-steps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseBreakdown {
+    pub compute: f64,
+    pub merge: f64,
+    pub send_q: f64,
+    pub send_kv: f64,
+    pub send_out: f64,
+    pub collective: f64,
+    pub exposed_comm: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn from_sim(sim: &SimResult) -> PhaseBreakdown {
+        let mut p = PhaseBreakdown::default();
+        for s in &sim.spans {
+            let d = s.end - s.start;
+            match sim.graph.tasks[s.task].tag {
+                SpanTag::Compute => p.compute += d,
+                SpanTag::Merge => p.merge += d,
+                SpanTag::SendQ => p.send_q += d,
+                SpanTag::SendKv => p.send_kv += d,
+                SpanTag::SendOut => p.send_out += d,
+                SpanTag::Collective => p.collective += d,
+            }
+        }
+        p.exposed_comm = sim.step_stats().iter().map(|s| s.exposed_comm).sum();
+        p
+    }
+
+    /// Total communication busy time across all transfer kinds.
+    pub fn comm_total(&self) -> f64 {
+        self.send_q + self.send_kv + self.send_out + self.collective
+    }
+
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("compute", self.compute),
+            ("merge", self.merge),
+            ("send_q", self.send_q),
+            ("send_kv", self.send_kv),
+            ("send_out", self.send_out),
+            ("collective", self.collective),
+            ("exposed_comm", self.exposed_comm),
+        ]
+    }
+}
+
+/// Structured result of one run: every axis echoed back plus the measured
+/// quantities. The JSON schema is documented in EXPERIMENTS.md §Unified
+/// experiment API.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Registry name of the schedule ([`ScheduleSpec::name`]).
+    pub schedule: String,
+    /// Cluster preset name this point ran on.
+    pub cluster: String,
+    pub model: String,
+    pub seq: usize,
+    pub devices: usize,
+    pub causal: bool,
+    pub partition: String,
+    /// End-to-end simulated seconds for one attention pass.
+    pub makespan: f64,
+    pub phases: PhaseBreakdown,
+    /// Analytic Table-1 volumes, where the scheme has a closed form.
+    pub volume: Option<VolumeReport>,
+    /// Full simulation result (spans + graph) for step tables and traces.
+    pub sim: SimResult,
+}
+
+impl RunRecord {
+    /// Per-micro-step aggregation (the Figure-6 rows).
+    pub fn steps(&self) -> Vec<StepStat> {
+        self.sim.step_stats()
+    }
+
+    /// Serialize (without the raw span list — that is what chrome traces
+    /// are for). See EXPERIMENTS.md for the schema.
+    pub fn to_json(&self) -> Json {
+        let steps: Vec<Json> = self
+            .steps()
+            .iter()
+            .map(|s| {
+                json_obj![
+                    ("step", s.step),
+                    ("wall", s.end - s.start),
+                    ("compute", s.compute),
+                    ("comm", s.comm),
+                    ("exposed_comm", s.exposed_comm),
+                ]
+            })
+            .collect();
+        let volume = match &self.volume {
+            Some(v) => json_obj![
+                ("scheme", v.scheme),
+                ("pattern", v.pattern),
+                ("per_step_tx", v.per_step_tx),
+                ("total_tx", v.total_tx),
+                ("duplex_utilization", v.duplex_utilization),
+                (
+                    "max_degree",
+                    v.max_degree.map_or(Json::Null, Json::from)
+                ),
+                ("limitation", v.limitation),
+            ],
+            None => Json::Null,
+        };
+        json_obj![
+            ("schedule", self.schedule.clone()),
+            ("cluster", self.cluster.clone()),
+            ("model", self.model.clone()),
+            ("seq", self.seq),
+            ("devices", self.devices),
+            ("causal", self.causal),
+            ("partition", self.partition.clone()),
+            ("makespan", self.makespan),
+            ("phases", self.phases.to_json()),
+            ("volume", volume),
+            ("steps", Json::Arr(steps)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expands_schedule_major() {
+        let exp = Experiment::new("t")
+            .schedules(&[
+                ScheduleSpec::TokenRing { elide_q: true },
+                ScheduleSpec::RingAttention,
+            ])
+            .seqs(&[4096, 8192])
+            .devices(&[4])
+            .causal(&[false])
+            .partitions(&[Partition::Contiguous]);
+        let specs = exp.expand().unwrap();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].schedule.name(), "token_ring");
+        assert_eq!(specs[1].schedule.name(), "token_ring");
+        assert_eq!(specs[2].schedule.name(), "ring_attention");
+        assert_eq!(specs[0].seq, 4096);
+        assert_eq!(specs[1].seq, 8192);
+    }
+
+    #[test]
+    fn bad_grids_fail_at_expansion() {
+        // indivisible sequence (1001 % 4 != 0)
+        assert!(Experiment::new("t").seqs(&[1001]).expand().is_err());
+        // zigzag needs 2N | S
+        assert!(Experiment::new("t").seqs(&[4100]).devices(&[4]).expand().is_err());
+        // ulysses past the head cap
+        assert!(Experiment::new("t")
+            .schedules(&[ScheduleSpec::Ulysses])
+            .cluster("oam_mesh")
+            .seqs(&[65_536])
+            .devices(&[64])
+            .causal(&[false])
+            .partitions(&[Partition::Contiguous])
+            .expand()
+            .is_err());
+        // empty axis
+        assert!(Experiment::new("t").seqs(&[]).expand().is_err());
+        // cluster preset incompatible with the devices axis
+        assert!(Experiment::new("t").seqs(&[8192]).devices(&[8]).expand().is_err());
+        assert!(Experiment::new("t").cluster("warp_fabric").expand().is_err());
+    }
+
+    #[test]
+    fn record_echoes_axes_and_measures() {
+        let recs = Experiment::new("t")
+            .seqs(&[4096])
+            .run()
+            .unwrap();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.schedule, "token_ring");
+        assert_eq!(r.cluster, "a10_pcie4");
+        assert_eq!(r.model, "llama2_7b");
+        assert_eq!(r.seq, 4096);
+        assert_eq!(r.devices, 4);
+        assert!(r.causal);
+        assert_eq!(r.partition, "zigzag");
+        assert!(r.makespan.is_finite() && r.makespan > 0.0);
+        assert!(r.phases.compute > 0.0);
+        assert!(r.phases.comm_total() > 0.0);
+        assert!(!r.steps().is_empty());
+        assert_eq!(r.volume.as_ref().unwrap().scheme, "token_ring");
+    }
+
+    #[test]
+    fn record_json_has_documented_fields() {
+        let recs = Experiment::new("t").seqs(&[4096]).run().unwrap();
+        let j = Json::parse(&recs[0].to_json().to_string()).unwrap();
+        for key in [
+            "schedule", "cluster", "model", "seq", "devices", "causal",
+            "partition", "makespan", "phases", "volume", "steps",
+        ] {
+            assert!(j.get(key) != &Json::Null, "missing field '{key}'");
+        }
+        assert_eq!(j.get("schedule").as_str(), Some("token_ring"));
+        assert!(j.get("makespan").as_f64().unwrap() > 0.0);
+        assert!(j.get("phases").get("compute").as_f64().unwrap() > 0.0);
+        assert!(!j.get("steps").as_arr().unwrap().is_empty());
+    }
+}

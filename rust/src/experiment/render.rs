@@ -1,0 +1,219 @@
+//! Renderers: `Vec<RunRecord>` → text tables, JSON artifacts, chrome
+//! traces. Reports, benches and `tokenring run --config` all print through
+//! these, so a figure regenerated from a config file is byte-comparable
+//! with the legacy subcommand that produced it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::timeline_from_sim;
+use crate::runtime::default_artifact_dir;
+use crate::util::json::Json;
+use crate::util::stats::Table;
+
+use super::RunRecord;
+
+/// One row per record: every axis echoed plus the headline measures.
+pub fn comparison_table(records: &[RunRecord]) -> String {
+    let mut t = Table::new(&[
+        "schedule", "cluster", "S", "N", "causal", "partition",
+        "makespan (ms)", "compute (ms)", "exposed comm (ms)",
+    ]);
+    for r in records {
+        t.row(&[
+            r.schedule.clone(),
+            r.cluster.clone(),
+            r.seq.to_string(),
+            r.devices.to_string(),
+            r.causal.to_string(),
+            r.partition.clone(),
+            format!("{:.2}", r.makespan * 1e3),
+            format!("{:.2}", r.phases.compute * 1e3),
+            format!("{:.2}", r.phases.exposed_comm * 1e3),
+        ]);
+    }
+    t.render()
+}
+
+/// Per-micro-step profile rows (the Figure-6 table shape).
+pub fn steps_table(records: &[RunRecord]) -> String {
+    let mut t = Table::new(&[
+        "schedule", "step", "wall (ms)", "compute (ms)", "comm (ms)", "exposed comm (ms)",
+    ]);
+    for r in records {
+        for s in r.steps() {
+            t.row(&[
+                r.schedule.clone(),
+                s.step.to_string(),
+                format!("{:.2}", (s.end - s.start) * 1e3),
+                format!("{:.2}", s.compute * 1e3),
+                format!("{:.2}", s.comm * 1e3),
+                format!("{:.2}", s.exposed_comm * 1e3),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// The Table-1 shape: analytic volumes + measured makespans. Records
+/// without a closed-form volume (the hybrid) render volume columns as "-".
+pub fn volumes_table(records: &[RunRecord]) -> String {
+    let mut t = Table::new(&[
+        "parallelism", "communication", "per-step TX (MB)", "total TX (MB)",
+        "duplex use", "max degree", "limitation", "makespan (ms)",
+    ]);
+    for r in records {
+        match &r.volume {
+            Some(v) => t.row(&[
+                v.scheme.into(),
+                v.pattern.into(),
+                format!("{:.1}", v.per_step_tx / 1e6),
+                format!("{:.1}", v.total_tx / 1e6),
+                format!("{:.0}x", v.duplex_utilization),
+                v.max_degree.map_or("-".into(), |d| d.to_string()),
+                v.limitation.into(),
+                format!("{:.2}", r.makespan * 1e3),
+            ]),
+            None => t.row(&[
+                r.schedule.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{:.2}", r.makespan * 1e3),
+            ]),
+        }
+    }
+    t.render()
+}
+
+/// Dispatch by the config-file `render` field ([`config::RENDER_KINDS`];
+/// the `all_registered_kinds_render` test keeps the two in lockstep).
+pub fn render(kind: &str, records: &[RunRecord]) -> Result<String> {
+    Ok(match kind {
+        "comparison" => comparison_table(records),
+        "steps" => steps_table(records),
+        "volumes" => volumes_table(records),
+        other => {
+            return Err(anyhow!(
+                "unknown render '{other}' (valid: {})",
+                crate::config::RENDER_KINDS.join(", ")
+            ))
+        }
+    })
+}
+
+/// The JSON artifact: `{"records": [RunRecord...]}`.
+pub fn records_json(records: &[RunRecord]) -> Json {
+    Json::Obj(
+        [(
+            "records".to_string(),
+            Json::Arr(records.iter().map(RunRecord::to_json).collect()),
+        )]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// Write the records artifact to an explicit path (parent dirs created).
+pub fn write_json(path: &Path, records: &[RunRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, records_json(records).to_string())
+        .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Write the records artifact under the default artifact directory
+/// (`runs/<name>.json`), returning the path.
+pub fn write_artifact(name: &str, records: &[RunRecord]) -> Result<PathBuf> {
+    let path = default_artifact_dir().join("runs").join(format!("{name}.json"));
+    write_json(&path, records)?;
+    Ok(path)
+}
+
+/// Chrome trace (chrome://tracing / Perfetto) of one record's simulation.
+pub fn chrome_trace(record: &RunRecord) -> String {
+    timeline_from_sim(&record.sim).chrome_trace()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Experiment;
+    use super::*;
+    use crate::parallelism::ScheduleSpec;
+
+    fn records() -> Vec<RunRecord> {
+        Experiment::new("render_test")
+            .schedules(&[
+                ScheduleSpec::TokenRing { elide_q: true },
+                ScheduleSpec::RingAttention,
+            ])
+            .seqs(&[4096])
+            .run()
+            .unwrap()
+    }
+
+    #[test]
+    fn tables_render_every_record() {
+        let recs = records();
+        let c = comparison_table(&recs);
+        assert!(c.contains("token_ring") && c.contains("ring_attention"));
+        let s = steps_table(&recs);
+        assert!(s.contains("step") && s.contains("token_ring"));
+        let v = volumes_table(&recs);
+        assert!(v.contains("parallelism"));
+        assert!(render("hologram", &recs).is_err());
+    }
+
+    #[test]
+    fn all_registered_kinds_render() {
+        // every kind the config loader accepts must dispatch here
+        let recs = records();
+        for kind in crate::config::RENDER_KINDS {
+            assert!(render(kind, &recs).is_ok(), "kind '{kind}' does not render");
+        }
+    }
+
+    #[test]
+    fn volumes_table_handles_missing_volume() {
+        let mut recs = records();
+        recs[0].volume = None;
+        let v = volumes_table(&recs);
+        assert!(v.contains("token_ring")); // falls back to the schedule name
+    }
+
+    #[test]
+    fn artifact_json_parses_back() {
+        let recs = records();
+        let text = records_json(&recs).to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("records").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chrome_trace_has_events() {
+        let recs = records();
+        let trace = chrome_trace(&recs[0]);
+        let j = Json::parse(&trace).unwrap();
+        assert!(!j.get("traceEvents").as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn write_json_creates_parents() {
+        let dir = std::env::temp_dir().join("tokenring_render_test");
+        let path = dir.join("nested").join("runs.json");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_json(&path, &records()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -21,6 +21,7 @@ pub mod attention;
 pub mod comm;
 pub mod config;
 pub mod engine;
+pub mod experiment;
 pub mod metrics;
 pub mod model;
 pub mod parallelism;

@@ -1,27 +1,40 @@
 //! `tokenring` — CLI for the TokenRing reproduction.
 //!
 //! Subcommands regenerate every evaluation artifact (DESIGN.md §4) and run
-//! the real distributed engine:
+//! the real distributed engine. All schedule names resolve through the
+//! `ScheduleSpec` registry, so `run`, `serve`, `trace` and the figure
+//! subcommands accept the same names:
 //!
 //! ```text
+//! tokenring run       --config configs/fig6.json [--seq N] [--out runs.json]
 //! tokenring fig6      [--seq 24000] [--trace out.json]
 //! tokenring table1    [--seq 24000] [--devices 4]
-//! tokenring scaling   [--mode gpus|seq] [--seq N] [--devices N]
+//! tokenring scaling   [--mode gpus|seq] [--seq N] [--block N]
 //! tokenring zigzag    [--seq 32768] [--devices 4]
 //! tokenring hybrid    [--seq 49152] [--nodes 2] [--per-node 4]
 //! tokenring validate  [--backend native|pjrt] [--profile tiny]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
 //! tokenring trace     --schedule token_ring --out trace.json
+//! tokenring schedules
 //! ```
+//!
+//! `run` consumes a declarative experiment config (see `configs/*.json`):
+//! it expands the schedule × seq × devices × causal × partition grid,
+//! sweeps it in parallel, prints the configured table, and writes the
+//! structured RunRecord JSON artifact (schema: EXPERIMENTS.md).
 
+use std::path::PathBuf;
 use std::process::ExitCode;
 
+use tokenring::config::ExperimentConfig;
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{self, EngineOpts};
+use tokenring::experiment::{render, Experiment};
 use tokenring::parallelism::partition::Partition;
+use tokenring::parallelism::ScheduleSpec;
 use tokenring::reports;
 use tokenring::runtime::default_artifact_dir;
-use tokenring::scheduler::{serve, ServeOpts, ServeSchedule};
+use tokenring::scheduler::{serve, ServeOpts};
 use tokenring::tensor::Tensor;
 use tokenring::util::cli::{render_help, Args, OptSpec};
 use tokenring::util::rng::Rng;
@@ -34,6 +47,7 @@ fn main() -> ExitCode {
         return ExitCode::FAILURE;
     };
     let result = match cmd.as_str() {
+        "run" => cmd_run(rest),
         "fig6" => cmd_fig6(rest),
         "table1" => cmd_table1(rest),
         "scaling" => cmd_scaling(rest),
@@ -42,6 +56,10 @@ fn main() -> ExitCode {
         "validate" => cmd_validate(rest),
         "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
+        "schedules" => {
+            println!("registered schedules: {}", ScheduleSpec::valid_names());
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
@@ -59,7 +77,8 @@ fn main() -> ExitCode {
 
 fn usage() -> String {
     "tokenring — bidirectional sequence parallelism (paper reproduction)\n\
-     commands: fig6 | table1 | scaling | zigzag | hybrid | validate | serve | trace\n\
+     commands: run | fig6 | table1 | scaling | zigzag | hybrid | validate | serve | trace | schedules\n\
+     `run --config configs/<x>.json` executes a declarative experiment grid;\n\
      run `tokenring <cmd> --help` for options"
         .to_string()
 }
@@ -77,6 +96,47 @@ fn parse_or_help(
     Args::parse(argv, specs).map(Some)
 }
 
+/// `tokenring run`: the config-driven entry point. Any paper figure — and
+/// any new scenario — is one `configs/<x>.json` away.
+fn cmd_run(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "config", help: "experiment config JSON (see configs/)", default: None, is_flag: false },
+        OptSpec { name: "seq", help: "override the config's seq axis with one value", default: None, is_flag: false },
+        OptSpec { name: "out", help: "artifact path (default: <artifacts>/runs/<name>.json)", default: None, is_flag: false },
+    ];
+    let Some(args) = parse_or_help(argv, "run", "execute a declarative experiment grid", &specs)?
+    else {
+        return Ok(());
+    };
+    let path = args.get_str("config")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let cfg = ExperimentConfig::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+    let mut exp = Experiment::from_config(&cfg).map_err(|e| e.to_string())?;
+    if let Some(s) = args.get("seq") {
+        let seq: usize = s.parse().map_err(|_| format!("--seq: bad integer '{s}'"))?;
+        exp.seqs = vec![seq];
+    }
+    let records = exp.run().map_err(|e| e.to_string())?;
+    println!(
+        "{} — {} runs on '{}' ({} render)\n",
+        cfg.name,
+        records.len(),
+        cfg.cluster,
+        cfg.render
+    );
+    println!("{}", render::render(&cfg.render, &records).map_err(|e| e.to_string())?);
+    let out = match args.get("out") {
+        Some(p) => {
+            let p = PathBuf::from(p);
+            render::write_json(&p, &records).map_err(|e| e.to_string())?;
+            p
+        }
+        None => render::write_artifact(&cfg.name, &records).map_err(|e| e.to_string())?,
+    };
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
 fn cmd_fig6(argv: &[String]) -> Result<(), String> {
     let specs = [
         OptSpec { name: "seq", help: "sequence length", default: Some("24000"), is_flag: false },
@@ -86,13 +146,12 @@ fn cmd_fig6(argv: &[String]) -> Result<(), String> {
         return Ok(());
     };
     let seq = args.get_usize("seq")?;
-    let (report, tr, ra) = reports::fig6(seq);
+    let (report, tr, ra) = reports::fig6(seq).map_err(|e| e.to_string())?;
     println!("{report}");
     if let Some(prefix) = args.get("trace") {
-        for (name, prof) in [("token_ring", &tr), ("ring_attention", &ra)] {
-            let tl = tokenring::metrics::timeline_from_sim(&prof.sim);
-            let path = format!("{prefix}.{name}.json");
-            std::fs::write(&path, tl.chrome_trace()).map_err(|e| e.to_string())?;
+        for rec in [&tr, &ra] {
+            let path = format!("{prefix}.{}.json", rec.schedule);
+            std::fs::write(&path, render::chrome_trace(rec)).map_err(|e| e.to_string())?;
             println!("wrote {path}");
         }
     }
@@ -107,7 +166,8 @@ fn cmd_table1(argv: &[String]) -> Result<(), String> {
     let Some(args) = parse_or_help(argv, "table1", "Table 1 comparison", &specs)? else {
         return Ok(());
     };
-    let (report, _) = reports::table1(args.get_usize("seq")?, args.get_usize("devices")?);
+    let (report, _) = reports::table1(args.get_usize("seq")?, args.get_usize("devices")?)
+        .map_err(|e| e.to_string())?;
     println!("{report}");
     Ok(())
 }
@@ -115,22 +175,27 @@ fn cmd_table1(argv: &[String]) -> Result<(), String> {
 fn cmd_scaling(argv: &[String]) -> Result<(), String> {
     let specs = [
         OptSpec { name: "mode", help: "gpus | seq", default: Some("gpus"), is_flag: false },
-        OptSpec { name: "seq", help: "sequence length (gpus mode)", default: Some("49152"), is_flag: false },
-        OptSpec { name: "block", help: "tokens per device (seq mode, weak scaling)", default: Some("4096"), is_flag: false },
+        OptSpec { name: "seq", help: "total sequence length (gpus mode)", default: Some("49152"), is_flag: false },
+        OptSpec { name: "block", help: "tokens per device (seq mode, weak scaling: N = S/block)", default: Some("4096"), is_flag: false },
     ];
     let Some(args) = parse_or_help(argv, "scaling", "S1/S2 sweeps", &specs)? else {
         return Ok(());
     };
     match args.get_str("mode")? {
-        "gpus" => println!("{}", reports::scaling_gpus(args.get_usize("seq")?, &[2, 4, 8, 16, 32])),
+        "gpus" => println!(
+            "{}",
+            reports::scaling_gpus(args.get_usize("seq")?, &[2, 4, 8, 16, 32])
+                .map_err(|e| e.to_string())?
+        ),
         "seq" => println!(
             "{}",
             reports::scaling_seqlen(
                 args.get_usize("block")?,
                 &[8_192, 16_384, 32_768, 65_536, 131_072, 262_144],
             )
+            .map_err(|e| e.to_string())?
         ),
-        other => return Err(format!("unknown mode '{other}'")),
+        other => return Err(format!("unknown mode '{other}' (valid: gpus, seq)")),
     }
     Ok(())
 }
@@ -146,6 +211,7 @@ fn cmd_zigzag(argv: &[String]) -> Result<(), String> {
     println!(
         "{}",
         reports::zigzag_balance(args.get_usize("seq")?, args.get_usize("devices")?)
+            .map_err(|e| e.to_string())?
     );
     Ok(())
 }
@@ -166,6 +232,7 @@ fn cmd_hybrid(argv: &[String]) -> Result<(), String> {
             args.get_usize("nodes")?,
             args.get_usize("per-node")?,
         )
+        .map_err(|e| e.to_string())?
     );
     Ok(())
 }
@@ -238,7 +305,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let specs = [
         OptSpec { name: "requests", help: "request count", default: Some("16"), is_flag: false },
         OptSpec { name: "devices", help: "SP degree", default: Some("4"), is_flag: false },
-        OptSpec { name: "schedule", help: "token_ring | ring_attention", default: Some("token_ring"), is_flag: false },
+        OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention)", default: Some("token_ring"), is_flag: false },
         OptSpec { name: "rate", help: "arrival rate (req/s)", default: Some("8"), is_flag: false },
         OptSpec { name: "layers", help: "attention passes per request", default: Some("2"), is_flag: false },
     ];
@@ -246,11 +313,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         return Ok(());
     };
     let n = args.get_usize("devices")?;
-    let schedule = match args.get_str("schedule")? {
-        "token_ring" => ServeSchedule::TokenRing,
-        "ring_attention" => ServeSchedule::RingAttention,
-        other => return Err(format!("unknown schedule '{other}'")),
-    };
+    let schedule = ScheduleSpec::parse(args.get_str("schedule")?).map_err(|e| e.to_string())?;
     let gen = WorkloadGen {
         rate: args.get_f64("rate")?,
         dist: LenDist::Bimodal { short: 256, long: 1024, long_frac: 0.25 },
@@ -273,12 +336,12 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let rep = serve(&reqs, &opts).map_err(|e| e.to_string())?;
     let lat = rep.latency_summary();
     println!(
-        "served {} requests / {} tokens in {:.2}s over {} devices ({:?})",
+        "served {} requests / {} tokens in {:.2}s over {} devices ({})",
         rep.requests.len(),
         rep.total_tokens,
         rep.wall,
         n,
-        schedule
+        schedule.name()
     );
     println!(
         "throughput {:.0} tok/s | latency p50 {:.1} ms p95 {:.1} ms | service p50 {:.1} ms",
@@ -292,7 +355,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
 
 fn cmd_trace(argv: &[String]) -> Result<(), String> {
     let specs = [
-        OptSpec { name: "schedule", help: "token_ring | ring_attention | ulysses | tensor_parallel", default: Some("token_ring"), is_flag: false },
+        OptSpec { name: "schedule", help: "registered schedule name (see `tokenring schedules`)", default: Some("token_ring"), is_flag: false },
         OptSpec { name: "seq", help: "sequence length", default: Some("24000"), is_flag: false },
         OptSpec { name: "out", help: "output file", default: Some("trace.json"), is_flag: false },
     ];

@@ -112,6 +112,11 @@ impl ModelConfig {
             _ => return None,
         })
     }
+
+    /// Every name [`ModelConfig::by_name`] resolves (for error messages).
+    pub fn names() -> &'static [&'static str] {
+        &["llama2_7b", "llama3_8b_gqa", "dit_xl", "tiny", "small"]
+    }
 }
 
 #[cfg(test)]
@@ -135,8 +140,9 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for n in ["llama2_7b", "llama3_8b_gqa", "dit_xl", "tiny", "small"] {
-            assert_eq!(ModelConfig::by_name(n).unwrap().name, n);
+        // names() is the advertised set — every entry must resolve
+        for n in ModelConfig::names() {
+            assert_eq!(ModelConfig::by_name(n).unwrap().name, *n);
         }
         assert!(ModelConfig::by_name("nope").is_none());
     }

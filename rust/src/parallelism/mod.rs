@@ -13,7 +13,9 @@ pub mod token_ring;
 pub mod tensor_parallel;
 pub mod ulysses;
 
-use crate::comm::{AttnShape, ComputeModel};
+use anyhow::{anyhow, Result};
+
+use crate::comm::{self, AttnShape, ComputeModel, VolumeReport};
 use crate::simulator::{simulate_owned, SimResult, TaskGraph};
 use crate::topology::Topology;
 use partition::Partition;
@@ -65,6 +67,118 @@ pub trait Schedule {
     /// Convenience: build then simulate (graph handed over, no clone).
     fn simulate(&self, topo: &Topology, job: &AttnJob) -> SimResult {
         simulate_owned(self.build(topo, job))
+    }
+}
+
+/// The schedule registry: one name ↔ one constructible schedule.
+///
+/// Every experiment-facing surface (CLI subcommands, `run --config`,
+/// reports, benches, the serving scheduler) resolves schedule names through
+/// this enum — `ScheduleSpec::parse` is the ONLY string→schedule match in
+/// the crate, so every path accepts the same names and every "unknown
+/// schedule" error lists the same valid set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleSpec {
+    TokenRing { elide_q: bool },
+    RingAttention,
+    Ulysses,
+    TensorParallel,
+    /// Multi-node hybrid. `nodes`/`per_node` describe the intended cluster
+    /// shape (used when a config expands to a `two_level` cluster); the
+    /// built schedule itself adapts to whatever node structure the
+    /// topology reports.
+    Hybrid { nodes: usize, per_node: usize },
+}
+
+impl ScheduleSpec {
+    /// Every registered schedule, one per canonical name.
+    pub fn all() -> Vec<ScheduleSpec> {
+        vec![
+            ScheduleSpec::TokenRing { elide_q: true },
+            ScheduleSpec::TokenRing { elide_q: false },
+            ScheduleSpec::RingAttention,
+            ScheduleSpec::Ulysses,
+            ScheduleSpec::TensorParallel,
+            ScheduleSpec::Hybrid { nodes: 2, per_node: 4 },
+        ]
+    }
+
+    /// Canonical registry name (round-trips through [`ScheduleSpec::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleSpec::TokenRing { elide_q: true } => "token_ring",
+            ScheduleSpec::TokenRing { elide_q: false } => "token_ring_noelide",
+            ScheduleSpec::RingAttention => "ring_attention",
+            ScheduleSpec::Ulysses => "ulysses",
+            ScheduleSpec::TensorParallel => "tensor_parallel",
+            ScheduleSpec::Hybrid { .. } => "hybrid_token_ring",
+        }
+    }
+
+    /// Comma-separated list of every valid name, for error messages.
+    pub fn valid_names() -> String {
+        let names: Vec<&'static str> =
+            ScheduleSpec::all().iter().map(ScheduleSpec::name).collect();
+        names.join(", ")
+    }
+
+    /// Resolve a schedule name. Accepts every canonical [`ScheduleSpec::name`]
+    /// plus the parameterized form `hybrid:<nodes>x<per_node>` (and the
+    /// `hybrid` shorthand for the 2×4 default).
+    pub fn parse(s: &str) -> Result<ScheduleSpec> {
+        Ok(match s {
+            "token_ring" => ScheduleSpec::TokenRing { elide_q: true },
+            "token_ring_noelide" => ScheduleSpec::TokenRing { elide_q: false },
+            "ring_attention" => ScheduleSpec::RingAttention,
+            "ulysses" => ScheduleSpec::Ulysses,
+            "tensor_parallel" => ScheduleSpec::TensorParallel,
+            "hybrid_token_ring" | "hybrid" => ScheduleSpec::Hybrid { nodes: 2, per_node: 4 },
+            other => {
+                if let Some(body) = other.strip_prefix("hybrid:") {
+                    let (a, b) = body.split_once('x').ok_or_else(|| {
+                        anyhow!("bad hybrid spec '{other}' (want hybrid:<nodes>x<per_node>)")
+                    })?;
+                    let nodes: usize = a
+                        .parse()
+                        .map_err(|_| anyhow!("bad hybrid node count '{a}'"))?;
+                    let per_node: usize = b
+                        .parse()
+                        .map_err(|_| anyhow!("bad hybrid per-node count '{b}'"))?;
+                    if nodes == 0 || per_node == 0 {
+                        return Err(anyhow!("hybrid spec '{other}' must be non-zero"));
+                    }
+                    ScheduleSpec::Hybrid { nodes, per_node }
+                } else {
+                    return Err(anyhow!(
+                        "unknown schedule '{other}' (valid: {})",
+                        ScheduleSpec::valid_names()
+                    ));
+                }
+            }
+        })
+    }
+
+    /// Construct the schedule this spec names.
+    pub fn build(&self) -> Box<dyn Schedule + Sync> {
+        match *self {
+            ScheduleSpec::TokenRing { elide_q } => Box::new(token_ring::TokenRing { elide_q }),
+            ScheduleSpec::RingAttention => Box::new(ring_attention::RingAttention),
+            ScheduleSpec::Ulysses => Box::new(ulysses::Ulysses),
+            ScheduleSpec::TensorParallel => Box::new(tensor_parallel::TensorParallel),
+            ScheduleSpec::Hybrid { .. } => Box::new(hybrid::HybridTokenRing::default()),
+        }
+    }
+
+    /// Analytic Table-1 communication volumes, for the schemes that have a
+    /// closed form (the hybrid's depend on the node structure → `None`).
+    pub fn volume(&self, shape: &AttnShape, n: usize) -> Option<VolumeReport> {
+        match self {
+            ScheduleSpec::TokenRing { .. } => Some(comm::volume_token_ring(shape, n)),
+            ScheduleSpec::RingAttention => Some(comm::volume_ring_attention(shape, n)),
+            ScheduleSpec::Ulysses => Some(comm::volume_ulysses(shape, n)),
+            ScheduleSpec::TensorParallel => Some(comm::volume_tensor_parallel(shape, n)),
+            ScheduleSpec::Hybrid { .. } => None,
+        }
     }
 }
 
@@ -157,5 +271,57 @@ mod tests {
         let full = j.attn_time(256, 256, 1.0);
         let half = j.attn_time(256, 256, 0.5);
         assert!((full - 2.0 * half).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_names_round_trip() {
+        for spec in ScheduleSpec::all() {
+            assert_eq!(ScheduleSpec::parse(spec.name()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn registry_parse_aliases() {
+        assert_eq!(
+            ScheduleSpec::parse("hybrid").unwrap(),
+            ScheduleSpec::Hybrid { nodes: 2, per_node: 4 }
+        );
+        assert_eq!(
+            ScheduleSpec::parse("hybrid:3x8").unwrap(),
+            ScheduleSpec::Hybrid { nodes: 3, per_node: 8 }
+        );
+        assert!(ScheduleSpec::parse("hybrid:3").is_err());
+        assert!(ScheduleSpec::parse("hybrid:0x4").is_err());
+    }
+
+    #[test]
+    fn registry_unknown_lists_valid_names() {
+        let e = ScheduleSpec::parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("bogus"), "{e}");
+        for name in ["token_ring", "ring_attention", "ulysses", "tensor_parallel"] {
+            assert!(e.contains(name), "error should list '{name}': {e}");
+        }
+    }
+
+    #[test]
+    fn registry_builds_named_schedules() {
+        // Spec names match the built Schedule's own name (modulo the
+        // registry's elide_q disambiguation suffix).
+        for spec in ScheduleSpec::all() {
+            let built = spec.build().name();
+            assert!(spec.name().starts_with(built) || built.starts_with("hybrid"));
+        }
+    }
+
+    #[test]
+    fn registry_volumes_cover_table1_schemes() {
+        let shape = AttnShape::new(4096, 8, 64, Dtype::F16);
+        for spec in ScheduleSpec::all() {
+            let v = spec.volume(&shape, 4);
+            match spec {
+                ScheduleSpec::Hybrid { .. } => assert!(v.is_none()),
+                _ => assert_eq!(v.unwrap().scheme, spec.build().name()),
+            }
+        }
     }
 }

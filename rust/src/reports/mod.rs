@@ -1,147 +1,80 @@
 //! Report generators for every table and figure in the paper's evaluation
-//! (DESIGN.md §4 experiment index). Shared by the CLI (`tokenring <cmd>`)
-//! and the bench harness (`cargo bench`), so EXPERIMENTS.md rows come from
-//! one code path.
+//! (DESIGN.md §4 experiment index). Shared by the CLI (`tokenring <cmd>`),
+//! the config-driven `tokenring run`, and the bench harness (`cargo
+//! bench`), so EXPERIMENTS.md rows come from one code path.
+//!
+//! Every report is a thin layer over [`crate::experiment`]: it declares an
+//! `Experiment` grid (or explicit `RunSpec`s), executes it on the sweep
+//! pool, and renders the resulting `RunRecord`s — the same records
+//! `tokenring run --config` serializes to JSON.
 
-use crate::comm::{self, AttnShape, VolumeReport};
+use anyhow::Result;
+
+use crate::comm::{ComputeModel, VolumeReport};
 use crate::config::{Cluster, A10_FLASH_EFFICIENCY};
+use crate::experiment::{render, Experiment, RunRecord, RunSpec};
 use crate::metrics::{timeline_from_sim, Timeline};
 use crate::model::ModelConfig;
-use crate::parallelism::hybrid::HybridTokenRing;
 use crate::parallelism::partition::{causal_flops_per_device, imbalance, Partition};
-use crate::parallelism::ring_attention::RingAttention;
-use crate::parallelism::token_ring::TokenRing;
-use crate::parallelism::tensor_parallel::TensorParallel;
-use crate::parallelism::ulysses::Ulysses;
-use crate::parallelism::{AttnJob, Schedule};
-use crate::simulator::{sweep, SimResult};
+use crate::parallelism::{AttnJob, Schedule, ScheduleSpec};
 use crate::topology::Topology;
 use crate::util::stats::Table;
 
-/// The Figure-6 job: LLaMA2-7B attention, S=24000, 4×A10 (§4.1/§4.2).
-pub fn fig6_job(seq: usize, causal: bool) -> AttnJob {
-    let model = ModelConfig::llama2_7b();
-    AttnJob {
-        shape: model.attn_shape(seq),
-        compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
-        causal,
-        partition: if causal { Partition::Zigzag } else { Partition::Contiguous },
-    }
-}
+/// Figure 6: TokenRing vs Ring-Attention per-step profile on the A10 box
+/// (LLaMA2-7B attention, S=`seq`, 4×A10, causal+zigzag — §4.1/§4.2).
+/// Returns the rendered report plus the two records in schedule order.
+pub fn fig6(seq: usize) -> Result<(String, RunRecord, RunRecord)> {
+    let recs = Experiment::new("fig6")
+        .schedules(&[
+            ScheduleSpec::TokenRing { elide_q: true },
+            ScheduleSpec::RingAttention,
+        ])
+        .seqs(&[seq])
+        .run()?;
+    let table = render::steps_table(&recs);
+    let mut it = recs.into_iter();
+    let tr = it.next().expect("token_ring record");
+    let ra = it.next().expect("ring_attention record");
 
-/// Per-step profile of one schedule (Figure 6 rows).
-pub struct StepProfile {
-    pub schedule: &'static str,
-    /// (step, wall, compute, comm, exposed_comm) seconds
-    pub rows: Vec<(usize, f64, f64, f64, f64)>,
-    pub makespan: f64,
-    pub sim: SimResult,
-}
-
-pub fn step_profile(schedule: &dyn Schedule, topo: &Topology, job: &AttnJob) -> StepProfile {
-    let sim = schedule.simulate(topo, job);
-    let rows = sim
-        .step_stats()
-        .iter()
-        .map(|s| (s.step, s.end - s.start, s.compute, s.comm, s.exposed_comm))
-        .collect();
-    StepProfile { schedule: schedule.name(), rows, makespan: sim.makespan, sim }
-}
-
-/// Figure 6: TokenRing vs Ring-Attention per-step profile on the A10 box.
-/// The two schedule simulations are independent points — they run on the
-/// sweep pool.
-pub fn fig6(seq: usize) -> (String, StepProfile, StepProfile) {
-    let cluster = Cluster::a10_pcie4();
-    let job = fig6_job(seq, true);
-    let token_ring = TokenRing::default();
-    let ring = RingAttention;
-    let schedules: [&(dyn Schedule + Sync); 2] = [&token_ring, &ring];
-    let mut profiles = sweep::par_map(&schedules, |s| step_profile(*s, &cluster.topology, &job))
-        .into_iter();
-    // positional: profiles come back in `schedules` order
-    let tr = profiles.next().expect("token_ring profile");
-    let ra = profiles.next().expect("ring_attention profile");
-
-    let mut t = Table::new(&[
-        "schedule", "step", "wall (ms)", "compute (ms)", "comm (ms)", "exposed comm (ms)",
-    ]);
-    for p in [&tr, &ra] {
-        for &(step, wall, compute, comms, exposed) in &p.rows {
-            t.row(&[
-                p.schedule.into(),
-                step.to_string(),
-                format!("{:.2}", wall * 1e3),
-                format!("{:.2}", compute * 1e3),
-                format!("{:.2}", comms * 1e3),
-                format!("{:.2}", exposed * 1e3),
-            ]);
-        }
-    }
     let mut s = format!(
         "Figure 6 reproduction — attention step profile, S={seq}, 4xA10 (PIX/PXB)\n\
          paper: TokenRing ≈3.5 ms (steps 0-1) / ≈4.6 ms (step 2); Ring ≈7.6 ms comm-bound\n\n"
     );
-    s.push_str(&t.render());
+    s.push_str(&table);
     s.push_str(&format!(
         "\nmakespan: token_ring {:.2} ms vs ring_attention {:.2} ms ({:.2}x)\n",
         tr.makespan * 1e3,
         ra.makespan * 1e3,
         ra.makespan / tr.makespan
     ));
-    (s, tr, ra)
+    Ok((s, tr, ra))
 }
 
-/// Table 1: parallelism comparison with measured volumes and constraints.
-pub fn table1(seq: usize, n: usize) -> (String, Vec<VolumeReport>) {
-    let model = ModelConfig::llama2_7b();
-    let shape: AttnShape = model.attn_shape(seq);
-    let reports = vec![
-        comm::volume_tensor_parallel(&shape, n),
-        comm::volume_ring_attention(&shape, n),
-        comm::volume_ulysses(&shape, n),
-        comm::volume_token_ring(&shape, n),
-    ];
-
-    // measured makespans on a uniform mesh for the timing column
-    let cluster = Cluster::oam_mesh(n);
-    let job = AttnJob {
-        shape,
-        compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
-        causal: false,
-        partition: Partition::Contiguous,
-    };
-    let schedules: Vec<(&str, Box<dyn Schedule + Sync>)> = vec![
-        ("tensor_parallel", Box::new(TensorParallel)),
-        ("ring_attention", Box::new(RingAttention)),
-        ("ulysses", Box::new(Ulysses)),
-        ("token_ring", Box::new(TokenRing::default())),
-    ];
-    // one independent simulation per scheme — sweep them in parallel
-    let makespans = sweep::par_map(&schedules, |(_, sched)| {
-        sched.simulate(&cluster.topology, &job).makespan
-    });
-    let mut t = Table::new(&[
-        "parallelism", "communication", "per-step TX (MB)", "total TX (MB)",
-        "duplex use", "max degree", "limitation", "makespan (ms)",
-    ]);
-    for (rep, mk) in reports.iter().zip(makespans) {
-        t.row(&[
-            rep.scheme.into(),
-            rep.pattern.into(),
-            format!("{:.1}", rep.per_step_tx / 1e6),
-            format!("{:.1}", rep.total_tx / 1e6),
-            format!("{:.0}x", rep.duplex_utilization),
-            rep.max_degree.map_or("-".into(), |d| d.to_string()),
-            rep.limitation.into(),
-            format!("{:.2}", mk * 1e3),
-        ]);
-    }
+/// Table 1: parallelism comparison with measured volumes and constraints
+/// on a uniform OAM mesh.
+pub fn table1(seq: usize, n: usize) -> Result<(String, Vec<VolumeReport>)> {
+    let recs = Experiment::new("table1")
+        .cluster("oam_mesh")
+        .schedules(&[
+            ScheduleSpec::TensorParallel,
+            ScheduleSpec::RingAttention,
+            ScheduleSpec::Ulysses,
+            ScheduleSpec::TokenRing { elide_q: true },
+        ])
+        .seqs(&[seq])
+        .devices(&[n])
+        .causal(&[false])
+        .partitions(&[Partition::Contiguous])
+        .run()?;
+    let vols: Vec<VolumeReport> = recs
+        .iter()
+        .map(|r| r.volume.clone().expect("table1 schemes have closed-form volumes"))
+        .collect();
     let mut s = format!(
         "Table 1 reproduction — parallelism comparison (LLaMA2-7B, S={seq}, N={n}, OAM mesh)\n\n"
     );
-    s.push_str(&t.render());
-    (s, reports)
+    s.push_str(&render::volumes_table(&recs));
+    Ok((s, vols))
 }
 
 /// S1: compute ∝ 1/N² vs comm ∝ 1/N — step ratio sweep over device count.
@@ -149,76 +82,106 @@ pub fn table1(seq: usize, n: usize) -> (String, Vec<VolumeReport>) {
 /// The sweep runs on a PCIe-class mesh (fixed ~12 GB/s per pair — the
 /// paper's cost-constrained setting) so the crossover is visible: on very
 /// fat links everything is compute-bound and all ring schemes tie.
-pub fn scaling_gpus(seq: usize, ns: &[usize]) -> String {
-    // Every N is an independent (schedule, topology, job) point; the whole
-    // grid fans out over the sweep pool and rows come back in input order.
-    let rows = sweep::par_map(ns, |&n| {
-        let topo = crate::topology::Topology::uniform_mesh(n, 12.0);
+pub fn scaling_gpus(seq: usize, ns: &[usize]) -> Result<String> {
+    let recs = Experiment::new("scaling_gpus")
+        .cluster("uniform:12")
+        .schedules(&[
+            ScheduleSpec::RingAttention,
+            ScheduleSpec::TokenRing { elide_q: true },
+        ])
+        .seqs(&[seq])
+        .devices(ns)
+        .causal(&[false])
+        .partitions(&[Partition::Contiguous])
+        .run()?;
+    // schedule-major expansion: first all ring points, then all tokenring
+    let (ra_recs, tr_recs) = recs.split_at(ns.len());
+
+    let mut t = Table::new(&[
+        "N", "compute/step (ms)", "comm/step (ms)", "comm/compute",
+        "ring makespan (ms)", "tokenring makespan (ms)", "speedup",
+    ]);
+    for (ra, tr) in ra_recs.iter().zip(tr_recs) {
+        let n = ra.devices;
+        // analytic per-step quantities behind the §3.1 argument
         let job = AttnJob {
             shape: ModelConfig::llama2_7b().attn_shape(seq),
-            compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
             causal: false,
             partition: Partition::Contiguous,
         };
         let blk = seq / n;
         let compute = job.attn_time(blk, blk, 1.0);
         let kv_bytes = 2.0 * job.shape.act_bytes(blk);
-        let link = topo.link_or_die(0, 1);
-        let comm = link.transfer_time(kv_bytes);
-        let ra = RingAttention.simulate(&topo, &job).makespan;
-        let tr = TokenRing::default().simulate(&topo, &job).makespan;
-        (n, compute, comm, ra, tr)
-    });
-    let mut t = Table::new(&[
-        "N", "compute/step (ms)", "comm/step (ms)", "comm/compute",
-        "ring makespan (ms)", "tokenring makespan (ms)", "speedup",
-    ]);
-    for (n, compute, comm, ra, tr) in rows {
+        let comm = Topology::uniform_mesh(n, 12.0)
+            .link_or_die(0, 1)
+            .transfer_time(kv_bytes);
         t.row(&[
             n.to_string(),
             format!("{:.2}", compute * 1e3),
             format!("{:.2}", comm * 1e3),
             format!("{:.2}", comm / compute),
-            format!("{:.2}", ra * 1e3),
-            format!("{:.2}", tr * 1e3),
-            format!("{:.2}x", ra / tr),
+            format!("{:.2}", ra.makespan * 1e3),
+            format!("{:.2}", tr.makespan * 1e3),
+            format!("{:.2}x", ra.makespan / tr.makespan),
         ]);
     }
-    format!(
+    Ok(format!(
         "S1 — quadratic-compute vs linear-comm crossover (S={seq}, 12 GB/s mesh)\n\n{}",
         t.render()
-    )
+    ))
 }
 
-/// S2: "infinite-context" weak scaling — the per-device block stays fixed
-/// (`block` tokens) and the device count grows with the sequence, the
-/// regime the paper's title targets. On a PCIe-class mesh the ring schemes
-/// are comm-bound and TokenRing's duplex advantage is the gap.
-pub fn scaling_seqlen(block: usize, seqs: &[usize]) -> String {
-    // Independent weak-scaling points — fan out over the sweep pool.
-    let rows = sweep::par_map(seqs, |&seq| {
-        let n = (seq / block).max(2);
-        let topo = crate::topology::Topology::uniform_mesh(n, 12.0);
-        let job = AttnJob {
-            shape: ModelConfig::llama2_7b().attn_shape(seq),
-            compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
-            causal: false,
-            partition: Partition::Contiguous,
-        };
-        let ra = RingAttention.simulate(&topo, &job).makespan;
-        let ul = if n <= job.shape.heads {
-            format!("{:.2}", Ulysses.simulate(&topo, &job).makespan * 1e3)
-        } else {
-            "cap".into() // degree exceeds head count — Table 1's limitation
-        };
-        let tr = TokenRing::default().simulate(&topo, &job).makespan;
-        (seq, n, ra, ul, tr)
-    });
+/// S2: "infinite-context" weak scaling — `block_per_device` tokens stay
+/// resident on each device and the device count grows with the sequence,
+/// the regime the paper's title targets. On a PCIe-class mesh the ring
+/// schemes are comm-bound and TokenRing's duplex advantage is the gap.
+///
+/// Note the first parameter is the per-device block (the CLI's `--block`),
+/// NOT a total sequence length: each entry of `seqs` is a total sequence
+/// S, simulated at N = S / block_per_device devices (min 2).
+pub fn scaling_seqlen(block_per_device: usize, seqs: &[usize]) -> Result<String> {
+    let model = ModelConfig::llama2_7b();
+    // Not a plain cartesian grid (N is derived from S), so build the
+    // RunSpecs explicitly; ulysses points past the head cap are skipped
+    // up front — Table 1's degree limitation.
+    let mut specs: Vec<RunSpec> = Vec::new();
+    for &seq in seqs {
+        let n = (seq / block_per_device).max(2);
+        for schedule in [
+            ScheduleSpec::RingAttention,
+            ScheduleSpec::Ulysses,
+            ScheduleSpec::TokenRing { elide_q: true },
+        ] {
+            if schedule == ScheduleSpec::Ulysses && n > model.heads {
+                continue;
+            }
+            specs.push(RunSpec {
+                schedule,
+                cluster: "uniform:12".to_string(),
+                model: model.clone(),
+                seq,
+                devices: n,
+                causal: false,
+                partition: Partition::Contiguous,
+            });
+        }
+    }
+    let recs = crate::experiment::run_specs(&specs)?;
+    let find = |name: &str, seq: usize| recs.iter().find(|r| r.schedule == name && r.seq == seq);
+
     let mut t = Table::new(&[
         "S", "N", "ring (ms)", "ulysses (ms)", "tokenring (ms)",
         "ring tok/s", "tokenring tok/s", "speedup",
     ]);
-    for (seq, n, ra, ul, tr) in rows {
+    for &seq in seqs {
+        let n = (seq / block_per_device).max(2);
+        let ra = find("ring_attention", seq).expect("ring record").makespan;
+        let tr = find("token_ring", seq).expect("tokenring record").makespan;
+        let ul = match find("ulysses", seq) {
+            Some(r) => format!("{:.2}", r.makespan * 1e3),
+            None => "cap".to_string(), // degree exceeds head count
+        };
         t.row(&[
             seq.to_string(),
             n.to_string(),
@@ -230,29 +193,38 @@ pub fn scaling_seqlen(block: usize, seqs: &[usize]) -> String {
             format!("{:.2}x", ra / tr),
         ]);
     }
-    format!(
-        "S2 — infinite-context weak scaling (block={block}/device, 12 GB/s mesh)\n\n{}",
+    Ok(format!(
+        "S2 — infinite-context weak scaling (block={block_per_device}/device, 12 GB/s mesh)\n\n{}",
         t.render()
-    )
+    ))
 }
 
-/// Z1: causal load balance across partition strategies.
-pub fn zigzag_balance(seq: usize, n: usize) -> String {
-    let cluster = Cluster::a10_pcie4();
+/// Z1: causal load balance across partition strategies. The makespan runs
+/// on the 4×A10 box; the imbalance column is analytic at `n` devices.
+pub fn zigzag_balance(seq: usize, n: usize) -> Result<String> {
     let partitions =
         [Partition::Contiguous, Partition::Striped { stripe: 1 }, Partition::Zigzag];
-    let rows = sweep::par_map(&partitions, |&p| {
+    let recs = Experiment::new("zigzag_balance")
+        .seqs(&[seq])
+        .partitions(&partitions)
+        .run()?;
+
+    let cluster = Cluster::a10_pcie4();
+    let mut t = Table::new(&[
+        "partition", "max/mean imbalance", "makespan (ms)", "q-volume saved",
+    ]);
+    for (p, rec) in partitions.iter().zip(&recs) {
+        let ib = imbalance(&causal_flops_per_device(p, seq, n));
+        // volume saved by Q-elision vs not, at this partition
         let job = AttnJob {
             shape: ModelConfig::llama2_7b().attn_shape(seq),
-            compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+            compute: ComputeModel::a10(A10_FLASH_EFFICIENCY),
             causal: true,
-            partition: p,
+            partition: *p,
         };
-        let ib = imbalance(&causal_flops_per_device(&p, seq, n));
-        let mk = TokenRing::default().simulate(&cluster.topology, &job).makespan;
-        // volume saved by elision vs not
         let vol = |elide: bool| -> f64 {
-            TokenRing { elide_q: elide }
+            ScheduleSpec::TokenRing { elide_q: elide }
+                .build()
                 .build(&cluster.topology, &job)
                 .tasks
                 .iter()
@@ -261,40 +233,37 @@ pub fn zigzag_balance(seq: usize, n: usize) -> String {
                 .sum()
         };
         let saved = 1.0 - vol(true) / vol(false);
-        (p, ib, mk, saved)
-    });
-    let mut t = Table::new(&[
-        "partition", "max/mean imbalance", "makespan (ms)", "q-volume saved",
-    ]);
-    for (p, ib, mk, saved) in rows {
         t.row(&[
-            p.label().into(),
+            rec.partition.clone(),
             format!("{ib:.3}"),
-            format!("{:.2}", mk * 1e3),
+            format!("{:.2}", rec.makespan * 1e3),
             format!("{:.1}%", saved * 100.0),
         ]);
     }
-    format!(
+    Ok(format!(
         "Z1 — causal load balance by partition (LLaMA2-7B, S={seq}, N={n}, 4xA10)\n\n{}",
         t.render()
-    )
+    ))
 }
 
 /// M1: hybrid multi-node vs flat ring embedding.
-pub fn hybrid_multinode(seq: usize, nodes: usize, per_node: usize) -> String {
-    let cluster = Cluster::two_level(nodes, per_node);
-    let job = AttnJob {
-        shape: ModelConfig::llama2_7b().attn_shape(seq),
-        compute: comm::ComputeModel::a10(A10_FLASH_EFFICIENCY),
+pub fn hybrid_multinode(seq: usize, nodes: usize, per_node: usize) -> Result<String> {
+    let n = nodes * per_node;
+    let spec = RunSpec {
+        schedule: ScheduleSpec::Hybrid { nodes, per_node },
+        cluster: format!("two_level:{per_node}"),
+        model: ModelConfig::llama2_7b(),
+        seq,
+        devices: n,
         causal: false,
         partition: Partition::Contiguous,
     };
-    let hy = HybridTokenRing::default()
-        .simulate(&cluster.topology, &job)
-        .makespan;
+    let rec = spec.execute()?;
+    let hy = rec.makespan;
 
     // flat ring embedding: snake through nodes so every hop exists
-    let n = nodes * per_node;
+    let cluster = spec.cluster_preset()?;
+    let job = spec.job(&cluster);
     let mut order: Vec<usize> = Vec::with_capacity(n);
     for node in 0..nodes {
         let members = cluster.topology.node_members(node);
@@ -324,10 +293,10 @@ pub fn hybrid_multinode(seq: usize, nodes: usize, per_node: usize) -> String {
         Some(f) => t.row(&["flat ring embedding".into(), format!("{:.2}", f * 1e3)]),
         None => t.row(&["flat ring embedding".into(), "n/a (no ring embedding)".into()]),
     }
-    format!(
+    Ok(format!(
         "M1 — multi-node hybrid (S={seq}, {nodes} nodes x {per_node} GPUs)\n\n{}",
         t.render()
-    )
+    ))
 }
 
 fn flat_ring_possible(topo: &Topology, order: &[usize]) -> bool {
@@ -338,19 +307,19 @@ fn flat_ring_possible(topo: &Topology, order: &[usize]) -> bool {
     })
 }
 
-/// Chrome trace for a named schedule on the Figure-6 setup.
-pub fn trace_schedule(name: &str, seq: usize) -> anyhow::Result<(Timeline, String)> {
-    let cluster = Cluster::a10_pcie4();
-    let job = fig6_job(seq, true);
-    let sched: Box<dyn Schedule> = match name {
-        "token_ring" => Box::new(TokenRing::default()),
-        "ring_attention" => Box::new(RingAttention),
-        "ulysses" => Box::new(Ulysses),
-        "tensor_parallel" => Box::new(TensorParallel),
-        other => anyhow::bail!("unknown schedule '{other}'"),
+/// Chrome trace for a registered schedule name on the Figure-6 setup.
+pub fn trace_schedule(name: &str, seq: usize) -> Result<(Timeline, String)> {
+    let spec = RunSpec {
+        schedule: ScheduleSpec::parse(name)?,
+        cluster: "a10_pcie4".to_string(),
+        model: ModelConfig::llama2_7b(),
+        seq,
+        devices: 4,
+        causal: true,
+        partition: Partition::Zigzag,
     };
-    let sim = sched.simulate(&cluster.topology, &job);
-    let tl = timeline_from_sim(&sim);
+    let rec = spec.execute()?;
+    let tl = timeline_from_sim(&rec.sim);
     let trace = tl.chrome_trace();
     Ok((tl, trace))
 }
@@ -361,22 +330,24 @@ mod tests {
 
     #[test]
     fn fig6_shape_holds() {
-        let (report, tr, ra) = fig6(24_000);
+        let (report, tr, ra) = fig6(24_000).unwrap();
         assert!(report.contains("token_ring"));
         // the paper's headline: ring is slower overall
         assert!(ra.makespan > tr.makespan * 1.2, "ra={} tr={}", ra.makespan, tr.makespan);
         // ring steps are comm-bound
         let comm_bound = ra
-            .rows
+            .steps()
             .iter()
             .take(3)
-            .all(|&(_, _, compute, comm, _)| comm > compute);
+            .all(|s| s.comm > s.compute);
         assert!(comm_bound);
     }
 
     #[test]
     fn table1_contains_all_schemes() {
-        let (report, vols) = table1(24_000, 4);
+        let (report, vols) = table1(24_000, 4).unwrap();
+        // bad grids surface as errors, not panics (ulysses head cap)
+        assert!(table1(65_536, 64).is_err());
         for s in ["tensor_parallel", "ring_attention", "ulysses", "token_ring"] {
             assert!(report.contains(s), "missing {s}");
         }
@@ -385,22 +356,24 @@ mod tests {
 
     #[test]
     fn scaling_reports_render() {
-        let s1 = scaling_gpus(49_152, &[4, 8]);
+        let s1 = scaling_gpus(49_152, &[4, 8]).unwrap();
         assert!(s1.contains("comm/compute"));
-        let s2 = scaling_seqlen(4096, &[8_192, 16_384]);
+        let s2 = scaling_seqlen(4096, &[8_192, 16_384]).unwrap();
         assert!(s2.contains("tokenring tok/s"));
     }
 
     #[test]
     fn zigzag_report_shows_balance() {
-        let z = zigzag_balance(4096, 4);
+        let z = zigzag_balance(4096, 4).unwrap();
+        // indivisible zigzag grid is a descriptive error
+        assert!(zigzag_balance(4100, 4).is_err());
         assert!(z.contains("zigzag"));
         assert!(z.contains("contiguous"));
     }
 
     #[test]
     fn hybrid_report_renders() {
-        let m = hybrid_multinode(32_768, 2, 4);
+        let m = hybrid_multinode(32_768, 2, 4).unwrap();
         assert!(m.contains("hybrid"));
     }
 
@@ -410,6 +383,7 @@ mod tests {
         assert!(!tl.events.is_empty());
         let j = crate::util::json::Json::parse(&trace).unwrap();
         assert!(!j.get("traceEvents").as_arr().unwrap().is_empty());
-        assert!(trace_schedule("bogus", 24_000).is_err());
+        let err = trace_schedule("bogus", 24_000).unwrap_err().to_string();
+        assert!(err.contains("valid:"), "{err}");
     }
 }

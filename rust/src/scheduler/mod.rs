@@ -9,19 +9,43 @@
 //! the measured wall time, so latency statistics are meaningful without
 //! real-time sleeping.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{self, EngineOpts};
+use crate::engine::{self, EngineOpts, EngineOutput};
+use crate::parallelism::ScheduleSpec;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, Summary};
 use crate::workload::Request;
 
-/// Which distributed schedule serves the requests.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ServeSchedule {
-    TokenRing,
-    RingAttention,
+/// Signature of the engine entry points (`engine::run_*`).
+pub type EngineRunFn =
+    fn(&Tensor, &Tensor, &Tensor, usize, &EngineOpts) -> Result<EngineOutput>;
+
+/// The real-numerics engine function behind a registered schedule, if it
+/// has one. The serving path accepts the same [`ScheduleSpec`] names as
+/// every report, but only the ring schemes are implemented in the
+/// threaded engine today.
+pub fn engine_runner(spec: ScheduleSpec) -> Option<EngineRunFn> {
+    match spec {
+        // Only the elide-Q variant maps to the engine: run_token_ring
+        // implements Algorithm 1 with Q-elision, so `token_ring_noelide`
+        // must not silently execute (and be labelled as) it.
+        ScheduleSpec::TokenRing { elide_q: true } => Some(engine::run_token_ring),
+        ScheduleSpec::RingAttention => Some(engine::run_ring_attention),
+        _ => None,
+    }
+}
+
+/// Registry names that [`engine_runner`] resolves, for error messages —
+/// derived so the list cannot drift from the dispatch above.
+pub fn engine_schedule_names() -> String {
+    let names: Vec<&'static str> = ScheduleSpec::all()
+        .into_iter()
+        .filter(|s| engine_runner(*s).is_some())
+        .map(|s| s.name())
+        .collect();
+    names.join(", ")
 }
 
 /// Serving configuration.
@@ -32,7 +56,9 @@ pub struct ServeOpts {
     pub head_dim: usize,
     /// Attention passes per request (≈ model layers exercised).
     pub layers: usize,
-    pub schedule: ServeSchedule,
+    /// Registry name of the serving schedule (must be engine-backed; see
+    /// [`engine_runner`]).
+    pub schedule: ScheduleSpec,
     pub engine: EngineOpts,
 }
 
@@ -85,6 +111,13 @@ pub fn serve(requests: &[Request], opts: &ServeOpts) -> Result<ServeReport> {
     if requests.is_empty() {
         bail!("empty workload");
     }
+    let run = engine_runner(opts.schedule).ok_or_else(|| {
+        anyhow!(
+            "schedule '{}' has no engine implementation (engine-backed: {})",
+            opts.schedule.name(),
+            engine_schedule_names()
+        )
+    })?;
     let mut rng = Rng::new(0xC0FFEE);
     let mut clock = 0.0f64; // virtual time
     let mut metrics = Vec::with_capacity(requests.len());
@@ -100,14 +133,7 @@ pub fn serve(requests: &[Request], opts: &ServeOpts) -> Result<ServeReport> {
 
         let mut service = 0.0;
         for _layer in 0..opts.layers {
-            let out = match opts.schedule {
-                ServeSchedule::TokenRing => {
-                    engine::run_token_ring(&q, &k, &v, opts.devices, &opts.engine)?
-                }
-                ServeSchedule::RingAttention => {
-                    engine::run_ring_attention(&q, &k, &v, opts.devices, &opts.engine)?
-                }
-            };
+            let out = run(&q, &k, &v, opts.devices, &opts.engine)?;
             service += out.wall;
         }
         let finish = start + service;
@@ -138,7 +164,7 @@ mod tests {
             heads: 2,
             head_dim: 16,
             layers: 1,
-            schedule: ServeSchedule::TokenRing,
+            schedule: ScheduleSpec::TokenRing { elide_q: true },
             engine: EngineOpts {
                 causal: true,
                 partition: Partition::Zigzag,
@@ -146,6 +172,16 @@ mod tests {
                 record: false,
             },
         }
+    }
+
+    #[test]
+    fn non_engine_schedule_rejected_with_names() {
+        let gen = WorkloadGen { rate: 100.0, dist: LenDist::Fixed(64), multiple: 8 };
+        let reqs = gen.generate(1, 1);
+        let mut o = opts();
+        o.schedule = ScheduleSpec::Ulysses;
+        let e = serve(&reqs, &o).unwrap_err().to_string();
+        assert!(e.contains("ulysses") && e.contains("token_ring"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Integration tests for the unified experiment API: the `ScheduleSpec`
+//! registry, the `Experiment`/`RunSpec` grid layer, the checked-in
+//! `configs/*.json` presets, and the equivalence between the config-driven
+//! path and the legacy figure subcommands.
+
+use std::path::PathBuf;
+
+use tokenring::config::ExperimentConfig;
+use tokenring::experiment::{render, Experiment, RunSpec};
+use tokenring::model::ModelConfig;
+use tokenring::parallelism::partition::Partition;
+use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
+use tokenring::util::json::Json;
+
+fn spec(schedule: ScheduleSpec, cluster: &str, devices: usize) -> RunSpec {
+    RunSpec {
+        schedule,
+        cluster: cluster.to_string(),
+        model: ModelConfig::llama2_7b(),
+        seq: 4096,
+        devices,
+        causal: false,
+        partition: Partition::Contiguous,
+    }
+}
+
+#[test]
+fn registry_round_trips_through_parse() {
+    for s in ScheduleSpec::all() {
+        assert_eq!(ScheduleSpec::parse(s.name()).unwrap(), s, "{}", s.name());
+    }
+    // names are unique
+    let names: Vec<&str> = ScheduleSpec::all().iter().map(ScheduleSpec::name).collect();
+    let mut dedup = names.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), names.len(), "duplicate registry names: {names:?}");
+}
+
+#[test]
+fn every_spec_simulates_on_every_preset() {
+    // Full-mesh presets support every registered schedule; the hybrid
+    // additionally exercises its two-level home below.
+    for (cluster, devices) in [("a10_pcie4", 4usize), ("oam_mesh", 8), ("nvswitch", 8)] {
+        for schedule in ScheduleSpec::all() {
+            let rec = spec(schedule, cluster, devices)
+                .execute()
+                .unwrap_or_else(|e| panic!("{} on {cluster}: {e}", schedule.name()));
+            assert!(
+                rec.makespan.is_finite() && rec.makespan > 0.0,
+                "{} on {cluster}: makespan={}",
+                schedule.name(),
+                rec.makespan
+            );
+            assert_eq!(rec.schedule, schedule.name());
+            assert_eq!(rec.cluster, cluster);
+        }
+    }
+    // two_level (non-full-mesh): the hybrid's native topology
+    let rec = spec(ScheduleSpec::Hybrid { nodes: 2, per_node: 4 }, "two_level", 8)
+        .execute()
+        .unwrap();
+    assert!(rec.makespan.is_finite() && rec.makespan > 0.0);
+}
+
+#[test]
+fn experiment_path_matches_direct_simulation() {
+    // The RunSpec layer must not perturb the numbers: executing through
+    // the experiment API gives exactly the makespan of building and
+    // simulating the schedule by hand on the same preset.
+    for schedule in [
+        ScheduleSpec::TokenRing { elide_q: true },
+        ScheduleSpec::RingAttention,
+        ScheduleSpec::Ulysses,
+        ScheduleSpec::TensorParallel,
+    ] {
+        let s = spec(schedule, "oam_mesh", 8);
+        let rec = s.execute().unwrap();
+        let cluster = tokenring::config::Cluster::by_name("oam_mesh", 8).unwrap();
+        let job = AttnJob {
+            shape: s.model.attn_shape(s.seq),
+            compute: cluster.compute,
+            causal: s.causal,
+            partition: s.partition,
+        };
+        let direct = schedule.build().simulate(&cluster.topology, &job).makespan;
+        assert_eq!(rec.makespan, direct, "{}", schedule.name());
+    }
+}
+
+fn config_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs").join(name)
+}
+
+#[test]
+fn checked_in_configs_load_and_expand() {
+    for name in ["fig6.json", "table1.json", "oam_scaling.json"] {
+        let text = std::fs::read_to_string(config_path(name))
+            .unwrap_or_else(|e| panic!("reading {name}: {e}"));
+        let cfg = ExperimentConfig::from_json(&text)
+            .unwrap_or_else(|e| panic!("parsing {name}: {e}"));
+        // loader round-trip: parse → serialize → parse is the identity
+        let again = ExperimentConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(again, cfg, "{name} does not round-trip");
+        let exp = Experiment::from_config(&cfg)
+            .unwrap_or_else(|e| panic!("resolving {name}: {e}"));
+        let specs = exp.expand().unwrap_or_else(|e| panic!("expanding {name}: {e}"));
+        assert!(!specs.is_empty(), "{name} expands to an empty grid");
+    }
+}
+
+#[test]
+fn config_driven_fig6_matches_legacy_report() {
+    // The acceptance bar: `tokenring run --config configs/fig6.json`
+    // reproduces the legacy subcommand's numbers. Both paths share one
+    // experiment layer; prove it at a test-sized sequence (the CLI's
+    // `--seq` override).
+    let text = std::fs::read_to_string(config_path("fig6.json")).unwrap();
+    let cfg = ExperimentConfig::from_json(&text).unwrap();
+    let mut exp = Experiment::from_config(&cfg).unwrap();
+    exp.seqs = vec![4096];
+    let recs = exp.run().unwrap();
+    assert_eq!(recs.len(), 2);
+
+    let (_, tr, ra) = tokenring::reports::fig6(4096).unwrap();
+    assert_eq!(recs[0].schedule, "token_ring");
+    assert_eq!(recs[0].makespan, tr.makespan);
+    assert_eq!(recs[1].schedule, "ring_attention");
+    assert_eq!(recs[1].makespan, ra.makespan);
+}
+
+#[test]
+fn config_driven_table1_matches_legacy_report() {
+    let text = std::fs::read_to_string(config_path("table1.json")).unwrap();
+    let cfg = ExperimentConfig::from_json(&text).unwrap();
+    let mut exp = Experiment::from_config(&cfg).unwrap();
+    exp.seqs = vec![4096];
+    let recs = exp.run().unwrap();
+    assert_eq!(recs.len(), 4);
+
+    // the volumes renderer used by `run --config` contains the same rows
+    // the table1 subcommand prints
+    let table = render::volumes_table(&recs);
+    let (legacy, vols) = tokenring::reports::table1(4096, 4).unwrap();
+    let _ = legacy;
+    for (rec, vol) in recs.iter().zip(&vols) {
+        assert_eq!(rec.volume.as_ref().unwrap().scheme, vol.scheme);
+        assert_eq!(rec.volume.as_ref().unwrap().total_tx, vol.total_tx);
+        assert!(table.contains(vol.scheme));
+    }
+}
+
+#[test]
+fn artifact_written_and_parses() {
+    let recs = Experiment::new("artifact_test").seqs(&[4096]).run().unwrap();
+    let dir = std::env::temp_dir().join("tokenring_experiment_api_test");
+    let path = dir.join("runs.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    render::write_json(&path, &recs).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let arr = j.get("records").as_arr().unwrap();
+    assert_eq!(arr.len(), 1);
+    assert_eq!(arr[0].get("schedule").as_str(), Some("token_ring"));
+    assert_eq!(arr[0].get("seq").as_usize(), Some(4096));
+    let _ = std::fs::remove_dir_all(&dir);
+}
