@@ -1,19 +1,32 @@
 //! Hot-path microbenchmarks — the instrument for the performance pass
 //! (EXPERIMENTS.md §Perf). Measures the L3 pieces that sit on the request
-//! path: the native attention micro-step, the merge Update rule, the full
-//! threaded engine round trip, and the simulator's scheduling throughput.
+//! path: the native attention micro-step (old scalar kernel vs the tiled
+//! mask-classified kernel, printed as before/after/ratio rows), the merge
+//! Update rule, the full threaded engine round trip, and the simulator's
+//! scheduling throughput. Also quantifies ring-step traffic: logical bytes
+//! on the wire vs bytes physically copied per send (zero after the
+//! Arc-backed tensor change — verified here via storage identity).
 //!
 //! Run: `cargo bench --bench engine_hotpath`
+//! CI:  `cargo bench --bench engine_hotpath -- --smoke`
+//!
+//! Every run writes a machine-readable summary to
+//! `<artifacts>/bench/BENCH_engine.json` (kernel ns/block old vs new,
+//! ring-step bytes before/after zero-copy).
 
-use tokenring::attention::{attention_block, merge_into};
+use std::collections::BTreeMap;
+
+use tokenring::attention::{attention_block, attention_block_reference, merge_into};
 use tokenring::comm::{AttnShape, ComputeModel, Dtype};
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{run_ring_attention, run_token_ring, EngineOpts};
 use tokenring::parallelism::partition::Partition;
 use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
+use tokenring::runtime::default_artifact_dir;
 use tokenring::simulator::{sweep, CompiledGraph};
 use tokenring::tensor::Tensor;
 use tokenring::topology::Topology;
+use tokenring::util::json::Json;
 use tokenring::util::rng::Rng;
 use tokenring::util::stats::{bench_fn, Table};
 
@@ -21,30 +34,107 @@ fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
     Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
 }
 
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
 fn main() {
+    // `--smoke`: CI mode — every section runs, with small shapes/iteration
+    // counts, and the JSON artifact is still written.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut rng = Rng::new(5);
     let mut t = Table::new(&["benchmark", "p50", "throughput"]);
+    let mut kernel_rows: Vec<Json> = Vec::new();
 
-    // --- native attention micro-step (the per-device compute kernel)
-    for (sq, skv, h, d) in [(64usize, 64usize, 4usize, 32usize), (256, 256, 8, 64)] {
+    // --- native attention micro-step: old scalar kernel (before) vs the
+    // tiled mask-classified kernel (after), same inputs, one process.
+    let shapes: &[(usize, usize, usize, usize)] = if smoke {
+        &[(64, 64, 4, 32)]
+    } else {
+        &[(64, 64, 4, 32), (256, 256, 8, 64)]
+    };
+    let (warm, iters) = if smoke { (1, 5) } else { (3, 30) };
+    for &(sq, skv, h, d) in shapes {
         let q = rand_t(&mut rng, &[sq, h, d]);
         let k = rand_t(&mut rng, &[skv, h, d]);
         let v = rand_t(&mut rng, &[skv, h, d]);
         let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
         let kp: Vec<i32> = (0..skv as i32).collect();
-        let s = bench_fn(3, 30, || {
+        let s_old = bench_fn(warm, iters, || {
+            let _ = attention_block_reference(&q, &k, &v, &qp, &kp, true, None);
+        });
+        let s_new = bench_fn(warm, iters, || {
             let _ = attention_block(&q, &k, &v, &qp, &kp, true, None);
         });
         let flops = 4.0 * sq as f64 * skv as f64 * (h * d) as f64;
         t.row(&[
-            format!("attn_block {sq}x{skv} H{h} D{d}"),
-            s.human_time(),
-            format!("{:.2} GFLOP/s", flops / s.p50 / 1e9),
+            format!("attn_block(old) {sq}x{skv} H{h} D{d}"),
+            s_old.human_time(),
+            format!("{:.2} GFLOP/s", flops / s_old.p50 / 1e9),
         ]);
+        t.row(&[
+            format!("attn_block(new) {sq}x{skv} H{h} D{d}"),
+            s_new.human_time(),
+            format!(
+                "{:.2} GFLOP/s ({:.2}x vs old)",
+                flops / s_new.p50 / 1e9,
+                s_old.p50 / s_new.p50
+            ),
+        ]);
+        kernel_rows.push(obj(vec![
+            ("shape", Json::Str(format!("{sq}x{skv} H{h} D{d} visible"))),
+            ("old_ns_per_block", Json::Num(s_old.p50 * 1e9)),
+            ("new_ns_per_block", Json::Num(s_new.p50 * 1e9)),
+            ("speedup", Json::Num(s_old.p50 / s_new.p50)),
+        ]));
+    }
+
+    // --- mask specialization: a block whose keys are entirely in the
+    // future. The tiled kernel classifies every tile FullyMasked and
+    // skips it; the scalar kernel still walks all (row, key) pairs.
+    {
+        let (sq, skv, h, d) = if smoke { (64, 64, 4, 32) } else { (256, 256, 8, 64) };
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp: Vec<i32> = (0..sq as i32).collect();
+        let kp: Vec<i32> = (100_000..100_000 + skv as i32).collect();
+        let s_old = bench_fn(warm, iters, || {
+            let _ = attention_block_reference(&q, &k, &v, &qp, &kp, true, None);
+        });
+        let s_new = bench_fn(warm, iters, || {
+            let _ = attention_block(&q, &k, &v, &qp, &kp, true, None);
+        });
+        t.row(&[
+            format!("attn_block(old) {sq}x{skv} fully-masked"),
+            s_old.human_time(),
+            String::new(),
+        ]);
+        t.row(&[
+            format!("attn_block(new) {sq}x{skv} fully-masked"),
+            s_new.human_time(),
+            format!("{:.1}x vs old", s_old.p50 / s_new.p50),
+        ]);
+        kernel_rows.push(obj(vec![
+            ("shape", Json::Str(format!("{sq}x{skv} H{h} D{d} fully-masked"))),
+            ("old_ns_per_block", Json::Num(s_old.p50 * 1e9)),
+            ("new_ns_per_block", Json::Num(s_new.p50 * 1e9)),
+            ("speedup", Json::Num(s_old.p50 / s_new.p50)),
+        ]));
     }
 
     // --- merge Update rule (the L3 hot loop; zero-alloc in-place)
-    for (s_len, h, d) in [(64usize, 4usize, 32usize), (256, 8, 64), (1024, 8, 64)] {
+    let merge_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(64, 4, 32)]
+    } else {
+        &[(64, 4, 32), (256, 8, 64), (1024, 8, 64)]
+    };
+    for &(s_len, h, d) in merge_shapes {
         let mut out = rand_t(&mut rng, &[s_len, h, d]);
         let mut lse = rand_t(&mut rng, &[h, s_len]);
         let bo = rand_t(&mut rng, &[s_len, h, d]);
@@ -60,8 +150,60 @@ fn main() {
         ]);
     }
 
+    // --- ring-step traffic: what the wire logically carries per step vs
+    // what a send physically copies. Each payload kind the ring circulates
+    // is probed: a clone that shares storage with its source copied 0
+    // bytes, one that doesn't copied the full buffer (the pre-Arc "before"
+    // number). The JSON reports the measured values, so a zero-copy
+    // regression in any payload path fails the CI assertion on this file.
+    let ring_bytes = {
+        let (seq, h, d, n) = (1024usize, 8usize, 64usize, 4usize);
+        let blk = seq / n;
+        let q_block = rand_t(&mut rng, &[blk, h, d]);
+        let k_block = rand_t(&mut rng, &[blk, h, d]);
+        let v_block = rand_t(&mut rng, &[blk, h, d]);
+        let lse_block = rand_t(&mut rng, &[h, blk]);
+        // bytes a clone-into-Msg physically copies for one tensor
+        let copied = |t: &Tensor| -> usize {
+            let c = t.clone();
+            if c.shares_storage(t) {
+                0
+            } else {
+                t.size_bytes()
+            }
+        };
+        let pos_bytes = blk * 4;
+        let q_logical = q_block.size_bytes() + pos_bytes;
+        let q_copied = copied(&q_block);
+        let kv_logical = k_block.size_bytes() + v_block.size_bytes() + pos_bytes;
+        let kv_copied = copied(&k_block) + copied(&v_block);
+        let partial_copied = copied(&q_block) + copied(&lse_block);
+        let zero_copy = q_copied == 0 && kv_copied == 0 && partial_copied == 0;
+        t.row(&[
+            format!("ring step copy S{seq} N{n} (q send)"),
+            "0 ns".into(),
+            format!("{q_logical} B logical, {q_copied} B copied"),
+        ]);
+        obj(vec![
+            ("block", Json::Str(format!("S{seq} N{n} H{h} D{d}"))),
+            ("token_ring_q_send_logical_bytes", Json::Num(q_logical as f64)),
+            ("token_ring_q_send_copied_before", Json::Num(q_logical as f64)),
+            ("token_ring_q_send_copied_after", Json::Num(q_copied as f64)),
+            ("ring_attention_kv_send_logical_bytes", Json::Num(kv_logical as f64)),
+            ("ring_attention_kv_send_copied_before", Json::Num(kv_logical as f64)),
+            ("ring_attention_kv_send_copied_after", Json::Num(kv_copied as f64)),
+            ("partial_send_copied_after", Json::Num(partial_copied as f64)),
+            ("zero_copy_verified", Json::Bool(zero_copy)),
+        ])
+    };
+
     // --- full threaded engine round trips
-    for (seq, h, d, n) in [(256usize, 4usize, 32usize, 4usize), (1024, 8, 64, 4)] {
+    let engine_shapes: &[(usize, usize, usize, usize)] = if smoke {
+        &[(256, 4, 32, 4)]
+    } else {
+        &[(256, 4, 32, 4), (1024, 8, 64, 4)]
+    };
+    for &(seq, h, d, n) in engine_shapes {
         let q = rand_t(&mut rng, &[seq, h, d]);
         let k = rand_t(&mut rng, &[seq, h, d]);
         let v = rand_t(&mut rng, &[seq, h, d]);
@@ -165,4 +307,18 @@ fn main() {
     ]);
 
     println!("{}", t.render());
+
+    // --- machine-readable artifact for CI and EXPERIMENTS.md
+    let summary = obj(vec![
+        ("bench", Json::Str("engine_hotpath".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("kernel", Json::Arr(kernel_rows)),
+        ("ring_step_bytes", ring_bytes),
+    ]);
+    let path = default_artifact_dir().join("bench").join("BENCH_engine.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).expect("creating bench artifact dir");
+    }
+    std::fs::write(&path, summary.to_string()).expect("writing BENCH_engine.json");
+    println!("wrote {}", path.display());
 }

@@ -7,6 +7,18 @@
 //! Layouts match the AOT artifacts: q/k/v/out are `(S, H, D)` row-major,
 //! lse is `(H, S)` — exactly what flash.py emits, so PJRT and native
 //! backends are interchangeable bit-for-bit at test tolerance.
+//!
+//! Two kernels implement the same contract:
+//! * [`attention_block`] — the production path: tiled, mask-classified,
+//!   streaming-softmax (see [`tiled`]). Allocation-free in steady state
+//!   through [`attention_block_into`] + [`AttnScratch`].
+//! * [`attention_block_reference`] — the original scalar per-(head,row)
+//!   loop, kept verbatim as the in-crate oracle and the "before" row of
+//!   the `engine_hotpath` bench.
+
+pub mod tiled;
+
+pub use tiled::{attention_block_into, classify, AttnScratch, TileClass, KV_TILE, Q_TILE};
 
 use crate::tensor::Tensor;
 
@@ -19,7 +31,32 @@ pub const MASK_VALUE: f32 = -1e30;
 ///
 /// q: (Sq,H,D); k,v: (Skv,H,D); q_pos: Sq positions; k_pos: Skv positions
 /// (entries < 0 are padding and always masked).
+///
+/// Convenience wrapper over [`attention_block_into`] that allocates its
+/// outputs and scratch; the engine hot path threads a reusable
+/// [`AttnScratch`] instead.
 pub fn attention_block(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    q_pos: &[i32],
+    k_pos: &[i32],
+    causal: bool,
+    sm_scale: Option<f32>,
+) -> (Tensor, Tensor) {
+    let (sq, h, d) = dims3(q);
+    let mut out = Tensor::zeros(&[sq, h, d]);
+    let mut lse = Tensor::zeros(&[h, sq]);
+    let mut scratch = AttnScratch::new();
+    attention_block_into(q, k, v, q_pos, k_pos, causal, sm_scale, &mut scratch, &mut out, &mut lse);
+    (out, lse)
+}
+
+/// The pre-tiling scalar kernel: one pass per (head, q-row) with a
+/// per-element mask test. Kept as the independent oracle for the tiled
+/// kernel's property tests and as the "old kernel" row of
+/// `cargo bench --bench engine_hotpath`.
+pub fn attention_block_reference(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -47,6 +84,7 @@ pub fn attention_block(
     let mut out = Tensor::zeros(&[sq, h, d]);
     let mut lse = Tensor::zeros(&[h, sq]);
     let od = out.data_mut();
+    let ld = lse.data_mut(); // borrowed once, not per (head, row)
     // score row buffer reused across (h, i)
     let mut s = vec![0.0f32; skv];
 
@@ -71,7 +109,7 @@ pub fn attention_block(
                 }
                 any = true;
             }
-            let lse_ref = &mut lse.data_mut()[hi * sq + i];
+            let lse_ref = &mut ld[hi * sq + i];
             let orow = &mut od[(i * h + hi) * d..(i * h + hi + 1) * d];
             if !any {
                 // fully masked: out = 0 (already), lse = MASK_VALUE
@@ -101,9 +139,14 @@ pub fn attention_block(
 
 /// SIMD-friendly dot product: four independent accumulators so the
 /// autovectorizer emits packed FMAs instead of a serial reduction chain.
+///
+/// Lengths must match — a shape bug must fail loudly (debug assert +
+/// out-of-bounds panic in release), never silently truncate to the
+/// shorter operand.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot length mismatch: {} vs {}", a.len(), b.len());
+    let n = a.len();
     let chunks = n / 8;
     let mut acc = [0.0f32; 8];
     for c in 0..chunks {
@@ -122,7 +165,7 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// Vectorizable y += a·x.
 #[inline]
-fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += a * xi;
     }
@@ -134,6 +177,13 @@ fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
 ///   lse = logaddexp(lse, block_lse)
 ///
 /// out/lse are the accumulator; block_out/block_lse the arriving partial.
+///
+/// The per-element blend is branch-hoisted: when `|block_lse - lse| >= 80`
+/// the sigmoid weight is 0 or 1 at f32 resolution, so the row degenerates
+/// to a no-op (incoming row fully masked / negligible — the common decode
+/// case where a device holds no pages for a request) or a straight copy
+/// (accumulator was fully masked). Only genuinely-mixed rows pay the
+/// sigmoid + fused blend.
 pub fn merge_into(
     out: &mut Tensor,
     lse: &mut Tensor,
@@ -151,18 +201,32 @@ pub fn merge_into(
     let bld = block_lse.data();
 
     for hi in 0..h {
+        let lrow = &mut ld[hi * s..(hi + 1) * s];
+        let blrow = &bld[hi * s..(hi + 1) * s];
         for i in 0..s {
-            let a = ld[hi * s + i];
-            let b = bld[hi * s + i];
-            // w = sigmoid(b - a), computed stably for |b-a| large.
-            let w = sigmoid(b - a);
+            let a = lrow[i];
+            let b = blrow[i];
+            let delta = b - a;
+            // w = sigmoid(delta) < 2e-35: below the f32 resolution of the
+            // blend — incoming partial contributes nothing to this row.
+            if b == MASK_VALUE || delta <= -80.0 {
+                continue;
+            }
             let base = (i * h + hi) * d;
             let orow = &mut od[base..base + d];
             let brow = &bod[base..base + d];
+            // w rounds to exactly 1.0: the accumulator row is replaced.
+            if a == MASK_VALUE || delta >= 80.0 {
+                orow.copy_from_slice(brow);
+                lrow[i] = b;
+                continue;
+            }
+            // mixed row: stable sigmoid blend + logaddexp.
+            let w = sigmoid(delta);
             for t in 0..d {
                 orow[t] -= w * (orow[t] - brow[t]);
             }
-            ld[hi * s + i] = logaddexp(a, b);
+            lrow[i] = logaddexp(a, b);
         }
     }
 }
@@ -200,7 +264,7 @@ pub fn logaddexp(a: f32, b: f32) -> f32 {
     hi + (lo - hi).exp().ln_1p()
 }
 
-fn dims3(t: &Tensor) -> (usize, usize, usize) {
+pub(crate) fn dims3(t: &Tensor) -> (usize, usize, usize) {
     let sh = t.shape();
     assert_eq!(sh.len(), 3, "expected rank-3 tensor, got {sh:?}");
     (sh[0], sh[1], sh[2])
@@ -284,6 +348,102 @@ mod tests {
         let (out, _) = attention_block(&q, &k, &v, &qp, &kp, true, None);
         let exp = naive(&q, &k, &v, &qp, &kp, true);
         assert!(out.allclose(&exp, 1e-5), "diff={}", out.max_abs_diff(&exp));
+    }
+
+    #[test]
+    fn tiled_matches_naive_across_tile_boundaries() {
+        // Property sweep: seq lengths straddling Q_TILE/KV_TILE boundaries
+        // (the off-by-one hotbed of tiled kernels), both mask modes, with
+        // query positions straddling the key range so causal tiles land in
+        // all three classes.
+        let mut rng = Rng::new(41);
+        let (h, d) = (2, 8);
+        for &(sq, skv) in &[
+            (1usize, 1usize),
+            (7, 65),
+            (31, 64),
+            (32, 63),
+            (33, 100),
+            (65, 129),
+            (Q_TILE, KV_TILE),
+            (Q_TILE + 1, KV_TILE + 1),
+        ] {
+            for causal in [false, true] {
+                let q = rand_t(&mut rng, &[sq, h, d]);
+                let k = rand_t(&mut rng, &[skv, h, d]);
+                let v = rand_t(&mut rng, &[skv, h, d]);
+                let off = (skv / 2) as i32;
+                let qp: Vec<i32> = (off..off + sq as i32).collect();
+                let kp: Vec<i32> = (0..skv as i32).collect();
+                let (out, lse) = attention_block(&q, &k, &v, &qp, &kp, causal, None);
+                let exp = naive(&q, &k, &v, &qp, &kp, causal);
+                assert!(
+                    out.allclose(&exp, 1e-5),
+                    "sq={sq} skv={skv} causal={causal} diff={}",
+                    out.max_abs_diff(&exp)
+                );
+                let (ro, rl) = attention_block_reference(&q, &k, &v, &qp, &kp, causal, None);
+                assert!(out.allclose(&ro, 1e-5), "vs reference out sq={sq} skv={skv}");
+                assert!(lse.allclose(&rl, 1e-4), "vs reference lse sq={sq} skv={skv}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_reference_gqa_padding_and_fully_masked() {
+        // GQA groups × padding tails × a fully-masked key range, on shapes
+        // that do not divide the tile sizes.
+        let mut rng = Rng::new(42);
+        let d = 8;
+        for &(h, h_kv) in &[(4usize, 1usize), (4, 2), (4, 4)] {
+            for &(sq, skv, pad) in &[(19usize, 70usize, 9usize), (40, 33, 0), (3, 130, 65)] {
+                let q = rand_t(&mut rng, &[sq, h, d]);
+                let k = rand_t(&mut rng, &[skv, h_kv, d]);
+                let v = rand_t(&mut rng, &[skv, h_kv, d]);
+                let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
+                let mut kp: Vec<i32> = (0..skv as i32).collect();
+                kp[skv - pad..].fill(-1);
+                let (out, lse) = attention_block(&q, &k, &v, &qp, &kp, true, None);
+                let (ro, rl) = attention_block_reference(&q, &k, &v, &qp, &kp, true, None);
+                assert!(
+                    out.allclose(&ro, 1e-5),
+                    "h={h} h_kv={h_kv} sq={sq} skv={skv} pad={pad} diff={}",
+                    out.max_abs_diff(&ro)
+                );
+                assert!(lse.allclose(&rl, 1e-4));
+            }
+        }
+        // every key in the future → all tiles FullyMasked → exact zeros
+        let q = rand_t(&mut rng, &[67, 2, d]);
+        let k = rand_t(&mut rng, &[67, 2, d]);
+        let qp: Vec<i32> = (0..67).collect();
+        let kp: Vec<i32> = (1000..1067).collect();
+        let (out, lse) = attention_block(&q, &k, &k, &qp, &kp, true, None);
+        assert!(out.data().iter().all(|&x| x == 0.0));
+        assert!(lse.data().iter().all(|&x| x == MASK_VALUE));
+    }
+
+    #[test]
+    fn tiled_matches_reference_zigzag_positions() {
+        // Zigzag shards hand the kernel interleaved, non-monotonic
+        // positions; extent-based classification must stay correct.
+        let mut rng = Rng::new(43);
+        let (h, d, s) = (2, 8, 48);
+        let q = rand_t(&mut rng, &[s, h, d]);
+        let k = rand_t(&mut rng, &[s, h, d]);
+        let v = rand_t(&mut rng, &[s, h, d]);
+        // device-0 zigzag positions over a 4-device, 192-token sequence:
+        // chunk 0 (0..24) + chunk 7 (168..192), interleaved pairwise to
+        // stress per-tile extents further
+        let mut pos: Vec<i32> = Vec::new();
+        for i in 0..24 {
+            pos.push(i);
+            pos.push(168 + i);
+        }
+        let (out, lse) = attention_block(&q, &k, &v, &pos, &pos, true, None);
+        let (ro, rl) = attention_block_reference(&q, &k, &v, &pos, &pos, true, None);
+        assert!(out.allclose(&ro, 1e-5), "diff={}", out.max_abs_diff(&ro));
+        assert!(lse.allclose(&rl, 1e-4));
     }
 
     #[test]
@@ -374,6 +534,54 @@ mod tests {
     }
 
     #[test]
+    fn merge_into_masked_accumulator_copies_partial() {
+        // the w≈1 fast path: a fully-masked accumulator adopts the partial
+        let mut rng = Rng::new(60);
+        let (s, h, d) = (8, 2, 4);
+        let q = rand_t(&mut rng, &[s, h, d]);
+        let k = rand_t(&mut rng, &[s, h, d]);
+        let v = rand_t(&mut rng, &[s, h, d]);
+        let (bo, bl) = full_attention(&q, &k, &v, false);
+        let mut out = Tensor::zeros(&[s, h, d]);
+        let mut lse = Tensor::full(&[h, s], MASK_VALUE);
+        merge_into(&mut out, &mut lse, &bo, &bl);
+        assert!(out.allclose(&bo, 1e-7));
+        assert!(lse.allclose(&bl, 1e-7));
+    }
+
+    #[test]
+    fn merge_fast_paths_match_plain_blend() {
+        // rows with |Δlse| just inside vs. beyond the 80 cutoff must agree
+        // with the unhoisted formula at f32 resolution
+        let (s, h, d) = (6usize, 1usize, 4usize);
+        let mut rng = Rng::new(61);
+        let base_o = rand_t(&mut rng, &[s, h, d]);
+        let base_l = Tensor::new(&[h, s], vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let bo = rand_t(&mut rng, &[s, h, d]);
+        let bl = Tensor::new(&[h, s], vec![-100.0, -79.0, -1.0, 1.0, 79.0, 100.0]);
+        let mut out = base_o.clone();
+        let mut lse = base_l.clone();
+        merge_into(&mut out, &mut lse, &bo, &bl);
+        // unhoisted reference blend
+        let mut exp_o = base_o.clone();
+        let mut exp_l = base_l.clone();
+        {
+            let eo = exp_o.data_mut();
+            let el = exp_l.data_mut();
+            for i in 0..s {
+                let w = sigmoid(bl.data()[i] - el[i]);
+                for t in 0..d {
+                    let idx = i * d + t;
+                    eo[idx] -= w * (eo[idx] - bo.data()[idx]);
+                }
+                el[i] = logaddexp(el[i], bl.data()[i]);
+            }
+        }
+        assert!(out.allclose(&exp_o, 1e-6), "diff={}", out.max_abs_diff(&exp_o));
+        assert!(lse.allclose(&exp_l, 1e-6));
+    }
+
+    #[test]
     fn merge_order_invariance() {
         // 4 partials merged in two different orders give the same result —
         // the invariant TokenRing's asynchronous arrivals rely on.
@@ -446,6 +654,14 @@ mod tests {
         let q = Tensor::zeros(&[4, 3, 8]);
         let kv = Tensor::zeros(&[4, 2, 8]);
         attention_block(&q, &kv, &kv, &[0, 1, 2, 3], &[0, 1, 2, 3], true, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn reference_rejects_uneven_groups_too() {
+        let q = Tensor::zeros(&[4, 3, 8]);
+        let kv = Tensor::zeros(&[4, 2, 8]);
+        attention_block_reference(&q, &kv, &kv, &[0, 1, 2, 3], &[0, 1, 2, 3], true, None);
     }
 
     #[test]

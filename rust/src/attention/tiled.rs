@@ -1,0 +1,394 @@
+//! Tiled, mask-classified flash-style attention kernel.
+//!
+//! The scalar reference kernel walks every (head, q-row, key) triple and
+//! tests the causal mask per element. This kernel restructures the same
+//! computation as Q-tiles × KV-tiles with a *per-tile* mask classification
+//! (the CPU analog of kernels/flash.py's VMEM tile loop):
+//!
+//! * `FullyMasked`  — the whole tile is causally invisible (or all-padding):
+//!                    skipped outright. Under zigzag-causal partitions about
+//!                    half of all tiles land here.
+//! * `FullyVisible` — every (q, k) pair is visible: scored by a branch-free
+//!                    micro-kernel with **no per-element position test**.
+//! * `Mixed`        — the diagonal / padded tiles only: the masked path.
+//!
+//! Softmax state (running row max `m`, denominator `l`, unnormalized
+//! accumulator rows) streams across KV tiles with the standard online
+//! rescaling, so tile order does not change the math beyond f32 rounding.
+//! All working memory lives in a caller-provided [`AttnScratch`], so the
+//! steady-state kernel performs zero heap allocations.
+
+use crate::tensor::Tensor;
+
+use super::{axpy, dims3, dot, MASK_VALUE};
+
+/// Rows of Q per tile. Matches the reference artifact granularity closely
+/// enough that engine blocks (S/N rows) split into a handful of tiles.
+pub const Q_TILE: usize = 32;
+/// Keys per tile; wider than `Q_TILE` because the score-tile inner loop
+/// streams keys.
+pub const KV_TILE: usize = 64;
+
+/// Per-tile mask classification (exposed for tests and the bench harness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileClass {
+    /// Every (q, k) pair masked — tile skipped entirely.
+    FullyMasked,
+    /// Every (q, k) pair visible — branch-free micro-kernel.
+    FullyVisible,
+    /// Diagonal or padded tile — per-element mask path.
+    Mixed,
+}
+
+/// Position extent of one tile: min/max over non-padding entries plus a
+/// padding flag. Positions need not be sorted (zigzag shards interleave),
+/// so extents, not endpoints, drive classification.
+#[derive(Debug, Clone, Copy)]
+pub struct Extent {
+    min: i32,
+    max: i32,
+    any_pad: bool,
+}
+
+impl Extent {
+    /// Key-tile extent: entries < 0 are padding (always masked), so they
+    /// are excluded from the min/max and tracked via `any_pad`.
+    fn of_keys(pos: &[i32]) -> Extent {
+        let mut min = i32::MAX;
+        let mut max = i32::MIN;
+        let mut any_pad = false;
+        for &p in pos {
+            if p < 0 {
+                any_pad = true;
+            } else {
+                min = min.min(p);
+                max = max.max(p);
+            }
+        }
+        Extent { min, max, any_pad }
+    }
+
+    /// Query-tile extent: negative query positions are ordinary (very
+    /// early) positions — only *key* positions encode padding — so the
+    /// min/max covers every entry. Dropping them would let a tile mixing
+    /// negative and large positive q positions classify `FullyVisible`
+    /// and skip the mask test the reference kernel applies.
+    fn of_queries(pos: &[i32]) -> Extent {
+        let mut min = i32::MAX;
+        let mut max = i32::MIN;
+        for &p in pos {
+            min = min.min(p);
+            max = max.max(p);
+        }
+        Extent { min, max, any_pad: false }
+    }
+
+    fn all_pad(&self) -> bool {
+        self.max == i32::MIN
+    }
+}
+
+/// Classify one (q-tile, kv-tile) pair. `masked(q, k) = k < 0 || (causal
+/// && q < k)`, so: all keys padding → FullyMasked; any padding → Mixed;
+/// otherwise compare position extents against the causal frontier.
+pub fn classify(q: Extent, k: Extent, causal: bool) -> TileClass {
+    if k.all_pad() {
+        return TileClass::FullyMasked;
+    }
+    if k.any_pad {
+        return TileClass::Mixed;
+    }
+    if !causal {
+        return TileClass::FullyVisible;
+    }
+    if q.max < k.min {
+        return TileClass::FullyMasked;
+    }
+    if q.min >= k.max {
+        return TileClass::FullyVisible;
+    }
+    TileClass::Mixed
+}
+
+/// Reusable working set for the tiled kernel. One per device actor —
+/// buffers grow to the steady-state shape on first use and are then
+/// reused with no further allocation.
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    /// (Q_TILE, KV_TILE) score tile, row-major.
+    scores: Vec<f32>,
+    /// Running row maxima, Q_TILE.
+    m: Vec<f32>,
+    /// Running row denominators, Q_TILE.
+    l: Vec<f32>,
+    /// Unnormalized output rows, (Q_TILE, D).
+    acc: Vec<f32>,
+    /// Per-tile classification metadata.
+    q_ext: Vec<Extent>,
+    k_ext: Vec<Extent>,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    fn ensure(&mut self, d: usize) {
+        if self.scores.len() < Q_TILE * KV_TILE {
+            self.scores.resize(Q_TILE * KV_TILE, 0.0);
+        }
+        if self.m.len() < Q_TILE {
+            self.m.resize(Q_TILE, 0.0);
+            self.l.resize(Q_TILE, 0.0);
+        }
+        if self.acc.len() < Q_TILE * d {
+            self.acc.resize(Q_TILE * d, 0.0);
+        }
+    }
+}
+
+/// Tiled attention of one query block against one KV block, written into
+/// caller-provided `out` `(Sq, H, D)` and `lse` `(H, Sq)`. Semantics match
+/// the scalar reference (`attention_block_reference`) at f32-rounding
+/// distance; fully-masked rows produce `(out = 0, lse = MASK_VALUE)`
+/// exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_block_into(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    q_pos: &[i32],
+    k_pos: &[i32],
+    causal: bool,
+    sm_scale: Option<f32>,
+    scratch: &mut AttnScratch,
+    out: &mut Tensor,
+    lse: &mut Tensor,
+) {
+    let (sq, h, d) = dims3(q);
+    let (skv, h_kv, dk) = dims3(k);
+    assert_eq!(d, dk, "q/k head_dim mismatch");
+    assert!(
+        h_kv > 0 && h % h_kv == 0,
+        "GQA wants q heads {h} divisible by kv heads {h_kv}"
+    );
+    assert_eq!(k.shape(), v.shape(), "k/v shape mismatch");
+    assert_eq!(q_pos.len(), sq, "q_pos length");
+    assert_eq!(k_pos.len(), skv, "k_pos length");
+    assert_eq!(out.shape(), &[sq, h, d], "out shape");
+    assert_eq!(lse.shape(), &[h, sq], "lse shape");
+    let group = h / h_kv; // GQA: `group` query heads share one KV head
+    let scale = sm_scale.unwrap_or(1.0 / (d as f32).sqrt());
+
+    scratch.ensure(d);
+    let AttnScratch { scores, m, l, acc, q_ext, k_ext } = scratch;
+
+    // tile extents: computed once, shared by every head
+    q_ext.clear();
+    q_ext.extend(q_pos.chunks(Q_TILE).map(Extent::of_queries));
+    k_ext.clear();
+    k_ext.extend(k_pos.chunks(KV_TILE).map(Extent::of_keys));
+
+    let qd = q.data();
+    let kd = k.data();
+    let vd = v.data();
+    let od = out.data_mut();
+    let ld = lse.data_mut();
+
+    for hi in 0..h {
+        let hk = hi / group;
+        for (qt, qe) in q_ext.iter().enumerate() {
+            let i0 = qt * Q_TILE;
+            let tq = sq.min(i0 + Q_TILE) - i0;
+            m[..tq].fill(f32::NEG_INFINITY);
+            l[..tq].fill(0.0);
+            acc[..tq * d].fill(0.0);
+
+            for (kt, ke) in k_ext.iter().enumerate() {
+                let j0 = kt * KV_TILE;
+                let tk = skv.min(j0 + KV_TILE) - j0;
+                match classify(*qe, *ke, causal) {
+                    TileClass::FullyMasked => continue,
+                    TileClass::FullyVisible => {
+                        // branch-free: no per-element position test
+                        for ii in 0..tq {
+                            let qrow = &qd[((i0 + ii) * h + hi) * d..][..d];
+                            let srow = &mut scores[ii * KV_TILE..ii * KV_TILE + tk];
+                            for (jj, sj) in srow.iter_mut().enumerate() {
+                                let krow = &kd[((j0 + jj) * h_kv + hk) * d..][..d];
+                                *sj = dot(qrow, krow) * scale;
+                            }
+                        }
+                    }
+                    TileClass::Mixed => {
+                        for ii in 0..tq {
+                            let qp = q_pos[i0 + ii];
+                            let qrow = &qd[((i0 + ii) * h + hi) * d..][..d];
+                            let srow = &mut scores[ii * KV_TILE..ii * KV_TILE + tk];
+                            for (jj, sj) in srow.iter_mut().enumerate() {
+                                let kp = k_pos[j0 + jj];
+                                if kp < 0 || (causal && qp < kp) {
+                                    *sj = f32::NEG_INFINITY; // sentinel
+                                } else {
+                                    let krow = &kd[((j0 + jj) * h_kv + hk) * d..][..d];
+                                    *sj = dot(qrow, krow) * scale;
+                                }
+                            }
+                        }
+                    }
+                }
+
+                // streaming softmax update across KV tiles
+                for ii in 0..tq {
+                    let srow = &scores[ii * KV_TILE..ii * KV_TILE + tk];
+                    let mut tile_m = f32::NEG_INFINITY;
+                    for &sj in srow {
+                        if sj > tile_m {
+                            tile_m = sj;
+                        }
+                    }
+                    if tile_m == f32::NEG_INFINITY {
+                        continue; // row fully masked within this tile
+                    }
+                    let arow = &mut acc[ii * d..(ii + 1) * d];
+                    if tile_m > m[ii] {
+                        // renormalize prior state to the new max (no-op on
+                        // the first contributing tile: l and acc are zero)
+                        if m[ii] != f32::NEG_INFINITY {
+                            let corr = (m[ii] - tile_m).exp();
+                            l[ii] *= corr;
+                            for t in arow.iter_mut() {
+                                *t *= corr;
+                            }
+                        }
+                        m[ii] = tile_m;
+                    }
+                    let mx = m[ii];
+                    let mut lsum = 0.0f32;
+                    for (jj, &sj) in srow.iter().enumerate() {
+                        if sj == f32::NEG_INFINITY {
+                            continue;
+                        }
+                        let p = (sj - mx).exp();
+                        lsum += p;
+                        let vrow = &vd[((j0 + jj) * h_kv + hk) * d..][..d];
+                        axpy(arow, p, vrow);
+                    }
+                    l[ii] += lsum;
+                }
+            }
+
+            // finalize the q tile
+            for ii in 0..tq {
+                let gi = i0 + ii;
+                let orow = &mut od[(gi * h + hi) * d..][..d];
+                if l[ii] == 0.0 {
+                    orow.fill(0.0);
+                    ld[hi * sq + gi] = MASK_VALUE;
+                } else {
+                    let inv = 1.0 / l[ii];
+                    let arow = &acc[ii * d..(ii + 1) * d];
+                    for (o, &a) in orow.iter_mut().zip(arow) {
+                        *o = a * inv;
+                    }
+                    ld[hi * sq + gi] = m[ii] + l[ii].ln();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qext(pos: &[i32]) -> Extent {
+        Extent::of_queries(pos)
+    }
+
+    fn ext(pos: &[i32]) -> Extent {
+        Extent::of_keys(pos)
+    }
+
+    #[test]
+    fn classification_covers_the_causal_frontier() {
+        // q rows 8..16, keys 0..8: everything in the past → visible
+        assert_eq!(classify(qext(&[8, 15]), ext(&[0, 7]), true), TileClass::FullyVisible);
+        // q rows 0..8, keys 8..16: everything in the future → masked
+        assert_eq!(classify(qext(&[0, 7]), ext(&[8, 15]), true), TileClass::FullyMasked);
+        // overlapping extents → diagonal tile
+        assert_eq!(classify(qext(&[4, 11]), ext(&[8, 15]), true), TileClass::Mixed);
+        // non-causal ignores positions entirely
+        assert_eq!(classify(qext(&[0, 7]), ext(&[8, 15]), false), TileClass::FullyVisible);
+        // zigzag-style interleaved q positions still classify by extent
+        assert_eq!(classify(qext(&[0, 63, 1, 62]), ext(&[70, 71]), true), TileClass::FullyMasked);
+        // a NEGATIVE query position is an ordinary early position, not
+        // padding: it must drag the q extent down and force Mixed so the
+        // per-element mask test runs for that row
+        assert_eq!(classify(qext(&[-1, 100]), ext(&[0, 63]), true), TileClass::Mixed);
+        // ...but non-causally it stays visible (only keys encode padding)
+        assert_eq!(classify(qext(&[-1, 100]), ext(&[0, 63]), false), TileClass::FullyVisible);
+    }
+
+    #[test]
+    fn classification_padding_rules() {
+        // all-padding keys are masked even non-causally
+        assert_eq!(classify(ext(&[5]), ext(&[-1, -1]), false), TileClass::FullyMasked);
+        // partial padding always forces the per-element path
+        assert_eq!(classify(ext(&[5]), ext(&[0, -1]), false), TileClass::Mixed);
+        assert_eq!(classify(ext(&[5]), ext(&[0, -1]), true), TileClass::Mixed);
+    }
+
+    #[test]
+    fn negative_query_positions_match_reference() {
+        // regression: a q tile mixing a negative position with large
+        // positive ones must not classify FullyVisible — the reference
+        // masks every causal pair for the negative row
+        use crate::attention::attention_block_reference;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(98);
+        let (sq, skv, h, d) = (4usize, 64usize, 2usize, 8usize);
+        let q = Tensor::new(&[sq, h, d], rng.normal_vec(sq * h * d, 1.0));
+        let k = Tensor::new(&[skv, h, d], rng.normal_vec(skv * h * d, 1.0));
+        let v = Tensor::new(&[skv, h, d], rng.normal_vec(skv * h * d, 1.0));
+        let qp = [-1, 100, 101, 102];
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        for causal in [true, false] {
+            let mut out = Tensor::zeros(&[sq, h, d]);
+            let mut lse = Tensor::zeros(&[h, sq]);
+            let mut scratch = AttnScratch::new();
+            attention_block_into(&q, &k, &v, &qp, &kp, causal, None, &mut scratch, &mut out, &mut lse);
+            let (eo, el) = attention_block_reference(&q, &k, &v, &qp, &kp, causal, None);
+            assert!(out.allclose(&eo, 1e-5), "causal={causal} diff={}", out.max_abs_diff(&eo));
+            assert!(lse.allclose(&el, 1e-4), "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn equal_positions_are_visible() {
+        // masked is q < k, strictly: a self-attention diagonal pair is visible
+        assert_eq!(classify(ext(&[3]), ext(&[3]), true), TileClass::FullyVisible);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable() {
+        // same scratch across calls with different shapes must not corrupt
+        use crate::attention::attention_block_reference;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let mut scratch = AttnScratch::new();
+        for &(sq, skv, h, d) in &[(5usize, 9usize, 2usize, 4usize), (33, 65, 1, 8), (16, 16, 2, 4)] {
+            let q = Tensor::new(&[sq, h, d], rng.normal_vec(sq * h * d, 1.0));
+            let k = Tensor::new(&[skv, h, d], rng.normal_vec(skv * h * d, 1.0));
+            let v = Tensor::new(&[skv, h, d], rng.normal_vec(skv * h * d, 1.0));
+            let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
+            let kp: Vec<i32> = (0..skv as i32).collect();
+            let mut out = Tensor::zeros(&[sq, h, d]);
+            let mut lse = Tensor::zeros(&[h, sq]);
+            attention_block_into(&q, &k, &v, &qp, &kp, true, None, &mut scratch, &mut out, &mut lse);
+            let (eo, el) = attention_block_reference(&q, &k, &v, &qp, &kp, true, None);
+            assert!(out.allclose(&eo, 1e-5), "sq={sq} diff={}", out.max_abs_diff(&eo));
+            assert!(lse.allclose(&el, 1e-4));
+        }
+    }
+}

@@ -5,14 +5,73 @@
 //! numbers (rust/tests/pjrt_roundtrip.rs), so device actors can use either
 //! — PJRT wrapper types are not `Send`, hence each device thread builds its
 //! own backend from a `BackendSpec`.
+//!
+//! Every compute call threads a [`Scratch`] arena owned by the device
+//! actor: the tiled kernel's working set plus a free list of recycled
+//! out/lse buffers, so the steady-state micro-step performs no heap
+//! allocation on the native path.
+
+// attn_block carries (q, k, v, q_pos, k_pos, causal, scratch): the
+// signature mirrors the artifact ABI, so the arity is the contract.
+#![allow(clippy::too_many_arguments)]
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::attention;
+use crate::attention::{self, AttnScratch};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
+
+/// Per-device-actor scratch arena.
+///
+/// `kernel` is the tiled kernel's tile/softmax working set. `free` banks
+/// the backing buffers of consumed partials (the accumulator recycles a
+/// merged partial's storage here), handing them back to the next
+/// `attn_block` as its out/lse outputs — in steady state every ring step
+/// reuses the buffers freed by the previous step's merge.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pub kernel: AttnScratch,
+    free: Vec<Vec<f32>>,
+}
+
+/// Cap on banked buffers: 2 live per in-flight partial is typical; beyond
+/// this the arena is holding dead memory, not smoothing allocation.
+const MAX_FREE_BUFFERS: usize = 16;
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing a recycled
+    /// allocation when one is large enough.
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        if let Some(i) = self.free.iter().rposition(|b| b.capacity() >= len) {
+            let mut b = self.free.swap_remove(i);
+            b.clear();
+            b.resize(len, 0.0);
+            return b;
+        }
+        vec![0.0; len]
+    }
+
+    /// Bank a consumed tensor's storage for reuse — a no-op if the buffer
+    /// is still shared (e.g. a zero-copy view) or the bank is full.
+    pub fn recycle(&mut self, t: Tensor) {
+        if self.free.len() < MAX_FREE_BUFFERS {
+            if let Some(b) = t.into_unique_data() {
+                self.free.push(b);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn banked(&self) -> usize {
+        self.free.len()
+    }
+}
 
 /// How a device actor computes its blocks.
 #[derive(Debug, Clone)]
@@ -43,7 +102,9 @@ impl BackendSpec {
 
 /// One device's compute engine.
 pub trait Backend: Send {
-    /// One attention micro-step producing (block_out, block_lse).
+    /// One attention micro-step producing (block_out, block_lse), drawing
+    /// working memory and output buffers from the caller's arena.
+    #[allow(clippy::too_many_arguments)]
     fn attn_block(
         &mut self,
         q: &Tensor,
@@ -52,6 +113,7 @@ pub trait Backend: Send {
         q_pos: &[i32],
         k_pos: &[i32],
         causal: bool,
+        scratch: &mut Scratch,
     ) -> Result<(Tensor, Tensor)>;
 
     /// Merge a partial into the accumulator (paper's Update rule).
@@ -61,6 +123,7 @@ pub trait Backend: Send {
         lse: &mut Tensor,
         block_out: &Tensor,
         block_lse: &Tensor,
+        scratch: &mut Scratch,
     ) -> Result<()>;
 
     fn name(&self) -> &'static str;
@@ -78,8 +141,24 @@ impl Backend for NativeBackend {
         q_pos: &[i32],
         k_pos: &[i32],
         causal: bool,
+        scratch: &mut Scratch,
     ) -> Result<(Tensor, Tensor)> {
-        Ok(attention::attention_block(q, k, v, q_pos, k_pos, causal, None))
+        let (sq, h, d) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+        let mut out = Tensor::new(&[sq, h, d], scratch.take_buf(sq * h * d));
+        let mut lse = Tensor::new(&[h, sq], scratch.take_buf(h * sq));
+        attention::attention_block_into(
+            q,
+            k,
+            v,
+            q_pos,
+            k_pos,
+            causal,
+            None,
+            &mut scratch.kernel,
+            &mut out,
+            &mut lse,
+        );
+        Ok((out, lse))
     }
 
     fn merge(
@@ -88,6 +167,7 @@ impl Backend for NativeBackend {
         lse: &mut Tensor,
         block_out: &Tensor,
         block_lse: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<()> {
         attention::merge_into(out, lse, block_out, block_lse);
         Ok(())
@@ -125,6 +205,7 @@ impl Backend for PjrtBackend {
         q_pos: &[i32],
         k_pos: &[i32],
         causal: bool,
+        _scratch: &mut Scratch,
     ) -> Result<(Tensor, Tensor)> {
         let artifact = self.rt.manifest().attn_name(&self.profile, causal);
         self.rt.attn_block(&artifact, q, k, v, q_pos, k_pos)
@@ -136,6 +217,7 @@ impl Backend for PjrtBackend {
         lse: &mut Tensor,
         block_out: &Tensor,
         block_lse: &Tensor,
+        _scratch: &mut Scratch,
     ) -> Result<()> {
         let artifact = format!("merge_{}", self.profile);
         let (o, l) = self.rt.merge(&artifact, out, lse, block_out, block_lse)?;
@@ -163,10 +245,63 @@ mod tests {
         let v = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
         let pos: Vec<i32> = (0..s as i32).collect();
         let mut b = NativeBackend;
-        let (out, lse) = b.attn_block(&q, &k, &v, &pos, &pos, true).unwrap();
+        let mut scratch = Scratch::new();
+        let (out, lse) = b.attn_block(&q, &k, &v, &pos, &pos, true, &mut scratch).unwrap();
         let (eo, el) = attention::full_attention(&q, &k, &v, true);
         assert!(out.allclose(&eo, 1e-6));
         assert!(lse.allclose(&el, 1e-6));
+    }
+
+    #[test]
+    fn scratch_recycles_consumed_partials() {
+        let mut scratch = Scratch::new();
+        // a uniquely-owned tensor's buffer is banked...
+        scratch.recycle(Tensor::zeros(&[4, 2, 2]));
+        assert_eq!(scratch.banked(), 1);
+        // ...and handed back without reallocating
+        let buf = scratch.take_buf(16);
+        assert_eq!(buf.len(), 16);
+        assert_eq!(scratch.banked(), 0);
+        // shared storage is never banked (the clone still owns it)
+        let t = Tensor::zeros(&[8]);
+        let keep = t.clone();
+        scratch.recycle(t);
+        assert_eq!(scratch.banked(), 0);
+        drop(keep);
+        // a view is never banked either (offset into a larger buffer)
+        let big = Tensor::zeros(&[8, 2]);
+        scratch.recycle(big.slice_rows(2, 4));
+        assert_eq!(scratch.banked(), 0);
+    }
+
+    #[test]
+    fn steady_state_attn_block_reuses_buffers() {
+        let mut rng = Rng::new(9);
+        let (s, h, d) = (16, 2, 8);
+        let q = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
+        let k = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
+        let v = Tensor::new(&[s, h, d], rng.normal_vec(s * h * d, 1.0));
+        let pos: Vec<i32> = (0..s as i32).collect();
+        let mut b = NativeBackend;
+        let mut scratch = Scratch::new();
+        let (o1, l1) = b.attn_block(&q, &k, &v, &pos, &pos, true, &mut scratch).unwrap();
+        let expect = o1.clone();
+        let expect_l = l1.clone();
+        // consume the partial (as the accumulator does) and recycle
+        scratch.recycle(o1);
+        scratch.recycle(l1);
+        // the clone keeps the storage alive → nothing banked from o1
+        assert_eq!(scratch.banked(), 0);
+        let (o2, l2) = b.attn_block(&q, &k, &v, &pos, &pos, true, &mut scratch).unwrap();
+        assert!(o2.allclose(&expect, 0.0), "steady-state recompute must be identical");
+        assert!(l2.allclose(&expect_l, 0.0));
+        // now the partial is truly consumed → both buffers banked
+        scratch.recycle(o2);
+        scratch.recycle(l2);
+        assert_eq!(scratch.banked(), 2);
+        let (o3, _l3) = b.attn_block(&q, &k, &v, &pos, &pos, true, &mut scratch).unwrap();
+        assert_eq!(scratch.banked(), 0, "steady state draws from the bank");
+        assert!(o3.allclose(&expect, 0.0));
     }
 
     #[test]

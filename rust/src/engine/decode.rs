@@ -18,6 +18,7 @@ use crate::metrics::{Clock, Event, Timeline};
 use crate::simulator::SpanTag;
 use crate::tensor::Tensor;
 
+use super::backend::Scratch;
 use super::kv_cache::KvCache;
 use super::EngineOpts;
 
@@ -99,6 +100,7 @@ pub fn run_decode_ring(
         let opts = opts.clone();
         handles.push(thread::spawn(move || -> Result<_> {
             let mut backend = opts.backend.build()?;
+            let mut scratch = Scratch::new();
             let mut tl = Timeline::new();
             // accumulators for my home requests
             let mut acc: HashMap<usize, (Tensor, Tensor)> = HashMap::new();
@@ -138,7 +140,8 @@ pub fn run_decode_ring(
                         )
                     } else {
                         let t0 = clock.now();
-                        let r = backend.attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal)?;
+                        let r = backend
+                            .attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal, &mut scratch)?;
                         tl.push(Event {
                             device: j,
                             tag: SpanTag::Compute,
@@ -152,7 +155,7 @@ pub fn run_decode_ring(
                     };
                     let home = dq.request % n;
                     if home == j {
-                        merge_acc(&mut acc, backend.as_mut(), dq.request, bo, bl)?;
+                        merge_acc(&mut acc, backend.as_mut(), &mut scratch, dq.request, bo, bl)?;
                     } else {
                         txs[home]
                             .send(Msg::Partial { request: dq.request, out: bo, lse: bl })
@@ -173,7 +176,7 @@ pub fn run_decode_ring(
                                 break;
                             }
                             Msg::Partial { request, out, lse } => {
-                                merge_acc(&mut acc, backend.as_mut(), request, out, lse)?;
+                                merge_acc(&mut acc, backend.as_mut(), &mut scratch, request, out, lse)?;
                                 merged += 1;
                             }
                         }
@@ -184,7 +187,7 @@ pub fn run_decode_ring(
             while merged < my_expected {
                 match rx.recv().map_err(|_| anyhow!("recv tail"))? {
                     Msg::Partial { request, out, lse } => {
-                        merge_acc(&mut acc, backend.as_mut(), request, out, lse)?;
+                        merge_acc(&mut acc, backend.as_mut(), &mut scratch, request, out, lse)?;
                         merged += 1;
                     }
                     Msg::QBatch(b) => pending_batches.push(b),
@@ -207,6 +210,7 @@ pub fn run_decode_ring(
 fn merge_acc(
     acc: &mut HashMap<usize, (Tensor, Tensor)>,
     backend: &mut dyn super::backend::Backend,
+    scratch: &mut Scratch,
     request: usize,
     out: Tensor,
     lse: Tensor,
@@ -215,7 +219,11 @@ fn merge_acc(
         None => {
             acc.insert(request, (out, lse));
         }
-        Some((o, l)) => backend.merge(o, l, &out, &lse)?,
+        Some((o, l)) => {
+            backend.merge(o, l, &out, &lse, scratch)?;
+            scratch.recycle(out);
+            scratch.recycle(lse);
+        }
     }
     Ok(())
 }

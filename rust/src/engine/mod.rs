@@ -7,6 +7,13 @@
 //! compute blocks through a `Backend` (native Rust or PJRT artifacts) and
 //! the driver reassembles and verifies the distributed output.
 //!
+//! Ring traffic is zero-copy: `Tensor` storage is `Arc`-shared, so the
+//! per-step `clone()` into a `Msg` is a refcount bump and a channel send
+//! moves a handle, never a buffer — the engine analog of passing a device
+//! pointer to the transport. Each actor owns a [`Scratch`] arena that the
+//! tiled kernel and the merge recycle buffers through, so a steady-state
+//! ring step performs no `Vec<f32>` allocation on the native path.
+//!
 //! Three schedules are implemented for real execution:
 //! * `run_token_ring`      — Algorithm 1 (Q forward, partials homeward)
 //! * `run_ring_attention`  — KV-circulating baseline
@@ -20,6 +27,7 @@ pub mod ulysses;
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::{anyhow, Context, Result};
@@ -28,20 +36,23 @@ use crate::metrics::{Clock, Event, Timeline};
 use crate::parallelism::partition::Partition;
 use crate::simulator::SpanTag;
 use crate::tensor::Tensor;
-use backend::{Backend, BackendSpec};
+use backend::{Backend, BackendSpec, Scratch};
 
-/// Inter-device message. Tensors are moved, not copied — a channel send is
-/// the zero-copy device-to-device DMA of the real system.
+/// Inter-device message. Tensor payloads share storage with the sender's
+/// copy (`Arc`-backed), and position vectors circulate behind an `Arc` —
+/// a send is the zero-copy device-to-device DMA of the real system.
 enum Msg {
     /// A circulating query block (TokenRing forward direction).
-    Q { owner: usize, q: Tensor, pos: Vec<i32> },
+    Q { owner: usize, q: Tensor, pos: Arc<Vec<i32>> },
     /// A partial result flying home (TokenRing backward direction).
     Partial { out: Tensor, lse: Tensor },
     /// A circulating KV block (Ring-Attention / hybrid inter-node).
-    Kv { k: Tensor, v: Tensor, pos: Vec<i32> },
+    Kv { k: Tensor, v: Tensor, pos: Arc<Vec<i32>> },
 }
 
 impl Msg {
+    /// Logical payload size — what the wire would carry; the in-process
+    /// send itself moves only handles.
     fn bytes(&self) -> usize {
         match self {
             Msg::Q { q, pos, .. } => q.size_bytes() + pos.len() * 4,
@@ -85,7 +96,7 @@ pub struct EngineOutput {
 /// Per-device slice of the problem.
 struct Shard {
     positions: Vec<usize>,
-    pos_i32: Vec<i32>,
+    pos_i32: Arc<Vec<i32>>,
     q: Tensor,
     k: Tensor,
     v: Tensor,
@@ -97,7 +108,7 @@ fn make_shards(q: &Tensor, k: &Tensor, v: &Tensor, parts: &[Vec<u32>]) -> Vec<Sh
         .map(|p| {
             let idx: Vec<usize> = p.iter().map(|&x| x as usize).collect();
             Shard {
-                pos_i32: p.iter().map(|&x| x as i32).collect(),
+                pos_i32: Arc::new(p.iter().map(|&x| x as i32).collect()),
                 q: q.gather_rows(&idx),
                 k: k.gather_rows(&idx),
                 v: v.gather_rows(&idx),
@@ -118,12 +129,7 @@ fn assemble(
     let mut lse = Tensor::zeros(&[heads, seq]);
     for (positions, o, l) in parts {
         o.scatter_rows_into(&mut out, &positions);
-        let s_loc = positions.len();
-        for h in 0..heads {
-            for (i, &p) in positions.iter().enumerate() {
-                lse.data_mut()[h * seq + p] = l.data()[h * s_loc + i];
-            }
-        }
+        l.scatter_cols_into(&mut lse, &positions);
     }
     (out, lse)
 }
@@ -187,8 +193,8 @@ impl Recorder {
 /// banking early arrivals of the others (partials merge eagerly upstream).
 struct Mailbox {
     rx: Receiver<Msg>,
-    q: VecDeque<(usize, Tensor, Vec<i32>)>,
-    kv: VecDeque<(Tensor, Tensor, Vec<i32>)>,
+    q: VecDeque<(usize, Tensor, Arc<Vec<i32>>)>,
+    kv: VecDeque<(Tensor, Tensor, Arc<Vec<i32>>)>,
     partials: VecDeque<(Tensor, Tensor)>,
 }
 
@@ -205,7 +211,7 @@ impl Mailbox {
         }
     }
 
-    fn next_q(&mut self) -> Result<(usize, Tensor, Vec<i32>)> {
+    fn next_q(&mut self) -> Result<(usize, Tensor, Arc<Vec<i32>>)> {
         loop {
             if let Some(x) = self.q.pop_front() {
                 return Ok(x);
@@ -215,7 +221,7 @@ impl Mailbox {
         }
     }
 
-    fn next_kv(&mut self) -> Result<(Tensor, Tensor, Vec<i32>)> {
+    fn next_kv(&mut self) -> Result<(Tensor, Tensor, Arc<Vec<i32>>)> {
         loop {
             if let Some(x) = self.kv.pop_front() {
                 return Ok(x);
@@ -244,6 +250,9 @@ impl Mailbox {
 }
 
 /// Accumulator wrapper: first partial initializes, rest merge via backend.
+/// Consumed partials' buffers are recycled into the scratch arena, closing
+/// the steady-state allocation loop (merge frees what the next attn_block
+/// needs).
 struct Accumulator {
     state: Option<(Tensor, Tensor)>,
 }
@@ -256,6 +265,7 @@ impl Accumulator {
     fn add(
         &mut self,
         backend: &mut dyn Backend,
+        scratch: &mut Scratch,
         out: Tensor,
         lse: Tensor,
     ) -> Result<()> {
@@ -264,7 +274,12 @@ impl Accumulator {
                 self.state = Some((out, lse));
                 Ok(())
             }
-            Some((acc_o, acc_l)) => backend.merge(acc_o, acc_l, &out, &lse),
+            Some((acc_o, acc_l)) => {
+                backend.merge(acc_o, acc_l, &out, &lse, scratch)?;
+                scratch.recycle(out);
+                scratch.recycle(lse);
+                Ok(())
+            }
         }
     }
 
@@ -316,6 +331,7 @@ pub fn run_token_ring(
         let opts = opts.clone();
         handles.push(thread::spawn(move || -> Result<_> {
             let mut backend = opts.backend.build()?;
+            let mut scratch = Scratch::new();
             let mut rec = Recorder {
                 device: j,
                 clock,
@@ -328,16 +344,17 @@ pub fn run_token_ring(
 
             let mut cur_owner = j;
             let mut cur_q = shard.q.clone();
-            let mut cur_pos = shard.pos_i32.clone();
+            let mut cur_pos = Arc::clone(&shard.pos_i32);
 
             for step in 0..n {
-                // forward the Q we are about to consume (async overlap)
+                // forward the Q we are about to consume (async overlap);
+                // both clones are refcount bumps, not buffer copies
                 if step < n - 1 {
                     let dst = (j + 1) % n;
                     let msg = Msg::Q {
                         owner: cur_owner,
                         q: cur_q.clone(),
-                        pos: cur_pos.clone(),
+                        pos: Arc::clone(&cur_pos),
                     };
                     rec.mark(SpanTag::SendQ, step, || format!("q[{cur_owner}]->d{dst}"), msg.bytes());
                     txs[dst].send(msg).map_err(|_| anyhow!("send Q failed"))?;
@@ -349,13 +366,23 @@ pub fn run_token_ring(
                     step,
                     || format!("attn q{cur_owner} kv{j}"),
                     0,
-                    || backend.attn_block(&cur_q, &shard.k, &shard.v, &cur_pos, &shard.pos_i32, opts.causal),
+                    || {
+                        backend.attn_block(
+                            &cur_q,
+                            &shard.k,
+                            &shard.v,
+                            &cur_pos,
+                            &shard.pos_i32,
+                            opts.causal,
+                            &mut scratch,
+                        )
+                    },
                 )?;
 
                 // route the partial home
                 if cur_owner == j {
                     rec.span(SpanTag::Merge, step, || "update self".into(), 0, || -> Result<()> {
-                        acc.add(backend.as_mut(), bo, bl)
+                        acc.add(backend.as_mut(), &mut scratch, bo, bl)
                     })?;
                 } else {
                     let msg = Msg::Partial { out: bo, lse: bl };
@@ -372,7 +399,7 @@ pub fn run_token_ring(
                 mbox.poll();
                 while let Some((po, pl)) = mbox.partials.pop_front() {
                     rec.span(SpanTag::Merge, step, || "update remote".into(), 0, || -> Result<()> {
-                        acc.add(backend.as_mut(), po, pl)
+                        acc.add(backend.as_mut(), &mut scratch, po, pl)
                     })?;
                     merged_remote += 1;
                 }
@@ -390,7 +417,7 @@ pub fn run_token_ring(
             while merged_remote < n - 1 {
                 let (po, pl) = mbox.next_partial()?;
                 rec.span(SpanTag::Merge, n, || "update tail".into(), 0, || -> Result<()> {
-                    acc.add(backend.as_mut(), po, pl)
+                    acc.add(backend.as_mut(), &mut scratch, po, pl)
                 })?;
                 merged_remote += 1;
             }
@@ -428,6 +455,7 @@ pub fn run_ring_attention(
         let opts = opts.clone();
         handles.push(thread::spawn(move || -> Result<_> {
             let mut backend = opts.backend.build()?;
+            let mut scratch = Scratch::new();
             let mut rec = Recorder {
                 device: j,
                 clock,
@@ -439,7 +467,7 @@ pub fn run_ring_attention(
 
             let mut cur_k = shard.k.clone();
             let mut cur_v = shard.v.clone();
-            let mut cur_pos = shard.pos_i32.clone();
+            let mut cur_pos = Arc::clone(&shard.pos_i32);
 
             for step in 0..n {
                 if step < n - 1 {
@@ -447,7 +475,7 @@ pub fn run_ring_attention(
                     let msg = Msg::Kv {
                         k: cur_k.clone(),
                         v: cur_v.clone(),
-                        pos: cur_pos.clone(),
+                        pos: Arc::clone(&cur_pos),
                     };
                     rec.mark(SpanTag::SendKv, step, || format!("kv->d{dst}"), msg.bytes());
                     txs[dst].send(msg).map_err(|_| anyhow!("send KV failed"))?;
@@ -458,10 +486,20 @@ pub fn run_ring_attention(
                     step,
                     || format!("attn q{j} s{step}"),
                     0,
-                    || backend.attn_block(&shard.q, &cur_k, &cur_v, &shard.pos_i32, &cur_pos, opts.causal),
+                    || {
+                        backend.attn_block(
+                            &shard.q,
+                            &cur_k,
+                            &cur_v,
+                            &shard.pos_i32,
+                            &cur_pos,
+                            opts.causal,
+                            &mut scratch,
+                        )
+                    },
                 )?;
                 rec.span(SpanTag::Merge, step, || "update".into(), 0, || -> Result<()> {
-                    acc.add(backend.as_mut(), bo, bl)
+                    acc.add(backend.as_mut(), &mut scratch, bo, bl)
                 })?;
 
                 if step < n - 1 {
@@ -513,6 +551,7 @@ pub fn run_hybrid(
             let kv_peer = ((node + 1) % nodes) * per_node + lane;
 
             let mut backend = opts.backend.build()?;
+            let mut scratch = Scratch::new();
             let mut rec = Recorder {
                 device: j,
                 clock,
@@ -526,21 +565,21 @@ pub fn run_hybrid(
 
             let mut cur_k = shard.k.clone();
             let mut cur_v = shard.v.clone();
-            let mut cur_kpos = shard.pos_i32.clone();
+            let mut cur_kpos = Arc::clone(&shard.pos_i32);
 
             for outer in 0..nodes {
                 let step_base = outer * per_node;
                 let mut cur_owner = j;
                 let mut cur_q = shard.q.clone();
-                let mut cur_pos = shard.pos_i32.clone();
+                let mut cur_pos = Arc::clone(&shard.pos_i32);
 
-                // double-buffered inter-node KV: ship a COPY at pass start
+                // double-buffered inter-node KV: ship a HANDLE at pass start
                 // so the slow hop overlaps the whole intra-node pass.
                 if outer < nodes - 1 {
                     let msg = Msg::Kv {
                         k: cur_k.clone(),
                         v: cur_v.clone(),
-                        pos: cur_kpos.clone(),
+                        pos: Arc::clone(&cur_kpos),
                     };
                     rec.mark(SpanTag::SendKv, step_base, || format!("kv->d{kv_peer}"), msg.bytes());
                     txs[kv_peer].send(msg).map_err(|_| anyhow!("send KV failed"))?;
@@ -552,7 +591,7 @@ pub fn run_hybrid(
                         let msg = Msg::Q {
                             owner: cur_owner,
                             q: cur_q.clone(),
-                            pos: cur_pos.clone(),
+                            pos: Arc::clone(&cur_pos),
                         };
                         rec.mark(SpanTag::SendQ, step, || format!("q[{cur_owner}]->d{ring_next}"), msg.bytes());
                         txs[ring_next].send(msg).map_err(|_| anyhow!("send Q failed"))?;
@@ -563,12 +602,22 @@ pub fn run_hybrid(
                         step,
                         || format!("attn q{cur_owner} o{outer}"),
                         0,
-                        || backend.attn_block(&cur_q, &cur_k, &cur_v, &cur_pos, &cur_kpos, opts.causal),
+                        || {
+                            backend.attn_block(
+                                &cur_q,
+                                &cur_k,
+                                &cur_v,
+                                &cur_pos,
+                                &cur_kpos,
+                                opts.causal,
+                                &mut scratch,
+                            )
+                        },
                     )?;
 
                     if cur_owner == j {
                         rec.span(SpanTag::Merge, step, || "update self".into(), 0, || -> Result<()> {
-                            acc.add(backend.as_mut(), bo, bl)
+                            acc.add(backend.as_mut(), &mut scratch, bo, bl)
                         })?;
                     } else {
                         let msg = Msg::Partial { out: bo, lse: bl };
@@ -579,7 +628,7 @@ pub fn run_hybrid(
                     mbox.poll();
                     while let Some((po, pl)) = mbox.partials.pop_front() {
                         rec.span(SpanTag::Merge, step, || "update remote".into(), 0, || -> Result<()> {
-                            acc.add(backend.as_mut(), po, pl)
+                            acc.add(backend.as_mut(), &mut scratch, po, pl)
                         })?;
                         merged_remote += 1;
                     }
@@ -604,7 +653,7 @@ pub fn run_hybrid(
             while merged_remote < expected_remote {
                 let (po, pl) = mbox.next_partial()?;
                 rec.span(SpanTag::Merge, nodes * per_node, || "update tail".into(), 0, || -> Result<()> {
-                    acc.add(backend.as_mut(), po, pl)
+                    acc.add(backend.as_mut(), &mut scratch, po, pl)
                 })?;
                 merged_remote += 1;
             }
@@ -672,57 +721,63 @@ mod tests {
 
     #[test]
     fn token_ring_matches_oracle_all_partitions() {
-        for (causal, partition) in [
-            (false, Partition::Contiguous),
-            (true, Partition::Contiguous),
-            (true, Partition::Striped { stripe: 2 }),
-            (true, Partition::Zigzag),
-        ] {
-            let opts = EngineOpts {
-                causal,
-                partition,
-                backend: BackendSpec::Native,
-                record: true,
-            };
-            check_against_oracle(
-                |q, k, v| run_token_ring(q, k, v, 4, &opts).unwrap(),
-                7,
-                causal,
-            );
+        for record in [false, true] {
+            for (causal, partition) in [
+                (false, Partition::Contiguous),
+                (true, Partition::Contiguous),
+                (true, Partition::Striped { stripe: 2 }),
+                (true, Partition::Zigzag),
+            ] {
+                let opts = EngineOpts {
+                    causal,
+                    partition,
+                    backend: BackendSpec::Native,
+                    record,
+                };
+                check_against_oracle(
+                    |q, k, v| run_token_ring(q, k, v, 4, &opts).unwrap(),
+                    7,
+                    causal,
+                );
+            }
         }
     }
 
     #[test]
     fn ring_attention_matches_oracle() {
-        for causal in [false, true] {
-            let opts = EngineOpts {
-                causal,
-                partition: Partition::Zigzag,
-                backend: BackendSpec::Native,
-                record: false,
-            };
-            check_against_oracle(
-                |q, k, v| run_ring_attention(q, k, v, 4, &opts).unwrap(),
-                8,
-                causal,
-            );
+        for record in [false, true] {
+            for causal in [false, true] {
+                let opts = EngineOpts {
+                    causal,
+                    partition: Partition::Zigzag,
+                    backend: BackendSpec::Native,
+                    record,
+                };
+                check_against_oracle(
+                    |q, k, v| run_ring_attention(q, k, v, 4, &opts).unwrap(),
+                    8,
+                    causal,
+                );
+            }
         }
     }
 
     #[test]
     fn hybrid_matches_oracle() {
-        for (nodes, per_node) in [(2, 2), (2, 4), (4, 2)] {
-            let opts = EngineOpts {
-                causal: true,
-                partition: Partition::Zigzag,
-                backend: BackendSpec::Native,
-                record: false,
-            };
-            check_against_oracle(
-                |q, k, v| run_hybrid(q, k, v, nodes, per_node, &opts).unwrap(),
-                9,
-                true,
-            );
+        for record in [false, true] {
+            for (nodes, per_node) in [(2, 2), (2, 4), (4, 2)] {
+                let opts = EngineOpts {
+                    causal: true,
+                    partition: Partition::Zigzag,
+                    backend: BackendSpec::Native,
+                    record,
+                };
+                check_against_oracle(
+                    |q, k, v| run_hybrid(q, k, v, nodes, per_node, &opts).unwrap(),
+                    9,
+                    true,
+                );
+            }
         }
     }
 
@@ -738,18 +793,77 @@ mod tests {
 
     #[test]
     fn degree_two_and_eight() {
-        for n in [2usize, 8] {
-            let opts = EngineOpts {
-                causal: true,
-                partition: Partition::Zigzag,
-                backend: BackendSpec::Native,
-                record: false,
-            };
-            let (q, k, v) = rand_qkv(64, 2, 16, 13 + n as u64);
-            let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
-            let (eo, _) = full_attention(&q, &k, &v, true);
-            assert!(got.out.allclose(&eo, 1e-4), "n={n}");
+        for record in [false, true] {
+            for n in [2usize, 8] {
+                let opts = EngineOpts {
+                    causal: true,
+                    partition: Partition::Zigzag,
+                    backend: BackendSpec::Native,
+                    record,
+                };
+                let (q, k, v) = rand_qkv(64, 2, 16, 13 + n as u64);
+                let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
+                let (eo, _) = full_attention(&q, &k, &v, true);
+                assert!(got.out.allclose(&eo, 1e-4), "n={n} record={record}");
+            }
         }
+    }
+
+    #[test]
+    fn msg_payloads_share_storage_with_source() {
+        // The acceptance property of zero-copy messaging: building and
+        // sending a Msg from a live tensor must alias its storage, for
+        // every payload kind the ring circulates.
+        let mut rng = Rng::new(21);
+        let q = Tensor::new(&[8, 2, 4], rng.normal_vec(64, 1.0));
+        let k = Tensor::new(&[8, 2, 4], rng.normal_vec(64, 1.0));
+        let v = Tensor::new(&[8, 2, 4], rng.normal_vec(64, 1.0));
+        let pos: Arc<Vec<i32>> = Arc::new((0..8).collect());
+        let (tx, rx) = channel();
+
+        tx.send(Msg::Q { owner: 3, q: q.clone(), pos: Arc::clone(&pos) }).unwrap();
+        tx.send(Msg::Kv { k: k.clone(), v: v.clone(), pos: Arc::clone(&pos) }).unwrap();
+        tx.send(Msg::Partial { out: q.clone(), lse: k.clone() }).unwrap();
+
+        match rx.recv().unwrap() {
+            Msg::Q { owner, q: rq, pos: rpos } => {
+                assert_eq!(owner, 3);
+                assert!(rq.shares_storage(&q), "Q send must not copy the buffer");
+                assert!(Arc::ptr_eq(&rpos, &pos), "positions must not copy");
+            }
+            _ => panic!("expected Q"),
+        }
+        match rx.recv().unwrap() {
+            Msg::Kv { k: rk, v: rv, pos: rpos } => {
+                assert!(rk.shares_storage(&k), "K send must not copy");
+                assert!(rv.shares_storage(&v), "V send must not copy");
+                assert!(Arc::ptr_eq(&rpos, &pos));
+            }
+            _ => panic!("expected Kv"),
+        }
+        match rx.recv().unwrap() {
+            Msg::Partial { out, lse } => {
+                assert!(out.shares_storage(&q));
+                assert!(lse.shares_storage(&k));
+            }
+            _ => panic!("expected Partial"),
+        }
+        // the logical wire size still reports full payload bytes
+        let m = Msg::Q { owner: 0, q: q.clone(), pos: Arc::clone(&pos) };
+        assert_eq!(m.bytes(), q.size_bytes() + 8 * 4);
+    }
+
+    #[test]
+    fn shard_clone_for_send_is_refcount_bump() {
+        // the exact pattern the ring step executes: clone-into-message
+        let (q, k, v) = rand_qkv(32, 2, 8, 22);
+        let parts = Partition::Zigzag.assign(32, 4);
+        let shards = make_shards(&q, &k, &v, &parts);
+        let s0 = &shards[0];
+        assert_eq!(s0.q.storage_refcount(), 1);
+        let sent = s0.q.clone();
+        assert_eq!(s0.q.storage_refcount(), 2);
+        assert!(sent.shares_storage(&s0.q));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::metrics::{Clock, Event, Timeline};
 use crate::simulator::SpanTag;
 use crate::tensor::Tensor;
 
-use super::backend::BackendSpec;
+use super::backend::{BackendSpec, Scratch};
 use super::{EngineOpts, EngineOutput};
 
 /// Head-sharded slab exchanged during the AllToAll phases.
@@ -146,9 +146,10 @@ pub fn run_ulysses(
 
             // --- phase 2: full-sequence attention over my heads
             let pos: Vec<i32> = (0..seq as i32).collect();
+            let mut scratch = Scratch::new();
             let t0 = clock.now();
             let (out_f, lse_f) =
-                backend.attn_block(&qf, &kf, &vf, &pos, &pos, opts.causal)?;
+                backend.attn_block(&qf, &kf, &vf, &pos, &pos, opts.causal, &mut scratch)?;
             tl.push(Event {
                 device: j,
                 tag: SpanTag::Compute,

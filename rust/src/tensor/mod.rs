@@ -1,26 +1,41 @@
 //! Minimal dense f32 tensor for the coordinator hot path.
 //!
 //! The engine circulates attention blocks as row-major `(S, H, D)` tensors
-//! and `(H, S)` log-sum-exp matrices. This type deliberately supports only
-//! what the request path needs — construction, row slicing/concat along dim
-//! 0, and flat access — so the hot loops stay allocation-transparent.
+//! and `(H, S)` log-sum-exp matrices. Storage is a shared `Arc<Vec<f32>>`
+//! with an `(off, len)` window, so `clone()` and `slice_rows()` are
+//! refcount bumps, not buffer copies — a channel send of a cloned tensor
+//! is the zero-copy device-to-device handle pass of the real system.
+//! Mutation is copy-on-write: `data_mut` materializes a uniquely-owned,
+//! un-windowed buffer first, so sharing is never observable through the
+//! API, only through `shares_storage`/`storage_refcount`.
 
 use std::fmt;
+use std::sync::Arc;
 
-/// Row-major dense f32 tensor.
-#[derive(Clone, PartialEq)]
+/// Row-major dense f32 tensor (shared storage + view window).
+#[derive(Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    off: usize,
+    len: usize,
+    data: Arc<Vec<f32>>,
 }
 
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
-        if self.data.len() <= 8 {
-            write!(f, "{:?}", self.data)?;
+        if self.len <= 8 {
+            write!(f, "{:?}", self.data())?;
         }
         Ok(())
+    }
+}
+
+/// Equality is over shape and *viewed* contents — two tensors compare equal
+/// whether or not they share storage.
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape && self.data() == other.data()
     }
 }
 
@@ -32,21 +47,16 @@ impl Tensor {
             "shape {shape:?} does not match data length {}",
             data.len()
         );
-        Tensor { shape: shape.to_vec(), data }
+        let len = data.len();
+        Tensor { shape: shape.to_vec(), off: 0, len, data: Arc::new(data) }
     }
 
     pub fn zeros(shape: &[usize]) -> Tensor {
-        Tensor {
-            shape: shape.to_vec(),
-            data: vec![0.0; shape.iter().product()],
-        }
+        Tensor::new(shape, vec![0.0; shape.iter().product()])
     }
 
     pub fn full(shape: &[usize], v: f32) -> Tensor {
-        Tensor {
-            shape: shape.to_vec(),
-            data: vec![v; shape.iter().product()],
-        }
+        Tensor::new(shape, vec![v; shape.iter().product()])
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -54,31 +64,68 @@ impl Tensor {
     }
 
     pub fn numel(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     /// Bytes on the wire — what the comm simulator charges for transfers.
     pub fn size_bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+        self.len * std::mem::size_of::<f32>()
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        &self.data[self.off..self.off + self.len]
     }
 
+    /// Mutable view of the elements. Copy-on-write: if the storage is
+    /// shared with another tensor, or this tensor is a narrowed window,
+    /// the viewed range is copied into a fresh uniquely-owned buffer first.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        if self.off != 0 || self.len != self.data.len() || Arc::get_mut(&mut self.data).is_none() {
+            let owned = self.data[self.off..self.off + self.len].to_vec();
+            self.off = 0;
+            self.data = Arc::new(owned);
+        }
+        Arc::get_mut(&mut self.data).expect("unique after materialize")
     }
 
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        if self.off == 0 && self.len == self.data.len() {
+            match Arc::try_unwrap(self.data) {
+                Ok(v) => v,
+                Err(shared) => shared[..].to_vec(),
+            }
+        } else {
+            self.data[self.off..self.off + self.len].to_vec()
+        }
+    }
+
+    /// Reclaim the backing buffer without copying — `None` if the storage
+    /// is shared or windowed. The engine's scratch arena uses this to
+    /// recycle merged-partial buffers into the next kernel call.
+    pub fn into_unique_data(self) -> Option<Vec<f32>> {
+        if self.off == 0 && self.len == self.data.len() {
+            Arc::try_unwrap(self.data).ok()
+        } else {
+            None
+        }
+    }
+
+    /// True if both tensors view the same underlying allocation — the
+    /// observable form of a zero-copy send.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Number of tensors (clones/views) holding the underlying buffer.
+    pub fn storage_refcount(&self) -> usize {
+        Arc::strong_count(&self.data)
     }
 
     /// Reinterpret with a new shape of identical element count.
     pub fn reshape(mut self, shape: &[usize]) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
-            self.data.len(),
+            self.len,
             "reshape {:?} -> {shape:?} changes element count",
             self.shape
         );
@@ -96,24 +143,31 @@ impl Tensor {
         self.shape[1..].iter().product()
     }
 
-    /// Slice rows `[start, end)` along dim 0 (copies).
+    /// Slice rows `[start, end)` along dim 0 — a zero-copy view sharing
+    /// this tensor's storage.
     pub fn slice_rows(&self, start: usize, end: usize) -> Tensor {
         assert!(start <= end && end <= self.shape[0], "bad row slice {start}..{end}");
         let stride = self.row_stride();
         let mut shape = self.shape.clone();
         shape[0] = end - start;
-        Tensor::new(&shape, self.data[start * stride..end * stride].to_vec())
+        Tensor {
+            shape,
+            off: self.off + start * stride,
+            len: (end - start) * stride,
+            data: Arc::clone(&self.data),
+        }
     }
 
-    /// Gather rows by index along dim 0 (zigzag/striped reordering).
+    /// Gather rows by index along dim 0 (zigzag/striped reordering; copies).
     pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
         let stride = self.row_stride();
         let mut shape = self.shape.clone();
         shape[0] = idx.len();
+        let src = self.data();
         let mut data = Vec::with_capacity(idx.len() * stride);
         for &i in idx {
             assert!(i < self.shape[0], "gather index {i} out of range");
-            data.extend_from_slice(&self.data[i * stride..(i + 1) * stride]);
+            data.extend_from_slice(&src[i * stride..(i + 1) * stride]);
         }
         Tensor::new(&shape, data)
     }
@@ -123,9 +177,36 @@ impl Tensor {
         assert_eq!(idx.len(), self.shape[0]);
         assert_eq!(self.row_stride(), dst.row_stride(), "row stride mismatch");
         let stride = self.row_stride();
+        let rows = dst.shape[0];
+        let dd = dst.data_mut();
+        let sd = self.data();
         for (r, &i) in idx.iter().enumerate() {
-            dst.data[i * stride..(i + 1) * stride]
-                .copy_from_slice(&self.data[r * stride..(r + 1) * stride]);
+            assert!(i < rows, "scatter index {i} out of range");
+            dd[i * stride..(i + 1) * stride]
+                .copy_from_slice(&sd[r * stride..(r + 1) * stride]);
+        }
+    }
+
+    /// Scatter this rank-2 `(R, C)` matrix's columns into the rank-2
+    /// `(R, C_dst)` matrix `dst` at global column indices `idx`
+    /// (`idx.len() == C`) — the per-element lse scatter the engine's
+    /// reassembly uses, hoisted into one row-sliced pass.
+    pub fn scatter_cols_into(&self, dst: &mut Tensor, idx: &[usize]) {
+        assert_eq!(self.shape.len(), 2, "scatter_cols_into wants rank-2 src");
+        assert_eq!(dst.shape.len(), 2, "scatter_cols_into wants rank-2 dst");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert_eq!(dst.shape[0], r, "row count mismatch: {} vs {r}", dst.shape[0]);
+        assert_eq!(idx.len(), c, "index count {} != column count {c}", idx.len());
+        let dc = dst.shape[1];
+        let dd = dst.data_mut();
+        let sd = self.data();
+        for row in 0..r {
+            let src = &sd[row * c..(row + 1) * c];
+            let drow = &mut dd[row * dc..(row + 1) * dc];
+            for (j, &p) in idx.iter().enumerate() {
+                assert!(p < dc, "column index {p} out of range {dc}");
+                drow[p] = src[j];
+            }
         }
     }
 
@@ -139,7 +220,7 @@ impl Tensor {
         for p in parts {
             assert_eq!(p.row_stride(), stride, "row stride mismatch in concat");
             rows += p.shape[0];
-            data.extend_from_slice(&p.data);
+            data.extend_from_slice(p.data());
         }
         shape[0] = rows;
         Tensor::new(&shape, data)
@@ -148,9 +229,9 @@ impl Tensor {
     /// Max |a - b| over all elements (allclose support).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
-        self.data
+        self.data()
             .iter()
-            .zip(&other.data)
+            .zip(other.data())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -181,11 +262,53 @@ mod tests {
     }
 
     #[test]
-    fn slice_rows_copies_correct_range() {
+    fn clone_is_zero_copy() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
+        let c = t.clone();
+        assert!(c.shares_storage(&t));
+        assert_eq!(t.storage_refcount(), 2);
+        assert_eq!(c, t);
+    }
+
+    #[test]
+    fn mutation_of_shared_storage_copies_on_write() {
+        let t = Tensor::new(&[4], vec![1., 2., 3., 4.]);
+        let mut c = t.clone();
+        c.data_mut()[0] = 99.0;
+        assert!(!c.shares_storage(&t), "CoW must detach");
+        assert_eq!(t.data()[0], 1.0, "source unchanged");
+        assert_eq!(c.data()[0], 99.0);
+    }
+
+    #[test]
+    fn slice_rows_is_a_view() {
         let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
         let s = t.slice_rows(1, 3);
         assert_eq!(s.shape(), &[2, 2]);
         assert_eq!(s.data(), &[2., 3., 4., 5.]);
+        assert!(s.shares_storage(&t), "slice must not copy");
+        // mutating the view materializes it without touching the source
+        let mut s2 = s.clone();
+        s2.data_mut()[0] = -1.0;
+        assert!(!s2.shares_storage(&t));
+        assert_eq!(t.data()[2], 2.0);
+        assert_eq!(s.data()[0], 2.0);
+    }
+
+    #[test]
+    fn into_unique_data_respects_sharing() {
+        let t = Tensor::new(&[2], vec![7., 8.]);
+        let c = t.clone();
+        assert!(c.into_unique_data().is_none(), "shared buffer not reclaimable");
+        assert_eq!(t.clone().slice_rows(0, 1).into_unique_data(), None);
+        assert_eq!(t.into_unique_data(), Some(vec![7., 8.]));
+    }
+
+    #[test]
+    fn into_data_on_view_copies_window() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.slice_rows(2, 4).into_data(), vec![4., 5., 6., 7.]);
+        assert_eq!(t.into_data(), (0..8).map(|i| i as f32).collect::<Vec<_>>());
     }
 
     #[test]
@@ -197,6 +320,37 @@ mod tests {
         let mut back = Tensor::zeros(&[4, 2]);
         g.scatter_rows_into(&mut back, &idx);
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn gather_from_view_reads_window() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
+        let v = t.slice_rows(1, 4); // rows 1..4
+        let g = v.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[6., 7., 2., 3.]);
+    }
+
+    #[test]
+    fn scatter_cols_into_matches_per_element_loop() {
+        // (2, 3) lse block scattered into (2, 6) at columns [5, 0, 2]
+        let l = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut dst = Tensor::full(&[2, 6], -1.0);
+        l.scatter_cols_into(&mut dst, &[5, 0, 2]);
+        let mut exp = Tensor::full(&[2, 6], -1.0);
+        for h in 0..2 {
+            for (i, &p) in [5usize, 0, 2].iter().enumerate() {
+                exp.data_mut()[h * 6 + p] = l.data()[h * 3 + i];
+            }
+        }
+        assert_eq!(dst, exp);
+    }
+
+    #[test]
+    #[should_panic(expected = "index count")]
+    fn scatter_cols_rejects_bad_index_len() {
+        let l = Tensor::zeros(&[2, 3]);
+        let mut dst = Tensor::zeros(&[2, 6]);
+        l.scatter_cols_into(&mut dst, &[0, 1]);
     }
 
     #[test]

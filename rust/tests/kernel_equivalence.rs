@@ -1,0 +1,184 @@
+//! Property tests: the tiled mask-classified kernel must reproduce the
+//! scalar reference kernel (kept in-crate as `attention_block_reference`)
+//! across tile-boundary shapes, GQA groups, padding keys, fully-masked
+//! tiles, and zigzag position orders — and the threaded engines must keep
+//! matching `full_attention` with the new kernel under both recording
+//! modes.
+
+use tokenring::attention::{
+    attention_block, attention_block_reference, full_attention, MASK_VALUE, KV_TILE, Q_TILE,
+};
+use tokenring::engine::backend::BackendSpec;
+use tokenring::engine::{run_hybrid, run_ring_attention, run_token_ring, EngineOpts};
+use tokenring::parallelism::partition::Partition;
+use tokenring::tensor::Tensor;
+use tokenring::util::rng::Rng;
+
+fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_pair(
+    rng: &mut Rng,
+    sq: usize,
+    skv: usize,
+    h: usize,
+    h_kv: usize,
+    d: usize,
+    qp: &[i32],
+    kp: &[i32],
+    causal: bool,
+    label: &str,
+) {
+    let q = rand_t(rng, &[sq, h, d]);
+    let k = rand_t(rng, &[skv, h_kv, d]);
+    let v = rand_t(rng, &[skv, h_kv, d]);
+    let (out, lse) = attention_block(&q, &k, &v, qp, kp, causal, None);
+    let (eo, el) = attention_block_reference(&q, &k, &v, qp, kp, causal, None);
+    assert!(
+        out.allclose(&eo, 1e-5),
+        "{label}: out diff={}",
+        out.max_abs_diff(&eo)
+    );
+    assert!(
+        lse.allclose(&el, 1e-4),
+        "{label}: lse diff={}",
+        lse.max_abs_diff(&el)
+    );
+}
+
+#[test]
+fn tiled_vs_reference_random_shapes() {
+    // Randomized sweep across shapes that straddle Q_TILE/KV_TILE
+    // boundaries, with query offsets placing the causal frontier inside,
+    // before, and after the key range.
+    let mut rng = Rng::new(7001);
+    let mut shape_rng = Rng::new(7002);
+    for trial in 0..40 {
+        let sq = 1 + (shape_rng.normal_vec(1, 1.0)[0].abs() * 37.0) as usize % 97;
+        let skv = 1 + (shape_rng.normal_vec(1, 1.0)[0].abs() * 53.0) as usize % 180;
+        let d = [4usize, 8, 16][trial % 3];
+        let (h, h_kv) = [(1usize, 1usize), (2, 1), (4, 2), (4, 4)][trial % 4];
+        let causal = trial % 2 == 0;
+        let off = (trial % 5) as i32 * (skv as i32 / 2).max(1) / 2;
+        let qp: Vec<i32> = (off..off + sq as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        check_pair(
+            &mut rng,
+            sq,
+            skv,
+            h,
+            h_kv,
+            d,
+            &qp,
+            &kp,
+            causal,
+            &format!("trial={trial} sq={sq} skv={skv} h={h}/{h_kv} d={d} causal={causal}"),
+        );
+    }
+}
+
+#[test]
+fn tiled_vs_reference_exact_tile_boundaries() {
+    let mut rng = Rng::new(7010);
+    for &sq in &[Q_TILE - 1, Q_TILE, Q_TILE + 1, 2 * Q_TILE, 2 * Q_TILE + 1] {
+        for &skv in &[KV_TILE - 1, KV_TILE, KV_TILE + 1, 2 * KV_TILE] {
+            let qp: Vec<i32> = ((skv / 2) as i32..(skv / 2 + sq) as i32).collect();
+            let kp: Vec<i32> = (0..skv as i32).collect();
+            check_pair(&mut rng, sq, skv, 2, 2, 8, &qp, &kp, true, &format!("sq={sq} skv={skv}"));
+        }
+    }
+}
+
+#[test]
+fn tiled_vs_reference_padding_and_masked_tiles() {
+    let mut rng = Rng::new(7020);
+    // padding tail crossing a KV tile boundary
+    let (sq, skv) = (17, KV_TILE + 21);
+    let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
+    let mut kp: Vec<i32> = (0..skv as i32).collect();
+    kp[KV_TILE - 3..].fill(-1);
+    check_pair(&mut rng, sq, skv, 4, 2, 8, &qp, &kp, true, "padding tail");
+    // interior padding stripe (forces Mixed tiles on both sides)
+    let mut kp2: Vec<i32> = (0..skv as i32).collect();
+    kp2[10..30].fill(-1);
+    check_pair(&mut rng, sq, skv, 2, 1, 8, &qp, &kp2, false, "padding stripe");
+    // entire key range in the future: all tiles FullyMasked, exact zeros
+    let q = rand_t(&mut rng, &[33, 2, 8]);
+    let k = rand_t(&mut rng, &[70, 2, 8]);
+    let qp3: Vec<i32> = (0..33).collect();
+    let kp3: Vec<i32> = (5000..5070).collect();
+    let (out, lse) = attention_block(&q, &k, &k, &qp3, &kp3, true, None);
+    assert!(out.data().iter().all(|&x| x == 0.0));
+    assert!(lse.data().iter().all(|&x| x == MASK_VALUE));
+}
+
+#[test]
+fn tiled_vs_reference_zigzag_shard_positions() {
+    // the position order zigzag partitions hand to device actors:
+    // chunk i and chunk 2N-1-i back to back, per device
+    let mut rng = Rng::new(7030);
+    let n = 4usize;
+    let total = 8 * n * 7; // not tile-aligned per shard
+    let chunk = total / (2 * n);
+    for dev in 0..n {
+        let mut pos: Vec<i32> = Vec::new();
+        pos.extend((dev * chunk) as i32..((dev + 1) * chunk) as i32);
+        let hi = 2 * n - 1 - dev;
+        pos.extend((hi * chunk) as i32..((hi + 1) * chunk) as i32);
+        let s = pos.len();
+        check_pair(&mut rng, s, s, 2, 2, 8, &pos, &pos, true, &format!("zigzag dev={dev}"));
+    }
+}
+
+#[test]
+fn engines_match_oracle_with_and_without_recording() {
+    // the kernel rewrite must be invisible to the engine oracle tests in
+    // both recording modes (record=true exercises the timeline path that
+    // wraps every kernel call)
+    let mut rng = Rng::new(7040);
+    let (seq, h, d) = (64usize, 2usize, 16usize);
+    let q = rand_t(&mut rng, &[seq, h, d]);
+    let k = rand_t(&mut rng, &[seq, h, d]);
+    let v = rand_t(&mut rng, &[seq, h, d]);
+    let (eo, el) = full_attention(&q, &k, &v, true);
+    for record in [false, true] {
+        let opts = EngineOpts {
+            causal: true,
+            partition: Partition::Zigzag,
+            backend: BackendSpec::Native,
+            record,
+        };
+        for (name, got) in [
+            ("token_ring", run_token_ring(&q, &k, &v, 4, &opts).unwrap()),
+            ("ring_attention", run_ring_attention(&q, &k, &v, 4, &opts).unwrap()),
+            ("hybrid", run_hybrid(&q, &k, &v, 2, 2, &opts).unwrap()),
+        ] {
+            assert!(
+                got.out.allclose(&eo, 1e-4),
+                "{name} record={record} out diff={}",
+                got.out.max_abs_diff(&eo)
+            );
+            assert!(
+                got.lse.allclose(&el, 1e-3),
+                "{name} record={record} lse diff={}",
+                got.lse.max_abs_diff(&el)
+            );
+        }
+    }
+}
+
+#[test]
+fn cloned_tensor_shares_storage_until_mutation() {
+    // public-API view of the zero-copy send contract
+    let mut rng = Rng::new(7050);
+    let t = rand_t(&mut rng, &[16, 2, 8]);
+    let sent = t.clone();
+    assert!(sent.shares_storage(&t));
+    assert_eq!(t.storage_refcount(), 2);
+    let mut mutated = sent.clone();
+    mutated.data_mut()[0] += 1.0;
+    assert!(!mutated.shares_storage(&t), "CoW must detach on write");
+    assert!(sent.shares_storage(&t), "reader clones stay shared");
+}
