@@ -141,5 +141,31 @@ fn main() -> anyhow::Result<()> {
         mean_ttft * 1e3,
         mean_tpot * 1e3
     );
+
+    // --- 4. continuous batching: admission queue + iteration-level
+    //        batcher + KV budget (the `tokenring serve --config` path).
+    let mix = tokenring::workload::ServeMix::preset("poisson", 2000.0, 32)?;
+    let report = tokenring::scheduler::serve_continuous(
+        &mix.generate(16, 11),
+        &tokenring::scheduler::ContinuousServeOpts {
+            devices,
+            heads,
+            head_dim,
+            ..Default::default()
+        },
+    )?;
+    let ttft = report.ttft_summary();
+    let tpot = report.tpot_summary();
+    println!(
+        "\ncontinuous batching (16 requests, poisson mix):\n  \
+         TTFT p50 {:.1} ms p95 {:.1} ms | TPOT p50 {:.2} ms | \
+         occupancy max {} mean {:.2} | {:.0} tok/s",
+        ttft.p50 * 1e3,
+        ttft.p95 * 1e3,
+        tpot.p50 * 1e3,
+        report.max_occupancy(),
+        report.mean_occupancy(),
+        report.throughput_tokens_per_s(),
+    );
     Ok(())
 }

@@ -6,11 +6,13 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::ComputeModel;
+use crate::json_obj;
 use crate::parallelism::partition::Partition;
 use crate::parallelism::ScheduleSpec;
+use crate::scheduler::ContinuousServeOpts;
 use crate::topology::Topology;
 use crate::util::json::Json;
-use crate::json_obj;
+use crate::workload::{Request, ServeMix};
 
 /// Calibration used for the Figure-6 reproduction (EXPERIMENTS.md §F6):
 /// flash-attention-2 on A10 sustains ≈0.67 of tensor-core peak at the
@@ -306,6 +308,198 @@ impl ExperimentConfig {
     }
 }
 
+/// A declarative continuous-batching serving run, as checked into
+/// `configs/serve.json` and consumed by
+/// `tokenring serve --config configs/serve.json`.
+///
+/// `mix` names a registered [`ServeMix`] preset (see
+/// [`ServeMix::NAMES`]); the remaining fields parameterize the workload
+/// (`requests`, `rate`, `seed`) and the batcher
+/// ([`ContinuousServeOpts`]). Validation happens at load time: unknown
+/// keys are rejected, the mix must exist, and `kv_budget_tokens` must
+/// cover the mix's largest possible request so every generated request is
+/// servable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub name: String,
+    /// Registered workload-mix name (`poisson` | `bursty` | `long_context`).
+    pub mix: String,
+    /// Requests to generate.
+    pub requests: usize,
+    /// Arrival rate in requests per virtual second.
+    pub rate: f64,
+    /// Workload RNG seed (arrivals, lengths, classes).
+    pub seed: usize,
+    pub devices: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Prefill chunk tokens (also the KV page size and length multiple).
+    pub chunk: usize,
+    pub max_batch: usize,
+    pub max_step_tokens: usize,
+    pub kv_budget_tokens: usize,
+    pub aging_steps: usize,
+}
+
+fn field_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_usize()
+            .ok_or_else(|| anyhow!("serve config: '{key}' must be a non-negative integer")),
+    }
+}
+
+impl ServeConfig {
+    /// Every key a serve config file may contain.
+    pub const KEYS: &'static [&'static str] = &[
+        "name", "mix", "requests", "rate", "seed", "devices", "heads", "head_dim",
+        "chunk", "max_batch", "max_step_tokens", "kv_budget_tokens", "aging_steps",
+    ];
+
+    /// The built-in default: the Poisson mix on 4 devices.
+    pub fn default_poisson() -> ServeConfig {
+        ServeConfig {
+            name: "serve".to_string(),
+            mix: "poisson".to_string(),
+            requests: 24,
+            rate: 5000.0,
+            seed: 7,
+            devices: 4,
+            heads: 4,
+            head_dim: 32,
+            chunk: 32,
+            max_batch: 8,
+            max_step_tokens: 256,
+            kv_budget_tokens: 16_384,
+            aging_steps: 8,
+        }
+    }
+
+    /// Load from JSON text; missing fields fall back to
+    /// [`ServeConfig::default_poisson`], unknown keys and unservable
+    /// parameter combinations are rejected at load time.
+    pub fn from_json(text: &str) -> Result<ServeConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("serve config parse: {e}"))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("serve config must be a JSON object"))?;
+        for k in obj.keys() {
+            if !Self::KEYS.contains(&k.as_str()) {
+                bail!("unknown serve config key '{k}' (valid: {})", Self::KEYS.join(", "));
+            }
+        }
+        let d = ServeConfig::default_poisson();
+        let rate = match j.get("rate") {
+            Json::Null => d.rate,
+            v => v
+                .as_f64()
+                .ok_or_else(|| anyhow!("serve config: 'rate' must be a number"))?,
+        };
+        // string fields error on type mismatch instead of silently running
+        // the default (a "mix": 42 must not measure the poisson mix)
+        let field_str = |key: &str, default: &str| -> Result<String> {
+            match j.get(key) {
+                Json::Null => Ok(default.to_string()),
+                v => v
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("serve config: '{key}' must be a string")),
+            }
+        };
+        let cfg = ServeConfig {
+            name: field_str("name", &d.name)?,
+            mix: field_str("mix", &d.mix)?,
+            requests: field_usize(&j, "requests", d.requests)?,
+            rate,
+            seed: field_usize(&j, "seed", d.seed)?,
+            devices: field_usize(&j, "devices", d.devices)?,
+            heads: field_usize(&j, "heads", d.heads)?,
+            head_dim: field_usize(&j, "head_dim", d.head_dim)?,
+            chunk: field_usize(&j, "chunk", d.chunk)?,
+            max_batch: field_usize(&j, "max_batch", d.max_batch)?,
+            max_step_tokens: field_usize(&j, "max_step_tokens", d.max_step_tokens)?,
+            kv_budget_tokens: field_usize(&j, "kv_budget_tokens", d.kv_budget_tokens)?,
+            aging_steps: field_usize(&j, "aging_steps", d.aging_steps)?,
+        };
+        if cfg.requests == 0 {
+            bail!("serve config: 'requests' must be positive");
+        }
+        if !(cfg.rate.is_finite() && cfg.rate > 0.0) {
+            bail!("serve config: 'rate' must be positive (got {})", cfg.rate);
+        }
+        for (key, v) in [
+            ("devices", cfg.devices),
+            ("heads", cfg.heads),
+            ("head_dim", cfg.head_dim),
+            ("chunk", cfg.chunk),
+            ("max_batch", cfg.max_batch),
+            ("max_step_tokens", cfg.max_step_tokens),
+            ("aging_steps", cfg.aging_steps),
+        ] {
+            if v == 0 {
+                bail!("serve config: '{key}' must be positive");
+            }
+        }
+        let mix = cfg.mix()?; // mix name must be registered
+        if cfg.kv_budget_tokens < mix.max_peak_tokens() {
+            bail!(
+                "serve config: kv_budget_tokens {} cannot hold the mix's largest \
+                 request ({} KV tokens at peak)",
+                cfg.kv_budget_tokens,
+                mix.max_peak_tokens()
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize back to JSON; `from_json` of the output reproduces
+    /// `self` exactly.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("name", self.name.clone()),
+            ("mix", self.mix.clone()),
+            ("requests", self.requests),
+            ("rate", self.rate),
+            ("seed", self.seed),
+            ("devices", self.devices),
+            ("heads", self.heads),
+            ("head_dim", self.head_dim),
+            ("chunk", self.chunk),
+            ("max_batch", self.max_batch),
+            ("max_step_tokens", self.max_step_tokens),
+            ("kv_budget_tokens", self.kv_budget_tokens),
+            ("aging_steps", self.aging_steps),
+        ]
+    }
+
+    /// The workload mix this config names, at its rate and chunk multiple.
+    pub fn mix(&self) -> Result<ServeMix> {
+        ServeMix::preset(&self.mix, self.rate, self.chunk)
+    }
+
+    /// Generate the config's request set (deterministic in `seed`).
+    pub fn generate(&self) -> Result<Vec<Request>> {
+        Ok(self.mix()?.generate(self.requests, self.seed as u64))
+    }
+
+    /// The continuous-batcher options this config describes.
+    pub fn opts(&self) -> ContinuousServeOpts {
+        ContinuousServeOpts {
+            devices: self.devices,
+            heads: self.heads,
+            head_dim: self.head_dim,
+            chunk: self.chunk,
+            max_batch: self.max_batch,
+            max_step_tokens: self.max_step_tokens,
+            kv_budget_tokens: self.kv_budget_tokens,
+            aging_steps: self.aging_steps as u64,
+            seed: self.seed as u64,
+            ..Default::default()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -415,5 +609,57 @@ mod tests {
             .to_string();
         assert!(e.contains("schedules"), "{e}");
         assert!(ExperimentConfig::from_json(r#"{"partitions":["zigzag"]}"#).is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_and_round_trip() {
+        let cfg = ServeConfig::from_json("{}").unwrap();
+        assert_eq!(cfg, ServeConfig::default_poisson());
+        let custom = ServeConfig::from_json(
+            r#"{"name":"x","mix":"bursty","requests":8,"rate":100,
+                "devices":2,"heads":2,"head_dim":8,"chunk":16,
+                "max_batch":4,"max_step_tokens":64,
+                "kv_budget_tokens":4096,"aging_steps":4,"seed":3}"#,
+        )
+        .unwrap();
+        assert_eq!(custom.mix, "bursty");
+        assert_eq!(custom.rate, 100.0);
+        let again = ServeConfig::from_json(&custom.to_json().to_string()).unwrap();
+        assert_eq!(again, custom);
+    }
+
+    #[test]
+    fn serve_config_builds_workload_and_opts() {
+        let cfg = ServeConfig::default_poisson();
+        let reqs = cfg.generate().unwrap();
+        assert_eq!(reqs.len(), cfg.requests);
+        for r in &reqs {
+            assert!(r.peak_kv_tokens() <= cfg.kv_budget_tokens);
+            assert_eq!(r.seq_len % cfg.chunk, 0);
+        }
+        let opts = cfg.opts();
+        assert_eq!(opts.devices, cfg.devices);
+        assert_eq!(opts.kv_budget_tokens, cfg.kv_budget_tokens);
+        assert!(opts.engine.causal);
+        assert!(!opts.keep_outputs);
+    }
+
+    #[test]
+    fn serve_config_rejected_at_load() {
+        // unknown key
+        assert!(ServeConfig::from_json(r#"{"mixx":"poisson"}"#).is_err());
+        // unknown mix lists the registered names
+        let e = ServeConfig::from_json(r#"{"mix":"warp"}"#).unwrap_err().to_string();
+        assert!(e.contains("poisson") && e.contains("bursty"), "{e}");
+        // wrong-typed string fields must not silently run the default mix
+        assert!(ServeConfig::from_json(r#"{"mix":42}"#).is_err());
+        assert!(ServeConfig::from_json(r#"{"name":["x"]}"#).is_err());
+        // zero/negative parameters
+        assert!(ServeConfig::from_json(r#"{"requests":0}"#).is_err());
+        assert!(ServeConfig::from_json(r#"{"rate":0}"#).is_err());
+        assert!(ServeConfig::from_json(r#"{"chunk":0}"#).is_err());
+        // a budget that cannot hold the mix's largest request is unservable
+        assert!(ServeConfig::from_json(r#"{"kv_budget_tokens":64}"#).is_err());
+        assert!(ServeConfig::from_json("[]").is_err());
     }
 }

@@ -26,15 +26,21 @@ use super::EngineOpts;
 /// more under speculative/chunked decode).
 #[derive(Debug, Clone)]
 pub struct DecodeQuery {
+    /// Request id (homed at `request % devices`).
     pub request: usize,
-    pub q: Tensor, // (T, H, D)
+    /// (T, H, D) query block.
+    pub q: Tensor,
+    /// Global sequence positions of the T query rows.
     pub q_pos: Vec<i32>,
 }
 
 /// Decode result per request.
 pub struct DecodeResult {
+    /// request id → (out, lse) for that request's query block.
     pub outputs: HashMap<usize, (Tensor, Tensor)>,
+    /// Merged per-device timeline (empty unless `EngineOpts::record`).
     pub timeline: Timeline,
+    /// Wall seconds for the batched step.
     pub wall: f64,
 }
 
@@ -112,17 +118,19 @@ pub fn run_decode_ring(
                 // forward the batch we are about to consume
                 if step < n - 1 {
                     let dst = (j + 1) % n;
-                    let bytes: usize = cur.iter().map(|q| q.q.size_bytes()).sum();
-                    let t = clock.now();
-                    tl.push(Event {
-                        device: j,
-                        tag: SpanTag::SendQ,
-                        step,
-                        name: format!("decode batch -> d{dst}"),
-                        t0: t,
-                        t1: t,
-                        bytes,
-                    });
+                    if opts.record {
+                        let bytes: usize = cur.iter().map(|q| q.q.size_bytes()).sum();
+                        let t = clock.now();
+                        tl.push(Event {
+                            device: j,
+                            tag: SpanTag::SendQ,
+                            step,
+                            name: format!("decode batch -> d{dst}"),
+                            t0: t,
+                            t1: t,
+                            bytes,
+                        });
+                    }
                     txs[dst]
                         .send(Msg::QBatch(cur.clone()))
                         .map_err(|_| anyhow!("send qbatch"))?;
@@ -138,7 +146,7 @@ pub fn run_decode_ring(
                             Tensor::zeros(&[dq.q.shape()[0], heads, head_dim]),
                             Tensor::full(&[heads, dq.q.shape()[0]], MASK_VALUE),
                         )
-                    } else {
+                    } else if opts.record {
                         let t0 = clock.now();
                         let r = backend
                             .attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal, &mut scratch)?;
@@ -152,6 +160,8 @@ pub fn run_decode_ring(
                             bytes: 0,
                         });
                         r
+                    } else {
+                        backend.attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal, &mut scratch)?
                     };
                     let home = dq.request % n;
                     if home == j {

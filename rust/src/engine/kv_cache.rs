@@ -130,8 +130,16 @@ impl KvCache {
         out
     }
 
+    /// Number of requests with resident pages.
     pub fn active_requests(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// Total KV tokens resident across every request — the quantity the
+    /// continuous batcher (`scheduler::continuous`) holds under its
+    /// `kv_budget_tokens` and the serving invariant tests audit.
+    pub fn total_tokens(&self) -> usize {
+        self.seqs.values().map(|e| e.next_pos).sum()
     }
 }
 
@@ -211,6 +219,7 @@ mod tests {
         c.append(1, &k, &v).unwrap();
         c.append(2, &k, &v).unwrap();
         assert_eq!(c.active_requests(), 2);
+        assert_eq!(c.total_tokens(), 32);
         let bytes = c.bytes_per_device();
         assert_eq!(bytes.len(), 2);
         assert!(bytes.iter().all(|&b| b > 0));
@@ -219,6 +228,7 @@ mod tests {
         assert!(c.free(1));
         assert!(!c.free(1));
         assert_eq!(c.active_requests(), 1);
+        assert_eq!(c.total_tokens(), 16);
     }
 
     #[test]

@@ -15,10 +15,15 @@
 //! ring step performs no `Vec<f32>` allocation on the native path.
 //!
 //! Three schedules are implemented for real execution:
-//! * `run_token_ring`      — Algorithm 1 (Q forward, partials homeward)
-//! * `run_ring_attention`  — KV-circulating baseline
-//! * `run_hybrid`          — case study III (TokenRing intra-node, ring KV
-//!                           exchange inter-node)
+//! * [`run_token_ring`]      — Algorithm 1 (Q forward, partials homeward)
+//! * [`run_ring_attention`]  — KV-circulating baseline
+//! * [`run_hybrid`]          — case study III (TokenRing intra-node, ring
+//!                             KV exchange inter-node)
+//!
+//! The serving stack builds on two further pieces: [`kv_cache`] (a
+//! sequence-sharded paged KV cache) and [`decode`] (batched decode-ring
+//! steps over that cache), which the continuous batcher in
+//! `scheduler::continuous` drives every micro-step.
 
 pub mod backend;
 pub mod decode;
@@ -65,10 +70,14 @@ impl Msg {
 /// Options shared by all engine runs.
 #[derive(Debug, Clone)]
 pub struct EngineOpts {
+    /// Causal masking (by position, so any partition order is safe).
     pub causal: bool,
+    /// How sequence positions shard across device actors.
     pub partition: Partition,
+    /// Compute backend each device actor builds (native or PJRT).
     pub backend: BackendSpec,
-    /// Record a timeline (small overhead; on by default).
+    /// Record a timeline (small overhead; on by default, disabled on the
+    /// serving hot path).
     pub record: bool,
 }
 
@@ -89,7 +98,9 @@ pub struct EngineOutput {
     pub out: Tensor,
     /// (H, S) log-sum-exp in global order.
     pub lse: Tensor,
+    /// Merged per-device event timeline (empty when recording is off).
     pub timeline: Timeline,
+    /// Wall seconds from spawn to last device completion.
     pub wall: f64,
 }
 

@@ -33,21 +33,47 @@ use crate::util::json::Json;
 /// Declarative experiment grid: schedules × seq × devices × causal ×
 /// partition on one cluster preset. Defaults reproduce the Figure-6
 /// setting (LLaMA2-7B, S=24000, 4×A10, causal, zigzag).
+///
+/// ```
+/// use tokenring::experiment::Experiment;
+/// use tokenring::parallelism::ScheduleSpec;
+///
+/// let records = Experiment::new("doc")
+///     .schedules(&[
+///         ScheduleSpec::TokenRing { elide_q: true },
+///         ScheduleSpec::RingAttention,
+///     ])
+///     .seqs(&[2048])
+///     .run()
+///     .unwrap();
+/// assert_eq!(records.len(), 2);
+/// assert_eq!(records[0].schedule, "token_ring");
+/// assert!(records.iter().all(|r| r.makespan > 0.0));
+/// ```
 #[derive(Debug, Clone)]
 pub struct Experiment {
+    /// Experiment name (artifact file stem).
     pub name: String,
+    /// Model preset shared by every point.
     pub model: ModelConfig,
     /// Cluster preset name, resolved per-point via [`Cluster::by_name`]
     /// (so a `devices` axis can instantiate the preset at several sizes).
     pub cluster: String,
+    /// Schedule axis.
     pub schedules: Vec<ScheduleSpec>,
+    /// Sequence-length axis.
     pub seqs: Vec<usize>,
+    /// Device-count axis.
     pub devices: Vec<usize>,
+    /// Causal-masking axis.
     pub causal: Vec<bool>,
+    /// Partition-strategy axis.
     pub partitions: Vec<Partition>,
 }
 
 impl Experiment {
+    /// Builder seeded with the Figure-6 defaults; override axes with the
+    /// chained setters below.
     pub fn new(name: &str) -> Experiment {
         Experiment {
             name: name.to_string(),
@@ -61,36 +87,43 @@ impl Experiment {
         }
     }
 
+    /// Set the model preset.
     pub fn model(mut self, model: ModelConfig) -> Self {
         self.model = model;
         self
     }
 
+    /// Set the cluster preset name (see `Cluster::by_name`).
     pub fn cluster(mut self, preset: &str) -> Self {
         self.cluster = preset.to_string();
         self
     }
 
+    /// Set the schedule axis.
     pub fn schedules(mut self, specs: &[ScheduleSpec]) -> Self {
         self.schedules = specs.to_vec();
         self
     }
 
+    /// Set the sequence-length axis.
     pub fn seqs(mut self, seqs: &[usize]) -> Self {
         self.seqs = seqs.to_vec();
         self
     }
 
+    /// Set the device-count axis.
     pub fn devices(mut self, devices: &[usize]) -> Self {
         self.devices = devices.to_vec();
         self
     }
 
+    /// Set the causal-masking axis.
     pub fn causal(mut self, causal: &[bool]) -> Self {
         self.causal = causal.to_vec();
         self
     }
 
+    /// Set the partition-strategy axis.
     pub fn partitions(mut self, partitions: &[Partition]) -> Self {
         self.partitions = partitions.to_vec();
         self
@@ -184,12 +217,19 @@ pub fn run_specs(specs: &[RunSpec]) -> Result<Vec<RunRecord>> {
 /// One fully-specified simulation point.
 #[derive(Debug, Clone)]
 pub struct RunSpec {
+    /// Schedule to simulate.
     pub schedule: ScheduleSpec,
+    /// Cluster preset name.
     pub cluster: String,
+    /// Model preset.
     pub model: ModelConfig,
+    /// Total sequence length.
     pub seq: usize,
+    /// Sequence-parallel degree.
     pub devices: usize,
+    /// Causal masking.
     pub causal: bool,
+    /// Partition strategy.
     pub partition: Partition,
 }
 
@@ -281,16 +321,24 @@ impl RunSpec {
 /// (not compute-hidden) communication time summed over micro-steps.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PhaseBreakdown {
+    /// Attention-block compute seconds.
     pub compute: f64,
+    /// Online-softmax merge (Update rule) seconds.
     pub merge: f64,
+    /// Q-block transfer seconds (TokenRing forward direction).
     pub send_q: f64,
+    /// KV-block transfer seconds (Ring-Attention / hybrid inter-node).
     pub send_kv: f64,
+    /// Partial-output transfer seconds (TokenRing backward direction).
     pub send_out: f64,
+    /// Collective (all-to-all / all-reduce) seconds.
     pub collective: f64,
+    /// Communication not hidden behind compute, summed over micro-steps.
     pub exposed_comm: f64,
 }
 
 impl PhaseBreakdown {
+    /// Aggregate a simulation's spans by kind.
     pub fn from_sim(sim: &SimResult) -> PhaseBreakdown {
         let mut p = PhaseBreakdown::default();
         for s in &sim.spans {
@@ -335,13 +383,19 @@ pub struct RunRecord {
     pub schedule: String,
     /// Cluster preset name this point ran on.
     pub cluster: String,
+    /// Model preset name.
     pub model: String,
+    /// Total sequence length.
     pub seq: usize,
+    /// Sequence-parallel degree.
     pub devices: usize,
+    /// Causal masking.
     pub causal: bool,
+    /// Partition name (`contiguous` | `zigzag` | `striped:<k>`).
     pub partition: String,
     /// End-to-end simulated seconds for one attention pass.
     pub makespan: f64,
+    /// Busy seconds by span kind plus exposed communication.
     pub phases: PhaseBreakdown,
     /// Analytic Table-1 volumes, where the scheme has a closed form.
     pub volume: Option<VolumeReport>,

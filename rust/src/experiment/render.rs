@@ -2,13 +2,20 @@
 //! traces. Reports, benches and `tokenring run --config` all print through
 //! these, so a figure regenerated from a config file is byte-comparable
 //! with the legacy subcommand that produced it.
+//!
+//! Serving runs render here too: [`serve_summary_table`] /
+//! [`serve_steps_table`] for text, [`serve_chrome_trace`] for
+//! chrome://tracing, and [`write_serve_artifact`] for the
+//! `BENCH_serve.json` artifact (schema: EXPERIMENTS.md §Serve).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
+use crate::json_obj;
 use crate::metrics::timeline_from_sim;
 use crate::runtime::default_artifact_dir;
+use crate::scheduler::ContinuousServeReport;
 use crate::util::json::Json;
 use crate::util::stats::Table;
 
@@ -90,7 +97,7 @@ pub fn volumes_table(records: &[RunRecord]) -> String {
     t.render()
 }
 
-/// Dispatch by the config-file `render` field ([`config::RENDER_KINDS`];
+/// Dispatch by the config-file `render` field ([`crate::config::RENDER_KINDS`];
 /// the `all_registered_kinds_render` test keeps the two in lockstep).
 pub fn render(kind: &str, records: &[RunRecord]) -> Result<String> {
     Ok(match kind {
@@ -142,6 +149,119 @@ pub fn write_artifact(name: &str, records: &[RunRecord]) -> Result<PathBuf> {
 /// Chrome trace (chrome://tracing / Perfetto) of one record's simulation.
 pub fn chrome_trace(record: &RunRecord) -> String {
     timeline_from_sim(&record.sim).chrome_trace()
+}
+
+// ---------------------------------------------------------------------------
+// Serving-run renderers (continuous batching)
+// ---------------------------------------------------------------------------
+
+/// Headline serving percentiles: one row per metric family (TTFT, TPOT,
+/// queue delay), in milliseconds.
+pub fn serve_summary_table(report: &ContinuousServeReport) -> String {
+    let mut t = Table::new(&["metric", "p50 (ms)", "p95 (ms)", "mean (ms)", "max (ms)", "n"]);
+    for (name, s) in [
+        ("ttft", report.ttft_summary()),
+        ("tpot", report.tpot_summary()),
+        ("queue_delay", report.queue_delay_summary()),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{:.3}", s.p50 * 1e3),
+            format!("{:.3}", s.p95 * 1e3),
+            format!("{:.3}", s.mean * 1e3),
+            format!("{:.3}", s.max * 1e3),
+            s.n.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Per-micro-step batch-occupancy trace rows.
+pub fn serve_steps_table(report: &ContinuousServeReport) -> String {
+    let mut t = Table::new(&[
+        "step", "wall (ms)", "batch", "running", "queued",
+        "prefill tok", "decode tok", "kv tok", "kv budget",
+    ]);
+    for s in &report.steps {
+        t.row(&[
+            s.step.to_string(),
+            format!("{:.3}", (s.t1 - s.t0) * 1e3),
+            s.batch.to_string(),
+            s.running.to_string(),
+            s.queued.to_string(),
+            s.prefill_tokens.to_string(),
+            s.decode_tokens.to_string(),
+            s.kv_tokens.to_string(),
+            s.kv_budget.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Chrome trace of a serving run: one "X" span per micro-step plus "C"
+/// counter tracks for batch occupancy and resident KV tokens — load in
+/// chrome://tracing or Perfetto.
+pub fn serve_chrome_trace(report: &ContinuousServeReport) -> String {
+    let mut events = Vec::with_capacity(report.steps.len() * 3);
+    for s in &report.steps {
+        events.push(json_obj![
+            ("name", format!("step {}", s.step)),
+            ("cat", "serve"),
+            ("ph", "X"),
+            ("ts", s.t0 * 1e6),
+            ("dur", (s.t1 - s.t0) * 1e6),
+            ("pid", 0usize),
+            ("tid", 0usize),
+            (
+                "args",
+                json_obj![
+                    ("batch", s.batch),
+                    ("running", s.running),
+                    ("queued", s.queued),
+                    ("prefill_tokens", s.prefill_tokens),
+                    ("decode_tokens", s.decode_tokens),
+                ]
+            ),
+        ]);
+        events.push(json_obj![
+            ("name", "batch occupancy"),
+            ("ph", "C"),
+            ("ts", s.t0 * 1e6),
+            ("pid", 0usize),
+            ("args", json_obj![("requests", s.batch)]),
+        ]);
+        events.push(json_obj![
+            ("name", "kv tokens"),
+            ("ph", "C"),
+            ("ts", s.t0 * 1e6),
+            ("pid", 0usize),
+            ("args", json_obj![("resident", s.kv_tokens), ("budget", s.kv_budget)]),
+        ]);
+    }
+    Json::Obj([("traceEvents".to_string(), Json::Arr(events))].into_iter().collect())
+        .to_string()
+}
+
+/// Write a serving report's JSON artifact to an explicit path (parent
+/// dirs created).
+pub fn write_serve_json(path: &Path, report: &ContinuousServeReport) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, report.to_json().to_string())
+        .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Write the serving artifact under the default artifact directory
+/// (`serve/BENCH_<name>.json`), returning the path.
+pub fn write_serve_artifact(name: &str, report: &ContinuousServeReport) -> Result<PathBuf> {
+    let path = default_artifact_dir().join("serve").join(format!("BENCH_{name}.json"));
+    write_serve_json(&path, report)?;
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -214,6 +334,76 @@ mod tests {
         write_json(&path, &records()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn serve_report() -> ContinuousServeReport {
+        use crate::scheduler::{ServedRequest, StepTrace};
+        use crate::workload::Priority;
+        ContinuousServeReport {
+            requests: vec![ServedRequest {
+                id: 0,
+                seq_len: 16,
+                decode_tokens: 2,
+                priority: Priority::Standard,
+                arrival: 0.0,
+                admitted: 0.0,
+                admitted_step: 0,
+                eligible_step: 0,
+                first_token: 0.002,
+                finish: 0.004,
+                preemptions: 0,
+            }],
+            steps: vec![StepTrace {
+                step: 0,
+                t0: 0.0,
+                t1: 0.002,
+                batch: 1,
+                running: 1,
+                queued: 0,
+                prefill_tokens: 16,
+                decode_tokens: 0,
+                kv_tokens: 16,
+                kv_budget: 64,
+            }],
+            total_prefill_tokens: 16,
+            total_decode_tokens: 2,
+            preemptions: 0,
+            wall: 0.004,
+            outputs: Default::default(),
+        }
+    }
+
+    #[test]
+    fn serve_tables_render() {
+        let r = serve_report();
+        let s = serve_summary_table(&r);
+        assert!(s.contains("ttft") && s.contains("tpot") && s.contains("queue_delay"));
+        let t = serve_steps_table(&r);
+        assert!(t.contains("kv tok") && t.contains("batch"));
+        assert!(t.contains("16"));
+    }
+
+    #[test]
+    fn serve_chrome_trace_has_spans_and_counters() {
+        let trace = serve_chrome_trace(&serve_report());
+        let j = Json::parse(&trace).unwrap();
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("ph").as_str(), Some("X"));
+        assert_eq!(evs[1].get("ph").as_str(), Some("C"));
+        assert_eq!(evs[2].get("args").get("budget").as_usize(), Some(64));
+    }
+
+    #[test]
+    fn serve_artifact_writes_and_parses() {
+        let dir = std::env::temp_dir().join("tokenring_serve_render_test");
+        let path = dir.join("nested").join("BENCH_serve.json");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_serve_json(&path, &serve_report()).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("requests").as_usize(), Some(1));
+        assert!(j.get("occupancy").get("max").as_usize().unwrap() >= 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -13,6 +13,7 @@
 //! tokenring zigzag    [--seq 32768] [--devices 4]
 //! tokenring hybrid    [--seq 49152] [--nodes 2] [--per-node 4]
 //! tokenring validate  [--backend native|pjrt] [--profile tiny]
+//! tokenring serve     --config configs/serve.json [--out report.json]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
 //! tokenring trace     --schedule token_ring --out trace.json
 //! tokenring schedules
@@ -22,11 +23,17 @@
 //! it expands the schedule × seq × devices × causal × partition grid,
 //! sweeps it in parallel, prints the configured table, and writes the
 //! structured RunRecord JSON artifact (schema: EXPERIMENTS.md).
+//!
+//! `serve --config` runs the continuous-batching serve loop over a named
+//! workload mix (poisson | bursty | long_context), prints TTFT/TPOT/
+//! queue-delay percentiles plus batch occupancy, and writes the
+//! BENCH_serve.json artifact; without `--config` it runs the legacy
+//! prefill-only FIFO driver.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use tokenring::config::ExperimentConfig;
+use tokenring::config::{ExperimentConfig, ServeConfig};
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{self, EngineOpts};
 use tokenring::experiment::{render, Experiment};
@@ -34,7 +41,7 @@ use tokenring::parallelism::partition::Partition;
 use tokenring::parallelism::ScheduleSpec;
 use tokenring::reports;
 use tokenring::runtime::default_artifact_dir;
-use tokenring::scheduler::{serve, ServeOpts};
+use tokenring::scheduler::{serve, serve_continuous, ServeOpts};
 use tokenring::tensor::Tensor;
 use tokenring::util::cli::{render_help, Args, OptSpec};
 use tokenring::util::rng::Rng;
@@ -79,6 +86,7 @@ fn usage() -> String {
     "tokenring — bidirectional sequence parallelism (paper reproduction)\n\
      commands: run | fig6 | table1 | scaling | zigzag | hybrid | validate | serve | trace | schedules\n\
      `run --config configs/<x>.json` executes a declarative experiment grid;\n\
+     `serve --config configs/serve.json` runs the continuous-batching serve loop;\n\
      run `tokenring <cmd> --help` for options"
         .to_string()
 }
@@ -303,15 +311,21 @@ fn cmd_validate(argv: &[String]) -> Result<(), String> {
 
 fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let specs = [
-        OptSpec { name: "requests", help: "request count", default: Some("16"), is_flag: false },
-        OptSpec { name: "devices", help: "SP degree", default: Some("4"), is_flag: false },
-        OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention)", default: Some("token_ring"), is_flag: false },
-        OptSpec { name: "rate", help: "arrival rate (req/s)", default: Some("8"), is_flag: false },
-        OptSpec { name: "layers", help: "attention passes per request", default: Some("2"), is_flag: false },
+        OptSpec { name: "config", help: "continuous-batching serve config JSON (see configs/serve.json); without it the legacy prefill-only FIFO driver runs", default: None, is_flag: false },
+        OptSpec { name: "out", help: "artifact path for the serve report (with --config; default: <artifacts>/serve/BENCH_<name>.json)", default: None, is_flag: false },
+        OptSpec { name: "trace", help: "write a chrome trace of the serve steps here (with --config)", default: None, is_flag: false },
+        OptSpec { name: "requests", help: "request count (legacy driver)", default: Some("16"), is_flag: false },
+        OptSpec { name: "devices", help: "SP degree (legacy driver)", default: Some("4"), is_flag: false },
+        OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention; legacy driver)", default: Some("token_ring"), is_flag: false },
+        OptSpec { name: "rate", help: "arrival rate (req/s; legacy driver)", default: Some("8"), is_flag: false },
+        OptSpec { name: "layers", help: "attention passes per request (legacy driver)", default: Some("2"), is_flag: false },
     ];
     let Some(args) = parse_or_help(argv, "serve", "e2e serving driver", &specs)? else {
         return Ok(());
     };
+    if let Some(path) = args.get("config") {
+        return cmd_serve_config(path, args.get("out"), args.get("trace"));
+    }
     let n = args.get_usize("devices")?;
     let schedule = ScheduleSpec::parse(args.get_str("schedule")?).map_err(|e| e.to_string())?;
     let gen = WorkloadGen {
@@ -350,6 +364,51 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         lat.p95 * 1e3,
         rep.service_p50() * 1e3,
     );
+    Ok(())
+}
+
+/// `tokenring serve --config`: the continuous-batching path.
+fn cmd_serve_config(
+    path: &str,
+    out: Option<&str>,
+    trace: Option<&str>,
+) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let cfg = ServeConfig::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+    let requests = cfg.generate().map_err(|e| e.to_string())?;
+    let report = serve_continuous(&requests, &cfg.opts()).map_err(|e| e.to_string())?;
+    println!(
+        "{} — {} requests over {} devices (mix '{}', continuous batching)\n",
+        cfg.name,
+        report.requests.len(),
+        cfg.devices,
+        cfg.mix
+    );
+    println!("{}", render::serve_summary_table(&report));
+    println!(
+        "throughput {:.0} tok/s ({:.0} decode tok/s) | occupancy max {} mean {:.2} | \
+         preemptions {} | {} steps in {:.3}s",
+        report.throughput_tokens_per_s(),
+        report.decode_tokens_per_s(),
+        report.max_occupancy(),
+        report.mean_occupancy(),
+        report.preemptions,
+        report.steps.len(),
+        report.wall,
+    );
+    if let Some(prefix) = trace {
+        std::fs::write(prefix, render::serve_chrome_trace(&report)).map_err(|e| e.to_string())?;
+        println!("wrote {prefix} — open in chrome://tracing or Perfetto");
+    }
+    let out_path = match out {
+        Some(p) => {
+            let p = PathBuf::from(p);
+            render::write_serve_json(&p, &report).map_err(|e| e.to_string())?;
+            p
+        }
+        None => render::write_serve_artifact(&cfg.name, &report).map_err(|e| e.to_string())?,
+    };
+    println!("wrote {}", out_path.display());
     Ok(())
 }
 

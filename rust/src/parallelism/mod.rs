@@ -23,9 +23,13 @@ use partition::Partition;
 /// Everything a schedule needs to cost one attention pass.
 #[derive(Debug, Clone)]
 pub struct AttnJob {
+    /// Problem shape (sequence length, heads, head dim, dtype).
     pub shape: AttnShape,
+    /// Per-device compute cost model.
     pub compute: ComputeModel,
+    /// Causal masking (enables zigzag balancing and Q-elision).
     pub causal: bool,
+    /// How sequence positions are assigned to devices.
     pub partition: Partition,
 }
 
@@ -59,6 +63,8 @@ impl AttnJob {
 
 /// A named schedule that can be compiled to a simulator graph.
 pub trait Schedule {
+    /// Canonical schedule name (matches the registry, modulo variant
+    /// suffixes).
     fn name(&self) -> &'static str;
 
     /// Build the task DAG for one attention pass on `topo`.
@@ -79,9 +85,14 @@ pub trait Schedule {
 /// schedule" error lists the same valid set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScheduleSpec {
+    /// The paper's bidirectional schedule; `elide_q` enables §3.3.2
+    /// zigzag Q-elision.
     TokenRing { elide_q: bool },
+    /// KV-circulating Ring-Attention baseline.
     RingAttention,
+    /// DeepSpeed-Ulysses all-to-all head parallelism.
     Ulysses,
+    /// Megatron-style tensor parallelism.
     TensorParallel,
     /// Multi-node hybrid. `nodes`/`per_node` describe the intended cluster
     /// shape (used when a config expands to a `two_level` cluster); the
@@ -125,6 +136,21 @@ impl ScheduleSpec {
     /// Resolve a schedule name. Accepts every canonical [`ScheduleSpec::name`]
     /// plus the parameterized form `hybrid:<nodes>x<per_node>` (and the
     /// `hybrid` shorthand for the 2×4 default).
+    ///
+    /// ```
+    /// use tokenring::parallelism::ScheduleSpec;
+    ///
+    /// let spec = ScheduleSpec::parse("token_ring").unwrap();
+    /// assert_eq!(spec, ScheduleSpec::TokenRing { elide_q: true });
+    /// assert_eq!(spec.name(), "token_ring");
+    /// assert_eq!(
+    ///     ScheduleSpec::parse("hybrid:3x8").unwrap(),
+    ///     ScheduleSpec::Hybrid { nodes: 3, per_node: 8 },
+    /// );
+    /// // unknown names fail with the full registry in the message
+    /// let err = ScheduleSpec::parse("warp_drive").unwrap_err().to_string();
+    /// assert!(err.contains("ring_attention"));
+    /// ```
     pub fn parse(s: &str) -> Result<ScheduleSpec> {
         Ok(match s {
             "token_ring" => ScheduleSpec::TokenRing { elide_q: true },

@@ -1,0 +1,764 @@
+//! Continuous-batching serve loop: iteration-level scheduling over the
+//! batched decode ring.
+//!
+//! Every engine micro-step composes one [`crate::engine::decode::run_decode_ring`]
+//! batch from two sources:
+//! * **decode queries** — one token for every running request whose prompt
+//!   is fully resident, and
+//! * **prefill chunks** — up to `chunk` prompt tokens for every admitted
+//!   request still streaming its prompt into the KV cache (chunked
+//!   prefill), capped by `max_step_tokens` and the KV budget headroom.
+//!
+//! New requests are admitted each step from an [`AdmissionQueue`] (FCFS
+//! within priority classes, aging-bounded starvation), reserving their
+//! prompt length against `kv_budget_tokens`. Decode growth is *not*
+//! reserved: when the appends of a step would push resident KV past the
+//! budget, the batcher preempts victims — lowest class, least progress
+//! first — freeing their cache and re-queueing them for a deterministic
+//! replay (content is a pure function of position, see
+//! [`TokenSource`]).
+//!
+//! Per-request numerics are independent of batch composition: a query row
+//! at position `p` attends only to its own request's cache rows at
+//! positions `<= p` (causal), so the continuous path produces the same
+//! outputs as the sequential reference path
+//! ([`serve_sequential`]) — the equivalence `tests/serve_scheduler.rs`
+//! proves.
+//!
+//! Time is virtual: the clock advances by each micro-step's measured wall
+//! time and jumps across idle gaps to the next arrival, so TTFT/TPOT and
+//! queue-delay percentiles are meaningful without real-time sleeping.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::engine::backend::BackendSpec;
+use crate::engine::decode::{run_decode_ring, DecodeQuery};
+use crate::engine::kv_cache::KvCache;
+use crate::engine::EngineOpts;
+use crate::json_obj;
+use crate::parallelism::partition::Partition;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::{Priority, Request};
+
+use super::queue::AdmissionQueue;
+use super::source::TokenSource;
+
+/// Options for the continuous-batching serve loop.
+#[derive(Debug, Clone)]
+pub struct ContinuousServeOpts {
+    /// Ring size (device threads per micro-step).
+    pub devices: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Prefill chunk: prompt tokens entering the cache per request per
+    /// micro-step (also the KV page size).
+    pub chunk: usize,
+    /// Admission cap: maximum requests concurrently in flight.
+    pub max_batch: usize,
+    /// Cap on new query tokens composed into one micro-step (decode
+    /// tokens count first, prefill chunks fill the remainder).
+    pub max_step_tokens: usize,
+    /// Cluster-wide KV residency budget in tokens. Admission reserves
+    /// prompt lengths against it; decode growth preempts past it.
+    pub kv_budget_tokens: usize,
+    /// Steps a queued request waits before being boosted to class 0
+    /// (see [`AdmissionQueue`]).
+    pub aging_steps: u64,
+    /// Content seed for the deterministic [`TokenSource`].
+    pub seed: u64,
+    /// Collect per-request decode outputs in the report (equivalence
+    /// tests; off by default — it retains one tensor per output token).
+    pub keep_outputs: bool,
+    /// Engine options; `causal` must be true (chunked prefill relies on
+    /// causal masking for batching-invariant numerics).
+    pub engine: EngineOpts,
+}
+
+impl Default for ContinuousServeOpts {
+    fn default() -> Self {
+        ContinuousServeOpts {
+            devices: 4,
+            heads: 4,
+            head_dim: 32,
+            chunk: 32,
+            max_batch: 8,
+            max_step_tokens: 512,
+            kv_budget_tokens: 1 << 16,
+            aging_steps: 32,
+            seed: 0x5EED,
+            keep_outputs: false,
+            engine: EngineOpts {
+                causal: true,
+                partition: Partition::Contiguous,
+                backend: BackendSpec::Native,
+                record: false,
+            },
+        }
+    }
+}
+
+/// Measured life of one request under the continuous batcher.
+#[derive(Debug, Clone, Copy)]
+pub struct ServedRequest {
+    /// Request id.
+    pub id: usize,
+    /// Prompt length in tokens.
+    pub seq_len: usize,
+    /// Output tokens generated.
+    pub decode_tokens: usize,
+    /// Scheduling class.
+    pub priority: Priority,
+    /// Arrival on the virtual clock.
+    pub arrival: f64,
+    /// First admission time (queue-delay endpoint; preemptions do not
+    /// reset it).
+    pub admitted: f64,
+    /// Step of first admission.
+    pub admitted_step: u64,
+    /// Step at which the request first became admissible (arrived).
+    pub eligible_step: u64,
+    /// Prefill completion on the virtual clock — the request's first
+    /// output token becomes computable here (the TTFT endpoint, matching
+    /// the sequential path's definition).
+    pub first_token: f64,
+    /// Last decode token completed.
+    pub finish: f64,
+    /// Times this request was evicted and replayed.
+    pub preemptions: usize,
+}
+
+impl ServedRequest {
+    /// Time to first token: prefill completion minus arrival.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Queue delay: first admission minus arrival.
+    pub fn queue_delay(&self) -> f64 {
+        self.admitted - self.arrival
+    }
+
+    /// Time per output token over the decode phase (0.0 for requests with
+    /// no decode phase).
+    pub fn tpot(&self) -> f64 {
+        if self.decode_tokens == 0 {
+            0.0
+        } else {
+            (self.finish - self.first_token) / self.decode_tokens as f64
+        }
+    }
+}
+
+/// One micro-step of the batch-occupancy trace.
+#[derive(Debug, Clone, Copy)]
+pub struct StepTrace {
+    pub step: u64,
+    /// Virtual-clock span of the step.
+    pub t0: f64,
+    pub t1: f64,
+    /// Distinct requests contributing at least one query token.
+    pub batch: usize,
+    /// Requests admitted (in flight) when the step executed.
+    pub running: usize,
+    /// Requests that have arrived and are still waiting for admission
+    /// (future scheduled arrivals are not counted).
+    pub queued: usize,
+    /// Prompt tokens prefetched into the cache this step.
+    pub prefill_tokens: usize,
+    /// Decode tokens generated this step.
+    pub decode_tokens: usize,
+    /// Resident KV tokens after the step's appends.
+    pub kv_tokens: usize,
+    /// The budget the batcher held `kv_tokens` under.
+    pub kv_budget: usize,
+}
+
+/// Aggregate report of a continuous-batching serve run.
+#[derive(Debug, Clone, Default)]
+pub struct ContinuousServeReport {
+    /// Per-request metrics, sorted by id.
+    pub requests: Vec<ServedRequest>,
+    /// Per-micro-step occupancy trace.
+    pub steps: Vec<StepTrace>,
+    /// Prompt tokens prefetched (re-prefills after preemption included).
+    pub total_prefill_tokens: usize,
+    /// Output tokens generated (replays after preemption included).
+    pub total_decode_tokens: usize,
+    /// Total evictions across the run.
+    pub preemptions: usize,
+    /// Virtual-clock end of the run.
+    pub wall: f64,
+    /// Per-request decode outputs, populated only under
+    /// [`ContinuousServeOpts::keep_outputs`].
+    pub outputs: HashMap<usize, Vec<Tensor>>,
+}
+
+impl ContinuousServeReport {
+    /// End-to-end token throughput (prefill + decode) per virtual second;
+    /// 0.0 (never NaN) for empty or zero-duration runs.
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        let tokens = self.total_prefill_tokens + self.total_decode_tokens;
+        if self.wall > 0.0 && tokens > 0 {
+            tokens as f64 / self.wall
+        } else {
+            0.0
+        }
+    }
+
+    /// Decode-only throughput per virtual second; 0.0 for empty or
+    /// zero-duration runs.
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.wall > 0.0 && self.total_decode_tokens > 0 {
+            self.total_decode_tokens as f64 / self.wall
+        } else {
+            0.0
+        }
+    }
+
+    /// TTFT percentiles over all served requests (empty-safe).
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::from_samples(self.requests.iter().map(ServedRequest::ttft).collect())
+    }
+
+    /// Time-per-output-token percentiles over requests with a decode
+    /// phase (empty-safe).
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::from_samples(
+            self.requests
+                .iter()
+                .filter(|r| r.decode_tokens > 0)
+                .map(ServedRequest::tpot)
+                .collect(),
+        )
+    }
+
+    /// Queue-delay percentiles over all served requests (empty-safe).
+    pub fn queue_delay_summary(&self) -> Summary {
+        Summary::from_samples(self.requests.iter().map(ServedRequest::queue_delay).collect())
+    }
+
+    /// Largest number of requests composed into one micro-step.
+    pub fn max_occupancy(&self) -> usize {
+        self.steps.iter().map(|s| s.batch).max().unwrap_or(0)
+    }
+
+    /// Mean requests per micro-step (0.0 for an empty trace).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps.is_empty() {
+            0.0
+        } else {
+            self.steps.iter().map(|s| s.batch).sum::<usize>() as f64 / self.steps.len() as f64
+        }
+    }
+
+    /// The `BENCH_serve.json` artifact schema (EXPERIMENTS.md §Serve).
+    pub fn to_json(&self) -> Json {
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                json_obj![
+                    ("step", s.step as usize),
+                    ("t0", s.t0),
+                    ("t1", s.t1),
+                    ("batch", s.batch),
+                    ("running", s.running),
+                    ("queued", s.queued),
+                    ("prefill_tokens", s.prefill_tokens),
+                    ("decode_tokens", s.decode_tokens),
+                    ("kv_tokens", s.kv_tokens),
+                    ("kv_budget", s.kv_budget),
+                ]
+            })
+            .collect();
+        let per_request: Vec<Json> = self
+            .requests
+            .iter()
+            .map(|r| {
+                json_obj![
+                    ("id", r.id),
+                    ("seq_len", r.seq_len),
+                    ("decode_tokens", r.decode_tokens),
+                    ("priority", r.priority.name()),
+                    ("arrival", r.arrival),
+                    ("admitted", r.admitted),
+                    ("admitted_step", r.admitted_step as usize),
+                    ("eligible_step", r.eligible_step as usize),
+                    ("first_token", r.first_token),
+                    ("finish", r.finish),
+                    ("ttft", r.ttft()),
+                    ("tpot", r.tpot()),
+                    ("queue_delay", r.queue_delay()),
+                    ("preemptions", r.preemptions),
+                ]
+            })
+            .collect();
+        json_obj![
+            ("requests", self.requests.len()),
+            ("preemptions", self.preemptions),
+            ("wall_s", self.wall),
+            ("prefill_tokens", self.total_prefill_tokens),
+            ("decode_tokens", self.total_decode_tokens),
+            ("throughput_tok_s", self.throughput_tokens_per_s()),
+            ("decode_tok_s", self.decode_tokens_per_s()),
+            ("ttft", self.ttft_summary().to_json()),
+            ("tpot", self.tpot_summary().to_json()),
+            ("queue_delay", self.queue_delay_summary().to_json()),
+            (
+                "occupancy",
+                json_obj![("max", self.max_occupancy()), ("mean", self.mean_occupancy())]
+            ),
+            ("steps", Json::Arr(steps)),
+            ("per_request", Json::Arr(per_request)),
+        ]
+    }
+}
+
+/// Per-request bookkeeping that survives preemption.
+#[derive(Debug, Default, Clone, Copy)]
+struct Meta {
+    admitted: Option<(f64, u64)>,
+    eligible_step: Option<u64>,
+    first_token: Option<f64>,
+    preemptions: usize,
+}
+
+/// An admitted request.
+#[derive(Debug, Clone, Copy)]
+struct Running {
+    req: Request,
+    /// Next prompt position to prefill (== seq_len once resident).
+    next_prefill: usize,
+    /// Decode tokens generated so far.
+    produced: usize,
+}
+
+impl Running {
+    fn is_decoding(&self) -> bool {
+        self.next_prefill == self.req.seq_len
+    }
+
+    fn progress(&self) -> usize {
+        self.next_prefill + self.produced
+    }
+}
+
+fn validate(requests: &[Request], opts: &ContinuousServeOpts) -> Result<()> {
+    if requests.is_empty() {
+        bail!("empty workload");
+    }
+    if opts.devices == 0 || opts.heads == 0 || opts.head_dim == 0 {
+        bail!("devices/heads/head_dim must be positive");
+    }
+    if opts.chunk == 0 || opts.max_batch == 0 || opts.max_step_tokens == 0 {
+        bail!("chunk/max_batch/max_step_tokens must be positive");
+    }
+    if !opts.engine.causal {
+        bail!("continuous batching requires causal attention (chunked prefill)");
+    }
+    let mut seen = HashSet::new();
+    for r in requests {
+        if !seen.insert(r.id) {
+            bail!("duplicate request id {}", r.id);
+        }
+        if r.seq_len == 0 {
+            bail!("request {} has an empty prompt", r.id);
+        }
+        if r.peak_kv_tokens() > opts.kv_budget_tokens {
+            bail!(
+                "request {} needs {} KV tokens at peak, over the budget of {}",
+                r.id,
+                r.peak_kv_tokens(),
+                opts.kv_budget_tokens
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Victim for preemption: highest class first, then least progress (least
+/// wasted work), then highest id.
+fn pick_victim(running: &[Running]) -> usize {
+    (0..running.len())
+        .max_by_key(|&i| {
+            let r = &running[i];
+            (r.req.priority.class(), std::cmp::Reverse(r.progress()), r.req.id)
+        })
+        .expect("non-empty running set")
+}
+
+/// Serve `requests` to completion with continuous batching; see the
+/// module docs for the scheduling policy and [`ContinuousServeReport`]
+/// for what is measured.
+pub fn serve_continuous(
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+) -> Result<ContinuousServeReport> {
+    validate(requests, opts)?;
+    let n = opts.devices;
+    let source = TokenSource::new(opts.seed, opts.heads, opts.head_dim);
+    let mut cache = KvCache::new(n, opts.heads, opts.head_dim, opts.chunk);
+    let mut queue = AdmissionQueue::new(opts.aging_steps);
+    let mut meta: HashMap<usize, Meta> = HashMap::with_capacity(requests.len());
+    for r in requests {
+        queue.push(*r);
+        meta.insert(r.id, Meta::default());
+    }
+
+    let mut running: Vec<Running> = Vec::new();
+    let mut finished: Vec<ServedRequest> = Vec::new();
+    let mut outputs: HashMap<usize, Vec<Tensor>> = HashMap::new();
+    let mut trace: Vec<StepTrace> = Vec::new();
+    let mut clock = 0.0f64;
+    let mut step = 0u64;
+    let mut total_prefill = 0usize;
+    let mut total_decode = 0usize;
+    let mut preemptions = 0usize;
+
+    // Replays are bounded, but a pathological budget could thrash; fail
+    // loudly instead of looping forever.
+    let work: usize = requests
+        .iter()
+        .map(|r| r.seq_len.div_ceil(opts.chunk) + r.decode_tokens + 1)
+        .sum();
+    let max_steps = 64 * work as u64 + 1024;
+
+    while finished.len() < requests.len() {
+        if step >= max_steps {
+            bail!("serve loop exceeded {max_steps} steps (KV budget too tight to converge?)");
+        }
+
+        queue.mark_eligible(clock, step);
+
+        // --- admission: reserve prompt lengths against the KV budget
+        while running.len() < opts.max_batch {
+            let projected: usize = cache.total_tokens()
+                + running.iter().map(|r| r.req.seq_len - r.next_prefill).sum::<usize>();
+            let budget = opts.kv_budget_tokens;
+            let Some((req, eligible)) = queue.pop_if(step, |c| projected + c.seq_len <= budget)
+            else {
+                break;
+            };
+            let m = meta.get_mut(&req.id).expect("meta for every request");
+            if m.eligible_step.is_none() {
+                m.eligible_step = Some(eligible);
+            }
+            if m.admitted.is_none() {
+                m.admitted = Some((clock, step));
+            }
+            running.push(Running { req, next_prefill: 0, produced: 0 });
+        }
+
+        // --- idle: jump the virtual clock to the next arrival
+        if running.is_empty() {
+            match queue.next_arrival_after(clock) {
+                Some(t) => {
+                    clock = t;
+                    continue;
+                }
+                None => bail!("serve loop stalled with no admissible requests"),
+            }
+        }
+
+        // --- compose the micro-step (preempting if decode growth exceeds
+        //     the budget)
+        let (decode_idx, prefill_plan) = loop {
+            let mut step_tokens = 0usize;
+            let mut decode_idx: Vec<usize> = Vec::new();
+            for (i, r) in running.iter().enumerate() {
+                if r.is_decoding() && step_tokens < opts.max_step_tokens {
+                    decode_idx.push(i);
+                    step_tokens += 1;
+                }
+            }
+            let resident = cache.total_tokens();
+            if resident + decode_idx.len() > opts.kv_budget_tokens && running.len() > 1 {
+                let v = pick_victim(&running);
+                let victim = running.swap_remove(v);
+                cache.free(victim.req.id);
+                let m = meta.get_mut(&victim.req.id).expect("meta for every request");
+                m.preemptions += 1;
+                m.first_token = None;
+                preemptions += 1;
+                outputs.remove(&victim.req.id);
+                queue.push(victim.req);
+                continue;
+            }
+            let mut headroom =
+                opts.kv_budget_tokens.saturating_sub(resident + decode_idx.len());
+            let mut prefill_plan: Vec<(usize, usize)> = Vec::new();
+            for (i, r) in running.iter().enumerate() {
+                if r.is_decoding() {
+                    continue;
+                }
+                let take = (r.req.seq_len - r.next_prefill)
+                    .min(opts.chunk)
+                    .min(opts.max_step_tokens.saturating_sub(step_tokens))
+                    .min(headroom);
+                if take > 0 {
+                    prefill_plan.push((i, take));
+                    step_tokens += take;
+                    headroom -= take;
+                }
+            }
+            break (decode_idx, prefill_plan);
+        };
+
+        // --- build the batch: prefill chunks enter the cache, then their
+        //     queries attend to the whole prefix (causal); decode queries
+        //     attend to their full resident context
+        let mut queries: Vec<DecodeQuery> = Vec::with_capacity(decode_idx.len() + prefill_plan.len());
+        let mut prefill_tokens = 0usize;
+        for &(i, take) in &prefill_plan {
+            let r = &running[i];
+            let start = r.next_prefill;
+            let (k, v) = source.kv(r.req.id, start, take);
+            cache.append(r.req.id, &k, &v)?;
+            queries.push(DecodeQuery {
+                request: r.req.id,
+                q: source.q(r.req.id, start, take),
+                q_pos: (start as i32..(start + take) as i32).collect(),
+            });
+            prefill_tokens += take;
+        }
+        for &i in &decode_idx {
+            let r = &running[i];
+            let pos = cache.seq_len(r.req.id);
+            debug_assert_eq!(pos, r.req.seq_len + r.produced);
+            queries.push(DecodeQuery {
+                request: r.req.id,
+                q: source.q(r.req.id, pos, 1),
+                q_pos: vec![pos as i32],
+            });
+        }
+        if queries.is_empty() {
+            bail!("serve loop composed an empty step (internal scheduling bug)");
+        }
+
+        let batch = queries.len();
+        let running_now = running.len();
+        let t0 = clock;
+        let timer = Instant::now();
+        let res = run_decode_ring(queries, &cache, n, &opts.engine)?;
+        clock += timer.elapsed().as_secs_f64();
+
+        // --- advance request state
+        for &i in &decode_idx {
+            let r = &mut running[i];
+            if opts.keep_outputs {
+                let (out, _) = &res.outputs[&r.req.id];
+                outputs.entry(r.req.id).or_default().push(out.clone());
+            }
+            let pos = r.req.seq_len + r.produced;
+            let (k1, v1) = source.kv(r.req.id, pos, 1);
+            cache.append(r.req.id, &k1, &v1)?;
+            r.produced += 1;
+            total_decode += 1;
+        }
+        for &(i, take) in &prefill_plan {
+            let r = &mut running[i];
+            r.next_prefill += take;
+            total_prefill += take;
+            if r.next_prefill == r.req.seq_len {
+                meta.get_mut(&r.req.id).expect("meta for every request").first_token =
+                    Some(clock);
+            }
+        }
+
+        // peak residency: after this step's appends, before retirement
+        let kv_tokens = cache.total_tokens();
+
+        // --- retire finished requests
+        let mut still = Vec::with_capacity(running.len());
+        for r in running.drain(..) {
+            if r.is_decoding() && r.produced == r.req.decode_tokens {
+                let m = &meta[&r.req.id];
+                let (admitted, admitted_step) = m.admitted.expect("finished implies admitted");
+                finished.push(ServedRequest {
+                    id: r.req.id,
+                    seq_len: r.req.seq_len,
+                    decode_tokens: r.req.decode_tokens,
+                    priority: r.req.priority,
+                    arrival: r.req.arrival,
+                    admitted,
+                    admitted_step,
+                    eligible_step: m.eligible_step.unwrap_or(admitted_step),
+                    first_token: m.first_token.unwrap_or(clock),
+                    finish: clock,
+                    preemptions: m.preemptions,
+                });
+                cache.free(r.req.id);
+            } else {
+                still.push(r);
+            }
+        }
+        running = still;
+
+        trace.push(StepTrace {
+            step,
+            t0,
+            t1: clock,
+            batch,
+            running: running_now,
+            queued: queue.arrived_len(clock),
+            prefill_tokens,
+            decode_tokens: decode_idx.len(),
+            kv_tokens,
+            kv_budget: opts.kv_budget_tokens,
+        });
+        step += 1;
+    }
+
+    finished.sort_by_key(|r| r.id);
+    Ok(ContinuousServeReport {
+        requests: finished,
+        steps: trace,
+        total_prefill_tokens: total_prefill,
+        total_decode_tokens: total_decode,
+        preemptions,
+        wall: clock,
+        outputs,
+    })
+}
+
+/// The sequential reference path: identical semantics with at most one
+/// request in flight — the continuous batcher degenerated to the seed's
+/// one-at-a-time chunked-prefill + decode serve loop. `tests/serve_scheduler.rs`
+/// verifies [`serve_continuous`] reproduces its per-request outputs.
+pub fn serve_sequential(
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+) -> Result<ContinuousServeReport> {
+    let mut o = opts.clone();
+    o.max_batch = 1;
+    serve_continuous(requests, &o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ContinuousServeOpts {
+        ContinuousServeOpts {
+            devices: 2,
+            heads: 2,
+            head_dim: 8,
+            chunk: 8,
+            max_batch: 4,
+            max_step_tokens: 64,
+            kv_budget_tokens: 4096,
+            aging_steps: 8,
+            seed: 1,
+            keep_outputs: false,
+            ..Default::default()
+        }
+    }
+
+    fn req(id: usize, seq_len: usize, decode: usize) -> Request {
+        Request {
+            id,
+            seq_len,
+            arrival: 0.0,
+            decode_tokens: decode,
+            priority: Priority::Standard,
+        }
+    }
+
+    #[test]
+    fn serves_small_batch_to_completion() {
+        let reqs = vec![req(0, 16, 2), req(1, 16, 2)];
+        let rep = serve_continuous(&reqs, &opts()).unwrap();
+        assert_eq!(rep.requests.len(), 2);
+        assert_eq!(rep.total_prefill_tokens, 32);
+        assert_eq!(rep.total_decode_tokens, 4);
+        assert_eq!(rep.preemptions, 0);
+        assert!(rep.wall > 0.0);
+        assert!(rep.throughput_tokens_per_s() > 0.0);
+        assert_eq!(rep.max_occupancy(), 2, "simultaneous arrivals must batch");
+        for r in &rep.requests {
+            assert!(r.ttft() >= 0.0);
+            assert!(r.tpot() > 0.0);
+            assert!(r.finish >= r.first_token && r.first_token >= r.admitted);
+        }
+        for s in &rep.steps {
+            assert!(s.kv_tokens <= s.kv_budget);
+            assert!(s.t1 >= s.t0);
+        }
+    }
+
+    #[test]
+    fn zero_decode_request_finishes_at_prefill() {
+        let reqs = vec![req(0, 16, 0)];
+        let rep = serve_continuous(&reqs, &opts()).unwrap();
+        assert_eq!(rep.requests.len(), 1);
+        assert_eq!(rep.requests[0].finish, rep.requests[0].first_token);
+        assert_eq!(rep.requests[0].tpot(), 0.0);
+        assert_eq!(rep.total_decode_tokens, 0);
+    }
+
+    #[test]
+    fn report_guards_return_zero_not_nan() {
+        let rep = ContinuousServeReport::default();
+        assert_eq!(rep.throughput_tokens_per_s(), 0.0);
+        assert_eq!(rep.decode_tokens_per_s(), 0.0);
+        assert_eq!(rep.ttft_summary().n, 0);
+        assert!(!rep.tpot_summary().p50.is_nan());
+        assert_eq!(rep.queue_delay_summary(), Summary::empty());
+        assert_eq!(rep.max_occupancy(), 0);
+        assert_eq!(rep.mean_occupancy(), 0.0);
+        // and the artifact still serializes
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("throughput_tok_s").as_f64(), Some(0.0));
+        assert_eq!(j.get("ttft").get("n").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn artifact_json_has_documented_fields() {
+        let reqs = vec![req(0, 16, 2)];
+        let rep = serve_continuous(&reqs, &opts()).unwrap();
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        for key in [
+            "requests", "preemptions", "wall_s", "prefill_tokens", "decode_tokens",
+            "throughput_tok_s", "decode_tok_s", "ttft", "tpot", "queue_delay",
+            "occupancy", "steps", "per_request",
+        ] {
+            assert!(j.get(key) != &Json::Null, "missing field '{key}'");
+        }
+        assert_eq!(j.get("per_request").as_arr().unwrap().len(), 1);
+        let s0 = j.get("steps").at(0);
+        for key in ["step", "batch", "running", "queued", "kv_tokens", "kv_budget"] {
+            assert!(s0.get(key) != &Json::Null, "missing step field '{key}'");
+        }
+    }
+
+    #[test]
+    fn invalid_workloads_rejected() {
+        let o = opts();
+        assert!(serve_continuous(&[], &o).is_err());
+        assert!(serve_continuous(&[req(0, 0, 2)], &o).is_err());
+        assert!(serve_continuous(&[req(0, 16, 2), req(0, 16, 2)], &o).is_err());
+        // peak KV demand over the budget is unservable
+        let mut tight = o.clone();
+        tight.kv_budget_tokens = 8;
+        assert!(serve_continuous(&[req(0, 16, 2)], &tight).is_err());
+        // non-causal engines cannot chunk prefill
+        let mut nc = o.clone();
+        nc.engine.causal = false;
+        assert!(serve_continuous(&[req(0, 16, 2)], &nc).is_err());
+    }
+
+    #[test]
+    fn sequential_wrapper_caps_batch_at_one() {
+        let reqs = vec![req(0, 16, 2), req(1, 16, 2), req(2, 16, 2)];
+        let rep = serve_sequential(&reqs, &opts()).unwrap();
+        assert_eq!(rep.requests.len(), 3);
+        assert_eq!(rep.max_occupancy(), 1);
+    }
+}

@@ -1,13 +1,50 @@
-//! Prefill serving scheduler: drives the distributed engine over a request
-//! workload and reports latency/throughput — the end-to-end driver the
-//! system-prompt requires for a serving paper.
+//! The serving subsystem: schedulers that drive the distributed engine
+//! over request workloads and report latency/throughput.
 //!
-//! The paper's regime (§2.3) is prefill-dominated long-context inference:
-//! each request's prompt runs one distributed attention pass per layer.
-//! The scheduler admits requests FIFO by arrival time, executes them on the
-//! engine (real numerics, real threads), and advances a virtual clock with
-//! the measured wall time, so latency statistics are meaningful without
-//! real-time sleeping.
+//! Three serving paths, oldest to newest:
+//!
+//! 1. **Prefill-only FIFO** ([`serve`]): each request's prompt runs
+//!    `layers` distributed attention passes through an engine-backed
+//!    schedule ([`engine_runner`]); requests execute one at a time in
+//!    arrival order. The paper's §2.3 prefill-dominated regime.
+//! 2. **Cache-backed sequential** ([`serve_cached`]): chunked prefill into
+//!    the paged KV cache plus token-by-token decode, still one request at
+//!    a time.
+//! 3. **Continuous batching** ([`serve_continuous`], module
+//!    [`continuous`]): an admission queue with priority classes and aging
+//!    ([`queue`]) feeds an iteration-level batcher that composes running
+//!    decodes with incoming prefill chunks every micro-step, preempting
+//!    against a KV-token budget. [`serve_sequential`] is the same loop
+//!    capped at one request in flight — the oracle the batcher is tested
+//!    against.
+//!
+//! All paths advance a virtual clock with measured wall time, so latency
+//! statistics are meaningful without real-time sleeping.
+//!
+//! # Example: continuous-batching serve
+//!
+//! ```
+//! use tokenring::scheduler::{serve_continuous, ContinuousServeOpts};
+//! use tokenring::workload::ServeMix;
+//!
+//! let requests = ServeMix::preset("poisson", 1e4, 8).unwrap().generate(2, 1);
+//! let opts = ContinuousServeOpts { devices: 2, heads: 2, head_dim: 8, ..Default::default() };
+//! let report = serve_continuous(&requests, &opts).unwrap();
+//! assert_eq!(report.requests.len(), 2);
+//! assert!(report.throughput_tokens_per_s() > 0.0);
+//! assert!(report.ttft_summary().p50 > 0.0);
+//! ```
+
+pub mod continuous;
+pub mod queue;
+pub mod source;
+
+pub use continuous::{
+    serve_continuous, serve_sequential, ContinuousServeOpts, ContinuousServeReport,
+    ServedRequest, StepTrace,
+};
+pub use queue::AdmissionQueue;
+pub use source::TokenSource;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -48,57 +85,79 @@ pub fn engine_schedule_names() -> String {
     names.join(", ")
 }
 
-/// Serving configuration.
+/// Configuration of the prefill-only FIFO path.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
+    /// Ring size (device threads).
     pub devices: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Head dimension.
     pub head_dim: usize,
     /// Attention passes per request (≈ model layers exercised).
     pub layers: usize,
     /// Registry name of the serving schedule (must be engine-backed; see
     /// [`engine_runner`]).
     pub schedule: ScheduleSpec,
+    /// Engine options for every pass.
     pub engine: EngineOpts,
 }
 
-/// Measured life of one request.
+/// Measured life of one request under the prefill-only FIFO path.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
+    /// Request id.
     pub id: usize,
+    /// Prompt length in tokens.
     pub seq_len: usize,
+    /// Arrival on the virtual clock.
     pub arrival: f64,
+    /// Execution start (>= arrival; the gap is queueing delay).
     pub start: f64,
+    /// Completion time.
     pub finish: f64,
 }
 
 impl RequestMetrics {
+    /// End-to-end latency: completion minus arrival.
     pub fn latency(&self) -> f64 {
         self.finish - self.arrival
     }
 
+    /// Execution time excluding queueing.
     pub fn service_time(&self) -> f64 {
         self.finish - self.start
     }
 }
 
-/// Aggregate serving report.
+/// Aggregate report of the prefill-only FIFO path.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Per-request metrics in completion order.
     pub requests: Vec<RequestMetrics>,
+    /// Prompt tokens served.
     pub total_tokens: usize,
+    /// Virtual-clock end of the run.
     pub wall: f64,
 }
 
 impl ServeReport {
+    /// Prompt tokens per virtual second; 0.0 (never NaN/inf) for empty or
+    /// zero-duration runs.
     pub fn throughput_tokens_per_s(&self) -> f64 {
-        self.total_tokens as f64 / self.wall
+        if self.wall > 0.0 && self.total_tokens > 0 {
+            self.total_tokens as f64 / self.wall
+        } else {
+            0.0
+        }
     }
 
+    /// End-to-end latency percentiles (empty-safe: `n == 0`, all zeros).
     pub fn latency_summary(&self) -> Summary {
         Summary::from_samples(self.requests.iter().map(|r| r.latency()).collect())
     }
 
+    /// Median service time; 0.0 over an empty request set.
     pub fn service_p50(&self) -> f64 {
         let mut xs: Vec<f64> = self.requests.iter().map(|r| r.service_time()).collect();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -208,6 +267,37 @@ mod tests {
     }
 
     #[test]
+    fn report_guards_return_zero_not_nan() {
+        // empty-request and zero-duration reports must not divide to NaN
+        let empty = ServeReport { requests: vec![], total_tokens: 0, wall: 0.0 };
+        assert_eq!(empty.throughput_tokens_per_s(), 0.0);
+        assert_eq!(empty.latency_summary().n, 0);
+        assert!(!empty.latency_summary().p50.is_nan());
+        assert_eq!(empty.service_p50(), 0.0);
+        let zero_wall = ServeReport {
+            requests: vec![RequestMetrics {
+                id: 0,
+                seq_len: 8,
+                arrival: 0.0,
+                start: 0.0,
+                finish: 0.0,
+            }],
+            total_tokens: 8,
+            wall: 0.0,
+        };
+        assert_eq!(zero_wall.throughput_tokens_per_s(), 0.0);
+        let m = CachedRequestMetrics {
+            id: 0,
+            seq_len: 8,
+            prefill_time: 0.0,
+            decode_time: 0.0,
+            decode_steps: 0,
+        };
+        assert_eq!(m.time_per_output_token(), 0.0);
+        assert!(!m.time_per_output_token().is_nan());
+    }
+
+    #[test]
     fn latency_summary_present() {
         let gen = WorkloadGen { rate: 1000.0, dist: LenDist::Fixed(32), multiple: 8 };
         let reqs = gen.generate(4, 2);
@@ -226,17 +316,21 @@ mod tests {
 use crate::engine::decode::{run_decode_ring, DecodeQuery};
 use crate::engine::kv_cache::KvCache;
 
-/// Options for the cache-backed (prefill + decode) serving path.
+/// Options for the cache-backed (prefill + decode) sequential path.
 #[derive(Debug, Clone)]
 pub struct CachedServeOpts {
+    /// Ring size (device threads).
     pub devices: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Head dimension.
     pub head_dim: usize,
     /// Prefill chunk size in tokens (chunked prefill: the prompt enters the
     /// cache chunk by chunk, each chunk attending to the whole prefix).
     pub chunk: usize,
     /// Decode steps generated per request after prefill.
     pub decode_steps: usize,
+    /// Engine options for every ring step.
     pub engine: EngineOpts,
 }
 
@@ -245,8 +339,11 @@ pub struct CachedServeOpts {
 pub struct CachedRequestMetrics {
     pub id: usize,
     pub seq_len: usize,
+    /// Wall seconds spent in chunked prefill.
     pub prefill_time: f64,
+    /// Wall seconds spent in the decode loop.
     pub decode_time: f64,
+    /// Decode steps executed.
     pub decode_steps: usize,
 }
 
@@ -380,7 +477,13 @@ mod cached_tests {
 
     #[test]
     fn rejects_unaligned_chunk() {
-        let reqs = vec![crate::workload::Request { id: 0, seq_len: 50, arrival: 0.0 }];
+        let reqs = vec![crate::workload::Request {
+            id: 0,
+            seq_len: 50,
+            arrival: 0.0,
+            decode_tokens: 0,
+            priority: crate::workload::Priority::Standard,
+        }];
         assert!(serve_cached(&reqs, &copts()).is_err());
     }
 }

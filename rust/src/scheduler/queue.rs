@@ -1,0 +1,196 @@
+//! Admission queue for the continuous batcher: FCFS within priority
+//! classes, with age-based boosting so no class starves.
+//!
+//! Ordering rule: among requests that have arrived, the lowest effective
+//! class admits first, FCFS by `(arrival, id)` within a class. A waiting
+//! request whose age — scheduler steps since [`AdmissionQueue::mark_eligible`]
+//! first saw it arrived — reaches `aging_steps` is treated as class 0, so
+//! it overtakes every later arrival of every class. That bounds any
+//! request's wait by `aging_steps` plus the backlog that was already ahead
+//! of it when it arrived (proved by `tests/serve_scheduler.rs`).
+//!
+//! Admission is head-of-line blocking on purpose: [`AdmissionQueue::pop_if`]
+//! offers only the *best* waiting request to the caller's fit check. If
+//! the KV budget cannot take that request, nothing smaller jumps the queue
+//! — otherwise large (typically long-context) requests would starve
+//! behind a stream of small ones, the exact failure aging exists to
+//! prevent.
+
+use crate::workload::Request;
+
+#[derive(Debug, Clone)]
+struct Waiting {
+    req: Request,
+    /// Step at which the request was first seen arrived (None until then).
+    eligible_step: Option<u64>,
+}
+
+/// Priority-class admission queue with aging (see the module docs).
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    waiting: Vec<Waiting>,
+    aging_steps: u64,
+}
+
+impl AdmissionQueue {
+    /// Queue that boosts any request to class 0 after it has waited
+    /// `aging_steps` scheduler steps (values below 1 are clamped to 1).
+    pub fn new(aging_steps: u64) -> AdmissionQueue {
+        AdmissionQueue { waiting: Vec::new(), aging_steps: aging_steps.max(1) }
+    }
+
+    /// Enqueue a request. Preempted requests re-enter here keeping their
+    /// original arrival (so they stay FCFS-ordered within their class) but
+    /// re-age from their re-queue step.
+    pub fn push(&mut self, req: Request) {
+        self.waiting.push(Waiting { req, eligible_step: None });
+    }
+
+    /// Waiting requests (eligible or not).
+    pub fn len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// True when no request is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.waiting.is_empty()
+    }
+
+    /// Stamp every request with `arrival <= now` that has no stamp yet as
+    /// eligible from `step`. Call once per scheduler step, before
+    /// [`AdmissionQueue::pop_if`].
+    pub fn mark_eligible(&mut self, now: f64, step: u64) {
+        for w in &mut self.waiting {
+            if w.eligible_step.is_none() && w.req.arrival <= now {
+                w.eligible_step = Some(step);
+            }
+        }
+    }
+
+    /// Requests whose arrival time has passed `now` — the actual waiting
+    /// backlog, as opposed to scheduled future arrivals (which `len`
+    /// includes).
+    pub fn arrived_len(&self, now: f64) -> usize {
+        self.waiting.iter().filter(|w| w.req.arrival <= now).count()
+    }
+
+    /// Earliest arrival strictly after `now` — where the serve loop can
+    /// jump its virtual clock when idle.
+    pub fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.waiting
+            .iter()
+            .map(|w| w.req.arrival)
+            .filter(|&a| a > now)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    fn effective_class(&self, w: &Waiting, step: u64) -> usize {
+        match w.eligible_step {
+            Some(s) if step.saturating_sub(s) >= self.aging_steps => 0,
+            _ => w.req.priority.class(),
+        }
+    }
+
+    /// Pop the best admissible request at `step` if the caller's `admit`
+    /// check accepts it. Returns `(request, eligible_step)`, or `None`
+    /// when nothing is eligible or the head of the queue does not fit
+    /// (head-of-line blocking; see the module docs).
+    pub fn pop_if(
+        &mut self,
+        step: u64,
+        admit: impl FnOnce(&Request) -> bool,
+    ) -> Option<(Request, u64)> {
+        let mut best: Option<(usize, (usize, f64, usize))> = None;
+        for (i, w) in self.waiting.iter().enumerate() {
+            if w.eligible_step.is_none() {
+                continue;
+            }
+            let key = (self.effective_class(w, step), w.req.arrival, w.req.id);
+            let better = match &best {
+                None => true,
+                Some((_, bk)) => {
+                    key.0.cmp(&bk.0).then(key.1.partial_cmp(&bk.1).unwrap()).then(key.2.cmp(&bk.2))
+                        == std::cmp::Ordering::Less
+                }
+            };
+            if better {
+                best = Some((i, key));
+            }
+        }
+        let (i, _) = best?;
+        if !admit(&self.waiting[i].req) {
+            return None;
+        }
+        let w = self.waiting.swap_remove(i);
+        Some((w.req, w.eligible_step.expect("eligible by construction")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Priority;
+
+    fn req(id: usize, arrival: f64, priority: Priority) -> Request {
+        Request { id, seq_len: 32, arrival, decode_tokens: 4, priority }
+    }
+
+    #[test]
+    fn classes_order_then_fcfs_within_class() {
+        let mut q = AdmissionQueue::new(100);
+        q.push(req(0, 0.0, Priority::Batch));
+        q.push(req(1, 0.2, Priority::Interactive));
+        q.push(req(2, 0.1, Priority::Interactive));
+        q.mark_eligible(1.0, 0);
+        assert_eq!(q.pop_if(0, |_| true).unwrap().0.id, 2); // earlier interactive
+        assert_eq!(q.pop_if(0, |_| true).unwrap().0.id, 1);
+        assert_eq!(q.pop_if(0, |_| true).unwrap().0.id, 0);
+        assert!(q.pop_if(0, |_| true).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn unarrived_requests_are_not_eligible() {
+        let mut q = AdmissionQueue::new(100);
+        q.push(req(0, 5.0, Priority::Interactive));
+        q.mark_eligible(1.0, 0);
+        assert!(q.pop_if(0, |_| true).is_none());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.arrived_len(1.0), 0, "future arrivals are not backlog");
+        assert_eq!(q.arrived_len(5.0), 1);
+        assert_eq!(q.next_arrival_after(1.0), Some(5.0));
+        q.mark_eligible(5.0, 3);
+        let (r, eligible) = q.pop_if(3, |_| true).unwrap();
+        assert_eq!(r.id, 0);
+        assert_eq!(eligible, 3);
+        assert_eq!(q.next_arrival_after(0.0), None);
+    }
+
+    #[test]
+    fn aging_boosts_waiting_batch_over_newer_interactive() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(0, 0.0, Priority::Batch));
+        q.push(req(1, 0.5, Priority::Interactive));
+        q.mark_eligible(1.0, 0);
+        // young: interactive wins
+        assert_eq!(q.pop_if(1, |_| true).unwrap().0.id, 1);
+        q.push(req(2, 0.6, Priority::Interactive));
+        q.mark_eligible(1.0, 2);
+        // at step 4, the batch request's age (4 - 0) hits aging_steps:
+        // boosted to class 0 and FCFS by arrival beats the interactive
+        assert_eq!(q.pop_if(4, |_| true).unwrap().0.id, 0);
+        assert_eq!(q.pop_if(4, |_| true).unwrap().0.id, 2);
+    }
+
+    #[test]
+    fn head_of_line_blocks_when_fit_rejects() {
+        let mut q = AdmissionQueue::new(100);
+        q.push(req(0, 0.0, Priority::Interactive));
+        q.push(req(1, 0.1, Priority::Interactive));
+        q.mark_eligible(1.0, 0);
+        // the head does not fit: nothing (not even request 1) is admitted
+        assert!(q.pop_if(0, |r| r.id != 0).is_none());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_if(0, |_| true).unwrap().0.id, 0);
+    }
+}

@@ -40,6 +40,8 @@ impl PartialEq for Tensor {
 }
 
 impl Tensor {
+    /// Tensor owning `data` with the given shape (product must match the
+    /// element count).
     pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -51,18 +53,22 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), off: 0, len, data: Arc::new(data) }
     }
 
+    /// All-zero tensor.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor::new(shape, vec![0.0; shape.iter().product()])
     }
 
+    /// Tensor filled with `v`.
     pub fn full(shape: &[usize], v: f32) -> Tensor {
         Tensor::new(shape, vec![v; shape.iter().product()])
     }
 
+    /// The dimension extents.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total viewed elements.
     pub fn numel(&self) -> usize {
         self.len
     }
@@ -72,6 +78,7 @@ impl Tensor {
         self.len * std::mem::size_of::<f32>()
     }
 
+    /// The viewed elements, row-major.
     pub fn data(&self) -> &[f32] {
         &self.data[self.off..self.off + self.len]
     }
@@ -88,6 +95,8 @@ impl Tensor {
         Arc::get_mut(&mut self.data).expect("unique after materialize")
     }
 
+    /// Consume into the viewed elements — zero-copy when uniquely owned
+    /// and un-windowed, otherwise one copy of the window.
     pub fn into_data(self) -> Vec<f32> {
         if self.off == 0 && self.len == self.data.len() {
             match Arc::try_unwrap(self.data) {
@@ -236,6 +245,7 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
+    /// True when shapes match and every element differs by at most `atol`.
     pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
         self.shape == other.shape && self.max_abs_diff(other) <= atol
     }

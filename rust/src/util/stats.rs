@@ -6,6 +6,9 @@
 
 use std::time::Instant;
 
+use crate::json_obj;
+use crate::util::json::Json;
+
 /// Summary of a sample of durations (seconds) or any positive metric.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
@@ -19,8 +22,19 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The all-zero summary of an empty sample (`n == 0`). Serving reports
+    /// return this instead of NaN when a percentile family has no data
+    /// (e.g. a report over zero requests).
+    pub fn empty() -> Summary {
+        Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p95: 0.0, max: 0.0 }
+    }
+
+    /// Summarize a sample. An empty sample yields [`Summary::empty`]
+    /// (all zeros, `n == 0`) rather than panicking or dividing by zero.
     pub fn from_samples(mut xs: Vec<f64>) -> Summary {
-        assert!(!xs.is_empty(), "empty sample");
+        if xs.is_empty() {
+            return Summary::empty();
+        }
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
@@ -40,10 +54,27 @@ impl Summary {
     pub fn human_time(&self) -> String {
         format!("{} ± {}", fmt_time(self.p50), fmt_time(self.std))
     }
+
+    /// JSON object with every field, for serving/bench artifacts.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("n", self.n),
+            ("mean", self.mean),
+            ("std", self.std),
+            ("min", self.min),
+            ("p50", self.p50),
+            ("p95", self.p95),
+            ("max", self.max),
+        ]
+    }
 }
 
-/// Interpolated percentile on a sorted slice.
+/// Interpolated percentile on a sorted slice. An empty slice yields 0.0
+/// (the zero-guard the serving reports rely on).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -134,6 +165,25 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn empty_sample_is_all_zero_not_nan() {
+        let s = Summary::from_samples(vec![]);
+        assert_eq!(s, Summary::empty());
+        assert_eq!(s.n, 0);
+        assert!(!s.mean.is_nan() && !s.p50.is_nan() && !s.p95.is_nan());
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn summary_json_has_all_fields() {
+        let s = Summary::from_samples(vec![1.0, 2.0, 3.0]);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.get("n").as_usize(), Some(3));
+        assert_eq!(j.get("p50").as_f64(), Some(2.0));
+        assert_eq!(j.get("min").as_f64(), Some(1.0));
+        assert_eq!(j.get("max").as_f64(), Some(3.0));
+    }
 
     #[test]
     fn summary_of_constant_sample() {

@@ -1,17 +1,77 @@
-//! Workload generation for the serving benches: Poisson request arrivals
-//! with configurable context-length distributions (the "infinite-context"
-//! regimes the paper motivates).
+//! Workload generation for the serving stack: request arrival processes
+//! (Poisson and bursty), context-length distributions, decode-length
+//! distributions and priority classes — the request mixes the serving
+//! paths (`scheduler`) are driven and evaluated on.
+//!
+//! Two generators are provided:
+//! * [`WorkloadGen`] — the original prefill-only generator (Poisson
+//!   arrivals, no decode phase, all requests [`Priority::Standard`]); kept
+//!   for the legacy prefill serving driver.
+//! * [`ServeMix`] — named serving mixes (`poisson`, `bursty`,
+//!   `long_context`) producing full requests with decode lengths and
+//!   priority classes for the continuous batcher.
+
+use anyhow::{anyhow, Result};
 
 use crate::util::rng::Rng;
 
-/// One inference request (prefill-dominated, as in the paper's §2.3 regime).
-#[derive(Debug, Clone)]
+/// Scheduling class of a request. Lower [`Priority::class`] values admit
+/// first; the admission queue ages waiting requests into class 0 after a
+/// bounded number of scheduler steps, so no class can starve
+/// (`scheduler::queue`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns): admitted first.
+    Interactive,
+    /// Default class.
+    Standard,
+    /// Throughput traffic (offline eval, summarization jobs): admitted
+    /// last, protected from starvation only by queue aging.
+    Batch,
+}
+
+impl Priority {
+    /// Numeric class used for queue ordering: 0 admits first.
+    pub fn class(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Stable name for reports and artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone, Copy)]
 pub struct Request {
     pub id: usize,
-    /// Prompt length in tokens.
+    /// Prompt length in tokens (prefill work).
     pub seq_len: usize,
     /// Arrival time, seconds from workload start.
     pub arrival: f64,
+    /// Output tokens to generate after prefill (decode work). The legacy
+    /// prefill-only driver ignores this.
+    pub decode_tokens: usize,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
+}
+
+impl Request {
+    /// Peak KV-cache residency in tokens: every prompt token plus every
+    /// generated token holds one K and one V row until the request
+    /// finishes. The continuous batcher budgets against this.
+    pub fn peak_kv_tokens(&self) -> usize {
+        self.seq_len + self.decode_tokens
+    }
 }
 
 /// Context-length distribution.
@@ -19,16 +79,38 @@ pub struct Request {
 pub enum LenDist {
     /// All requests the same length.
     Fixed(usize),
-    /// Uniform in [lo, hi], rounded to `multiple`.
+    /// Uniform in [lo, hi], rounded to the generator's `multiple`.
     Uniform { lo: usize, hi: usize },
     /// Bimodal: short chats + occasional long documents (long fraction).
     Bimodal { short: usize, long: usize, long_frac: f64 },
 }
 
-/// Poisson-arrival workload generator.
+fn sample_len(dist: LenDist, rng: &mut Rng) -> usize {
+    match dist {
+        LenDist::Fixed(n) => n,
+        LenDist::Uniform { lo, hi } => rng.range(lo, hi),
+        LenDist::Bimodal { short, long, long_frac } => {
+            if rng.uniform() < long_frac {
+                long
+            } else {
+                short
+            }
+        }
+    }
+}
+
+fn round_len(raw: usize, multiple: usize) -> usize {
+    let m = multiple.max(1);
+    raw.max(1).div_ceil(m) * m
+}
+
+/// Poisson-arrival prefill workload generator (the legacy serving driver's
+/// input: no decode phase, all requests [`Priority::Standard`]).
 #[derive(Debug, Clone)]
 pub struct WorkloadGen {
+    /// Mean arrival rate in requests per second.
     pub rate: f64,
+    /// Prompt-length distribution.
     pub dist: LenDist,
     /// Sequence lengths are rounded up to a multiple of this (so every
     /// request divides evenly across 2N zigzag chunks).
@@ -36,25 +118,155 @@ pub struct WorkloadGen {
 }
 
 impl WorkloadGen {
+    /// Generate `count` requests with Poisson arrivals; deterministic in
+    /// `seed`.
     pub fn generate(&self, count: usize, seed: u64) -> Vec<Request> {
         let mut rng = Rng::new(seed);
         let mut t = 0.0;
         (0..count)
             .map(|id| {
                 t += rng.exponential(self.rate);
-                let raw = match self.dist {
-                    LenDist::Fixed(n) => n,
-                    LenDist::Uniform { lo, hi } => rng.range(lo, hi),
-                    LenDist::Bimodal { short, long, long_frac } => {
-                        if rng.uniform() < long_frac {
-                            long
-                        } else {
-                            short
+                let seq_len = round_len(sample_len(self.dist, &mut rng), self.multiple);
+                Request {
+                    id,
+                    seq_len,
+                    arrival: t,
+                    decode_tokens: 0,
+                    priority: Priority::Standard,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Request arrival process.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalPattern {
+    /// Exponential inter-arrivals at `rate` requests per second.
+    Poisson { rate: f64 },
+    /// Bursts of `burst` simultaneous arrivals; bursts arrive Poisson so
+    /// the long-run rate is still `rate` requests per second.
+    Bursty { rate: f64, burst: usize },
+}
+
+/// Decode-length distribution.
+#[derive(Debug, Clone, Copy)]
+pub enum DecodeDist {
+    /// All requests generate the same number of tokens.
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform { lo: usize, hi: usize },
+}
+
+/// A named serving workload mix: arrival process + prompt-length
+/// distribution + decode lengths + priority-class fractions.
+///
+/// The registered presets ([`ServeMix::preset`], names in
+/// [`ServeMix::NAMES`]) are the workload classes EXPERIMENTS.md §Serve
+/// measures:
+/// * `poisson` — steady Poisson arrivals, short-to-medium prompts.
+/// * `bursty` — the same prompts arriving in bursts of 4.
+/// * `long_context` — bimodal prompts with a heavy long-document tail.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeMix {
+    pub arrivals: ArrivalPattern,
+    pub dist: LenDist,
+    pub decode: DecodeDist,
+    /// Fraction of requests in [`Priority::Interactive`].
+    pub interactive_frac: f64,
+    /// Fraction of requests in [`Priority::Batch`] (the rest are
+    /// [`Priority::Standard`]).
+    pub batch_frac: f64,
+    /// Prompt lengths round up to a multiple of this.
+    pub multiple: usize,
+}
+
+impl ServeMix {
+    /// Registered mix names, in the order `preset` resolves them.
+    pub const NAMES: &'static [&'static str] = &["poisson", "bursty", "long_context"];
+
+    /// Resolve a registered mix at the given arrival `rate` (requests per
+    /// second) and length `multiple`.
+    pub fn preset(name: &str, rate: f64, multiple: usize) -> Result<ServeMix> {
+        let m = multiple.max(1);
+        Ok(match name {
+            "poisson" => ServeMix {
+                arrivals: ArrivalPattern::Poisson { rate },
+                dist: LenDist::Uniform { lo: 64, hi: 256 },
+                decode: DecodeDist::Fixed(16),
+                interactive_frac: 0.25,
+                batch_frac: 0.25,
+                multiple: m,
+            },
+            "bursty" => ServeMix {
+                arrivals: ArrivalPattern::Bursty { rate, burst: 4 },
+                dist: LenDist::Uniform { lo: 64, hi: 256 },
+                decode: DecodeDist::Fixed(16),
+                interactive_frac: 0.25,
+                batch_frac: 0.25,
+                multiple: m,
+            },
+            "long_context" => ServeMix {
+                arrivals: ArrivalPattern::Poisson { rate },
+                dist: LenDist::Bimodal { short: 128, long: 1024, long_frac: 0.25 },
+                decode: DecodeDist::Fixed(8),
+                interactive_frac: 0.1,
+                batch_frac: 0.4,
+                multiple: m,
+            },
+            other => {
+                return Err(anyhow!(
+                    "unknown workload mix '{other}' (valid: {})",
+                    Self::NAMES.join(", ")
+                ))
+            }
+        })
+    }
+
+    /// Largest [`Request::peak_kv_tokens`] this mix can emit — what a KV
+    /// budget must cover for every request to be servable.
+    pub fn max_peak_tokens(&self) -> usize {
+        let max_len = match self.dist {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform { hi, .. } => hi,
+            LenDist::Bimodal { short, long, .. } => short.max(long),
+        };
+        let max_dec = match self.decode {
+            DecodeDist::Fixed(n) => n,
+            DecodeDist::Uniform { hi, .. } => hi,
+        };
+        round_len(max_len, self.multiple) + max_dec
+    }
+
+    /// Generate `count` requests; deterministic in `seed`.
+    pub fn generate(&self, count: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..count)
+            .map(|id| {
+                match self.arrivals {
+                    ArrivalPattern::Poisson { rate } => t += rng.exponential(rate),
+                    ArrivalPattern::Bursty { rate, burst } => {
+                        let b = burst.max(1);
+                        if id % b == 0 {
+                            t += rng.exponential(rate / b as f64);
                         }
                     }
+                }
+                let seq_len = round_len(sample_len(self.dist, &mut rng), self.multiple);
+                let decode_tokens = match self.decode {
+                    DecodeDist::Fixed(n) => n,
+                    DecodeDist::Uniform { lo, hi } => rng.range(lo, hi),
                 };
-                let seq_len = raw.div_ceil(self.multiple) * self.multiple;
-                Request { id, seq_len, arrival: t }
+                let u = rng.uniform();
+                let priority = if u < self.interactive_frac {
+                    Priority::Interactive
+                } else if u >= 1.0 - self.batch_frac {
+                    Priority::Batch
+                } else {
+                    Priority::Standard
+                };
+                Request { id, seq_len, arrival: t, decode_tokens, priority }
             })
             .collect()
     }
@@ -79,6 +291,8 @@ mod tests {
             assert_eq!(x.arrival, y.arrival);
             assert_eq!(x.seq_len % 64, 0);
             assert!(x.seq_len >= 128 && x.seq_len <= 1024);
+            assert_eq!(x.decode_tokens, 0);
+            assert_eq!(x.priority, Priority::Standard);
         }
     }
 
@@ -105,5 +319,60 @@ mod tests {
         let longs = reqs.iter().filter(|r| r.seq_len == 4096).count();
         let frac = longs as f64 / 5000.0;
         assert!((frac - 0.2).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn mix_presets_resolve_and_unknown_lists_names() {
+        for name in ServeMix::NAMES {
+            let m = ServeMix::preset(name, 100.0, 8).unwrap();
+            assert!(m.max_peak_tokens() > 0);
+        }
+        let e = ServeMix::preset("warp", 1.0, 8).unwrap_err().to_string();
+        for name in ServeMix::NAMES {
+            assert!(e.contains(name), "error should list '{name}': {e}");
+        }
+    }
+
+    #[test]
+    fn mix_generates_decode_and_priorities() {
+        let m = ServeMix::preset("poisson", 50.0, 16).unwrap();
+        let reqs = m.generate(4000, 11);
+        assert_eq!(reqs.len(), 4000);
+        let mut classes = [0usize; 3];
+        for r in &reqs {
+            assert_eq!(r.seq_len % 16, 0);
+            assert!(r.decode_tokens > 0);
+            assert!(r.peak_kv_tokens() <= m.max_peak_tokens());
+            classes[r.priority.class()] += 1;
+        }
+        // every class is represented roughly per its fraction
+        assert!((classes[0] as f64 / 4000.0 - 0.25).abs() < 0.05);
+        assert!((classes[2] as f64 / 4000.0 - 0.25).abs() < 0.05);
+        assert!(classes[1] > 0);
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        let m = ServeMix::preset("bursty", 100.0, 8).unwrap();
+        let reqs = m.generate(40, 5);
+        // within a burst of 4, arrivals are simultaneous
+        for chunk in reqs.chunks(4) {
+            for r in chunk {
+                assert_eq!(r.arrival, chunk[0].arrival);
+            }
+        }
+        // across bursts, time advances
+        assert!(reqs[4].arrival > reqs[3].arrival);
+        assert!(reqs.last().unwrap().arrival > 0.0);
+    }
+
+    #[test]
+    fn long_context_mix_has_heavy_tail() {
+        let m = ServeMix::preset("long_context", 10.0, 8).unwrap();
+        let reqs = m.generate(2000, 9);
+        let longs = reqs.iter().filter(|r| r.seq_len >= 1024).count();
+        assert!(longs > 0);
+        let frac = longs as f64 / 2000.0;
+        assert!((frac - 0.25).abs() < 0.05, "frac={frac}");
     }
 }
