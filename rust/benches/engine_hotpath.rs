@@ -12,7 +12,9 @@
 //!
 //! Every run writes a machine-readable summary to
 //! `<artifacts>/bench/BENCH_engine.json` (kernel ns/block old vs new,
-//! ring-step bytes before/after zero-copy).
+//! ring-step bytes before/after zero-copy, and the decode setup-cost
+//! section: per-step thread spawns and channel bytes for the legacy
+//! spawn-per-step wrapper vs the persistent actor ring).
 
 use std::collections::BTreeMap;
 
@@ -197,6 +199,114 @@ fn main() {
         ])
     };
 
+    // --- decode setup cost: the per-call wrapper respawns n threads and
+    // re-ships every resident KV view on every micro-step; a persistent
+    // ActorRing pays the spawn once per session and ships only the newly
+    // appended tokens. The probe counters make both claims numbers: CI
+    // asserts actor_spawns_per_step == 0 and actor bytes << legacy bytes.
+    let decode_setup = {
+        use tokenring::engine::actors::{probe, ActorRing};
+        use tokenring::engine::decode::{run_decode_ring, DecodeQuery};
+        use tokenring::engine::kv_cache::KvCache;
+
+        let (n, h, d, page) = (4usize, 4usize, 32usize, 16usize);
+        let reqs = 4usize;
+        let ctx = 256usize;
+        let steps = if smoke { 4usize } else { 16 };
+        let opts = EngineOpts {
+            causal: true,
+            partition: Partition::Contiguous,
+            backend: BackendSpec::Native,
+            record: false,
+        };
+        let mut cache = KvCache::new(n, h, d, page);
+        for r in 0..reqs {
+            let k = rand_t(&mut rng, &[ctx, h, d]);
+            let v = rand_t(&mut rng, &[ctx, h, d]);
+            cache.append(r, &k, &v).unwrap();
+        }
+        fn queries(rng: &mut Rng, reqs: usize, h: usize, d: usize, pos: i32) -> Vec<DecodeQuery> {
+            (0..reqs)
+                .map(|r| DecodeQuery { request: r, q: rand_t(rng, &[1, h, d]), q_pos: vec![pos] })
+                .collect()
+        }
+
+        // legacy wrapper: full setup every micro-step
+        let (spawns0, bytes0) = (probe::threads_spawned(), probe::delta_bytes());
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let _ = run_decode_ring(queries(&mut rng, reqs, h, d, ctx as i32), &cache, n, &opts)
+                .unwrap();
+        }
+        let legacy_ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+        let legacy_spawns = (probe::threads_spawned() - spawns0) as f64 / steps as f64;
+        let legacy_bytes = (probe::delta_bytes() - bytes0) as f64 / steps as f64;
+
+        // persistent ring: spawn + load once, then steps with 1-token deltas
+        let spawns1 = probe::threads_spawned();
+        let mut ring = ActorRing::spawn(n, h, d, &opts).unwrap();
+        for r in 0..reqs {
+            ring.admit(r).unwrap();
+            for dev in 0..n {
+                let (k, v, positions) = cache.device_view(r, dev).unwrap();
+                if !positions.is_empty() {
+                    ring.append(&[tokenring::engine::kv_cache::KvDelta {
+                        request: r,
+                        device: dev,
+                        k,
+                        v,
+                        positions,
+                    }])
+                    .unwrap();
+                }
+            }
+        }
+        let session_spawns = probe::threads_spawned() - spawns1;
+        let (spawns2, bytes2) = (probe::threads_spawned(), probe::delta_bytes());
+        let t1 = std::time::Instant::now();
+        for s in 0..steps {
+            let pos = (ctx + s) as i32;
+            let _ = ring.step(queries(&mut rng, reqs, h, d, pos)).unwrap();
+            for r in 0..reqs {
+                let k = rand_t(&mut rng, &[1, h, d]);
+                let v = rand_t(&mut rng, &[1, h, d]);
+                let deltas = cache.append_deltas(r, &k, &v).unwrap();
+                ring.append(&deltas).unwrap();
+            }
+        }
+        let actor_ms = t1.elapsed().as_secs_f64() * 1e3 / steps as f64;
+        let actor_spawns = (probe::threads_spawned() - spawns2) as f64 / steps as f64;
+        let actor_bytes = (probe::delta_bytes() - bytes2) as f64 / steps as f64;
+        ring.drain().unwrap();
+        ring.shutdown().unwrap();
+
+        t.row(&[
+            format!("decode step legacy (respawn) R{reqs} ctx{ctx} N{n}"),
+            format!("{legacy_ms:.3} ms"),
+            format!("{legacy_spawns:.0} spawns, {legacy_bytes:.0} B/step"),
+        ]);
+        t.row(&[
+            format!("decode step actors (persistent) R{reqs} ctx{ctx} N{n}"),
+            format!("{actor_ms:.3} ms"),
+            format!(
+                "0 spawns, {actor_bytes:.0} B/step ({:.2}x vs legacy)",
+                legacy_ms / actor_ms
+            ),
+        ]);
+        obj(vec![
+            ("config", Json::Str(format!("R{reqs} ctx{ctx} N{n} H{h} D{d} page{page}"))),
+            ("steps", Json::Num(steps as f64)),
+            ("legacy_spawns_per_step", Json::Num(legacy_spawns)),
+            ("actor_spawns_per_step", Json::Num(actor_spawns)),
+            ("actor_session_spawns", Json::Num(session_spawns as f64)),
+            ("legacy_bytes_per_step", Json::Num(legacy_bytes)),
+            ("actor_bytes_per_step", Json::Num(actor_bytes)),
+            ("legacy_ms_per_step", Json::Num(legacy_ms)),
+            ("actor_ms_per_step", Json::Num(actor_ms)),
+            ("speedup", Json::Num(legacy_ms / actor_ms)),
+        ])
+    };
+
     // --- full threaded engine round trips
     let engine_shapes: &[(usize, usize, usize, usize)] = if smoke {
         &[(256, 4, 32, 4)]
@@ -314,6 +424,7 @@ fn main() {
         ("smoke", Json::Bool(smoke)),
         ("kernel", Json::Arr(kernel_rows)),
         ("ring_step_bytes", ring_bytes),
+        ("decode_setup", decode_setup),
     ]);
     let path = default_artifact_dir().join("bench").join("BENCH_engine.json");
     if let Some(dir) = path.parent() {

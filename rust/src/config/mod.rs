@@ -9,7 +9,7 @@ use crate::comm::ComputeModel;
 use crate::json_obj;
 use crate::parallelism::partition::Partition;
 use crate::parallelism::ScheduleSpec;
-use crate::scheduler::ContinuousServeOpts;
+use crate::scheduler::{ContinuousServeOpts, ServeRuntime};
 use crate::topology::Topology;
 use crate::util::json::Json;
 use crate::workload::{Request, ServeMix};
@@ -339,6 +339,10 @@ pub struct ServeConfig {
     pub max_step_tokens: usize,
     pub kv_budget_tokens: usize,
     pub aging_steps: usize,
+    /// Serve runtime: `actors` (persistent actor ring, the default) or
+    /// `spawn_per_step` (legacy per-step thread spawn, kept as the
+    /// equivalence oracle). See [`ServeRuntime`].
+    pub runtime: String,
 }
 
 fn field_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
@@ -355,6 +359,7 @@ impl ServeConfig {
     pub const KEYS: &'static [&'static str] = &[
         "name", "mix", "requests", "rate", "seed", "devices", "heads", "head_dim",
         "chunk", "max_batch", "max_step_tokens", "kv_budget_tokens", "aging_steps",
+        "runtime",
     ];
 
     /// The built-in default: the Poisson mix on 4 devices.
@@ -373,6 +378,7 @@ impl ServeConfig {
             max_step_tokens: 256,
             kv_budget_tokens: 16_384,
             aging_steps: 8,
+            runtime: ServeRuntime::default().name().to_string(),
         }
     }
 
@@ -421,7 +427,9 @@ impl ServeConfig {
             max_step_tokens: field_usize(&j, "max_step_tokens", d.max_step_tokens)?,
             kv_budget_tokens: field_usize(&j, "kv_budget_tokens", d.kv_budget_tokens)?,
             aging_steps: field_usize(&j, "aging_steps", d.aging_steps)?,
+            runtime: field_str("runtime", &d.runtime)?,
         };
+        ServeRuntime::parse(&cfg.runtime)?; // runtime name must be registered
         if cfg.requests == 0 {
             bail!("serve config: 'requests' must be positive");
         }
@@ -470,6 +478,7 @@ impl ServeConfig {
             ("max_step_tokens", self.max_step_tokens),
             ("kv_budget_tokens", self.kv_budget_tokens),
             ("aging_steps", self.aging_steps),
+            ("runtime", self.runtime.clone()),
         ]
     }
 
@@ -483,9 +492,11 @@ impl ServeConfig {
         Ok(self.mix()?.generate(self.requests, self.seed as u64))
     }
 
-    /// The continuous-batcher options this config describes.
-    pub fn opts(&self) -> ContinuousServeOpts {
-        ContinuousServeOpts {
+    /// The continuous-batcher options this config describes. Errors if
+    /// `runtime` names no registered [`ServeRuntime`] (a config loaded
+    /// via [`ServeConfig::from_json`] is already validated).
+    pub fn opts(&self) -> Result<ContinuousServeOpts> {
+        Ok(ContinuousServeOpts {
             devices: self.devices,
             heads: self.heads,
             head_dim: self.head_dim,
@@ -495,8 +506,9 @@ impl ServeConfig {
             kv_budget_tokens: self.kv_budget_tokens,
             aging_steps: self.aging_steps as u64,
             seed: self.seed as u64,
+            runtime: ServeRuntime::parse(&self.runtime)?,
             ..Default::default()
-        }
+        })
     }
 }
 
@@ -615,15 +627,18 @@ mod tests {
     fn serve_config_defaults_and_round_trip() {
         let cfg = ServeConfig::from_json("{}").unwrap();
         assert_eq!(cfg, ServeConfig::default_poisson());
+        assert_eq!(cfg.runtime, "actors", "persistent actors are the default");
         let custom = ServeConfig::from_json(
             r#"{"name":"x","mix":"bursty","requests":8,"rate":100,
                 "devices":2,"heads":2,"head_dim":8,"chunk":16,
                 "max_batch":4,"max_step_tokens":64,
-                "kv_budget_tokens":4096,"aging_steps":4,"seed":3}"#,
+                "kv_budget_tokens":4096,"aging_steps":4,"seed":3,
+                "runtime":"spawn_per_step"}"#,
         )
         .unwrap();
         assert_eq!(custom.mix, "bursty");
         assert_eq!(custom.rate, 100.0);
+        assert_eq!(custom.runtime, "spawn_per_step");
         let again = ServeConfig::from_json(&custom.to_json().to_string()).unwrap();
         assert_eq!(again, custom);
     }
@@ -637,11 +652,16 @@ mod tests {
             assert!(r.peak_kv_tokens() <= cfg.kv_budget_tokens);
             assert_eq!(r.seq_len % cfg.chunk, 0);
         }
-        let opts = cfg.opts();
+        let opts = cfg.opts().unwrap();
         assert_eq!(opts.devices, cfg.devices);
         assert_eq!(opts.kv_budget_tokens, cfg.kv_budget_tokens);
+        assert_eq!(opts.runtime, ServeRuntime::Actors);
         assert!(opts.engine.causal);
         assert!(!opts.keep_outputs);
+        // opts() re-validates for hand-constructed configs
+        let mut bad = cfg.clone();
+        bad.runtime = "threads".to_string();
+        assert!(bad.opts().is_err());
     }
 
     #[test]
@@ -658,6 +678,11 @@ mod tests {
         assert!(ServeConfig::from_json(r#"{"requests":0}"#).is_err());
         assert!(ServeConfig::from_json(r#"{"rate":0}"#).is_err());
         assert!(ServeConfig::from_json(r#"{"chunk":0}"#).is_err());
+        // unknown runtime lists the registered names
+        let e = ServeConfig::from_json(r#"{"runtime":"threads"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("threads") && e.contains("actors"), "{e}");
         // a budget that cannot hold the mix's largest request is unservable
         assert!(ServeConfig::from_json(r#"{"kv_budget_tokens":64}"#).is_err());
         assert!(ServeConfig::from_json("[]").is_err());

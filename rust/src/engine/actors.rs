@@ -1,0 +1,961 @@
+//! Persistent device-actor runtime for the decode ring.
+//!
+//! `run_decode_ring` pays a setup tax the paper's steady-state model never
+//! sees: every micro-step it spawns `n` fresh threads, rebuilds channels
+//! and [`Scratch`] arenas, and re-materializes every request's full
+//! per-device KV view. This module keeps the ring alive instead: an
+//! [`ActorRing`] spawns `n` long-lived workers once per serve session,
+//! each owning its shard's resident KV views, scratch arena, backend, and
+//! timeline, and drives them with a small command protocol:
+//!
+//! * `Admit`        — register a request (empty resident view)
+//! * `AppendDelta`  — grow one device's view by a [`KvDelta`] window
+//! * `Step`         — run one batched decode micro-step (Algorithm 1:
+//!                    query batches hop forward, partials fly home)
+//! * `Evict`        — drop a request's resident view (preemption)
+//! * `Drain`        — collect the per-actor timeline and statistics
+//! * `Shutdown`     — terminate, including mid-step
+//!
+//! Only newly appended tokens cross a channel, as `Arc`-backed tensor
+//! windows (a send is a refcount bump, per the engine's zero-copy
+//! messaging contract), so steady-state decode performs zero thread
+//! spawns and ships O(delta) — not O(resident) — KV per step. The
+//! [`probe`] counters make both properties measurable from the
+//! `engine_hotpath` bench.
+//!
+//! The driver protocol is synchronous: one `Step` per epoch, all replies
+//! collected before the next command. Epoch stamps on ring traffic turn
+//! any violation into a structured error instead of silent corruption.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Error, Result};
+
+use crate::attention::MASK_VALUE;
+use crate::metrics::{Clock, Event, Timeline};
+use crate::simulator::SpanTag;
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, Scratch};
+use super::decode::{DecodeQuery, DecodeResult};
+use super::kv_cache::KvDelta;
+use super::EngineOpts;
+
+/// request id → (out, lse) for one decode micro-step.
+pub type StepOutputs = HashMap<usize, (Tensor, Tensor)>;
+
+/// How long the driver waits for any single actor reply before declaring
+/// the ring stalled. Generous: a stall here means a bug, not a slow step.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Process-wide setup-cost probes, read by the `engine_hotpath` bench.
+///
+/// `threads_spawned` counts ring worker threads ever spawned;
+/// `delta_tokens`/`delta_bytes` count KV crossing actor channels. Both
+/// are monotonic — probe a section by differencing before/after. They are
+/// for single-threaded measurement harnesses; concurrent tests should use
+/// the per-ring counters ([`ActorRing::delta_tokens_sent`]) instead.
+pub mod probe {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+    static DELTA_TOKENS: AtomicUsize = AtomicUsize::new(0);
+    static DELTA_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+    /// Total ring worker threads spawned so far in this process.
+    pub fn threads_spawned() -> usize {
+        THREADS_SPAWNED.load(Ordering::Relaxed)
+    }
+
+    /// Total KV tokens that crossed an actor channel so far.
+    pub fn delta_tokens() -> usize {
+        DELTA_TOKENS.load(Ordering::Relaxed)
+    }
+
+    /// Total logical KV bytes that crossed an actor channel so far.
+    pub fn delta_bytes() -> usize {
+        DELTA_BYTES.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn note_spawns(n: usize) {
+        THREADS_SPAWNED.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(super) fn note_delta(tokens: usize, bytes: usize) {
+        DELTA_TOKENS.fetch_add(tokens, Ordering::Relaxed);
+        DELTA_BYTES.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Per-actor counters, collected at [`ActorRing::drain`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActorStats {
+    /// The device this actor simulates.
+    pub device: usize,
+    /// KV tokens appended to this actor's resident views.
+    pub delta_tokens: usize,
+    /// Logical KV bytes received as deltas.
+    pub delta_bytes: usize,
+    /// Decode micro-steps this actor completed.
+    pub steps: usize,
+}
+
+/// What [`ActorRing::drain`] returns: the merged ring timeline plus
+/// per-actor statistics (sorted by device).
+#[derive(Debug)]
+pub struct DrainReport {
+    /// Merged per-actor event timeline (empty unless `EngineOpts::record`).
+    pub timeline: Timeline,
+    /// One entry per device, sorted by device id.
+    pub stats: Vec<ActorStats>,
+}
+
+impl DrainReport {
+    /// Sum of delta tokens appended across every actor — equals the KV
+    /// cache's token growth over the drained interval (the conservation
+    /// property `rust/tests/actor_ring.rs` audits).
+    pub fn delta_tokens(&self) -> usize {
+        self.stats.iter().map(|s| s.delta_tokens).sum()
+    }
+
+    /// Sum of logical delta bytes received across every actor.
+    pub fn delta_bytes(&self) -> usize {
+        self.stats.iter().map(|s| s.delta_bytes).sum()
+    }
+}
+
+/// Everything that lands in an actor's mailbox: driver commands plus ring
+/// traffic from peers. Ring messages carry the step epoch so a protocol
+/// violation surfaces as an error, never as a silently-misrouted partial.
+enum ActorMsg {
+    Admit { request: usize },
+    AppendDelta { delta: KvDelta },
+    Step { batch: Vec<DecodeQuery>, epoch: u64 },
+    Evict { request: usize },
+    Drain,
+    Shutdown,
+    QBatch { batch: Vec<DecodeQuery>, epoch: u64 },
+    Partial { request: usize, out: Tensor, lse: Tensor, epoch: u64 },
+}
+
+/// Actor → driver replies.
+enum Reply {
+    Step { device: usize, epoch: u64, outputs: StepOutputs },
+    Drained { device: usize, timeline: Timeline, stats: ActorStats },
+    Failed { device: usize, error: Error },
+}
+
+/// One request's KV resident on one device, grown in place by deltas.
+struct ResidentView {
+    k: Tensor, // (tokens, H, D)
+    v: Tensor,
+    positions: Vec<i32>,
+}
+
+impl ResidentView {
+    fn empty(heads: usize, head_dim: usize) -> ResidentView {
+        ResidentView {
+            k: Tensor::zeros(&[0, heads, head_dim]),
+            v: Tensor::zeros(&[0, heads, head_dim]),
+            positions: Vec::new(),
+        }
+    }
+}
+
+/// One long-lived device worker.
+struct Actor {
+    device: usize,
+    n: usize,
+    heads: usize,
+    head_dim: usize,
+    opts: EngineOpts,
+    clock: Clock,
+    rx: Receiver<ActorMsg>,
+    txs: Vec<Sender<ActorMsg>>,
+    replies: Sender<Reply>,
+    backend: Box<dyn Backend>,
+    scratch: Scratch,
+    views: HashMap<usize, ResidentView>,
+    timeline: Timeline,
+    stats: ActorStats,
+    /// Ring traffic that arrived while we were waiting for something else
+    /// (mpsc interleaves senders: a fast peer's forward can land before
+    /// the driver's own `Step` command for the same epoch).
+    banked_batches: VecDeque<(Vec<DecodeQuery>, u64)>,
+    banked_partials: VecDeque<(usize, Tensor, Tensor, u64)>,
+}
+
+impl Actor {
+    fn run(mut self) {
+        // A failed non-step command poisons the actor rather than killing
+        // it immediately: the driver learns about it as a structured
+        // `Failed` reply at the next step instead of a hung join.
+        let mut poison: Option<Error> = None;
+        loop {
+            let msg = match self.rx.recv() {
+                Ok(m) => m,
+                Err(_) => return, // every sender gone — session over
+            };
+            match msg {
+                ActorMsg::Shutdown => return,
+                ActorMsg::Admit { request } => {
+                    if poison.is_none() {
+                        if let Err(e) = self.admit(request) {
+                            poison = Some(e);
+                        }
+                    }
+                }
+                ActorMsg::AppendDelta { delta } => {
+                    if poison.is_none() {
+                        if let Err(e) = self.append(delta) {
+                            poison = Some(e);
+                        }
+                    }
+                }
+                ActorMsg::Evict { request } => {
+                    self.views.remove(&request);
+                }
+                ActorMsg::Drain => {
+                    let timeline = std::mem::take(&mut self.timeline);
+                    let stats = std::mem::replace(
+                        &mut self.stats,
+                        ActorStats { device: self.device, ..Default::default() },
+                    );
+                    let reply = Reply::Drained { device: self.device, timeline, stats };
+                    if self.replies.send(reply).is_err() {
+                        return;
+                    }
+                }
+                ActorMsg::Step { batch, epoch } => {
+                    if let Some(error) = poison.take() {
+                        let _ = self.replies.send(Reply::Failed { device: self.device, error });
+                        return;
+                    }
+                    match self.step(batch, epoch) {
+                        Ok(Some(outputs)) => {
+                            let reply = Reply::Step { device: self.device, epoch, outputs };
+                            if self.replies.send(reply).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(None) => return, // shutdown arrived mid-step
+                        Err(error) => {
+                            let _ =
+                                self.replies.send(Reply::Failed { device: self.device, error });
+                            return;
+                        }
+                    }
+                }
+                ActorMsg::QBatch { batch, epoch } => {
+                    self.banked_batches.push_back((batch, epoch));
+                }
+                ActorMsg::Partial { request, out, lse, epoch } => {
+                    self.banked_partials.push_back((request, out, lse, epoch));
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, request: usize) -> Result<()> {
+        let prior = self
+            .views
+            .insert(request, ResidentView::empty(self.heads, self.head_dim));
+        ensure!(
+            prior.is_none(),
+            "device {}: request {request} admitted twice without an evict",
+            self.device
+        );
+        Ok(())
+    }
+
+    fn append(&mut self, delta: KvDelta) -> Result<()> {
+        ensure!(
+            delta.device == self.device,
+            "device {}: received a delta routed to device {} (request {})",
+            self.device,
+            delta.device,
+            delta.request
+        );
+        let view = self.views.get_mut(&delta.request).with_context(|| {
+            format!(
+                "device {}: KV delta for request {} before admit",
+                self.device, delta.request
+            )
+        })?;
+        view.k.extend_rows(&delta.k);
+        view.v.extend_rows(&delta.v);
+        view.positions.extend_from_slice(&delta.positions);
+        self.stats.delta_tokens += delta.tokens();
+        self.stats.delta_bytes += delta.bytes();
+        if self.opts.record {
+            let t = self.clock.now();
+            self.timeline.push(Event {
+                device: self.device,
+                tag: SpanTag::SendKv,
+                step: self.stats.steps,
+                name: format!("kv delta req {}", delta.request),
+                t0: t,
+                t1: t,
+                bytes: delta.bytes(),
+            });
+        }
+        Ok(())
+    }
+
+    /// One decode micro-step. `Ok(None)` means a shutdown arrived while
+    /// the step was in flight (the actor exits without replying).
+    fn step(&mut self, my_batch: Vec<DecodeQuery>, epoch: u64) -> Result<Option<StepOutputs>> {
+        let (n, j) = (self.n, self.device);
+        let expected = my_batch.len() * (n - 1);
+        let mut acc: StepOutputs = HashMap::new();
+        let mut merged = 0usize;
+
+        let mut cur = my_batch;
+        for hop in 0..n {
+            // forward the batch we are about to consume (async overlap);
+            // the clone is a refcount bump per query tensor
+            if hop < n - 1 {
+                let dst = (j + 1) % n;
+                if self.opts.record {
+                    let bytes: usize =
+                        cur.iter().map(|q| q.q.size_bytes() + q.q_pos.len() * 4).sum();
+                    let t = self.clock.now();
+                    self.timeline.push(Event {
+                        device: j,
+                        tag: SpanTag::SendQ,
+                        step: hop,
+                        name: format!("decode batch -> d{dst}"),
+                        t0: t,
+                        t1: t,
+                        bytes,
+                    });
+                }
+                self.txs[dst]
+                    .send(ActorMsg::QBatch { batch: cur.clone(), epoch })
+                    .map_err(|_| {
+                        anyhow!("device {j}: peer {dst} hung up mid-step (epoch {epoch})")
+                    })?;
+            }
+
+            for dq in &cur {
+                let (bo, bl) = self.compute(dq, hop)?;
+                let home = dq.request % n;
+                if home == j {
+                    merge_into(&mut acc, self.backend.as_mut(), &mut self.scratch, dq.request, bo, bl)?;
+                } else {
+                    self.txs[home]
+                        .send(ActorMsg::Partial { request: dq.request, out: bo, lse: bl, epoch })
+                        .map_err(|_| {
+                            anyhow!(
+                                "device {j}: home device {home} hung up mid-step \
+                                 (request {}, epoch {epoch})",
+                                dq.request
+                            )
+                        })?;
+                }
+            }
+
+            if hop < n - 1 {
+                match self.next_batch(epoch, &mut acc, &mut merged)? {
+                    Some(b) => cur = b,
+                    None => return Ok(None),
+                }
+            }
+        }
+
+        while merged < expected {
+            match self.next_partial(epoch)? {
+                Some((request, out, lse)) => {
+                    merge_into(&mut acc, self.backend.as_mut(), &mut self.scratch, request, out, lse)?;
+                    merged += 1;
+                }
+                None => return Ok(None),
+            }
+        }
+        self.stats.steps += 1;
+        Ok(Some(acc))
+    }
+
+    fn compute(&mut self, dq: &DecodeQuery, hop: usize) -> Result<(Tensor, Tensor)> {
+        let j = self.device;
+        let view = self.views.get(&dq.request).with_context(|| {
+            format!("device {j}: step query for request {} before admit", dq.request)
+        })?;
+        if view.positions.is_empty() {
+            // this device holds no pages for the request yet
+            return Ok((
+                Tensor::zeros(&[dq.q.shape()[0], self.heads, self.head_dim]),
+                Tensor::full(&[self.heads, dq.q.shape()[0]], MASK_VALUE),
+            ));
+        }
+        let t0 = self.clock.now();
+        let r = self
+            .backend
+            .attn_block(
+                &dq.q,
+                &view.k,
+                &view.v,
+                &dq.q_pos,
+                &view.positions,
+                self.opts.causal,
+                &mut self.scratch,
+            )
+            .with_context(|| format!("device {j}: attention for request {}", dq.request))?;
+        if self.opts.record {
+            self.timeline.push(Event {
+                device: j,
+                tag: SpanTag::Compute,
+                step: hop,
+                name: format!("decode req {}", dq.request),
+                t0,
+                t1: self.clock.now(),
+                bytes: 0,
+            });
+        }
+        Ok(r)
+    }
+
+    /// Wait for the next hop's query batch, merging any current-epoch
+    /// partials that land first. `Ok(None)` means shutdown.
+    fn next_batch(
+        &mut self,
+        epoch: u64,
+        acc: &mut StepOutputs,
+        merged: &mut usize,
+    ) -> Result<Option<Vec<DecodeQuery>>> {
+        loop {
+            if let Some((batch, e)) = self.banked_batches.pop_front() {
+                self.check_epoch(e, epoch)?;
+                return Ok(Some(batch));
+            }
+            if let Some((request, out, lse, e)) = self.banked_partials.pop_front() {
+                self.check_epoch(e, epoch)?;
+                merge_into(acc, self.backend.as_mut(), &mut self.scratch, request, out, lse)?;
+                *merged += 1;
+                continue;
+            }
+            if !self.bank_one(epoch)? {
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Wait for the next homeward partial. `Ok(None)` means shutdown.
+    fn next_partial(&mut self, epoch: u64) -> Result<Option<(usize, Tensor, Tensor)>> {
+        loop {
+            if let Some((request, out, lse, e)) = self.banked_partials.pop_front() {
+                self.check_epoch(e, epoch)?;
+                return Ok(Some((request, out, lse)));
+            }
+            if !self.bank_one(epoch)? {
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Block for one message mid-step and bank it. `Ok(false)` = shutdown.
+    fn bank_one(&mut self, epoch: u64) -> Result<bool> {
+        match self.rx.recv() {
+            Err(_) => bail!(
+                "device {}: ring channel closed mid-step (epoch {epoch})",
+                self.device
+            ),
+            Ok(ActorMsg::Shutdown) => Ok(false),
+            Ok(ActorMsg::QBatch { batch, epoch: e }) => {
+                self.banked_batches.push_back((batch, e));
+                Ok(true)
+            }
+            Ok(ActorMsg::Partial { request, out, lse, epoch: e }) => {
+                self.banked_partials.push_back((request, out, lse, e));
+                Ok(true)
+            }
+            Ok(_) => bail!(
+                "device {}: driver command arrived mid-step (epoch {epoch}); \
+                 the driver protocol is synchronous",
+                self.device
+            ),
+        }
+    }
+
+    fn check_epoch(&self, got: u64, want: u64) -> Result<()> {
+        ensure!(
+            got == want,
+            "device {}: ring message from epoch {got} during epoch {want} — \
+             the driver protocol is synchronous",
+            self.device
+        );
+        Ok(())
+    }
+}
+
+/// First partial initializes the accumulator slot, the rest merge through
+/// the backend; consumed partials' buffers recycle into the arena.
+fn merge_into(
+    acc: &mut StepOutputs,
+    backend: &mut dyn Backend,
+    scratch: &mut Scratch,
+    request: usize,
+    out: Tensor,
+    lse: Tensor,
+) -> Result<()> {
+    match acc.get_mut(&request) {
+        None => {
+            acc.insert(request, (out, lse));
+        }
+        Some((o, l)) => {
+            backend.merge(o, l, &out, &lse, scratch)?;
+            scratch.recycle(out);
+            scratch.recycle(lse);
+        }
+    }
+    Ok(())
+}
+
+/// Driver handle for a persistent ring of `n` device actors.
+///
+/// Spawn once per serve session, then [`admit`](ActorRing::admit) /
+/// [`append`](ActorRing::append) / [`step`](ActorRing::step) /
+/// [`evict`](ActorRing::evict) across arbitrarily many micro-steps, and
+/// finally [`drain`](ActorRing::drain) + [`shutdown`](ActorRing::shutdown).
+/// Any actor failure surfaces as a structured `Err` naming the device and
+/// request; the ring is then poisoned and every later call fails fast.
+/// Dropping the ring shuts the actors down and joins them.
+pub struct ActorRing {
+    txs: Vec<Sender<ActorMsg>>,
+    replies: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    epoch: u64,
+    resident: HashSet<usize>,
+    poisoned: bool,
+    delta_tokens_sent: usize,
+    delta_bytes_sent: usize,
+}
+
+impl ActorRing {
+    /// Spawn `n` device actors (the session's only thread spawns).
+    pub fn spawn(n: usize, heads: usize, head_dim: usize, opts: &EngineOpts) -> Result<ActorRing> {
+        ensure!(n > 0, "actor ring needs at least one device");
+        let mut txs: Vec<Sender<ActorMsg>> = Vec::with_capacity(n);
+        let mut rxs: Vec<Receiver<ActorMsg>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let (reply_tx, reply_rx) = channel();
+        let clock = Clock::new();
+
+        let mut handles = Vec::with_capacity(n);
+        for (j, rx) in rxs.into_iter().enumerate() {
+            let mut peer_txs = txs.clone();
+            // Dangling self-sender: an actor must never hold its own
+            // sender, or a blocked peer-less actor would keep its channel
+            // (and itself) alive forever.
+            peer_txs[j] = channel().0;
+            let replies = reply_tx.clone();
+            let opts = opts.clone();
+            handles.push(thread::spawn(move || {
+                let backend = match opts.backend.build() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let error = e.context(format!("device {j}: building backend"));
+                        let _ = replies.send(Reply::Failed { device: j, error });
+                        return;
+                    }
+                };
+                Actor {
+                    device: j,
+                    n,
+                    heads,
+                    head_dim,
+                    opts,
+                    clock,
+                    rx,
+                    txs: peer_txs,
+                    replies,
+                    backend,
+                    scratch: Scratch::new(),
+                    views: HashMap::new(),
+                    timeline: Timeline::new(),
+                    stats: ActorStats { device: j, ..Default::default() },
+                    banked_batches: VecDeque::new(),
+                    banked_partials: VecDeque::new(),
+                }
+                .run();
+            }));
+        }
+        probe::note_spawns(n);
+        Ok(ActorRing {
+            txs,
+            replies: reply_rx,
+            handles,
+            epoch: 0,
+            resident: HashSet::new(),
+            poisoned: false,
+            delta_tokens_sent: 0,
+            delta_bytes_sent: 0,
+        })
+    }
+
+    /// Ring size.
+    pub fn devices(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Requests currently admitted (resident on the actors).
+    pub fn resident_requests(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Whether `request` is currently admitted.
+    pub fn is_resident(&self, request: usize) -> bool {
+        self.resident.contains(&request)
+    }
+
+    /// KV tokens this ring has shipped across actor channels.
+    pub fn delta_tokens_sent(&self) -> usize {
+        self.delta_tokens_sent
+    }
+
+    /// Logical KV bytes this ring has shipped across actor channels.
+    pub fn delta_bytes_sent(&self) -> usize {
+        self.delta_bytes_sent
+    }
+
+    fn check_live(&self) -> Result<()> {
+        ensure!(!self.poisoned, "actor ring is poisoned by an earlier failure");
+        Ok(())
+    }
+
+    /// Register a request on every actor (each starts with an empty view).
+    pub fn admit(&mut self, request: usize) -> Result<()> {
+        self.check_live()?;
+        ensure!(
+            self.resident.insert(request),
+            "request {request} is already admitted to the actor ring"
+        );
+        for (d, tx) in self.txs.iter().enumerate() {
+            if tx.send(ActorMsg::Admit { request }).is_err() {
+                self.poisoned = true;
+                bail!("device {d} hung up admitting request {request}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Route KV deltas (from [`KvCache::append_deltas`]) to their devices.
+    /// Each send is a refcount bump — only the newly appended window
+    /// crosses the channel, never the request's full resident view.
+    ///
+    /// [`KvCache::append_deltas`]: super::kv_cache::KvCache::append_deltas
+    pub fn append(&mut self, deltas: &[KvDelta]) -> Result<()> {
+        self.check_live()?;
+        for delta in deltas {
+            ensure!(
+                self.resident.contains(&delta.request),
+                "KV delta for request {} before admit",
+                delta.request
+            );
+            ensure!(
+                delta.device < self.txs.len(),
+                "KV delta routed to device {} on a {}-device ring (request {})",
+                delta.device,
+                self.txs.len(),
+                delta.request
+            );
+            let (tokens, bytes) = (delta.tokens(), delta.bytes());
+            if self.txs[delta.device].send(ActorMsg::AppendDelta { delta: delta.clone() }).is_err()
+            {
+                self.poisoned = true;
+                bail!(
+                    "device {} hung up receiving a KV delta for request {}",
+                    delta.device,
+                    delta.request
+                );
+            }
+            self.delta_tokens_sent += tokens;
+            self.delta_bytes_sent += bytes;
+            probe::note_delta(tokens, bytes);
+        }
+        Ok(())
+    }
+
+    /// Drop a request's resident views everywhere (preemption / retire).
+    pub fn evict(&mut self, request: usize) -> Result<()> {
+        self.check_live()?;
+        ensure!(
+            self.resident.remove(&request),
+            "evicting request {request} which is not admitted"
+        );
+        for (d, tx) in self.txs.iter().enumerate() {
+            if tx.send(ActorMsg::Evict { request }).is_err() {
+                self.poisoned = true;
+                bail!("device {d} hung up evicting request {request}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one batched decode micro-step over the resident views.
+    ///
+    /// Every query's request must be admitted (and its KV appended via
+    /// [`append`](ActorRing::append)); validation happens here on the
+    /// driver so a bad batch is a plain error that does NOT poison the
+    /// ring. The returned timeline is empty — per-actor timelines
+    /// accumulate across steps and are collected at
+    /// [`drain`](ActorRing::drain).
+    pub fn step(&mut self, queries: Vec<DecodeQuery>) -> Result<DecodeResult> {
+        self.check_live()?;
+        let n = self.txs.len();
+        let mut seen = HashSet::new();
+        for q in &queries {
+            ensure!(
+                self.resident.contains(&q.request),
+                "step query for request {} before admit",
+                q.request
+            );
+            ensure!(
+                seen.insert(q.request),
+                "duplicate query for request {} in one step",
+                q.request
+            );
+        }
+        let mut batches: Vec<Vec<DecodeQuery>> = vec![Vec::new(); n];
+        for q in queries {
+            let home = q.request % n;
+            batches[home].push(q);
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let t0 = Instant::now();
+        for (d, batch) in batches.into_iter().enumerate() {
+            if self.txs[d].send(ActorMsg::Step { batch, epoch }).is_err() {
+                self.poisoned = true;
+                bail!("device {d} hung up before step (epoch {epoch})");
+            }
+        }
+        let mut outputs: StepOutputs = HashMap::new();
+        for _ in 0..n {
+            match self.recv_reply()? {
+                Reply::Step { device, epoch: e, outputs: out } => {
+                    if e != epoch {
+                        self.poisoned = true;
+                        bail!("device {device} replied for epoch {e} during epoch {epoch}");
+                    }
+                    outputs.extend(out);
+                }
+                Reply::Drained { device, .. } => {
+                    self.poisoned = true;
+                    bail!("device {device} sent a drain report during a step (epoch {epoch})");
+                }
+                Reply::Failed { device, error } => {
+                    self.poisoned = true;
+                    return Err(error
+                        .context(format!("decode step failed on device {device} (epoch {epoch})")));
+                }
+            }
+        }
+        Ok(DecodeResult {
+            outputs,
+            timeline: Timeline::new(),
+            wall: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Collect every actor's timeline and counters (resetting both), e.g.
+    /// at end of serve. The ring stays usable afterwards.
+    pub fn drain(&mut self) -> Result<DrainReport> {
+        self.check_live()?;
+        for (d, tx) in self.txs.iter().enumerate() {
+            if tx.send(ActorMsg::Drain).is_err() {
+                self.poisoned = true;
+                bail!("device {d} hung up before drain");
+            }
+        }
+        let mut timelines = Vec::with_capacity(self.txs.len());
+        let mut stats = Vec::with_capacity(self.txs.len());
+        for _ in 0..self.txs.len() {
+            match self.recv_reply()? {
+                Reply::Drained { timeline, stats: s, .. } => {
+                    timelines.push(timeline);
+                    stats.push(s);
+                }
+                Reply::Step { device, .. } => {
+                    self.poisoned = true;
+                    bail!("device {device} sent a step reply during drain");
+                }
+                Reply::Failed { device, error } => {
+                    self.poisoned = true;
+                    return Err(error.context(format!("drain failed on device {device}")));
+                }
+            }
+        }
+        stats.sort_by_key(|s| s.device);
+        Ok(DrainReport { timeline: Timeline::merge(timelines), stats })
+    }
+
+    /// Stop every actor and join its thread. Also runs on drop; calling
+    /// it explicitly surfaces join failures as errors.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_inner()
+    }
+
+    fn recv_reply(&mut self) -> Result<Reply> {
+        match self.replies.recv_timeout(REPLY_TIMEOUT) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Timeout) => {
+                self.poisoned = true;
+                bail!("actor ring stalled: no reply within {REPLY_TIMEOUT:?}")
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                self.poisoned = true;
+                bail!("every actor hung up (reply channel closed)")
+            }
+        }
+    }
+
+    fn shutdown_inner(&mut self) -> Result<()> {
+        for tx in &self.txs {
+            // best effort: a dead actor's channel just errors
+            let _ = tx.send(ActorMsg::Shutdown);
+        }
+        let mut panicked = 0usize;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        ensure!(panicked == 0, "{panicked} actor thread(s) panicked during shutdown");
+        Ok(())
+    }
+}
+
+impl Drop for ActorRing {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            let _ = self.shutdown_inner();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_block;
+    use crate::engine::kv_cache::KvCache;
+    use crate::util::rng::Rng;
+
+    fn opts() -> EngineOpts {
+        EngineOpts { record: false, ..Default::default() }
+    }
+
+    fn filled_cache(n: usize, reqs: &[(usize, usize)], rng: &mut Rng) -> (KvCache, HashMap<usize, (Tensor, Tensor)>) {
+        let mut cache = KvCache::new(n, 2, 8, 8);
+        let mut truth = HashMap::new();
+        for &(req, ctx) in reqs {
+            let k = Tensor::new(&[ctx, 2, 8], rng.normal_vec(ctx * 16, 1.0));
+            let v = Tensor::new(&[ctx, 2, 8], rng.normal_vec(ctx * 16, 1.0));
+            cache.append(req, &k, &v).unwrap();
+            truth.insert(req, (k, v));
+        }
+        (cache, truth)
+    }
+
+    fn admit_and_load(ring: &mut ActorRing, cache: &KvCache, req: usize) {
+        ring.admit(req).unwrap();
+        for dev in 0..ring.devices() {
+            let (k, v, positions) = cache.device_view(req, dev).unwrap();
+            if !positions.is_empty() {
+                ring.append(&[KvDelta { request: req, device: dev, k, v, positions }]).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_ring_steps_match_attention_oracle() {
+        let mut rng = Rng::new(61);
+        let (cache, truth) = filled_cache(4, &[(3, 64)], &mut rng);
+        let mut ring = ActorRing::spawn(4, 2, 8, &opts()).unwrap();
+        admit_and_load(&mut ring, &cache, 3);
+
+        // several steps over the SAME session — no respawn between them
+        for step in 0..3 {
+            let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+            let q_pos = vec![64 + step as i32];
+            let res = ring
+                .step(vec![DecodeQuery { request: 3, q: q.clone(), q_pos: q_pos.clone() }])
+                .unwrap();
+            let (k, v) = &truth[&3];
+            let kpos: Vec<i32> = (0..64).collect();
+            let (eo, _) = attention_block(&q, k, v, &q_pos, &kpos, true, None);
+            let (got, _) = &res.outputs[&3];
+            assert!(got.allclose(&eo, 1e-4), "step {step} diff={}", got.max_abs_diff(&eo));
+        }
+        let report = ring.drain().unwrap();
+        assert_eq!(report.delta_tokens(), 64);
+        assert_eq!(report.stats.iter().map(|s| s.steps).sum::<usize>(), 12);
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn driver_side_validation_errors_do_not_poison() {
+        let mut rng = Rng::new(62);
+        let (cache, _) = filled_cache(2, &[(1, 16)], &mut rng);
+        let mut ring = ActorRing::spawn(2, 2, 8, &opts()).unwrap();
+        admit_and_load(&mut ring, &cache, 1);
+
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        // un-admitted request: structured error naming the request...
+        let err = ring
+            .step(vec![DecodeQuery { request: 7, q: q.clone(), q_pos: vec![0] }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("request 7"), "{err}");
+        // ...and the ring is still usable afterwards
+        let res = ring.step(vec![DecodeQuery { request: 1, q, q_pos: vec![16] }]).unwrap();
+        assert!(res.outputs.contains_key(&1));
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn double_admit_and_bad_evict_are_errors() {
+        let mut ring = ActorRing::spawn(2, 2, 8, &opts()).unwrap();
+        ring.admit(4).unwrap();
+        assert!(ring.admit(4).is_err());
+        assert!(ring.evict(9).is_err());
+        ring.evict(4).unwrap();
+        assert!(!ring.is_resident(4));
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn delta_for_unadmitted_request_fails_the_next_step() {
+        let mut rng = Rng::new(63);
+        let mut ring = ActorRing::spawn(2, 2, 8, &opts()).unwrap();
+        ring.admit(0).unwrap();
+        // bypass driver validation to exercise the actor-side guard
+        ring.resident.insert(5);
+        let k = Tensor::new(&[4, 2, 8], rng.normal_vec(64, 1.0));
+        let v = Tensor::new(&[4, 2, 8], rng.normal_vec(64, 1.0));
+        ring.append(&[KvDelta {
+            request: 5,
+            device: 0,
+            k,
+            v,
+            positions: (0..4).collect(),
+        }])
+        .unwrap();
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let err = ring
+            .step(vec![DecodeQuery { request: 0, q, q_pos: vec![0] }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("request 5") && err.contains("before admit"), "{err}");
+        // the ring is poisoned: everything fails fast now
+        assert!(ring.admit(8).is_err());
+        assert!(ring.drain().is_err());
+    }
+}

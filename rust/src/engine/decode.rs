@@ -6,19 +6,21 @@
 //! With a batch of requests, blocks pipeline around the ring exactly like
 //! prefill Q blocks: at any step every device is busy with a different
 //! request's query.
+//!
+//! Since the persistent actor runtime landed, [`run_decode_ring`] is a
+//! thin compatibility wrapper: spawn an [`ActorRing`], admit and load
+//! exactly the batch's requests, run one step, drain, shut down. Serving
+//! paths that take many steps should hold an `ActorRing` directly
+//! (as `scheduler::continuous` does) and skip the per-call setup.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread;
 
-use anyhow::{anyhow, Result};
+use anyhow::{Context, Result};
 
-use crate::attention::MASK_VALUE;
-use crate::metrics::{Clock, Event, Timeline};
-use crate::simulator::SpanTag;
+use crate::metrics::Timeline;
 use crate::tensor::Tensor;
 
-use super::backend::Scratch;
+use super::actors::ActorRing;
 use super::kv_cache::KvCache;
 use super::EngineOpts;
 
@@ -44,198 +46,49 @@ pub struct DecodeResult {
     pub wall: f64,
 }
 
-enum Msg {
-    /// A batch of queries hopping forward (the home rank's whole batch).
-    QBatch(Vec<DecodeQuery>),
-    /// A partial flying home.
-    Partial { request: usize, out: Tensor, lse: Tensor },
-}
-
-/// Run one batched decode step over `n` device threads.
+/// Run one batched decode step over `n` devices.
 ///
-/// `views[device]` maps request-id → (K, V, positions) resident there
-/// (from `KvCache::device_view`). Requests are homed at `request % n`.
+/// Compatibility wrapper over the persistent actor runtime: spawns an
+/// [`ActorRing`], admits and loads **only the batch's requests** (an
+/// idle-but-resident request in the cache costs nothing here), runs one
+/// step, drains the timeline, and shuts down. Requests are homed at
+/// `request % n`.
 pub fn run_decode_ring(
     queries: Vec<DecodeQuery>,
     cache: &KvCache,
     n: usize,
     opts: &EngineOpts,
 ) -> Result<DecodeResult> {
-    let heads = cache.heads;
-    let head_dim = cache.head_dim;
+    let mut ring = ActorRing::spawn(n, cache.heads, cache.head_dim, opts)?;
 
-    // home batches
-    let mut batches: Vec<Vec<DecodeQuery>> = vec![Vec::new(); n];
-    let mut expected: Vec<usize> = vec![0; n];
-    for q in queries {
-        let home = q.request % n;
-        batches[home].push(q);
-    }
-    for j in 0..n {
-        expected[j] = batches[j].len() * (n - 1);
-    }
-
-    // per-device cache views, materialized up front (threads own them)
-    let mut views: Vec<HashMap<usize, (Tensor, Tensor, Vec<i32>)>> =
-        (0..n).map(|_| HashMap::new()).collect();
-    for (j, batch) in batches.iter().enumerate() {
-        for q in batch {
-            for (dev, view) in views.iter_mut().enumerate() {
-                view.insert(q.request, cache.device_view(q.request, dev)?);
+    // filter the loaded views to the batch's request set
+    let mut batch_requests: Vec<usize> = queries.iter().map(|q| q.request).collect();
+    batch_requests.sort_unstable();
+    batch_requests.dedup();
+    for &r in &batch_requests {
+        ring.admit(r)?;
+        for dev in 0..n {
+            let (k, v, positions) = cache
+                .device_view(r, dev)
+                .with_context(|| format!("loading request {r} into the decode ring"))?;
+            if !positions.is_empty() {
+                ring.append(&[super::kv_cache::KvDelta { request: r, device: dev, k, v, positions }])?;
             }
         }
-        let _ = j;
     }
+    // the filter assertion: exactly the batch's resident tokens crossed
+    // the channels, never idle requests' KV
+    debug_assert_eq!(
+        ring.delta_tokens_sent(),
+        batch_requests.iter().map(|&r| cache.seq_len(r)).sum::<usize>(),
+        "decode ring must ship exactly the batch's KV"
+    );
 
-    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(n);
-    let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = channel();
-        senders.push(tx);
-        receivers.push(rx);
-    }
-    let clock = Clock::new();
-
-    let mut handles = Vec::with_capacity(n);
-    for j in (0..n).rev() {
-        let txs = senders.clone();
-        let rx = receivers.pop().unwrap();
-        let my_batch = batches[j].clone();
-        let my_expected = expected[j];
-        let view = views.pop().unwrap();
-        let opts = opts.clone();
-        handles.push(thread::spawn(move || -> Result<_> {
-            let mut backend = opts.backend.build()?;
-            let mut scratch = Scratch::new();
-            let mut tl = Timeline::new();
-            // accumulators for my home requests
-            let mut acc: HashMap<usize, (Tensor, Tensor)> = HashMap::new();
-            let mut merged = 0usize;
-            let mut pending_batches: Vec<Vec<DecodeQuery>> = Vec::new();
-
-            let mut cur = my_batch;
-            for step in 0..n {
-                // forward the batch we are about to consume
-                if step < n - 1 {
-                    let dst = (j + 1) % n;
-                    if opts.record {
-                        let bytes: usize = cur.iter().map(|q| q.q.size_bytes()).sum();
-                        let t = clock.now();
-                        tl.push(Event {
-                            device: j,
-                            tag: SpanTag::SendQ,
-                            step,
-                            name: format!("decode batch -> d{dst}"),
-                            t0: t,
-                            t1: t,
-                            bytes,
-                        });
-                    }
-                    txs[dst]
-                        .send(Msg::QBatch(cur.clone()))
-                        .map_err(|_| anyhow!("send qbatch"))?;
-                }
-
-                for dq in &cur {
-                    let (k, v, kpos) = view
-                        .get(&dq.request)
-                        .ok_or_else(|| anyhow!("no cache view for req {}", dq.request))?;
-                    let (bo, bl) = if kpos.is_empty() {
-                        // this device holds no pages for the request
-                        (
-                            Tensor::zeros(&[dq.q.shape()[0], heads, head_dim]),
-                            Tensor::full(&[heads, dq.q.shape()[0]], MASK_VALUE),
-                        )
-                    } else if opts.record {
-                        let t0 = clock.now();
-                        let r = backend
-                            .attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal, &mut scratch)?;
-                        tl.push(Event {
-                            device: j,
-                            tag: SpanTag::Compute,
-                            step,
-                            name: format!("decode req {}", dq.request),
-                            t0,
-                            t1: clock.now(),
-                            bytes: 0,
-                        });
-                        r
-                    } else {
-                        backend.attn_block(&dq.q, k, v, &dq.q_pos, kpos, opts.causal, &mut scratch)?
-                    };
-                    let home = dq.request % n;
-                    if home == j {
-                        merge_acc(&mut acc, backend.as_mut(), &mut scratch, dq.request, bo, bl)?;
-                    } else {
-                        txs[home]
-                            .send(Msg::Partial { request: dq.request, out: bo, lse: bl })
-                            .map_err(|_| anyhow!("send partial"))?;
-                    }
-                }
-
-                if step < n - 1 {
-                    // wait for the next batch, merging partials as they land
-                    loop {
-                        if let Some(b) = pending_batches.pop() {
-                            cur = b;
-                            break;
-                        }
-                        match rx.recv().map_err(|_| anyhow!("recv"))? {
-                            Msg::QBatch(b) => {
-                                cur = b;
-                                break;
-                            }
-                            Msg::Partial { request, out, lse } => {
-                                merge_acc(&mut acc, backend.as_mut(), &mut scratch, request, out, lse)?;
-                                merged += 1;
-                            }
-                        }
-                    }
-                }
-            }
-
-            while merged < my_expected {
-                match rx.recv().map_err(|_| anyhow!("recv tail"))? {
-                    Msg::Partial { request, out, lse } => {
-                        merge_acc(&mut acc, backend.as_mut(), &mut scratch, request, out, lse)?;
-                        merged += 1;
-                    }
-                    Msg::QBatch(b) => pending_batches.push(b),
-                }
-            }
-            Ok((acc, tl))
-        }));
-    }
-
-    let mut outputs = HashMap::new();
-    let mut timelines = Vec::new();
-    for h in handles {
-        let (acc, tl) = h.join().map_err(|_| anyhow!("decode thread panicked"))??;
-        outputs.extend(acc);
-        timelines.push(tl);
-    }
-    Ok(DecodeResult { outputs, timeline: Timeline::merge(timelines), wall: clock.now() })
-}
-
-fn merge_acc(
-    acc: &mut HashMap<usize, (Tensor, Tensor)>,
-    backend: &mut dyn super::backend::Backend,
-    scratch: &mut Scratch,
-    request: usize,
-    out: Tensor,
-    lse: Tensor,
-) -> Result<()> {
-    match acc.get_mut(&request) {
-        None => {
-            acc.insert(request, (out, lse));
-        }
-        Some((o, l)) => {
-            backend.merge(o, l, &out, &lse, scratch)?;
-            scratch.recycle(out);
-            scratch.recycle(lse);
-        }
-    }
-    Ok(())
+    let mut res = ring.step(queries)?;
+    let drained = ring.drain()?;
+    res.timeline = drained.timeline;
+    ring.shutdown()?;
+    Ok(res)
 }
 
 #[cfg(test)]
@@ -319,6 +172,29 @@ mod tests {
                 got.max_abs_diff(&eo)
             );
         }
+    }
+
+    #[test]
+    fn idle_resident_requests_cost_nothing() {
+        // a request resident in the cache but absent from the batch must
+        // not be admitted, shipped, or computed by the wrapper's ring
+        let mut rng = Rng::new(53);
+        let mut cache = KvCache::new(2, 2, 8, 8);
+        let (k, v) = fill_cache(&mut cache, &mut rng, 0, 32);
+        fill_cache(&mut cache, &mut rng, 1, 512); // idle: large on purpose
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let res = run_decode_ring(
+            vec![DecodeQuery { request: 0, q: q.clone(), q_pos: vec![32] }],
+            &cache,
+            2,
+            &opts(),
+        )
+        .unwrap();
+        assert_eq!(res.outputs.len(), 1, "only the batch request computes");
+        let kpos: Vec<i32> = (0..32).collect();
+        let (eo, _) = attention_block(&q, &k, &v, &vec![32], &kpos, true, None);
+        let (got, _) = &res.outputs[&0];
+        assert!(got.allclose(&eo, 1e-4), "diff={}", got.max_abs_diff(&eo));
     }
 
     #[test]

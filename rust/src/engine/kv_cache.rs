@@ -31,6 +31,38 @@ struct SeqEntry {
     cursor: usize,
 }
 
+/// One incremental slice of an append, routed to one device: the
+/// `Arc`-backed page window that crosses an actor channel
+/// (`engine::actors`) instead of the request's whole resident view. `k`
+/// and `v` are zero-copy slices of the appended tensors, so sending a
+/// delta is a refcount bump per PR 3's messaging contract.
+#[derive(Debug, Clone)]
+pub struct KvDelta {
+    /// The request this slice belongs to.
+    pub request: usize,
+    /// The device whose resident view grows by this slice.
+    pub device: usize,
+    /// (tokens, H, D) window of the appended K.
+    pub k: Tensor,
+    /// (tokens, H, D) window of the appended V.
+    pub v: Tensor,
+    /// Global sequence positions of the window's rows.
+    pub positions: Vec<i32>,
+}
+
+impl KvDelta {
+    /// Tokens this delta carries.
+    pub fn tokens(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// Logical bytes on the wire (K + V + positions) — what the
+    /// bytes-crossing-channel probe charges per delta.
+    pub fn bytes(&self) -> usize {
+        self.k.size_bytes() + self.v.size_bytes() + self.positions.len() * 4
+    }
+}
+
 /// The cache manager.
 #[derive(Debug)]
 pub struct KvCache {
@@ -47,14 +79,34 @@ impl KvCache {
         KvCache { devices, heads, head_dim, page_tokens, seqs: HashMap::new() }
     }
 
+    /// Ensure `id` has a (possibly empty) entry, so [`KvCache::device_view`]
+    /// is well-defined before any tokens land — the state of a freshly
+    /// admitted request under the actor runtime.
+    pub fn admit(&mut self, id: usize) {
+        let devices = self.devices;
+        self.seqs.entry(id).or_insert_with(|| SeqEntry {
+            pages: vec![Vec::new(); devices],
+            next_pos: 0,
+            cursor: 0,
+        });
+    }
+
     /// Append `k`/`v` of shape (T, H, D) for request `id` at the request's
     /// current end position. T must be a multiple of page_tokens (pad the
     /// tail at the model level) except for single-token decode appends,
     /// which extend the open page.
     pub fn append(&mut self, id: usize, k: &Tensor, v: &Tensor) -> Result<()> {
+        self.append_deltas(id, k, v).map(|_| ())
+    }
+
+    /// Like [`KvCache::append`], but also returns the per-page routing of
+    /// the appended tokens as [`KvDelta`] windows — exactly what must
+    /// cross an actor channel to keep device-resident views in sync
+    /// without re-materializing the full view.
+    pub fn append_deltas(&mut self, id: usize, k: &Tensor, v: &Tensor) -> Result<Vec<KvDelta>> {
         let t = k.shape()[0];
         if k.shape() != [t, self.heads, self.head_dim] || k.shape() != v.shape() {
-            bail!("kv append shape mismatch: {:?}", k.shape());
+            bail!("kv append shape mismatch for request {id}: {:?}", k.shape());
         }
         let devices = self.devices;
         let page_tokens = self.page_tokens;
@@ -63,22 +115,25 @@ impl KvCache {
             next_pos: 0,
             cursor: 0,
         });
+        let mut deltas = Vec::with_capacity(t.div_ceil(page_tokens.max(1)));
         let mut off = 0;
         while off < t {
             let take = page_tokens.min(t - off);
             let dev = entry.cursor;
             let positions: Vec<i32> =
                 (entry.next_pos as i32..(entry.next_pos + take) as i32).collect();
+            let (pk, pv) = (k.slice_rows(off, off + take), v.slice_rows(off, off + take));
             entry.pages[dev].push(Page {
-                k: k.slice_rows(off, off + take),
-                v: v.slice_rows(off, off + take),
-                positions,
+                k: pk.clone(),
+                v: pv.clone(),
+                positions: positions.clone(),
             });
+            deltas.push(KvDelta { request: id, device: dev, k: pk, v: pv, positions });
             entry.next_pos += take;
             entry.cursor = (entry.cursor + 1) % devices;
             off += take;
         }
-        Ok(())
+        Ok(deltas)
     }
 
     /// Total tokens cached for a request.
@@ -87,12 +142,24 @@ impl KvCache {
     }
 
     /// Concatenated (K, V, positions) resident on `device` for request
-    /// `id`. Empty tensors when the device holds nothing.
+    /// `id`.
+    ///
+    /// A known request with zero tokens on `device` (fewer pages than
+    /// devices, or admitted before any append) returns an explicit empty
+    /// view — `(0, H, D)` tensors and no positions — never an error; the
+    /// actor runtime's delta views rely on that. Unknown requests and
+    /// out-of-range devices are structured errors.
     pub fn device_view(&self, id: usize, device: usize) -> Result<(Tensor, Tensor, Vec<i32>)> {
         let e = self
             .seqs
             .get(&id)
             .ok_or_else(|| anyhow!("unknown request {id}"))?;
+        if device >= self.devices {
+            bail!(
+                "device {device} out of range for a {}-device cache (request {id})",
+                self.devices
+            );
+        }
         let pages = &e.pages[device];
         if pages.is_empty() {
             return Ok((
@@ -229,6 +296,73 @@ mod tests {
         assert!(!c.free(1));
         assert_eq!(c.active_requests(), 1);
         assert_eq!(c.total_tokens(), 16);
+    }
+
+    #[test]
+    fn empty_device_view_is_explicit_not_an_error() {
+        // load-bearing for the actor runtime's delta views: a fresh
+        // request has no history on most devices, and that must read as
+        // an explicit empty view, never an error or a panic
+        let mut c = KvCache::new(3, 2, 8, 4);
+        c.admit(5);
+        assert_eq!(c.seq_len(5), 0);
+        assert_eq!(c.active_requests(), 1);
+        for d in 0..3 {
+            let (k, v, pos) = c.device_view(5, d).unwrap();
+            assert_eq!(k.shape(), &[0, 2, 8]);
+            assert_eq!(v.shape(), &[0, 2, 8]);
+            assert!(pos.is_empty());
+        }
+        // one page lands on device 0 only; the others stay explicitly empty
+        let mut rng = Rng::new(9);
+        let (k, v) = kv(&mut rng, 4);
+        c.append(5, &k, &v).unwrap();
+        assert_eq!(c.device_view(5, 0).unwrap().2.len(), 4);
+        for d in 1..3 {
+            assert!(c.device_view(5, d).unwrap().2.is_empty());
+        }
+        // out-of-range device is a structured error, not an index panic
+        let e = c.device_view(5, 3).unwrap_err().to_string();
+        assert!(e.contains("device 3") && e.contains("request 5"), "{e}");
+        // unknown request stays an error (the ring's sanity guard)
+        assert!(c.device_view(99, 0).is_err());
+        // admit is idempotent and never clobbers resident pages
+        c.admit(5);
+        assert_eq!(c.seq_len(5), 4);
+    }
+
+    #[test]
+    fn append_deltas_are_zero_copy_windows_covering_the_append() {
+        let mut c = KvCache::new(2, 2, 8, 4);
+        let mut rng = Rng::new(8);
+        let (k, v) = kv(&mut rng, 12); // 3 pages over 2 devices
+        let deltas = c.append_deltas(3, &k, &v).unwrap();
+        assert_eq!(deltas.len(), 3);
+        assert_eq!(deltas.iter().map(KvDelta::tokens).sum::<usize>(), 12);
+        assert_eq!(
+            deltas.iter().map(|d| d.device).collect::<Vec<_>>(),
+            vec![0, 1, 0],
+            "pages deal round-robin"
+        );
+        let mut pos = Vec::new();
+        for d in &deltas {
+            assert_eq!(d.request, 3);
+            assert!(d.k.shares_storage(&k), "delta K must be a window, not a copy");
+            assert!(d.v.shares_storage(&v), "delta V must be a window, not a copy");
+            assert_eq!(d.bytes(), d.k.size_bytes() + d.v.size_bytes() + d.tokens() * 4);
+            pos.extend_from_slice(&d.positions);
+        }
+        assert_eq!(pos, (0..12).collect::<Vec<i32>>());
+        // the cache state is identical to a plain append's
+        assert_eq!(c.seq_len(3), 12);
+        assert_eq!(c.total_tokens(), 12);
+        // a single-token decode append yields exactly one one-token delta
+        // at the cursor device
+        let (k1, v1) = kv(&mut rng, 1);
+        let d1 = c.append_deltas(3, &k1, &v1).unwrap();
+        assert_eq!(d1.len(), 1);
+        assert_eq!(d1[0].device, 1);
+        assert_eq!(d1[0].positions, vec![12]);
     }
 
     #[test]

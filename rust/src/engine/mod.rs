@@ -20,11 +20,15 @@
 //! * [`run_hybrid`]          — case study III (TokenRing intra-node, ring
 //!                             KV exchange inter-node)
 //!
-//! The serving stack builds on two further pieces: [`kv_cache`] (a
-//! sequence-sharded paged KV cache) and [`decode`] (batched decode-ring
-//! steps over that cache), which the continuous batcher in
-//! `scheduler::continuous` drives every micro-step.
+//! The serving stack builds on three further pieces: [`kv_cache`] (a
+//! sequence-sharded paged KV cache), [`actors`] (a persistent ring of
+//! device workers that hold their KV shard views across micro-steps and
+//! receive only incremental deltas), and [`decode`] (a per-call
+//! compatibility wrapper that spawns an actor ring for a single batched
+//! step). The continuous batcher in `scheduler::continuous` holds one
+//! [`actors::ActorRing`] for the whole serve session.
 
+pub mod actors;
 pub mod backend;
 pub mod decode;
 pub mod kv_cache;

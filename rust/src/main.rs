@@ -13,7 +13,7 @@
 //! tokenring zigzag    [--seq 32768] [--devices 4]
 //! tokenring hybrid    [--seq 49152] [--nodes 2] [--per-node 4]
 //! tokenring validate  [--backend native|pjrt] [--profile tiny]
-//! tokenring serve     --config configs/serve.json [--out report.json]
+//! tokenring serve     --config configs/serve.json [--out report.json] [--runtime actors|spawn_per_step]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
 //! tokenring trace     --schedule token_ring --out trace.json
 //! tokenring schedules
@@ -41,7 +41,7 @@ use tokenring::parallelism::partition::Partition;
 use tokenring::parallelism::ScheduleSpec;
 use tokenring::reports;
 use tokenring::runtime::default_artifact_dir;
-use tokenring::scheduler::{serve, serve_continuous, ServeOpts};
+use tokenring::scheduler::{serve, serve_continuous, ServeOpts, ServeRuntime};
 use tokenring::tensor::Tensor;
 use tokenring::util::cli::{render_help, Args, OptSpec};
 use tokenring::util::rng::Rng;
@@ -314,6 +314,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "config", help: "continuous-batching serve config JSON (see configs/serve.json); without it the legacy prefill-only FIFO driver runs", default: None, is_flag: false },
         OptSpec { name: "out", help: "artifact path for the serve report (with --config; default: <artifacts>/serve/BENCH_<name>.json)", default: None, is_flag: false },
         OptSpec { name: "trace", help: "write a chrome trace of the serve steps here (with --config)", default: None, is_flag: false },
+        OptSpec { name: "runtime", help: "serve runtime override: actors | spawn_per_step (with --config; default from the config)", default: None, is_flag: false },
         OptSpec { name: "requests", help: "request count (legacy driver)", default: Some("16"), is_flag: false },
         OptSpec { name: "devices", help: "SP degree (legacy driver)", default: Some("4"), is_flag: false },
         OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention; legacy driver)", default: Some("token_ring"), is_flag: false },
@@ -324,7 +325,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         return Ok(());
     };
     if let Some(path) = args.get("config") {
-        return cmd_serve_config(path, args.get("out"), args.get("trace"));
+        return cmd_serve_config(path, args.get("out"), args.get("trace"), args.get("runtime"));
+    }
+    if args.get("runtime").is_some() {
+        return Err("--runtime only applies to the continuous path (use --config)".to_string());
     }
     let n = args.get_usize("devices")?;
     let schedule = ScheduleSpec::parse(args.get_str("schedule")?).map_err(|e| e.to_string())?;
@@ -372,17 +376,24 @@ fn cmd_serve_config(
     path: &str,
     out: Option<&str>,
     trace: Option<&str>,
+    runtime: Option<&str>,
 ) -> Result<(), String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
-    let cfg = ServeConfig::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+    let mut cfg = ServeConfig::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+    if let Some(r) = runtime {
+        // validated here so a typo fails before any work runs
+        cfg.runtime = ServeRuntime::parse(r).map_err(|e| e.to_string())?.name().to_string();
+    }
     let requests = cfg.generate().map_err(|e| e.to_string())?;
-    let report = serve_continuous(&requests, &cfg.opts()).map_err(|e| e.to_string())?;
+    let opts = cfg.opts().map_err(|e| e.to_string())?;
+    let report = serve_continuous(&requests, &opts).map_err(|e| e.to_string())?;
     println!(
-        "{} — {} requests over {} devices (mix '{}', continuous batching)\n",
+        "{} — {} requests over {} devices (mix '{}', continuous batching, {} runtime)\n",
         cfg.name,
         report.requests.len(),
         cfg.devices,
-        cfg.mix
+        cfg.mix,
+        cfg.runtime
     );
     println!("{}", render::serve_summary_table(&report));
     println!(

@@ -1,8 +1,17 @@
 //! Continuous-batching serve loop: iteration-level scheduling over the
 //! batched decode ring.
 //!
-//! Every engine micro-step composes one [`crate::engine::decode::run_decode_ring`]
-//! batch from two sources:
+//! The engine side is a persistent [`ActorRing`] held for the whole serve
+//! session ([`ServeRuntime::Actors`], the default): device workers spawn
+//! once, keep their shard's KV views resident across micro-steps, and
+//! receive only the newly appended tokens as [`KvCache::append_deltas`]
+//! windows — zero thread spawns and O(delta) channel traffic per step.
+//! [`ServeRuntime::SpawnPerStep`] keeps the legacy path (a fresh
+//! [`crate::engine::decode::run_decode_ring`] ring per micro-step) alive
+//! as the equivalence oracle the CI serve smoke diffs against.
+//!
+//! Every engine micro-step composes one batched ring step from two
+//! sources:
 //! * **decode queries** — one token for every running request whose prompt
 //!   is fully resident, and
 //! * **prefill chunks** — up to `chunk` prompt tokens for every admitted
@@ -32,8 +41,9 @@
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::engine::actors::ActorRing;
 use crate::engine::backend::BackendSpec;
 use crate::engine::decode::{run_decode_ring, DecodeQuery};
 use crate::engine::kv_cache::KvCache;
@@ -47,6 +57,47 @@ use crate::workload::{Priority, Request};
 
 use super::queue::AdmissionQueue;
 use super::source::TokenSource;
+
+/// Which decode-engine execution path the serve loop drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeRuntime {
+    /// One persistent [`ActorRing`] for the whole session (the default):
+    /// device threads spawn once, resident KV views grow by deltas, and a
+    /// micro-step is a single `Step` command.
+    #[default]
+    Actors,
+    /// Legacy path: spawn a fresh decode ring (threads, channels, full
+    /// device views) every micro-step via
+    /// [`crate::engine::decode::run_decode_ring`]. Kept as the
+    /// equivalence oracle; measurably slower per step.
+    SpawnPerStep,
+}
+
+impl ServeRuntime {
+    /// Accepted names, in [`ServeRuntime::parse`] order.
+    pub const NAMES: [&'static str; 2] = ["actors", "spawn_per_step"];
+
+    /// Parse a runtime name (the `runtime` serve-config key / `--runtime`
+    /// CLI flag).
+    pub fn parse(s: &str) -> Result<ServeRuntime> {
+        match s {
+            "actors" => Ok(ServeRuntime::Actors),
+            "spawn_per_step" => Ok(ServeRuntime::SpawnPerStep),
+            other => bail!(
+                "unknown serve runtime '{other}' (expected one of {:?})",
+                ServeRuntime::NAMES
+            ),
+        }
+    }
+
+    /// The canonical name ([`ServeRuntime::parse`] round-trips it).
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeRuntime::Actors => "actors",
+            ServeRuntime::SpawnPerStep => "spawn_per_step",
+        }
+    }
+}
 
 /// Options for the continuous-batching serve loop.
 #[derive(Debug, Clone)]
@@ -79,6 +130,9 @@ pub struct ContinuousServeOpts {
     /// Engine options; `causal` must be true (chunked prefill relies on
     /// causal masking for batching-invariant numerics).
     pub engine: EngineOpts,
+    /// Which engine execution path to drive (persistent actors by
+    /// default; see [`ServeRuntime`]).
+    pub runtime: ServeRuntime,
 }
 
 impl Default for ContinuousServeOpts {
@@ -100,6 +154,7 @@ impl Default for ContinuousServeOpts {
                 backend: BackendSpec::Native,
                 record: false,
             },
+            runtime: ServeRuntime::default(),
         }
     }
 }
@@ -132,6 +187,11 @@ pub struct ServedRequest {
     pub finish: f64,
     /// Times this request was evicted and replayed.
     pub preemptions: usize,
+    /// Sum of |out| over every decode-output element — a cheap,
+    /// runtime-invariant fingerprint of the request's numerics (the CI
+    /// serve smoke diffs it across [`ServeRuntime`]s). 0.0 for requests
+    /// with no decode phase.
+    pub output_digest: f64,
 }
 
 impl ServedRequest {
@@ -297,6 +357,7 @@ impl ContinuousServeReport {
                     ("tpot", r.tpot()),
                     ("queue_delay", r.queue_delay()),
                     ("preemptions", r.preemptions),
+                    ("output_digest", r.output_digest),
                 ]
             })
             .collect();
@@ -328,6 +389,9 @@ struct Meta {
     eligible_step: Option<u64>,
     first_token: Option<f64>,
     preemptions: usize,
+    /// Running sum of |out| over decode outputs; reset on preemption
+    /// (the replay regenerates every output).
+    digest: f64,
 }
 
 /// An admitted request.
@@ -384,14 +448,12 @@ fn validate(requests: &[Request], opts: &ContinuousServeOpts) -> Result<()> {
 }
 
 /// Victim for preemption: highest class first, then least progress (least
-/// wasted work), then highest id.
-fn pick_victim(running: &[Running]) -> usize {
-    (0..running.len())
-        .max_by_key(|&i| {
-            let r = &running[i];
-            (r.req.priority.class(), std::cmp::Reverse(r.progress()), r.req.id)
-        })
-        .expect("non-empty running set")
+/// wasted work), then highest id. `None` on an empty running set.
+fn pick_victim(running: &[Running]) -> Option<usize> {
+    (0..running.len()).max_by_key(|&i| {
+        let r = &running[i];
+        (r.req.priority.class(), std::cmp::Reverse(r.progress()), r.req.id)
+    })
 }
 
 /// Serve `requests` to completion with continuous batching; see the
@@ -405,6 +467,14 @@ pub fn serve_continuous(
     let n = opts.devices;
     let source = TokenSource::new(opts.seed, opts.heads, opts.head_dim);
     let mut cache = KvCache::new(n, opts.heads, opts.head_dim, opts.chunk);
+    // the session's only thread spawns happen here, not per micro-step
+    let mut ring = match opts.runtime {
+        ServeRuntime::Actors => Some(
+            ActorRing::spawn(n, opts.heads, opts.head_dim, &opts.engine)
+                .context("spawning the serve session's actor ring")?,
+        ),
+        ServeRuntime::SpawnPerStep => None,
+    };
     let mut queue = AdmissionQueue::new(opts.aging_steps);
     let mut meta: HashMap<usize, Meta> = HashMap::with_capacity(requests.len());
     for r in requests {
@@ -446,12 +516,18 @@ pub fn serve_continuous(
             else {
                 break;
             };
-            let m = meta.get_mut(&req.id).expect("meta for every request");
+            let m = meta
+                .get_mut(&req.id)
+                .with_context(|| format!("admitting request {} with no bookkeeping entry", req.id))?;
             if m.eligible_step.is_none() {
                 m.eligible_step = Some(eligible);
             }
             if m.admitted.is_none() {
                 m.admitted = Some((clock, step));
+            }
+            if let Some(ring) = ring.as_mut() {
+                ring.admit(req.id)
+                    .with_context(|| format!("step {step}: admitting request {}", req.id))?;
             }
             running.push(Running { req, next_prefill: 0, produced: 0 });
         }
@@ -480,12 +556,20 @@ pub fn serve_continuous(
             }
             let resident = cache.total_tokens();
             if resident + decode_idx.len() > opts.kv_budget_tokens && running.len() > 1 {
-                let v = pick_victim(&running);
+                let v = pick_victim(&running)
+                    .with_context(|| format!("step {step}: preempting from an empty running set"))?;
                 let victim = running.swap_remove(v);
                 cache.free(victim.req.id);
-                let m = meta.get_mut(&victim.req.id).expect("meta for every request");
+                if let Some(ring) = ring.as_mut() {
+                    ring.evict(victim.req.id)
+                        .with_context(|| format!("step {step}: evicting request {}", victim.req.id))?;
+                }
+                let m = meta.get_mut(&victim.req.id).with_context(|| {
+                    format!("preempting request {} with no bookkeeping entry", victim.req.id)
+                })?;
                 m.preemptions += 1;
                 m.first_token = None;
+                m.digest = 0.0;
                 preemptions += 1;
                 outputs.remove(&victim.req.id);
                 queue.push(victim.req);
@@ -520,7 +604,13 @@ pub fn serve_continuous(
             let r = &running[i];
             let start = r.next_prefill;
             let (k, v) = source.kv(r.req.id, start, take);
-            cache.append(r.req.id, &k, &v)?;
+            let deltas = cache
+                .append_deltas(r.req.id, &k, &v)
+                .with_context(|| format!("step {step}: prefill append for request {}", r.req.id))?;
+            if let Some(ring) = ring.as_mut() {
+                ring.append(&deltas)
+                    .with_context(|| format!("step {step}: prefill deltas for request {}", r.req.id))?;
+            }
             queries.push(DecodeQuery {
                 request: r.req.id,
                 q: source.q(r.req.id, start, take),
@@ -546,19 +636,36 @@ pub fn serve_continuous(
         let running_now = running.len();
         let t0 = clock;
         let timer = Instant::now();
-        let res = run_decode_ring(queries, &cache, n, &opts.engine)?;
+        let res = match ring.as_mut() {
+            Some(ring) => ring
+                .step(queries)
+                .with_context(|| format!("actor-ring micro-step {step}"))?,
+            None => run_decode_ring(queries, &cache, n, &opts.engine)
+                .with_context(|| format!("spawn-per-step micro-step {step}"))?,
+        };
         clock += timer.elapsed().as_secs_f64();
 
         // --- advance request state
         for &i in &decode_idx {
             let r = &mut running[i];
+            let (out, _) = res.outputs.get(&r.req.id).with_context(|| {
+                format!("micro-step {step} produced no output for request {}", r.req.id)
+            })?;
+            meta.get_mut(&r.req.id)
+                .with_context(|| format!("request {} with no bookkeeping entry", r.req.id))?
+                .digest += out.data().iter().map(|x| x.abs() as f64).sum::<f64>();
             if opts.keep_outputs {
-                let (out, _) = &res.outputs[&r.req.id];
                 outputs.entry(r.req.id).or_default().push(out.clone());
             }
             let pos = r.req.seq_len + r.produced;
             let (k1, v1) = source.kv(r.req.id, pos, 1);
-            cache.append(r.req.id, &k1, &v1)?;
+            let deltas = cache
+                .append_deltas(r.req.id, &k1, &v1)
+                .with_context(|| format!("step {step}: decode append for request {}", r.req.id))?;
+            if let Some(ring) = ring.as_mut() {
+                ring.append(&deltas)
+                    .with_context(|| format!("step {step}: decode delta for request {}", r.req.id))?;
+            }
             r.produced += 1;
             total_decode += 1;
         }
@@ -567,8 +674,9 @@ pub fn serve_continuous(
             r.next_prefill += take;
             total_prefill += take;
             if r.next_prefill == r.req.seq_len {
-                meta.get_mut(&r.req.id).expect("meta for every request").first_token =
-                    Some(clock);
+                meta.get_mut(&r.req.id)
+                    .with_context(|| format!("request {} with no bookkeeping entry", r.req.id))?
+                    .first_token = Some(clock);
             }
         }
 
@@ -579,8 +687,12 @@ pub fn serve_continuous(
         let mut still = Vec::with_capacity(running.len());
         for r in running.drain(..) {
             if r.is_decoding() && r.produced == r.req.decode_tokens {
-                let m = &meta[&r.req.id];
-                let (admitted, admitted_step) = m.admitted.expect("finished implies admitted");
+                let m = meta.get(&r.req.id).with_context(|| {
+                    format!("retiring request {} with no bookkeeping entry", r.req.id)
+                })?;
+                let (admitted, admitted_step) = m.admitted.with_context(|| {
+                    format!("request {} finished without ever being admitted", r.req.id)
+                })?;
                 finished.push(ServedRequest {
                     id: r.req.id,
                     seq_len: r.req.seq_len,
@@ -593,8 +705,13 @@ pub fn serve_continuous(
                     first_token: m.first_token.unwrap_or(clock),
                     finish: clock,
                     preemptions: m.preemptions,
+                    output_digest: m.digest,
                 });
                 cache.free(r.req.id);
+                if let Some(ring) = ring.as_mut() {
+                    ring.evict(r.req.id)
+                        .with_context(|| format!("step {step}: retiring request {}", r.req.id))?;
+                }
             } else {
                 still.push(r);
             }
@@ -614,6 +731,18 @@ pub fn serve_continuous(
             kv_budget: opts.kv_budget_tokens,
         });
         step += 1;
+    }
+
+    if let Some(mut ring) = ring.take() {
+        let drained = ring.drain().context("draining the serve session's actor ring")?;
+        // conservation: every token the cache grew by crossed the ring as
+        // a delta exactly once (replays after preemption included)
+        debug_assert_eq!(
+            drained.delta_tokens(),
+            total_prefill + total_decode,
+            "actor delta tokens must equal KV growth"
+        );
+        ring.shutdown().context("shutting down the serve session's actor ring")?;
     }
 
     finished.sort_by_key(|r| r.id);
@@ -686,6 +815,7 @@ mod tests {
             assert!(r.ttft() >= 0.0);
             assert!(r.tpot() > 0.0);
             assert!(r.finish >= r.first_token && r.first_token >= r.admitted);
+            assert!(r.output_digest > 0.0, "decode phases must fingerprint their outputs");
         }
         for s in &rep.steps {
             assert!(s.kv_tokens <= s.kv_budget);
@@ -736,6 +866,30 @@ mod tests {
         for key in ["step", "batch", "running", "queued", "kv_tokens", "kv_budget"] {
             assert!(s0.get(key) != &Json::Null, "missing step field '{key}'");
         }
+        let r0 = j.get("per_request").at(0);
+        for key in ["id", "seq_len", "decode_tokens", "priority", "output_digest"] {
+            assert!(r0.get(key) != &Json::Null, "missing per_request field '{key}'");
+        }
+    }
+
+    #[test]
+    fn runtime_names_parse_and_round_trip() {
+        assert_eq!(ServeRuntime::default(), ServeRuntime::Actors);
+        for name in ServeRuntime::NAMES {
+            assert_eq!(ServeRuntime::parse(name).unwrap().name(), name);
+        }
+        let err = ServeRuntime::parse("threads").unwrap_err().to_string();
+        assert!(err.contains("threads") && err.contains("actors"), "{err}");
+    }
+
+    #[test]
+    fn legacy_runtime_still_serves() {
+        let reqs = vec![req(0, 16, 2), req(1, 16, 2)];
+        let mut o = opts();
+        o.runtime = ServeRuntime::SpawnPerStep;
+        let rep = serve_continuous(&reqs, &o).unwrap();
+        assert_eq!(rep.requests.len(), 2);
+        assert!(rep.requests.iter().all(|r| r.output_digest > 0.0));
     }
 
     #[test]

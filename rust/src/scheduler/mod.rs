@@ -16,7 +16,9 @@
 //!    decodes with incoming prefill chunks every micro-step, preempting
 //!    against a KV-token budget. [`serve_sequential`] is the same loop
 //!    capped at one request in flight — the oracle the batcher is tested
-//!    against.
+//!    against. The engine side is selected by [`ServeRuntime`]: one
+//!    persistent actor ring per session (default) or the legacy
+//!    spawn-per-step path kept as an equivalence oracle.
 //!
 //! All paths advance a virtual clock with measured wall time, so latency
 //! statistics are meaningful without real-time sleeping.
@@ -41,7 +43,7 @@ pub mod source;
 
 pub use continuous::{
     serve_continuous, serve_sequential, ContinuousServeOpts, ContinuousServeReport,
-    ServedRequest, StepTrace,
+    ServeRuntime, ServedRequest, StepTrace,
 };
 pub use queue::AdmissionQueue;
 pub use source::TokenSource;

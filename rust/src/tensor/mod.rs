@@ -219,6 +219,33 @@ impl Tensor {
         }
     }
 
+    /// Append `delta`'s rows in place (dim-0 concatenation). When this
+    /// tensor uniquely owns an un-windowed buffer the append is an
+    /// amortized `extend_from_slice`, so a resident KV view held by a
+    /// device actor grows by exactly the delta each decode step with no
+    /// O(resident) copy. Shared or windowed storage is materialized into
+    /// a fresh uniquely-owned buffer first (the same copy-on-write rule
+    /// as [`Tensor::data_mut`]), so sharing is never observable.
+    pub fn extend_rows(&mut self, delta: &Tensor) {
+        assert_eq!(
+            &self.shape[1..],
+            &delta.shape[1..],
+            "extend_rows stride mismatch: {:?} vs {:?}",
+            self.shape,
+            delta.shape
+        );
+        if self.off != 0 || self.len != self.data.len() || Arc::get_mut(&mut self.data).is_none() {
+            let mut owned = Vec::with_capacity(self.len + delta.len);
+            owned.extend_from_slice(self.data());
+            self.off = 0;
+            self.data = Arc::new(owned);
+        }
+        let buf = Arc::get_mut(&mut self.data).expect("unique after materialize");
+        buf.extend_from_slice(delta.data());
+        self.len += delta.len;
+        self.shape[0] += delta.shape[0];
+    }
+
     /// Concatenate along dim 0.
     pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty());
@@ -361,6 +388,44 @@ mod tests {
         let l = Tensor::zeros(&[2, 3]);
         let mut dst = Tensor::zeros(&[2, 6]);
         l.scatter_cols_into(&mut dst, &[0, 1]);
+    }
+
+    #[test]
+    fn extend_rows_appends_in_place() {
+        let mut t = Tensor::zeros(&[0, 2]);
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        t.extend_rows(&a);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), a.data());
+        // a windowed delta appends only its viewed rows
+        t.extend_rows(&a.slice_rows(1, 2));
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data(), &[1., 2., 3., 4., 3., 4.]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    fn extend_rows_on_shared_storage_copies_on_write() {
+        let mut t = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let snapshot = t.clone();
+        t.extend_rows(&Tensor::new(&[1, 2], vec![5., 6.]));
+        assert!(!t.shares_storage(&snapshot), "CoW must detach before growing");
+        assert_eq!(snapshot.shape(), &[2, 2], "reader of the old view unaffected");
+        assert_eq!(snapshot.data(), &[1., 2., 3., 4.]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data(), &[1., 2., 3., 4., 5., 6.]);
+        // a window also materializes before growing
+        let mut w = snapshot.slice_rows(1, 2);
+        w.extend_rows(&Tensor::new(&[1, 2], vec![9., 9.]));
+        assert_eq!(w.data(), &[3., 4., 9., 9.]);
+        assert_eq!(snapshot.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "stride mismatch")]
+    fn extend_rows_rejects_stride_mismatch() {
+        let mut t = Tensor::zeros(&[1, 2]);
+        t.extend_rows(&Tensor::zeros(&[1, 3]));
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Lifecycle tests for the persistent actor-ring runtime
+//! (`engine::actors`): admit/evict/re-admit replay, clean shutdown with
+//! no leaked threads, and the delta-token conservation property between
+//! the ring and the paged KV cache.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use tokenring::attention::attention_block;
+use tokenring::engine::actors::ActorRing;
+use tokenring::engine::decode::DecodeQuery;
+use tokenring::engine::kv_cache::{KvCache, KvDelta};
+use tokenring::engine::EngineOpts;
+use tokenring::tensor::Tensor;
+use tokenring::util::rng::Rng;
+
+const HEADS: usize = 2;
+const HEAD_DIM: usize = 8;
+
+fn opts() -> EngineOpts {
+    EngineOpts { record: false, ..Default::default() }
+}
+
+/// Fill a cache with `(request, context_tokens)` pairs; returns the cache
+/// plus each request's full (k, v) for oracle checks.
+fn filled_cache(
+    n: usize,
+    reqs: &[(usize, usize)],
+    rng: &mut Rng,
+) -> (KvCache, HashMap<usize, (Tensor, Tensor)>) {
+    let mut cache = KvCache::new(n, HEADS, HEAD_DIM, 8);
+    let mut truth = HashMap::new();
+    for &(req, ctx) in reqs {
+        let sz = ctx * HEADS * HEAD_DIM;
+        let k = Tensor::new(&[ctx, HEADS, HEAD_DIM], rng.normal_vec(sz, 1.0));
+        let v = Tensor::new(&[ctx, HEADS, HEAD_DIM], rng.normal_vec(sz, 1.0));
+        cache.append(req, &k, &v).unwrap();
+        truth.insert(req, (k, v));
+    }
+    (cache, truth)
+}
+
+/// Admit `req` and ship every non-empty device view as one delta — the
+/// replay path a preempted-then-readmitted request takes.
+fn admit_and_load(ring: &mut ActorRing, cache: &KvCache, req: usize) {
+    ring.admit(req).unwrap();
+    for dev in 0..ring.devices() {
+        let (k, v, positions) = cache.device_view(req, dev).unwrap();
+        if !positions.is_empty() {
+            ring.append(&[KvDelta { request: req, device: dev, k, v, positions }]).unwrap();
+        }
+    }
+}
+
+fn query(rng: &mut Rng, req: usize, pos: i32) -> DecodeQuery {
+    DecodeQuery {
+        request: req,
+        q: Tensor::new(&[1, HEADS, HEAD_DIM], rng.normal_vec(HEADS * HEAD_DIM, 1.0)),
+        q_pos: vec![pos],
+    }
+}
+
+#[test]
+fn evict_and_readmit_replays_identical_outputs() {
+    // On a 2-device ring the merge order is fixed (own partial first, one
+    // remote after), so a replay from the same cache state must be
+    // bit-identical, not just allclose.
+    let mut rng = Rng::new(71);
+    let (cache, _) = filled_cache(2, &[(1, 48)], &mut rng);
+    let mut ring = ActorRing::spawn(2, HEADS, HEAD_DIM, &opts()).unwrap();
+
+    admit_and_load(&mut ring, &cache, 1);
+    let dq = query(&mut rng, 1, 48);
+    let before = ring.step(vec![dq.clone()]).unwrap();
+
+    ring.evict(1).unwrap();
+    assert!(!ring.is_resident(1));
+    admit_and_load(&mut ring, &cache, 1); // replay from the cache
+    let after = ring.step(vec![dq]).unwrap();
+
+    let (o0, l0) = &before.outputs[&1];
+    let (o1, l1) = &after.outputs[&1];
+    assert_eq!(o0.max_abs_diff(o1), 0.0, "n=2 replay must be exact");
+    assert_eq!(l0.max_abs_diff(l1), 0.0);
+    ring.shutdown().unwrap();
+}
+
+#[test]
+fn readmit_on_wide_ring_matches_oracle() {
+    // n=4: remote partials can merge in any arrival order, so the replay
+    // contract is allclose against the single-device oracle, before and
+    // after the evict/re-admit cycle.
+    let mut rng = Rng::new(72);
+    let (cache, truth) = filled_cache(4, &[(2, 64)], &mut rng);
+    let mut ring = ActorRing::spawn(4, HEADS, HEAD_DIM, &opts()).unwrap();
+    let (k, v) = &truth[&2];
+    let kpos: Vec<i32> = (0..64).collect();
+
+    for round in 0..2 {
+        admit_and_load(&mut ring, &cache, 2);
+        let dq = query(&mut rng, 2, 64);
+        let res = ring.step(vec![dq.clone()]).unwrap();
+        let (eo, _) = attention_block(&dq.q, k, v, &dq.q_pos, &kpos, true, None);
+        let (got, _) = &res.outputs[&2];
+        assert!(
+            got.allclose(&eo, 1e-4),
+            "round {round} diff={}",
+            got.max_abs_diff(&eo)
+        );
+        ring.evict(2).unwrap();
+    }
+    ring.shutdown().unwrap();
+}
+
+#[test]
+fn single_page_request_leaves_most_devices_empty_yet_matches_oracle() {
+    // 8 tokens = one page on a 4-device ring: three actors hold an empty
+    // view and must still emit masked partials so the merge count closes.
+    let mut rng = Rng::new(73);
+    let (cache, truth) = filled_cache(4, &[(0, 8)], &mut rng);
+    let mut ring = ActorRing::spawn(4, HEADS, HEAD_DIM, &opts()).unwrap();
+    admit_and_load(&mut ring, &cache, 0);
+    let dq = query(&mut rng, 0, 8);
+    let res = ring.step(vec![dq.clone()]).unwrap();
+    let (k, v) = &truth[&0];
+    let kpos: Vec<i32> = (0..8).collect();
+    let (eo, _) = attention_block(&dq.q, k, v, &dq.q_pos, &kpos, true, None);
+    let (got, _) = &res.outputs[&0];
+    assert!(got.allclose(&eo, 1e-4), "diff={}", got.max_abs_diff(&eo));
+    ring.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_cleanly_with_no_leaked_threads() {
+    // Run a full session (admit → steps → drain → shutdown) on a helper
+    // thread; if any actor thread leaks or a join hangs, the helper never
+    // reports back and the timeout fails the test instead of wedging CI.
+    let (done_tx, done_rx) = channel();
+    let helper = std::thread::spawn(move || {
+        let mut rng = Rng::new(74);
+        let (cache, _) = filled_cache(3, &[(0, 24), (1, 24)], &mut rng);
+        let mut ring = ActorRing::spawn(3, HEADS, HEAD_DIM, &opts()).unwrap();
+        admit_and_load(&mut ring, &cache, 0);
+        admit_and_load(&mut ring, &cache, 1);
+        for step in 0..4 {
+            let qs = vec![query(&mut rng, 0, 24 + step), query(&mut rng, 1, 24 + step)];
+            let res = ring.step(qs).unwrap();
+            assert_eq!(res.outputs.len(), 2);
+        }
+        let report = ring.drain().unwrap();
+        assert_eq!(report.delta_tokens(), 48, "two 24-token loads");
+        assert_eq!(report.stats.len(), 3);
+        // shutdown() joins every worker; an Err here means a panic leaked
+        ring.shutdown().unwrap();
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("session did not drain+shutdown within 30s (leaked or hung actor thread)");
+    helper.join().unwrap();
+}
+
+#[test]
+fn drop_without_explicit_shutdown_joins_workers() {
+    let (done_tx, done_rx) = channel();
+    let helper = std::thread::spawn(move || {
+        let mut ring = ActorRing::spawn(4, HEADS, HEAD_DIM, &opts()).unwrap();
+        ring.admit(11).unwrap();
+        drop(ring); // Drop must send Shutdown and join all four workers
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("dropping the ring did not join its workers within 30s");
+    helper.join().unwrap();
+}
+
+#[test]
+fn delta_tokens_shipped_equals_kv_cache_growth() {
+    // Conservation property: route every `KvCache::append_deltas` result
+    // through the ring and the actors' drained delta-token total must
+    // equal the cache's token growth — nothing lost, nothing duplicated,
+    // nothing shipped twice.
+    let mut rng = Rng::new(75);
+    let n = 3;
+    let mut cache = KvCache::new(n, HEADS, HEAD_DIM, 4);
+    let mut ring = ActorRing::spawn(n, HEADS, HEAD_DIM, &opts()).unwrap();
+    let base = cache.total_tokens();
+
+    for req in 0..5 {
+        ring.admit(req).unwrap();
+    }
+    // 40 random-length appends across 5 requests, page size 4 so most
+    // appends split into several per-device deltas
+    for i in 0..40 {
+        let req = (i * 7 + 3) % 5;
+        let t = 1 + (i * 5 + 1) % 9;
+        let sz = t * HEADS * HEAD_DIM;
+        let k = Tensor::new(&[t, HEADS, HEAD_DIM], rng.normal_vec(sz, 1.0));
+        let v = Tensor::new(&[t, HEADS, HEAD_DIM], rng.normal_vec(sz, 1.0));
+        let deltas = cache.append_deltas(req, &k, &v).unwrap();
+        assert_eq!(deltas.iter().map(KvDelta::tokens).sum::<usize>(), t);
+        ring.append(&deltas).unwrap();
+    }
+
+    let grown = cache.total_tokens() - base;
+    assert_eq!(ring.delta_tokens_sent(), grown, "driver-side counter");
+    let report = ring.drain().unwrap();
+    assert_eq!(report.delta_tokens(), grown, "actor-side conservation");
+    assert!(report.delta_bytes() > 0);
+    ring.shutdown().unwrap();
+}

@@ -7,8 +7,13 @@
 //!    never exceed the budget at any step, and evicted requests replay to
 //!    the same outputs.
 //! 3. Priority classes never starve FCFS traffic beyond the aging bound.
+//! 4. The persistent actor-ring runtime and the legacy spawn-per-step
+//!    runtime produce equivalent per-request outputs on every workload
+//!    mix (the serve-runtime equivalence proof).
 
-use tokenring::scheduler::{serve_continuous, serve_sequential, ContinuousServeOpts};
+use tokenring::scheduler::{
+    serve_continuous, serve_sequential, ContinuousServeOpts, ServeRuntime,
+};
 use tokenring::workload::{Priority, Request, ServeMix};
 
 fn opts(devices: usize, chunk: usize) -> ContinuousServeOpts {
@@ -203,6 +208,50 @@ fn poisson_mix_keeps_multiple_requests_in_flight() {
     for s in &report.steps {
         assert!(s.kv_tokens <= s.kv_budget);
         assert!(s.batch >= 1 && s.batch <= s.running);
+    }
+}
+
+#[test]
+fn actor_runtime_matches_spawn_per_step_on_every_mix() {
+    // The equivalence proof for the persistent runtime: over each
+    // registered workload mix, the actor ring and the legacy per-step
+    // spawn path serve the same requests to the same decode outputs
+    // (merge order may differ between runtimes, hence allclose, not
+    // bit equality).
+    for &mix_name in ServeMix::NAMES {
+        let mix = ServeMix::preset(mix_name, 1e5, 32).unwrap();
+        let requests = mix.generate(6, 3);
+        let mut o = opts(2, 32);
+        o.keep_outputs = true;
+
+        o.runtime = ServeRuntime::SpawnPerStep;
+        let legacy = serve_continuous(&requests, &o).unwrap();
+        o.runtime = ServeRuntime::Actors;
+        let actors = serve_continuous(&requests, &o).unwrap();
+
+        assert_eq!(legacy.requests.len(), requests.len(), "{mix_name}");
+        assert_eq!(actors.requests.len(), requests.len(), "{mix_name}");
+        assert_eq!(
+            actors.total_prefill_tokens, legacy.total_prefill_tokens,
+            "{mix_name}: prefill totals"
+        );
+        assert_eq!(
+            actors.total_decode_tokens, legacy.total_decode_tokens,
+            "{mix_name}: decode totals"
+        );
+        for r in &requests {
+            let a = &legacy.outputs[&r.id];
+            let b = &actors.outputs[&r.id];
+            assert_eq!(a.len(), b.len(), "{mix_name} req {}: output count", r.id);
+            for (t, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    x.allclose(y, 1e-4),
+                    "{mix_name} req {} decode token {t}: runtimes diverge by {}",
+                    r.id,
+                    x.max_abs_diff(y)
+                );
+            }
+        }
     }
 }
 
