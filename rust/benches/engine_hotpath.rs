@@ -250,13 +250,9 @@ fn main() {
             for dev in 0..n {
                 let (k, v, positions) = cache.device_view(r, dev).unwrap();
                 if !positions.is_empty() {
-                    ring.append(&[tokenring::engine::kv_cache::KvDelta {
-                        request: r,
-                        device: dev,
-                        k,
-                        v,
-                        positions,
-                    }])
+                    ring.append(&[tokenring::engine::kv_cache::KvDelta::new(
+                        r, dev, k, v, positions, 0,
+                    )])
                     .unwrap();
                 }
             }

@@ -6,6 +6,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::ComputeModel;
+use crate::engine::faults::FaultPlan;
 use crate::json_obj;
 use crate::parallelism::partition::Partition;
 use crate::parallelism::ScheduleSpec;
@@ -343,6 +344,18 @@ pub struct ServeConfig {
     /// `spawn_per_step` (legacy per-step thread spawn, kept as the
     /// equivalence oracle). See [`ServeRuntime`].
     pub runtime: String,
+    /// Watchdog: milliseconds the driver waits for one actor reply before
+    /// the first doubled-wait retry.
+    pub watchdog_ms: usize,
+    /// Doubled-wait retries after the first watchdog timeout before a
+    /// stall escalates to ring teardown.
+    pub max_retries: usize,
+    /// Ring recoveries allowed before remaining requests fail gracefully.
+    pub max_recoveries: usize,
+    /// Deterministic fault specs for chaos runs, e.g. `"panic@2:1"` or
+    /// `"stall@4:0:200"` (see `engine::faults::FaultSpec`). Empty = no
+    /// injection. Non-empty plans require `"runtime": "actors"`.
+    pub faults: Vec<String>,
 }
 
 fn field_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
@@ -359,7 +372,7 @@ impl ServeConfig {
     pub const KEYS: &'static [&'static str] = &[
         "name", "mix", "requests", "rate", "seed", "devices", "heads", "head_dim",
         "chunk", "max_batch", "max_step_tokens", "kv_budget_tokens", "aging_steps",
-        "runtime",
+        "runtime", "watchdog_ms", "max_retries", "max_recoveries", "faults",
     ];
 
     /// The built-in default: the Poisson mix on 4 devices.
@@ -379,6 +392,10 @@ impl ServeConfig {
             kv_budget_tokens: 16_384,
             aging_steps: 8,
             runtime: ServeRuntime::default().name().to_string(),
+            watchdog_ms: 120_000,
+            max_retries: 2,
+            max_recoveries: 2,
+            faults: Vec::new(),
         }
     }
 
@@ -413,6 +430,19 @@ impl ServeConfig {
                     .ok_or_else(|| anyhow!("serve config: '{key}' must be a string")),
             }
         };
+        // fault specs: a single spec string or an array of spec strings
+        let faults: Vec<String> = match j.get("faults") {
+            Json::Null => d.faults.clone(),
+            Json::Str(s) => vec![s.clone()],
+            Json::Arr(a) => {
+                let out: Option<Vec<String>> =
+                    a.iter().map(|v| v.as_str().map(str::to_string)).collect();
+                out.ok_or_else(|| {
+                    anyhow!("serve config: 'faults' must be a string or array of strings")
+                })?
+            }
+            _ => bail!("serve config: 'faults' must be a string or array of strings"),
+        };
         let cfg = ServeConfig {
             name: field_str("name", &d.name)?,
             mix: field_str("mix", &d.mix)?,
@@ -428,8 +458,26 @@ impl ServeConfig {
             kv_budget_tokens: field_usize(&j, "kv_budget_tokens", d.kv_budget_tokens)?,
             aging_steps: field_usize(&j, "aging_steps", d.aging_steps)?,
             runtime: field_str("runtime", &d.runtime)?,
+            watchdog_ms: field_usize(&j, "watchdog_ms", d.watchdog_ms)?,
+            max_retries: field_usize(&j, "max_retries", d.max_retries)?,
+            max_recoveries: field_usize(&j, "max_recoveries", d.max_recoveries)?,
+            faults,
         };
-        ServeRuntime::parse(&cfg.runtime)?; // runtime name must be registered
+        let runtime = ServeRuntime::parse(&cfg.runtime)?; // name must be registered
+        if cfg.watchdog_ms == 0 {
+            bail!("serve config: 'watchdog_ms' must be positive");
+        }
+        // every fault spec must parse, and a non-empty plan needs the
+        // actors runtime to deliver into — both fail at load, not mid-run
+        let plan = cfg
+            .fault_plan()
+            .map_err(|e| e.context("serve config: 'faults'"))?;
+        if !plan.is_empty() && runtime != ServeRuntime::Actors {
+            bail!(
+                "serve config: 'faults' requires \"runtime\": \"actors\" \
+                 (spawn_per_step has no persistent ring to deliver faults to)"
+            );
+        }
         if cfg.requests == 0 {
             bail!("serve config: 'requests' must be positive");
         }
@@ -479,7 +527,18 @@ impl ServeConfig {
             ("kv_budget_tokens", self.kv_budget_tokens),
             ("aging_steps", self.aging_steps),
             ("runtime", self.runtime.clone()),
+            ("watchdog_ms", self.watchdog_ms),
+            ("max_retries", self.max_retries),
+            ("max_recoveries", self.max_recoveries),
+            ("faults", self.faults.clone()),
         ]
+    }
+
+    /// The parsed [`FaultPlan`] this config's `faults` entries describe
+    /// (empty when no faults are configured). Each entry may itself be a
+    /// comma-separated spec list.
+    pub fn fault_plan(&self) -> Result<FaultPlan> {
+        FaultPlan::parse(&self.faults.join(","))
     }
 
     /// The workload mix this config names, at its rate and chunk multiple.
@@ -496,6 +555,7 @@ impl ServeConfig {
     /// `runtime` names no registered [`ServeRuntime`] (a config loaded
     /// via [`ServeConfig::from_json`] is already validated).
     pub fn opts(&self) -> Result<ContinuousServeOpts> {
+        let plan = self.fault_plan()?;
         Ok(ContinuousServeOpts {
             devices: self.devices,
             heads: self.heads,
@@ -507,6 +567,10 @@ impl ServeConfig {
             aging_steps: self.aging_steps as u64,
             seed: self.seed as u64,
             runtime: ServeRuntime::parse(&self.runtime)?,
+            watchdog_ms: self.watchdog_ms as u64,
+            max_retries: self.max_retries,
+            max_recoveries: self.max_recoveries,
+            faults: if plan.is_empty() { None } else { Some(plan) },
             ..Default::default()
         })
     }
@@ -639,8 +703,34 @@ mod tests {
         assert_eq!(custom.mix, "bursty");
         assert_eq!(custom.rate, 100.0);
         assert_eq!(custom.runtime, "spawn_per_step");
+        assert_eq!(custom.watchdog_ms, 120_000, "fault knobs fall back to defaults");
+        assert!(custom.faults.is_empty());
         let again = ServeConfig::from_json(&custom.to_json().to_string()).unwrap();
         assert_eq!(again, custom);
+    }
+
+    #[test]
+    fn serve_config_fault_knobs_round_trip_and_wire_into_opts() {
+        let cfg = ServeConfig::from_json(
+            r#"{"watchdog_ms":50,"max_retries":3,"max_recoveries":1,
+                "faults":["panic@2:1","stall@4:0:200"]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.watchdog_ms, 50);
+        assert_eq!(cfg.faults.len(), 2);
+        let again = ServeConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(again, cfg);
+        let opts = cfg.opts().unwrap();
+        assert_eq!(opts.watchdog_ms, 50);
+        assert_eq!(opts.max_retries, 3);
+        assert_eq!(opts.max_recoveries, 1);
+        assert_eq!(opts.faults.as_ref().map(|p| p.to_strings().len()), Some(2));
+        // a single spec string is accepted and normalizes to one entry
+        let single = ServeConfig::from_json(r#"{"faults":"drop@1:0"}"#).unwrap();
+        assert_eq!(single.faults, vec!["drop@1:0"]);
+        // no faults configured → the batcher gets no injector at all
+        let none = ServeConfig::from_json("{}").unwrap().opts().unwrap();
+        assert!(none.faults.is_none());
     }
 
     #[test]
@@ -686,5 +776,23 @@ mod tests {
         // a budget that cannot hold the mix's largest request is unservable
         assert!(ServeConfig::from_json(r#"{"kv_budget_tokens":64}"#).is_err());
         assert!(ServeConfig::from_json("[]").is_err());
+        // fault-tolerance knobs are validated at load
+        assert!(ServeConfig::from_json(r#"{"watchdog_ms":0}"#).is_err());
+        let e = ServeConfig::from_json(r#"{"faults":["explode@1:0"]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("faults") && e.contains("panic"), "{e}");
+        assert!(ServeConfig::from_json(r#"{"faults":[42]}"#).is_err());
+        // a non-empty plan cannot ride the spawn-per-step runtime
+        let e = ServeConfig::from_json(
+            r#"{"faults":["panic@0:0"],"runtime":"spawn_per_step"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("actors"), "{e}");
+        // ...but empty-string specs collapse to an empty plan, which can
+        assert!(
+            ServeConfig::from_json(r#"{"faults":[],"runtime":"spawn_per_step"}"#).is_ok()
+        );
     }
 }

@@ -26,9 +26,25 @@
 //! The driver protocol is synchronous: one `Step` per epoch, all replies
 //! collected before the next command. Epoch stamps on ring traffic turn
 //! any violation into a structured error instead of silent corruption.
+//!
+//! ## Failure domains
+//!
+//! Any actor failure — a panicked worker, a corrupted or dropped
+//! [`KvDelta`] (checksummed and token-count-audited at receipt), a reply
+//! stalled past the [`RingPolicy`] watchdog's deterministic retry budget —
+//! poisons the ring: the original failure is recorded and every later
+//! command fails fast carrying it. Poison is *driver-visible state*, not a
+//! process exit: `scheduler::continuous` recovers by dropping the poisoned
+//! ring (bounded-wait join, then detach — see
+//! [`shutdown`](ActorRing::shutdown)) and respawning a fresh one, replaying
+//! residents from their deterministic token source. Deterministic fault
+//! injection for chaos tests rides the same protocol: the driver attaches
+//! due [`faults::FaultKind`](super::faults::FaultKind)s to `Step` /
+//! `AppendDelta` messages and the actor manifests them on receipt.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
@@ -41,15 +57,39 @@ use crate::tensor::Tensor;
 
 use super::backend::{Backend, Scratch};
 use super::decode::{DecodeQuery, DecodeResult};
+use super::faults::{FaultInjector, FaultKind};
 use super::kv_cache::KvDelta;
 use super::EngineOpts;
 
 /// request id → (out, lse) for one decode micro-step.
 pub type StepOutputs = HashMap<usize, (Tensor, Tensor)>;
 
-/// How long the driver waits for any single actor reply before declaring
-/// the ring stalled. Generous: a stall here means a bug, not a slow step.
-const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+/// Driver → request token counts per device, attached to every `Step` so
+/// each actor can audit its resident views against what the driver shipped.
+type StepAudit = Arc<HashMap<usize, Vec<usize>>>;
+
+/// Watchdog policy for driver-side reply waits.
+///
+/// The driver waits `watchdog` for each actor reply; on timeout it retries
+/// up to `max_retries` more times, doubling the wait each time (a
+/// jitter-free, deterministic backoff schedule: w, 2w, 4w, …). Exhausting
+/// the budget poisons the ring, which escalates to teardown + recovery in
+/// `scheduler::continuous`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingPolicy {
+    /// Base wait for a single actor reply before the first retry.
+    pub watchdog: Duration,
+    /// Additional doubled-wait attempts after the first timeout.
+    pub max_retries: usize,
+}
+
+impl Default for RingPolicy {
+    /// Matches the historical hard-coded 120 s reply timeout, with two
+    /// retries (total patience 120+240+480 s) before escalation.
+    fn default() -> RingPolicy {
+        RingPolicy { watchdog: Duration::from_secs(120), max_retries: 2 }
+    }
+}
 
 /// Process-wide setup-cost probes, read by the `engine_hotpath` bench.
 ///
@@ -132,8 +172,8 @@ impl DrainReport {
 /// violation surfaces as an error, never as a silently-misrouted partial.
 enum ActorMsg {
     Admit { request: usize },
-    AppendDelta { delta: KvDelta },
-    Step { batch: Vec<DecodeQuery>, epoch: u64 },
+    AppendDelta { delta: KvDelta, fault: Option<FaultKind> },
+    Step { batch: Vec<DecodeQuery>, epoch: u64, audit: StepAudit, fault: Option<FaultKind> },
     Evict { request: usize },
     Drain,
     Shutdown,
@@ -208,8 +248,18 @@ impl Actor {
                         }
                     }
                 }
-                ActorMsg::AppendDelta { delta } => {
+                ActorMsg::AppendDelta { delta, fault } => {
+                    if let Some(FaultKind::DropDelta) = fault {
+                        // injected message loss: the delta vanishes; the
+                        // driver's token-count audit catches the gap at the
+                        // next step touching this request
+                        continue;
+                    }
                     if poison.is_none() {
+                        let delta = match fault {
+                            Some(FaultKind::CorruptDelta) => corrupt(delta),
+                            _ => delta,
+                        };
                         if let Err(e) = self.append(delta) {
                             poison = Some(e);
                         }
@@ -229,12 +279,28 @@ impl Actor {
                         return;
                     }
                 }
-                ActorMsg::Step { batch, epoch } => {
+                ActorMsg::Step { batch, epoch, audit, fault } => {
+                    match fault {
+                        Some(FaultKind::Panic) => {
+                            // injected device crash: the worker dies here;
+                            // the driver's watchdog escalates to teardown
+                            panic!(
+                                "injected fault: device {} panics at epoch {epoch}",
+                                self.device
+                            );
+                        }
+                        Some(FaultKind::Stall { ms }) => {
+                            // injected slow peer: delay the reply; the
+                            // watchdog's retry budget decides survival
+                            thread::sleep(Duration::from_millis(ms));
+                        }
+                        _ => {}
+                    }
                     if let Some(error) = poison.take() {
                         let _ = self.replies.send(Reply::Failed { device: self.device, error });
                         return;
                     }
-                    match self.step(batch, epoch) {
+                    match self.step(batch, epoch, &audit) {
                         Ok(Some(outputs)) => {
                             let reply = Reply::Step { device: self.device, epoch, outputs };
                             if self.replies.send(reply).is_err() {
@@ -279,12 +345,24 @@ impl Actor {
             delta.device,
             delta.request
         );
+        delta
+            .verify()
+            .with_context(|| format!("device {}: rejecting corrupted KV delta", self.device))?;
         let view = self.views.get_mut(&delta.request).with_context(|| {
             format!(
                 "device {}: KV delta for request {} before admit",
                 self.device, delta.request
             )
         })?;
+        ensure!(
+            view.positions.len() == delta.start_tokens,
+            "device {}: KV delta for request {} expects {} resident tokens but the view \
+             holds {} — a predecessor delta was dropped or lost",
+            self.device,
+            delta.request,
+            delta.start_tokens,
+            view.positions.len()
+        );
         view.k.extend_rows(&delta.k);
         view.v.extend_rows(&delta.v);
         view.positions.extend_from_slice(&delta.positions);
@@ -307,7 +385,12 @@ impl Actor {
 
     /// One decode micro-step. `Ok(None)` means a shutdown arrived while
     /// the step was in flight (the actor exits without replying).
-    fn step(&mut self, my_batch: Vec<DecodeQuery>, epoch: u64) -> Result<Option<StepOutputs>> {
+    fn step(
+        &mut self,
+        my_batch: Vec<DecodeQuery>,
+        epoch: u64,
+        audit: &HashMap<usize, Vec<usize>>,
+    ) -> Result<Option<StepOutputs>> {
         let (n, j) = (self.n, self.device);
         let expected = my_batch.len() * (n - 1);
         let mut acc: StepOutputs = HashMap::new();
@@ -341,7 +424,7 @@ impl Actor {
             }
 
             for dq in &cur {
-                let (bo, bl) = self.compute(dq, hop)?;
+                let (bo, bl) = self.compute(dq, hop, audit)?;
                 let home = dq.request % n;
                 if home == j {
                     merge_into(&mut acc, self.backend.as_mut(), &mut self.scratch, dq.request, bo, bl)?;
@@ -379,11 +462,29 @@ impl Actor {
         Ok(Some(acc))
     }
 
-    fn compute(&mut self, dq: &DecodeQuery, hop: usize) -> Result<(Tensor, Tensor)> {
+    fn compute(
+        &mut self,
+        dq: &DecodeQuery,
+        hop: usize,
+        audit: &HashMap<usize, Vec<usize>>,
+    ) -> Result<(Tensor, Tensor)> {
         let j = self.device;
         let view = self.views.get(&dq.request).with_context(|| {
             format!("device {j}: step query for request {} before admit", dq.request)
         })?;
+        // Token-count audit BEFORE the empty-view fast path: a silently
+        // dropped delta usually leaves the view short (possibly empty), and
+        // the only party who knows the true count is the driver.
+        if let Some(counts) = audit.get(&dq.request) {
+            let want = counts.get(j).copied().unwrap_or(0);
+            ensure!(
+                view.positions.len() == want,
+                "device {j}: request {} resident view holds {} tokens but the driver \
+                 shipped {want} — a KV delta was dropped or lost",
+                dq.request,
+                view.positions.len()
+            );
+        }
         if view.positions.is_empty() {
             // this device holds no pages for the request yet
             return Ok((
@@ -491,6 +592,19 @@ impl Actor {
     }
 }
 
+/// Manifest an injected [`FaultKind::CorruptDelta`]: flip one payload
+/// value *after* the checksum was stamped. The mutation is copy-on-write
+/// (`Tensor::data_mut`), so only this actor's copy is perturbed — the
+/// driver's cache page is untouched, exactly like corruption in transit.
+fn corrupt(mut delta: KvDelta) -> KvDelta {
+    if let Some(x) = delta.k.data_mut().first_mut() {
+        *x += 1.0;
+    } else if let Some(p) = delta.positions.first_mut() {
+        *p += 1;
+    }
+    delta
+}
+
 /// First partial initializes the accumulator slot, the rest merge through
 /// the backend; consumed partials' buffers recycle into the arena.
 fn merge_into(
@@ -521,23 +635,54 @@ fn merge_into(
 /// [`evict`](ActorRing::evict) across arbitrarily many micro-steps, and
 /// finally [`drain`](ActorRing::drain) + [`shutdown`](ActorRing::shutdown).
 /// Any actor failure surfaces as a structured `Err` naming the device and
-/// request; the ring is then poisoned and every later call fails fast.
-/// Dropping the ring shuts the actors down and joins them.
+/// request; the ring is then poisoned and every later call fails fast,
+/// carrying the *original* failure context. Dropping the ring shuts the
+/// actors down with a bounded-wait join (a wedged worker is detached, not
+/// waited on forever).
 pub struct ActorRing {
     txs: Vec<Sender<ActorMsg>>,
     replies: Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
     epoch: u64,
     resident: HashSet<usize>,
-    poisoned: bool,
+    /// request → per-device KV token counts the driver has shipped; the
+    /// source of the per-step audit that detects dropped deltas.
+    ledger: HashMap<usize, Vec<usize>>,
+    /// `Some(original failure)` once any actor interaction failed.
+    poisoned: Option<String>,
+    policy: RingPolicy,
+    injector: Option<Arc<FaultInjector>>,
+    retries: usize,
     delta_tokens_sent: usize,
     delta_bytes_sent: usize,
 }
 
 impl ActorRing {
-    /// Spawn `n` device actors (the session's only thread spawns).
+    /// Spawn `n` device actors with the default [`RingPolicy`] and no
+    /// fault injection (the session's only thread spawns).
     pub fn spawn(n: usize, heads: usize, head_dim: usize, opts: &EngineOpts) -> Result<ActorRing> {
+        ActorRing::spawn_with(n, heads, head_dim, opts, RingPolicy::default(), None)
+    }
+
+    /// Spawn `n` device actors with an explicit watchdog [`RingPolicy`]
+    /// and an optional session-scoped [`FaultInjector`].
+    ///
+    /// The injector is shared via `Arc` so a serve session can respawn
+    /// rings across recoveries without re-arming already-fired faults.
+    pub fn spawn_with(
+        n: usize,
+        heads: usize,
+        head_dim: usize,
+        opts: &EngineOpts,
+        policy: RingPolicy,
+        injector: Option<Arc<FaultInjector>>,
+    ) -> Result<ActorRing> {
         ensure!(n > 0, "actor ring needs at least one device");
+        ensure!(
+            policy.watchdog > Duration::ZERO,
+            "actor ring watchdog must be positive (got {:?})",
+            policy.watchdog
+        );
         let mut txs: Vec<Sender<ActorMsg>> = Vec::with_capacity(n);
         let mut rxs: Vec<Receiver<ActorMsg>> = Vec::with_capacity(n);
         for _ in 0..n {
@@ -594,7 +739,11 @@ impl ActorRing {
             handles,
             epoch: 0,
             resident: HashSet::new(),
-            poisoned: false,
+            ledger: HashMap::new(),
+            poisoned: None,
+            policy,
+            injector,
+            retries: 0,
             delta_tokens_sent: 0,
             delta_bytes_sent: 0,
         })
@@ -625,8 +774,35 @@ impl ActorRing {
         self.delta_bytes_sent
     }
 
+    /// Watchdog retries this ring has performed (timeouts survived by an
+    /// extended wait rather than escalation).
+    pub fn retries(&self) -> usize {
+        self.retries
+    }
+
+    /// Whether an earlier failure poisoned the ring.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.is_some()
+    }
+
+    /// The original failure that poisoned the ring, if any.
+    pub fn poison_cause(&self) -> Option<&str> {
+        self.poisoned.as_deref()
+    }
+
+    /// Record the original failure and hand the error back for return:
+    /// every later command will fail fast carrying this context.
+    fn poison(&mut self, error: Error) -> Error {
+        if self.poisoned.is_none() {
+            self.poisoned = Some(format!("{error:#}"));
+        }
+        error
+    }
+
     fn check_live(&self) -> Result<()> {
-        ensure!(!self.poisoned, "actor ring is poisoned by an earlier failure");
+        if let Some(cause) = &self.poisoned {
+            bail!("actor ring is poisoned by an earlier failure: {cause}");
+        }
         Ok(())
     }
 
@@ -637,11 +813,13 @@ impl ActorRing {
             self.resident.insert(request),
             "request {request} is already admitted to the actor ring"
         );
-        for (d, tx) in self.txs.iter().enumerate() {
-            if tx.send(ActorMsg::Admit { request }).is_err() {
-                self.poisoned = true;
-                bail!("device {d} hung up admitting request {request}");
-            }
+        self.ledger.insert(request, vec![0; self.txs.len()]);
+        let dead = self
+            .txs
+            .iter()
+            .position(|tx| tx.send(ActorMsg::Admit { request }).is_err());
+        if let Some(d) = dead {
+            return Err(self.poison(anyhow!("device {d} hung up admitting request {request}")));
         }
         Ok(())
     }
@@ -667,14 +845,19 @@ impl ActorRing {
                 delta.request
             );
             let (tokens, bytes) = (delta.tokens(), delta.bytes());
-            if self.txs[delta.device].send(ActorMsg::AppendDelta { delta: delta.clone() }).is_err()
-            {
-                self.poisoned = true;
-                bail!(
+            // A due injected append fault rides the message; the actor
+            // manifests it (drop/corrupt) on receipt.
+            let fault = self.injector.as_ref().and_then(|i| i.take_append_fault(delta.device));
+            let msg = ActorMsg::AppendDelta { delta: delta.clone(), fault };
+            if self.txs[delta.device].send(msg).is_err() {
+                return Err(self.poison(anyhow!(
                     "device {} hung up receiving a KV delta for request {}",
                     delta.device,
                     delta.request
-                );
+                )));
+            }
+            if let Some(counts) = self.ledger.get_mut(&delta.request) {
+                counts[delta.device] += tokens;
             }
             self.delta_tokens_sent += tokens;
             self.delta_bytes_sent += bytes;
@@ -690,11 +873,13 @@ impl ActorRing {
             self.resident.remove(&request),
             "evicting request {request} which is not admitted"
         );
-        for (d, tx) in self.txs.iter().enumerate() {
-            if tx.send(ActorMsg::Evict { request }).is_err() {
-                self.poisoned = true;
-                bail!("device {d} hung up evicting request {request}");
-            }
+        self.ledger.remove(&request);
+        let dead = self
+            .txs
+            .iter()
+            .position(|tx| tx.send(ActorMsg::Evict { request }).is_err());
+        if let Some(d) = dead {
+            return Err(self.poison(anyhow!("device {d} hung up evicting request {request}")));
         }
         Ok(())
     }
@@ -724,17 +909,29 @@ impl ActorRing {
             );
         }
         let mut batches: Vec<Vec<DecodeQuery>> = vec![Vec::new(); n];
+        let mut audit: HashMap<usize, Vec<usize>> = HashMap::new();
         for q in queries {
+            if let Some(counts) = self.ledger.get(&q.request) {
+                audit.insert(q.request, counts.clone());
+            }
             let home = q.request % n;
             batches[home].push(q);
         }
+        let audit: StepAudit = Arc::new(audit);
         self.epoch += 1;
         let epoch = self.epoch;
+        // Session-wide micro-step index for deterministic fault delivery
+        // (monotonic across ring respawns, unlike `epoch`).
+        let step_idx = self.injector.as_ref().map(|i| i.begin_step());
         let t0 = Instant::now();
         for (d, batch) in batches.into_iter().enumerate() {
-            if self.txs[d].send(ActorMsg::Step { batch, epoch }).is_err() {
-                self.poisoned = true;
-                bail!("device {d} hung up before step (epoch {epoch})");
+            let fault = match (&self.injector, step_idx) {
+                (Some(inj), Some(s)) => inj.take_step_fault(s, d),
+                _ => None,
+            };
+            let msg = ActorMsg::Step { batch, epoch, audit: audit.clone(), fault };
+            if self.txs[d].send(msg).is_err() {
+                return Err(self.poison(anyhow!("device {d} hung up before step (epoch {epoch})")));
             }
         }
         let mut outputs: StepOutputs = HashMap::new();
@@ -742,19 +939,21 @@ impl ActorRing {
             match self.recv_reply()? {
                 Reply::Step { device, epoch: e, outputs: out } => {
                     if e != epoch {
-                        self.poisoned = true;
-                        bail!("device {device} replied for epoch {e} during epoch {epoch}");
+                        return Err(self.poison(anyhow!(
+                            "device {device} replied for epoch {e} during epoch {epoch}"
+                        )));
                     }
                     outputs.extend(out);
                 }
                 Reply::Drained { device, .. } => {
-                    self.poisoned = true;
-                    bail!("device {device} sent a drain report during a step (epoch {epoch})");
+                    return Err(self.poison(anyhow!(
+                        "device {device} sent a drain report during a step (epoch {epoch})"
+                    )));
                 }
                 Reply::Failed { device, error } => {
-                    self.poisoned = true;
-                    return Err(error
-                        .context(format!("decode step failed on device {device} (epoch {epoch})")));
+                    let error = error
+                        .context(format!("decode step failed on device {device} (epoch {epoch})"));
+                    return Err(self.poison(error));
                 }
             }
         }
@@ -769,11 +968,9 @@ impl ActorRing {
     /// at end of serve. The ring stays usable afterwards.
     pub fn drain(&mut self) -> Result<DrainReport> {
         self.check_live()?;
-        for (d, tx) in self.txs.iter().enumerate() {
-            if tx.send(ActorMsg::Drain).is_err() {
-                self.poisoned = true;
-                bail!("device {d} hung up before drain");
-            }
+        let dead = self.txs.iter().position(|tx| tx.send(ActorMsg::Drain).is_err());
+        if let Some(d) = dead {
+            return Err(self.poison(anyhow!("device {d} hung up before drain")));
         }
         let mut timelines = Vec::with_capacity(self.txs.len());
         let mut stats = Vec::with_capacity(self.txs.len());
@@ -784,12 +981,13 @@ impl ActorRing {
                     stats.push(s);
                 }
                 Reply::Step { device, .. } => {
-                    self.poisoned = true;
-                    bail!("device {device} sent a step reply during drain");
+                    return Err(
+                        self.poison(anyhow!("device {device} sent a step reply during drain"))
+                    );
                 }
                 Reply::Failed { device, error } => {
-                    self.poisoned = true;
-                    return Err(error.context(format!("drain failed on device {device}")));
+                    let error = error.context(format!("drain failed on device {device}"));
+                    return Err(self.poison(error));
                 }
             }
         }
@@ -797,38 +995,80 @@ impl ActorRing {
         Ok(DrainReport { timeline: Timeline::merge(timelines), stats })
     }
 
-    /// Stop every actor and join its thread. Also runs on drop; calling
-    /// it explicitly surfaces join failures as errors.
+    /// Stop every actor and join its thread with a bounded wait. Also
+    /// runs on drop; calling it explicitly surfaces join failures (a
+    /// panicked worker) and detached stragglers as errors.
     pub fn shutdown(mut self) -> Result<()> {
         self.shutdown_inner()
     }
 
+    /// Wait for one reply under the watchdog. Each timeout within the
+    /// retry budget doubles the wait (deterministic, jitter-free: w, 2w,
+    /// 4w, …); commands are never re-sent — the reply is simply waited for
+    /// longer, so a slow actor's eventual reply is consumed exactly once.
+    /// Budget exhaustion poisons the ring.
     fn recv_reply(&mut self) -> Result<Reply> {
-        match self.replies.recv_timeout(REPLY_TIMEOUT) {
-            Ok(r) => Ok(r),
-            Err(RecvTimeoutError::Timeout) => {
-                self.poisoned = true;
-                bail!("actor ring stalled: no reply within {REPLY_TIMEOUT:?}")
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                self.poisoned = true;
-                bail!("every actor hung up (reply channel closed)")
+        let mut wait = self.policy.watchdog;
+        let mut attempts = 0usize;
+        loop {
+            match self.replies.recv_timeout(wait) {
+                Ok(r) => return Ok(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    if attempts < self.policy.max_retries {
+                        attempts += 1;
+                        self.retries += 1;
+                        wait = wait.saturating_mul(2);
+                    } else {
+                        return Err(self.poison(anyhow!(
+                            "actor ring stalled: no reply within watchdog {:?} after \
+                             {attempts} doubled-wait retries",
+                            self.policy.watchdog
+                        )));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.poison(anyhow!("every actor hung up (reply channel closed)")));
+                }
             }
         }
     }
 
+    /// Bounded-wait join: grace-poll each worker's `is_finished`, join the
+    /// ones that exited, detach the rest. A detached worker is harmless —
+    /// once the ring's senders drop, its next receive/send errors and it
+    /// exits on its own — but it is *reported*, because a clean session
+    /// should never leave one behind.
     fn shutdown_inner(&mut self) -> Result<()> {
         for tx in &self.txs {
             // best effort: a dead actor's channel just errors
             let _ = tx.send(ActorMsg::Shutdown);
         }
+        let grace = self
+            .policy
+            .watchdog
+            .min(Duration::from_millis(500))
+            .max(Duration::from_millis(50));
+        let deadline = Instant::now() + grace;
         let mut panicked = 0usize;
+        let mut detached = 0usize;
         for h in self.handles.drain(..) {
-            if h.join().is_err() {
-                panicked += 1;
+            while !h.is_finished() && Instant::now() < deadline {
+                thread::sleep(Duration::from_millis(1));
+            }
+            if h.is_finished() {
+                if h.join().is_err() {
+                    panicked += 1;
+                }
+            } else {
+                detached += 1;
+                drop(h);
             }
         }
-        ensure!(panicked == 0, "{panicked} actor thread(s) panicked during shutdown");
+        ensure!(
+            panicked == 0 && detached == 0,
+            "actor shutdown not clean: {panicked} worker(s) panicked, \
+             {detached} detached still running after {grace:?}"
+        );
         Ok(())
     }
 }
@@ -869,7 +1109,7 @@ mod tests {
         for dev in 0..ring.devices() {
             let (k, v, positions) = cache.device_view(req, dev).unwrap();
             if !positions.is_empty() {
-                ring.append(&[KvDelta { request: req, device: dev, k, v, positions }]).unwrap();
+                ring.append(&[KvDelta::new(req, dev, k, v, positions, 0)]).unwrap();
             }
         }
     }
@@ -940,22 +1180,104 @@ mod tests {
         ring.resident.insert(5);
         let k = Tensor::new(&[4, 2, 8], rng.normal_vec(64, 1.0));
         let v = Tensor::new(&[4, 2, 8], rng.normal_vec(64, 1.0));
-        ring.append(&[KvDelta {
-            request: 5,
-            device: 0,
-            k,
-            v,
-            positions: (0..4).collect(),
-        }])
-        .unwrap();
+        ring.append(&[KvDelta::new(5, 0, k, v, (0..4).collect(), 0)]).unwrap();
         let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
         let err = ring
             .step(vec![DecodeQuery { request: 0, q, q_pos: vec![0] }])
             .unwrap_err()
             .to_string();
         assert!(err.contains("request 5") && err.contains("before admit"), "{err}");
-        // the ring is poisoned: everything fails fast now
-        assert!(ring.admit(8).is_err());
-        assert!(ring.drain().is_err());
+        // the ring is poisoned: every later command fails fast AND carries
+        // the original failure context, not a generic "poisoned" notice
+        assert!(ring.is_poisoned());
+        for attempt in 0..2 {
+            let e = ring.admit(8 + attempt).unwrap_err().to_string();
+            assert!(e.contains("poisoned"), "{e}");
+            assert!(e.contains("request 5") && e.contains("before admit"), "{e}");
+        }
+        let e = ring.drain().unwrap_err().to_string();
+        assert!(e.contains("request 5"), "{e}");
+        let cause = ring.poison_cause().unwrap().to_string();
+        assert!(cause.contains("before admit"), "{cause}");
+    }
+
+    fn fault_ring(
+        n: usize,
+        plan: &str,
+        watchdog_ms: u64,
+        max_retries: usize,
+    ) -> (ActorRing, Arc<FaultInjector>) {
+        let inj = Arc::new(FaultInjector::new(
+            &crate::engine::faults::FaultPlan::parse(plan).unwrap(),
+        ));
+        let policy =
+            RingPolicy { watchdog: Duration::from_millis(watchdog_ms), max_retries };
+        let ring = ActorRing::spawn_with(n, 2, 8, &opts(), policy, Some(inj.clone())).unwrap();
+        (ring, inj)
+    }
+
+    #[test]
+    fn injected_stall_within_retry_budget_is_survived() {
+        let mut rng = Rng::new(64);
+        let (cache, _) = filled_cache(2, &[(1, 16)], &mut rng);
+        // 80 ms stall vs 25+50+100+200 ms of doubled waits: survivable
+        let (mut ring, inj) = fault_ring(2, "stall@0:1:80", 25, 3);
+        admit_and_load(&mut ring, &cache, 1);
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let res = ring.step(vec![DecodeQuery { request: 1, q, q_pos: vec![16] }]).unwrap();
+        assert!(res.outputs.contains_key(&1));
+        assert!(ring.retries() >= 1, "the watchdog must have extended its wait");
+        assert!(!ring.is_poisoned(), "a survived stall must not poison");
+        assert_eq!(inj.fired(), 1);
+        ring.shutdown().unwrap();
+    }
+
+    #[test]
+    fn injected_stall_past_the_budget_escalates_to_poison() {
+        let mut rng = Rng::new(65);
+        let (cache, _) = filled_cache(2, &[(1, 16)], &mut rng);
+        // 400 ms stall vs 10+20 ms of patience: escalation
+        let (mut ring, _inj) = fault_ring(2, "stall@0:1:400", 10, 1);
+        admit_and_load(&mut ring, &cache, 1);
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let err = ring
+            .step(vec![DecodeQuery { request: 1, q, q_pos: vec![16] }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stalled") && err.contains("watchdog"), "{err}");
+        assert!(ring.is_poisoned());
+        // drop (not shutdown): the stalled worker is detached, not joined
+    }
+
+    #[test]
+    fn injected_drop_is_detected_by_the_token_audit() {
+        let mut rng = Rng::new(66);
+        let (cache, _) = filled_cache(2, &[(1, 16)], &mut rng);
+        let (mut ring, inj) = fault_ring(2, "drop@0:0", 1_000, 0);
+        admit_and_load(&mut ring, &cache, 1); // device 0's load vanishes
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let err = ring
+            .step(vec![DecodeQuery { request: 1, q, q_pos: vec![16] }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dropped or lost"), "{err}");
+        assert_eq!(inj.fired(), 1);
+        assert!(ring.is_poisoned());
+    }
+
+    #[test]
+    fn injected_corruption_is_rejected_by_the_checksum() {
+        let mut rng = Rng::new(67);
+        let (cache, _) = filled_cache(2, &[(1, 16)], &mut rng);
+        let (mut ring, inj) = fault_ring(2, "corrupt@0:1", 1_000, 0);
+        admit_and_load(&mut ring, &cache, 1);
+        let q = Tensor::new(&[1, 2, 8], rng.normal_vec(16, 1.0));
+        let err = ring
+            .step(vec![DecodeQuery { request: 1, q, q_pos: vec![16] }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert_eq!(inj.fired(), 1);
+        assert!(ring.is_poisoned());
     }
 }

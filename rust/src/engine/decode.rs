@@ -72,7 +72,7 @@ pub fn run_decode_ring(
                 .device_view(r, dev)
                 .with_context(|| format!("loading request {r} into the decode ring"))?;
             if !positions.is_empty() {
-                ring.append(&[super::kv_cache::KvDelta { request: r, device: dev, k, v, positions }])?;
+                ring.append(&[super::kv_cache::KvDelta::new(r, dev, k, v, positions, 0)])?;
             }
         }
     }

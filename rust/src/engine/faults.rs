@@ -1,0 +1,319 @@
+//! Deterministic fault injection for the serve path.
+//!
+//! A [`FaultPlan`] is a small, human-writable schedule of faults — each one
+//! pinned to a ring **micro-step index** and a **device** — that the driver
+//! arms once per serve session. Faults are *deterministic*: the plan is
+//! data, not randomness, so a chaos run is exactly reproducible and its
+//! per-request `output_digest`s can be diffed against the fault-free run.
+//!
+//! Step indices count ring micro-steps **begun** session-wide (across ring
+//! respawns): the [`FaultInjector`] lives on the driver, is shared by every
+//! `ActorRing` incarnation of a serve session, and increments its step
+//! counter each time a ring step starts. Each fault fires **at most once**
+//! (compare-and-swap armed flag), so a fault consumed before a recovery can
+//! never re-fire after the ring is rebuilt.
+//!
+//! Spec syntax (comma-separated in a plan):
+//!
+//! | spec                | meaning                                              |
+//! |---------------------|------------------------------------------------------|
+//! | `panic@K:D`         | device D panics when it receives micro-step K        |
+//! | `drop@K:D`          | device D silently drops its next append before K     |
+//! | `corrupt@K:D`       | device D corrupts its next append payload before K   |
+//! | `stall@K:D:MS`      | device D sleeps MS milliseconds before running K     |
+//!
+//! ```
+//! use tokenring::engine::faults::{FaultKind, FaultPlan};
+//! let plan = FaultPlan::parse("panic@2:1, stall@4:0:200").unwrap();
+//! assert_eq!(plan.specs.len(), 2);
+//! assert_eq!(plan.specs[1].kind, FaultKind::Stall { ms: 200 });
+//! assert_eq!(plan.to_strings(), vec!["panic@2:1", "stall@4:0:200"]);
+//! ```
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// What an injected fault does when it fires on the target device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The actor thread panics on receipt of the step command — models a
+    /// device crash. The ring poisons and the driver must recover.
+    Panic,
+    /// The actor silently discards one `AppendDelta` payload — models a
+    /// lost ring message. Detected by the driver-side token-count audit at
+    /// the next step touching the request.
+    DropDelta,
+    /// The actor perturbs the delta's K payload before storing it — models
+    /// link corruption. Detected by the delta checksum at receipt.
+    CorruptDelta,
+    /// The actor sleeps `ms` milliseconds before processing the step,
+    /// delaying its reply — models a slow peer. Survivable when the
+    /// watchdog's retry budget covers the stall, escalation otherwise.
+    Stall {
+        /// Sleep duration in milliseconds.
+        ms: u64,
+    },
+}
+
+impl FaultKind {
+    /// Short lowercase tag used in the compact spec syntax.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::DropDelta => "drop",
+            FaultKind::CorruptDelta => "corrupt",
+            FaultKind::Stall { .. } => "stall",
+        }
+    }
+}
+
+/// One scheduled fault: a [`FaultKind`] pinned to a micro-step and device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// What happens when the fault fires.
+    pub kind: FaultKind,
+    /// Ring micro-step index (session-wide count of steps begun) at which
+    /// the fault fires. Append faults fire on appends composed *for* this
+    /// step (i.e. delivered after step `step - 1` completed).
+    pub step: u64,
+    /// Target device (actor index within the ring).
+    pub device: usize,
+}
+
+impl FaultSpec {
+    /// Parse one compact spec like `panic@2:1` or `stall@4:0:200`.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let s = s.trim();
+        let (tag, rest) = s
+            .split_once('@')
+            .with_context(|| format!("fault spec `{s}`: expected `<kind>@<step>:<device>`"))?;
+        let fields: Vec<&str> = rest.split(':').collect();
+        let parse_u64 = |f: &str, what: &str| -> Result<u64> {
+            f.trim()
+                .parse::<u64>()
+                .with_context(|| format!("fault spec `{s}`: bad {what} `{f}`"))
+        };
+        let (kind, nfields) = match tag.trim() {
+            "panic" => (FaultKind::Panic, 2),
+            "drop" => (FaultKind::DropDelta, 2),
+            "corrupt" => (FaultKind::CorruptDelta, 2),
+            "stall" => {
+                if fields.len() != 3 {
+                    bail!("fault spec `{s}`: stall needs `stall@<step>:<device>:<ms>`");
+                }
+                let ms = parse_u64(fields[2], "stall milliseconds")?;
+                (FaultKind::Stall { ms }, 3)
+            }
+            other => bail!(
+                "fault spec `{s}`: unknown kind `{other}` (valid: panic, drop, corrupt, stall)"
+            ),
+        };
+        if fields.len() != nfields {
+            bail!("fault spec `{s}`: expected `{}@<step>:<device>`", kind.tag());
+        }
+        let step = parse_u64(fields[0], "step index")?;
+        let device = parse_u64(fields[1], "device index")? as usize;
+        Ok(FaultSpec { kind, step, device })
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::Stall { ms } => {
+                write!(f, "stall@{}:{}:{}", self.step, self.device, ms)
+            }
+            other => write!(f, "{}@{}:{}", other.tag(), self.step, self.device),
+        }
+    }
+}
+
+/// A deterministic schedule of faults for one serve session.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// The scheduled faults, in the order written.
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated list of compact specs; empty input (or only
+    /// separators/whitespace) yields an empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for part in s.split(',') {
+            if part.trim().is_empty() {
+                continue;
+            }
+            specs.push(FaultSpec::parse(part)?);
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    /// Render each spec back to its compact form (round-trips via
+    /// [`FaultPlan::parse`]).
+    pub fn to_strings(&self) -> Vec<String> {
+        self.specs.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// True when no faults are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// Armed, session-scoped fault state shared (via `Arc`) between the driver
+/// and every `ActorRing` incarnation of a serve session.
+///
+/// The injector never touches actor internals: the driver consults it when
+/// composing commands and attaches any due fault to the message; the actor
+/// merely *manifests* the fault on receipt. Each spec fires at most once.
+#[derive(Debug)]
+pub struct FaultInjector {
+    slots: Vec<(FaultSpec, AtomicBool)>,
+    steps_begun: AtomicU64,
+    fired: AtomicUsize,
+}
+
+impl FaultInjector {
+    /// Arm every spec in `plan`.
+    pub fn new(plan: &FaultPlan) -> FaultInjector {
+        FaultInjector {
+            slots: plan.specs.iter().map(|&s| (s, AtomicBool::new(true))).collect(),
+            steps_begun: AtomicU64::new(0),
+            fired: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record that a ring micro-step is beginning; returns its session-wide
+    /// 0-based index. Called exactly once per `ActorRing::step`.
+    pub fn begin_step(&self) -> u64 {
+        self.steps_begun.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Index the *next* micro-step will get — appends composed now belong
+    /// to that step.
+    pub fn current_step(&self) -> u64 {
+        self.steps_begun.load(Ordering::SeqCst)
+    }
+
+    fn take(&self, want: impl Fn(&FaultSpec) -> bool) -> Option<FaultKind> {
+        for (spec, armed) in &self.slots {
+            if want(spec)
+                && armed
+                    .compare_exchange(true, false, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.fired.fetch_add(1, Ordering::SeqCst);
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+
+    /// Consume a due step-delivery fault ([`FaultKind::Panic`] or
+    /// [`FaultKind::Stall`]) for `device` at micro-step `step`, if any.
+    pub fn take_step_fault(&self, step: u64, device: usize) -> Option<FaultKind> {
+        self.take(|s| {
+            s.step == step
+                && s.device == device
+                && matches!(s.kind, FaultKind::Panic | FaultKind::Stall { .. })
+        })
+    }
+
+    /// Consume a due append fault ([`FaultKind::DropDelta`] or
+    /// [`FaultKind::CorruptDelta`]) for `device` on an append composed for
+    /// the next micro-step, if any.
+    pub fn take_append_fault(&self, device: usize) -> Option<FaultKind> {
+        let step = self.current_step();
+        self.take(|s| {
+            s.step == step
+                && s.device == device
+                && matches!(s.kind, FaultKind::DropDelta | FaultKind::CorruptDelta)
+        })
+    }
+
+    /// Total faults fired (consumed) so far this session.
+    pub fn fired(&self) -> usize {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Faults still armed (scheduled but not yet fired).
+    pub fn pending(&self) -> usize {
+        self.slots.len() - self.fired()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_syntax_round_trips() {
+        for s in ["panic@2:1", "drop@3:0", "corrupt@1:2", "stall@4:0:200"] {
+            let spec = FaultSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "round-trip of `{s}`");
+        }
+        let plan = FaultPlan::parse(" panic@0:0 ,stall@7:1:50, ").unwrap();
+        assert_eq!(plan.specs.len(), 2);
+        assert_eq!(plan.to_strings(), vec!["panic@0:0", "stall@7:1:50"]);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in [
+            "panic",       // no @
+            "panic@1",     // missing device
+            "panic@1:2:3", // too many fields
+            "stall@1:2",   // stall missing ms
+            "fizzle@1:2",  // unknown kind
+            "panic@x:1",   // non-numeric step
+            "drop@1:y",    // non-numeric device
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "`{bad}` should fail");
+        }
+    }
+
+    #[test]
+    fn injector_counts_steps_and_fires_each_fault_once() {
+        let plan = FaultPlan::parse("panic@1:0, drop@2:1, stall@1:1:10").unwrap();
+        let inj = FaultInjector::new(&plan);
+        assert_eq!(inj.pending(), 3);
+        assert_eq!(inj.current_step(), 0);
+        assert_eq!(inj.begin_step(), 0); // step 0: nothing due
+        assert!(inj.take_step_fault(0, 0).is_none());
+
+        // Appends composed now belong to step 1 — but the drop is at step 2.
+        assert_eq!(inj.current_step(), 1);
+        assert!(inj.take_append_fault(1).is_none());
+
+        assert_eq!(inj.begin_step(), 1); // step 1: panic on 0, stall on 1
+        assert_eq!(inj.take_step_fault(1, 0), Some(FaultKind::Panic));
+        assert!(inj.take_step_fault(1, 0).is_none(), "fires once");
+        assert_eq!(inj.take_step_fault(1, 1), Some(FaultKind::Stall { ms: 10 }));
+
+        // Appends composed for step 2 hit the drop.
+        assert_eq!(inj.begin_step(), 2);
+        assert!(inj.take_append_fault(1).is_none(), "drop targets step 2 appends");
+        let inj2 = FaultInjector::new(&FaultPlan::parse("drop@2:1").unwrap());
+        inj2.begin_step();
+        inj2.begin_step();
+        assert_eq!(inj2.take_append_fault(1), Some(FaultKind::DropDelta));
+        assert!(inj2.take_append_fault(1).is_none(), "fires once");
+
+        assert_eq!(inj.fired(), 2);
+        assert_eq!(inj.pending(), 1);
+    }
+
+    #[test]
+    fn step_faults_and_append_faults_do_not_cross_match() {
+        let inj = FaultInjector::new(&FaultPlan::parse("drop@0:0, panic@0:1").unwrap());
+        // A drop never fires as a step fault, a panic never as an append.
+        assert!(inj.take_step_fault(0, 0).is_none());
+        assert!(inj.take_append_fault(1).is_none());
+        assert_eq!(inj.take_append_fault(0), Some(FaultKind::DropDelta));
+        assert_eq!(inj.take_step_fault(0, 1), Some(FaultKind::Panic));
+    }
+}

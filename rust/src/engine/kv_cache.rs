@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::tensor::Tensor;
 
@@ -29,6 +29,9 @@ struct SeqEntry {
     next_pos: usize,
     /// round-robin cursor: device receiving the next page
     cursor: usize,
+    /// device_tokens[device] = tokens resident on that device; the source
+    /// of truth for each delta's `start_tokens` continuity stamp.
+    device_tokens: Vec<usize>,
 }
 
 /// One incremental slice of an append, routed to one device: the
@@ -48,9 +51,69 @@ pub struct KvDelta {
     pub v: Tensor,
     /// Global sequence positions of the window's rows.
     pub positions: Vec<i32>,
+    /// Tokens the receiving device's view must already hold for this
+    /// request when the delta lands — the continuity stamp that turns a
+    /// silently dropped predecessor into a loud gap error.
+    pub start_tokens: usize,
+    /// FNV-1a digest of the payload (K/V bit patterns + positions),
+    /// recomputed and checked at receipt so a corrupted payload poisons
+    /// the ring instead of silently skewing attention outputs.
+    pub checksum: u64,
+}
+
+/// FNV-1a over the delta payload: K and V f32 bit patterns, then
+/// positions. Deterministic and byte-order-free (we hash values, not
+/// memory), so driver and actor always agree.
+fn payload_checksum(k: &Tensor, v: &Tensor, positions: &[i32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn mix(h: &mut u64, bits: u64) {
+        *h ^= bits;
+        *h = h.wrapping_mul(PRIME);
+    }
+    let mut h = OFFSET;
+    for &x in k.data() {
+        mix(&mut h, u64::from(x.to_bits()));
+    }
+    for &x in v.data() {
+        mix(&mut h, u64::from(x.to_bits()));
+    }
+    for &p in positions {
+        mix(&mut h, p as u32 as u64);
+    }
+    h
 }
 
 impl KvDelta {
+    /// Build a delta, stamping its payload checksum.
+    pub fn new(
+        request: usize,
+        device: usize,
+        k: Tensor,
+        v: Tensor,
+        positions: Vec<i32>,
+        start_tokens: usize,
+    ) -> KvDelta {
+        let checksum = payload_checksum(&k, &v, &positions);
+        KvDelta { request, device, k, v, positions, start_tokens, checksum }
+    }
+
+    /// Recompute the payload checksum and compare against the stamp;
+    /// mismatch is a structured error carrying request/device context.
+    pub fn verify(&self) -> Result<()> {
+        let got = payload_checksum(&self.k, &self.v, &self.positions);
+        ensure!(
+            got == self.checksum,
+            "kv delta checksum mismatch for request {} on device {}: \
+             stamped {:#018x}, payload hashes to {:#018x} (corrupted in transit)",
+            self.request,
+            self.device,
+            self.checksum,
+            got
+        );
+        Ok(())
+    }
+
     /// Tokens this delta carries.
     pub fn tokens(&self) -> usize {
         self.positions.len()
@@ -75,7 +138,10 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(devices: usize, heads: usize, head_dim: usize, page_tokens: usize) -> KvCache {
-        assert!(devices > 0 && page_tokens > 0);
+        assert!(
+            devices > 0 && page_tokens > 0,
+            "KvCache::new: devices ({devices}) and page_tokens ({page_tokens}) must be positive"
+        );
         KvCache { devices, heads, head_dim, page_tokens, seqs: HashMap::new() }
     }
 
@@ -88,6 +154,7 @@ impl KvCache {
             pages: vec![Vec::new(); devices],
             next_pos: 0,
             cursor: 0,
+            device_tokens: vec![0; devices],
         });
     }
 
@@ -114,6 +181,7 @@ impl KvCache {
             pages: vec![Vec::new(); devices],
             next_pos: 0,
             cursor: 0,
+            device_tokens: vec![0; devices],
         });
         let mut deltas = Vec::with_capacity(t.div_ceil(page_tokens.max(1)));
         let mut off = 0;
@@ -128,7 +196,8 @@ impl KvCache {
                 v: pv.clone(),
                 positions: positions.clone(),
             });
-            deltas.push(KvDelta { request: id, device: dev, k: pk, v: pv, positions });
+            deltas.push(KvDelta::new(id, dev, pk, pv, positions, entry.device_tokens[dev]));
+            entry.device_tokens[dev] += take;
             entry.next_pos += take;
             entry.cursor = (entry.cursor + 1) % devices;
             off += take;
@@ -363,6 +432,31 @@ mod tests {
         assert_eq!(d1.len(), 1);
         assert_eq!(d1[0].device, 1);
         assert_eq!(d1[0].positions, vec![12]);
+    }
+
+    #[test]
+    fn deltas_carry_continuity_stamps_and_verifiable_checksums() {
+        let mut c = KvCache::new(2, 2, 8, 4);
+        let mut rng = Rng::new(10);
+        let (k, v) = kv(&mut rng, 12); // pages deal to devices 0, 1, 0
+        let deltas = c.append_deltas(6, &k, &v).unwrap();
+        assert_eq!(
+            deltas.iter().map(|d| (d.device, d.start_tokens)).collect::<Vec<_>>(),
+            vec![(0, 0), (1, 0), (0, 4)],
+            "start_tokens counts per-device resident tokens before the delta"
+        );
+        for d in &deltas {
+            d.verify().unwrap();
+        }
+        // a later append resumes each device's token count
+        let (k1, v1) = kv(&mut rng, 1);
+        let d1 = c.append_deltas(6, &k1, &v1).unwrap();
+        assert_eq!((d1[0].device, d1[0].start_tokens), (1, 4));
+        // corrupting the payload breaks verification with full context
+        let mut bad = deltas[0].clone();
+        bad.k.data_mut()[0] += 1.0;
+        let e = bad.verify().unwrap_err().to_string();
+        assert!(e.contains("request 6") && e.contains("device 0"), "{e}");
     }
 
     #[test]

@@ -31,6 +31,7 @@
 pub mod actors;
 pub mod backend;
 pub mod decode;
+pub mod faults;
 pub mod kv_cache;
 pub mod ulysses;
 

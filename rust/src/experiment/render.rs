@@ -338,7 +338,7 @@ mod tests {
     }
 
     fn serve_report() -> ContinuousServeReport {
-        use crate::scheduler::{ServedRequest, StepTrace};
+        use crate::scheduler::{RequestStatus, ServedRequest, StepTrace};
         use crate::workload::Priority;
         ContinuousServeReport {
             requests: vec![ServedRequest {
@@ -353,6 +353,8 @@ mod tests {
                 first_token: 0.002,
                 finish: 0.004,
                 preemptions: 0,
+                output_digest: 0.0,
+                status: RequestStatus::Completed,
             }],
             steps: vec![StepTrace {
                 step: 0,
@@ -371,6 +373,7 @@ mod tests {
             preemptions: 0,
             wall: 0.004,
             outputs: Default::default(),
+            faults: Default::default(),
         }
     }
 

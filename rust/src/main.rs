@@ -14,6 +14,7 @@
 //! tokenring hybrid    [--seq 49152] [--nodes 2] [--per-node 4]
 //! tokenring validate  [--backend native|pjrt] [--profile tiny]
 //! tokenring serve     --config configs/serve.json [--out report.json] [--runtime actors|spawn_per_step]
+//! tokenring serve     --config ... [--faults "panic@2:1,stall@4:0:200"] [--watchdog-ms 50] [--max-retries 2] [--max-recoveries 2]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
 //! tokenring trace     --schedule token_ring --out trace.json
 //! tokenring schedules
@@ -315,6 +316,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "out", help: "artifact path for the serve report (with --config; default: <artifacts>/serve/BENCH_<name>.json)", default: None, is_flag: false },
         OptSpec { name: "trace", help: "write a chrome trace of the serve steps here (with --config)", default: None, is_flag: false },
         OptSpec { name: "runtime", help: "serve runtime override: actors | spawn_per_step (with --config; default from the config)", default: None, is_flag: false },
+        OptSpec { name: "faults", help: "deterministic fault plan override, e.g. \"panic@2:1,stall@4:0:200\" (with --config; actors runtime)", default: None, is_flag: false },
+        OptSpec { name: "watchdog-ms", help: "per-reply watchdog override in milliseconds (with --config)", default: None, is_flag: false },
+        OptSpec { name: "max-retries", help: "watchdog extensions before a stalled reply poisons the ring (with --config)", default: None, is_flag: false },
+        OptSpec { name: "max-recoveries", help: "ring respawns before the serve session fails remaining requests (with --config)", default: None, is_flag: false },
         OptSpec { name: "requests", help: "request count (legacy driver)", default: Some("16"), is_flag: false },
         OptSpec { name: "devices", help: "SP degree (legacy driver)", default: Some("4"), is_flag: false },
         OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention; legacy driver)", default: Some("token_ring"), is_flag: false },
@@ -325,10 +330,19 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         return Ok(());
     };
     if let Some(path) = args.get("config") {
-        return cmd_serve_config(path, args.get("out"), args.get("trace"), args.get("runtime"));
+        let overrides = ServeOverrides {
+            runtime: args.get("runtime"),
+            faults: args.get("faults"),
+            watchdog_ms: args.get("watchdog-ms"),
+            max_retries: args.get("max-retries"),
+            max_recoveries: args.get("max-recoveries"),
+        };
+        return cmd_serve_config(path, args.get("out"), args.get("trace"), &overrides);
     }
-    if args.get("runtime").is_some() {
-        return Err("--runtime only applies to the continuous path (use --config)".to_string());
+    for flag in ["runtime", "faults", "watchdog-ms", "max-retries", "max-recoveries"] {
+        if args.get(flag).is_some() {
+            return Err(format!("--{flag} only applies to the continuous path (use --config)"));
+        }
     }
     let n = args.get_usize("devices")?;
     let schedule = ScheduleSpec::parse(args.get_str("schedule")?).map_err(|e| e.to_string())?;
@@ -371,18 +385,50 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// CLI overrides layered onto a loaded [`ServeConfig`] (continuous path).
+struct ServeOverrides<'a> {
+    runtime: Option<&'a str>,
+    faults: Option<&'a str>,
+    watchdog_ms: Option<&'a str>,
+    max_retries: Option<&'a str>,
+    max_recoveries: Option<&'a str>,
+}
+
 /// `tokenring serve --config`: the continuous-batching path.
 fn cmd_serve_config(
     path: &str,
     out: Option<&str>,
     trace: Option<&str>,
-    runtime: Option<&str>,
+    overrides: &ServeOverrides<'_>,
 ) -> Result<(), String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let mut cfg = ServeConfig::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
-    if let Some(r) = runtime {
-        // validated here so a typo fails before any work runs
+    // Each override is validated here so a typo fails before any work runs.
+    if let Some(r) = overrides.runtime {
         cfg.runtime = ServeRuntime::parse(r).map_err(|e| e.to_string())?.name().to_string();
+    }
+    if let Some(f) = overrides.faults {
+        cfg.faults = vec![f.to_string()];
+    }
+    if let Some(v) = overrides.watchdog_ms {
+        cfg.watchdog_ms = v.parse().map_err(|_| format!("--watchdog-ms: bad integer '{v}'"))?;
+        if cfg.watchdog_ms == 0 {
+            return Err("--watchdog-ms must be positive".to_string());
+        }
+    }
+    if let Some(v) = overrides.max_retries {
+        cfg.max_retries = v.parse().map_err(|_| format!("--max-retries: bad integer '{v}'"))?;
+    }
+    if let Some(v) = overrides.max_recoveries {
+        cfg.max_recoveries =
+            v.parse().map_err(|_| format!("--max-recoveries: bad integer '{v}'"))?;
+    }
+    let plan = cfg.fault_plan().map_err(|e| format!("--faults: {e}"))?;
+    let runtime = ServeRuntime::parse(&cfg.runtime).map_err(|e| e.to_string())?;
+    if !plan.is_empty() && runtime != ServeRuntime::Actors {
+        return Err("--faults requires the actors runtime \
+             (spawn_per_step has no persistent ring to deliver faults to)"
+            .to_string());
     }
     let requests = cfg.generate().map_err(|e| e.to_string())?;
     let opts = cfg.opts().map_err(|e| e.to_string())?;
@@ -407,6 +453,15 @@ fn cmd_serve_config(
         report.steps.len(),
         report.wall,
     );
+    let f = &report.faults;
+    println!(
+        "faults injected {} | watchdog retries {} | recoveries {} | replayed tokens {} | \
+         failed requests {}",
+        f.faults_injected, f.watchdog_retries, f.recoveries, f.replayed_tokens, f.failed_requests,
+    );
+    if let Some(cause) = &f.failure {
+        println!("serve session exhausted its recovery budget: {cause}");
+    }
     if let Some(prefix) = trace {
         std::fs::write(prefix, render::serve_chrome_trace(&report)).map_err(|e| e.to_string())?;
         println!("wrote {prefix} — open in chrome://tracing or Perfetto");

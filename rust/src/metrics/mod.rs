@@ -48,7 +48,7 @@ impl Timeline {
         for p in parts {
             all.events.extend(p.events);
         }
-        all.events.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        all.events.sort_by(|a, b| a.t0.total_cmp(&b.t0));
         all
     }
 
@@ -116,6 +116,59 @@ impl Timeline {
                 (s, end - start, compute, comm)
             })
             .collect()
+    }
+}
+
+/// Fault-tolerance accounting for one serve session, reported by
+/// `scheduler::continuous::serve_continuous` alongside latency summaries.
+///
+/// All counters are zero on a fault-free run with no watchdog activity —
+/// the injector-disabled invariant the CI chaos smoke asserts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultAccounting {
+    /// Faults the deterministic injector actually fired this session.
+    pub faults_injected: usize,
+    /// Watchdog timeouts survived by an extended (doubled) reply wait.
+    pub watchdog_retries: usize,
+    /// Ring teardown + respawn cycles performed after a poison.
+    pub recoveries: usize,
+    /// Tokens of lost progress (prefill + decode) re-derived from the
+    /// deterministic token source during recovery replays.
+    pub replayed_tokens: usize,
+    /// Requests that exhausted the recovery budget and failed gracefully.
+    pub failed_requests: usize,
+    /// The terminal failure when the recovery budget ran out, if any.
+    pub failure: Option<String>,
+}
+
+impl FaultAccounting {
+    /// True when the session saw no faults, retries, recoveries, replays,
+    /// or failures — the expected state with the injector disabled.
+    pub fn is_clean(&self) -> bool {
+        self.faults_injected == 0
+            && self.watchdog_retries == 0
+            && self.recoveries == 0
+            && self.replayed_tokens == 0
+            && self.failed_requests == 0
+            && self.failure.is_none()
+    }
+
+    /// JSON object for the serve artifact's `faults` key.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("faults_injected", self.faults_injected),
+            ("watchdog_retries", self.watchdog_retries),
+            ("recoveries", self.recoveries),
+            ("replayed_tokens", self.replayed_tokens),
+            ("failed_requests", self.failed_requests),
+            (
+                "failure",
+                match &self.failure {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                }
+            ),
+        ]
     }
 }
 
@@ -218,6 +271,24 @@ mod tests {
         assert!((wall - 1.5).abs() < 1e-12);
         assert!((compute - 1.0).abs() < 1e-12);
         assert!((comm - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_accounting_json_and_cleanliness() {
+        let clean = FaultAccounting::default();
+        assert!(clean.is_clean());
+        let j = clean.to_json();
+        assert_eq!(j.get("faults_injected").as_usize(), Some(0));
+        assert!(matches!(j.get("failure"), &Json::Null));
+        let dirty = FaultAccounting {
+            recoveries: 1,
+            failure: Some("boom".into()),
+            ..Default::default()
+        };
+        assert!(!dirty.is_clean());
+        let j = dirty.to_json();
+        assert_eq!(j.get("recoveries").as_usize(), Some(1));
+        assert_eq!(j.get("failure").as_str(), Some("boom"));
     }
 
     #[test]

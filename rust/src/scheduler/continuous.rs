@@ -37,18 +37,39 @@
 //! Time is virtual: the clock advances by each micro-step's measured wall
 //! time and jumps across idle gaps to the next arrival, so TTFT/TPOT and
 //! queue-delay percentiles are meaningful without real-time sleeping.
+//!
+//! # Fault tolerance
+//!
+//! Under [`ServeRuntime::Actors`] the serve loop owns the failure domain
+//! above the ring: any ring-command failure (an actor panic, a corrupted
+//! or dropped KV delta detected by the actors' audits, a reply stalled
+//! past the watchdog's retry budget) poisons the [`ActorRing`], and the
+//! loop responds by tearing the poisoned ring down (bounded-wait drop),
+//! re-queueing every in-flight request, and respawning a fresh ring —
+//! each re-queued request then replays deterministically from the
+//! [`TokenSource`], so post-recovery outputs are numerically identical
+//! to a fault-free run (`tests/chaos.rs` proves digest equivalence).
+//! Recoveries are bounded by [`ContinuousServeOpts::max_recoveries`];
+//! exhausting the budget fails the remaining requests *gracefully*:
+//! the report comes back `Ok` with those requests marked
+//! [`RequestStatus::Failed`] and the terminal cause recorded in
+//! [`FaultAccounting::failure`]. Deterministic fault injection for tests
+//! and chaos smokes is wired through [`ContinuousServeOpts::faults`].
 
 use std::collections::{HashMap, HashSet};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::engine::actors::ActorRing;
+use crate::engine::actors::{ActorRing, RingPolicy};
 use crate::engine::backend::BackendSpec;
 use crate::engine::decode::{run_decode_ring, DecodeQuery};
+use crate::engine::faults::{FaultInjector, FaultPlan};
 use crate::engine::kv_cache::KvCache;
 use crate::engine::EngineOpts;
 use crate::json_obj;
+use crate::metrics::FaultAccounting;
 use crate::parallelism::partition::Partition;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -133,6 +154,23 @@ pub struct ContinuousServeOpts {
     /// Which engine execution path to drive (persistent actors by
     /// default; see [`ServeRuntime`]).
     pub runtime: ServeRuntime,
+    /// Watchdog: how long the driver waits for one actor reply before the
+    /// first doubled-wait retry (see [`RingPolicy`]). Actors runtime only.
+    pub watchdog_ms: u64,
+    /// Doubled-wait retries after the first watchdog timeout before a
+    /// stall escalates to ring teardown.
+    pub max_retries: usize,
+    /// Ring teardown + respawn cycles allowed before the session stops
+    /// recovering and fails its remaining requests gracefully.
+    pub max_recoveries: usize,
+    /// Drop one device from the ring on every recovery (degraded-mode
+    /// restart); the replay math is device-count-invariant so digests
+    /// still match the fault-free run.
+    pub degrade_on_recovery: bool,
+    /// Deterministic fault plan for chaos testing (None/empty = no
+    /// injection). Requires the actors runtime: the spawn-per-step path
+    /// has no persistent ring to deliver faults to.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ContinuousServeOpts {
@@ -155,6 +193,34 @@ impl Default for ContinuousServeOpts {
                 record: false,
             },
             runtime: ServeRuntime::default(),
+            watchdog_ms: 120_000,
+            max_retries: 2,
+            max_recoveries: 2,
+            degrade_on_recovery: false,
+            faults: None,
+        }
+    }
+}
+
+/// Terminal outcome of one request in a serve session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RequestStatus {
+    /// Served to completion; latency metrics and `output_digest` are
+    /// valid.
+    #[default]
+    Completed,
+    /// Abandoned after the session exhausted its recovery budget; the
+    /// request produced no delivered output (digest 0.0) and is excluded
+    /// from the latency summaries.
+    Failed,
+}
+
+impl RequestStatus {
+    /// The `status` string in the serve artifact's `per_request` rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestStatus::Completed => "completed",
+            RequestStatus::Failed => "failed",
         }
     }
 }
@@ -192,6 +258,10 @@ pub struct ServedRequest {
     /// serve smoke diffs it across [`ServeRuntime`]s). 0.0 for requests
     /// with no decode phase.
     pub output_digest: f64,
+    /// Whether the request completed or was failed by recovery-budget
+    /// exhaustion. Failed requests carry placeholder timing fields and
+    /// are excluded from the latency summaries.
+    pub status: RequestStatus,
 }
 
 impl ServedRequest {
@@ -258,6 +328,10 @@ pub struct ContinuousServeReport {
     /// Per-request decode outputs, populated only under
     /// [`ContinuousServeOpts::keep_outputs`].
     pub outputs: HashMap<usize, Vec<Tensor>>,
+    /// Fault-tolerance accounting: injected faults, watchdog retries,
+    /// ring recoveries, replayed tokens, and graceful failures. All-zero
+    /// ([`FaultAccounting::is_clean`]) on a fault-free run.
+    pub faults: FaultAccounting,
 }
 
 impl ContinuousServeReport {
@@ -282,26 +356,39 @@ impl ContinuousServeReport {
         }
     }
 
-    /// TTFT percentiles over all served requests (empty-safe).
+    /// TTFT percentiles over completed requests (empty-safe; failed
+    /// requests carry placeholder timing and are excluded).
     pub fn ttft_summary(&self) -> Summary {
-        Summary::from_samples(self.requests.iter().map(ServedRequest::ttft).collect())
+        Summary::from_samples(
+            self.requests
+                .iter()
+                .filter(|r| r.status == RequestStatus::Completed)
+                .map(ServedRequest::ttft)
+                .collect(),
+        )
     }
 
-    /// Time-per-output-token percentiles over requests with a decode
-    /// phase (empty-safe).
+    /// Time-per-output-token percentiles over completed requests with a
+    /// decode phase (empty-safe).
     pub fn tpot_summary(&self) -> Summary {
         Summary::from_samples(
             self.requests
                 .iter()
-                .filter(|r| r.decode_tokens > 0)
+                .filter(|r| r.status == RequestStatus::Completed && r.decode_tokens > 0)
                 .map(ServedRequest::tpot)
                 .collect(),
         )
     }
 
-    /// Queue-delay percentiles over all served requests (empty-safe).
+    /// Queue-delay percentiles over completed requests (empty-safe).
     pub fn queue_delay_summary(&self) -> Summary {
-        Summary::from_samples(self.requests.iter().map(ServedRequest::queue_delay).collect())
+        Summary::from_samples(
+            self.requests
+                .iter()
+                .filter(|r| r.status == RequestStatus::Completed)
+                .map(ServedRequest::queue_delay)
+                .collect(),
+        )
     }
 
     /// Largest number of requests composed into one micro-step.
@@ -358,6 +445,7 @@ impl ContinuousServeReport {
                     ("queue_delay", r.queue_delay()),
                     ("preemptions", r.preemptions),
                     ("output_digest", r.output_digest),
+                    ("status", r.status.name()),
                 ]
             })
             .collect();
@@ -376,6 +464,7 @@ impl ContinuousServeReport {
                 "occupancy",
                 json_obj![("max", self.max_occupancy()), ("mean", self.mean_occupancy())]
             ),
+            ("faults", self.faults.to_json()),
             ("steps", Json::Arr(steps)),
             ("per_request", Json::Arr(per_request)),
         ]
@@ -427,6 +516,17 @@ fn validate(requests: &[Request], opts: &ContinuousServeOpts) -> Result<()> {
     if !opts.engine.causal {
         bail!("continuous batching requires causal attention (chunked prefill)");
     }
+    if opts.watchdog_ms == 0 {
+        bail!("watchdog_ms must be positive");
+    }
+    if opts.faults.as_ref().is_some_and(|p| !p.is_empty())
+        && opts.runtime != ServeRuntime::Actors
+    {
+        bail!(
+            "fault injection requires the actors runtime (spawn_per_step has no \
+             persistent ring to deliver faults to)"
+        );
+    }
     let mut seen = HashSet::new();
     for r in requests {
         if !seen.insert(r.id) {
@@ -466,12 +566,35 @@ pub fn serve_continuous(
     validate(requests, opts)?;
     let n = opts.devices;
     let source = TokenSource::new(opts.seed, opts.heads, opts.head_dim);
-    let mut cache = KvCache::new(n, opts.heads, opts.head_dim, opts.chunk);
-    // the session's only thread spawns happen here, not per micro-step
+    // One injector for the whole session, shared across ring respawns:
+    // each fault slot fires at most once, so a fault that caused a
+    // recovery cannot re-fire on the replay and loop forever.
+    let injector: Option<Arc<FaultInjector>> = opts
+        .faults
+        .as_ref()
+        .filter(|p| !p.is_empty())
+        .map(|p| Arc::new(FaultInjector::new(p)));
+    let policy = RingPolicy {
+        watchdog: Duration::from_millis(opts.watchdog_ms),
+        max_retries: opts.max_retries,
+    };
+    let mut fault_acc = FaultAccounting::default();
+    // Recovery may degrade the ring; the cache device count tracks it.
+    let mut devices_now = n;
+    let mut cache = KvCache::new(devices_now, opts.heads, opts.head_dim, opts.chunk);
+    // the session's only thread spawns happen here (and on recovery
+    // respawns), not per micro-step
     let mut ring = match opts.runtime {
         ServeRuntime::Actors => Some(
-            ActorRing::spawn(n, opts.heads, opts.head_dim, &opts.engine)
-                .context("spawning the serve session's actor ring")?,
+            ActorRing::spawn_with(
+                devices_now,
+                opts.heads,
+                opts.head_dim,
+                &opts.engine,
+                policy,
+                injector.clone(),
+            )
+            .context("spawning the serve session's actor ring")?,
         ),
         ServeRuntime::SpawnPerStep => None,
     };
@@ -500,250 +623,388 @@ pub fn serve_continuous(
         .sum();
     let max_steps = 64 * work as u64 + 1024;
 
+    /// A request abandoned by recovery-budget exhaustion: placeholder
+    /// timing (excluded from summaries), no delivered output.
+    fn abandoned(req: &Request, m: Meta, clock: f64, step: u64) -> ServedRequest {
+        let (admitted, admitted_step) = m.admitted.unwrap_or((clock, step));
+        ServedRequest {
+            id: req.id,
+            seq_len: req.seq_len,
+            decode_tokens: 0,
+            priority: req.priority,
+            arrival: req.arrival,
+            admitted,
+            admitted_step,
+            eligible_step: m.eligible_step.unwrap_or(admitted_step),
+            first_token: clock,
+            finish: clock,
+            preemptions: m.preemptions,
+            output_digest: 0.0,
+            status: RequestStatus::Failed,
+        }
+    }
+
     while finished.len() < requests.len() {
         if step >= max_steps {
             bail!("serve loop exceeded {max_steps} steps (KV budget too tight to converge?)");
         }
 
-        queue.mark_eligible(clock, step);
+        // The step body runs inside a labeled block that separates the two
+        // failure domains: a ring-command failure breaks out with the error
+        // (recoverable — the ring is poisoned, the session is not), while
+        // driver-side invariant violations keep `?` and stay terminal.
+        let ring_err: Option<anyhow::Error> = 'body: {
+            queue.mark_eligible(clock, step);
 
-        // --- admission: reserve prompt lengths against the KV budget
-        while running.len() < opts.max_batch {
-            let projected: usize = cache.total_tokens()
-                + running.iter().map(|r| r.req.seq_len - r.next_prefill).sum::<usize>();
-            let budget = opts.kv_budget_tokens;
-            let Some((req, eligible)) = queue.pop_if(step, |c| projected + c.seq_len <= budget)
-            else {
-                break;
-            };
-            let m = meta
-                .get_mut(&req.id)
-                .with_context(|| format!("admitting request {} with no bookkeeping entry", req.id))?;
-            if m.eligible_step.is_none() {
-                m.eligible_step = Some(eligible);
-            }
-            if m.admitted.is_none() {
-                m.admitted = Some((clock, step));
-            }
-            if let Some(ring) = ring.as_mut() {
-                ring.admit(req.id)
-                    .with_context(|| format!("step {step}: admitting request {}", req.id))?;
-            }
-            running.push(Running { req, next_prefill: 0, produced: 0 });
-        }
-
-        // --- idle: jump the virtual clock to the next arrival
-        if running.is_empty() {
-            match queue.next_arrival_after(clock) {
-                Some(t) => {
-                    clock = t;
-                    continue;
-                }
-                None => bail!("serve loop stalled with no admissible requests"),
-            }
-        }
-
-        // --- compose the micro-step (preempting if decode growth exceeds
-        //     the budget)
-        let (decode_idx, prefill_plan) = loop {
-            let mut step_tokens = 0usize;
-            let mut decode_idx: Vec<usize> = Vec::new();
-            for (i, r) in running.iter().enumerate() {
-                if r.is_decoding() && step_tokens < opts.max_step_tokens {
-                    decode_idx.push(i);
-                    step_tokens += 1;
-                }
-            }
-            let resident = cache.total_tokens();
-            if resident + decode_idx.len() > opts.kv_budget_tokens && running.len() > 1 {
-                let v = pick_victim(&running)
-                    .with_context(|| format!("step {step}: preempting from an empty running set"))?;
-                let victim = running.swap_remove(v);
-                cache.free(victim.req.id);
-                if let Some(ring) = ring.as_mut() {
-                    ring.evict(victim.req.id)
-                        .with_context(|| format!("step {step}: evicting request {}", victim.req.id))?;
-                }
-                let m = meta.get_mut(&victim.req.id).with_context(|| {
-                    format!("preempting request {} with no bookkeeping entry", victim.req.id)
+            // --- admission: reserve prompt lengths against the KV budget
+            while running.len() < opts.max_batch {
+                let projected: usize = cache.total_tokens()
+                    + running.iter().map(|r| r.req.seq_len - r.next_prefill).sum::<usize>();
+                let budget = opts.kv_budget_tokens;
+                let Some((req, eligible)) = queue.pop_if(step, |c| projected + c.seq_len <= budget)
+                else {
+                    break;
+                };
+                let m = meta.get_mut(&req.id).with_context(|| {
+                    format!("admitting request {} with no bookkeeping entry", req.id)
                 })?;
-                m.preemptions += 1;
-                m.first_token = None;
-                m.digest = 0.0;
-                preemptions += 1;
-                outputs.remove(&victim.req.id);
-                queue.push(victim.req);
-                continue;
+                if m.eligible_step.is_none() {
+                    m.eligible_step = Some(eligible);
+                }
+                if m.admitted.is_none() {
+                    m.admitted = Some((clock, step));
+                }
+                // committed to `running` before the ring call: if the admit
+                // fails, recovery re-queues the request instead of losing it
+                running.push(Running { req, next_prefill: 0, produced: 0 });
+                if let Some(ring) = ring.as_mut() {
+                    if let Err(e) = ring.admit(req.id) {
+                        break 'body Some(
+                            e.context(format!("step {step}: admitting request {}", req.id)),
+                        );
+                    }
+                }
             }
-            let mut headroom =
-                opts.kv_budget_tokens.saturating_sub(resident + decode_idx.len());
-            let mut prefill_plan: Vec<(usize, usize)> = Vec::new();
-            for (i, r) in running.iter().enumerate() {
-                if r.is_decoding() {
+
+            // --- idle: jump the virtual clock to the next arrival
+            if running.is_empty() {
+                match queue.next_arrival_after(clock) {
+                    Some(t) => {
+                        clock = t;
+                        continue;
+                    }
+                    None => bail!("serve loop stalled with no admissible requests"),
+                }
+            }
+
+            // --- compose the micro-step (preempting if decode growth
+            //     exceeds the budget)
+            let (decode_idx, prefill_plan) = loop {
+                let mut step_tokens = 0usize;
+                let mut decode_idx: Vec<usize> = Vec::new();
+                for (i, r) in running.iter().enumerate() {
+                    if r.is_decoding() && step_tokens < opts.max_step_tokens {
+                        decode_idx.push(i);
+                        step_tokens += 1;
+                    }
+                }
+                let resident = cache.total_tokens();
+                if resident + decode_idx.len() > opts.kv_budget_tokens && running.len() > 1 {
+                    let v = pick_victim(&running).with_context(|| {
+                        format!("step {step}: preempting from an empty running set")
+                    })?;
+                    let victim = running.swap_remove(v);
+                    cache.free(victim.req.id);
+                    let m = meta.get_mut(&victim.req.id).with_context(|| {
+                        format!("preempting request {} with no bookkeeping entry", victim.req.id)
+                    })?;
+                    m.preemptions += 1;
+                    m.first_token = None;
+                    m.digest = 0.0;
+                    preemptions += 1;
+                    outputs.remove(&victim.req.id);
+                    // re-queued before the ring call: a failed evict then
+                    // recovers with the victim already safe in the queue
+                    queue.push(victim.req);
+                    if let Some(ring) = ring.as_mut() {
+                        if let Err(e) = ring.evict(victim.req.id) {
+                            break 'body Some(e.context(format!(
+                                "step {step}: evicting request {}",
+                                victim.req.id
+                            )));
+                        }
+                    }
                     continue;
                 }
-                let take = (r.req.seq_len - r.next_prefill)
-                    .min(opts.chunk)
-                    .min(opts.max_step_tokens.saturating_sub(step_tokens))
-                    .min(headroom);
-                if take > 0 {
-                    prefill_plan.push((i, take));
-                    step_tokens += take;
-                    headroom -= take;
+                let mut headroom =
+                    opts.kv_budget_tokens.saturating_sub(resident + decode_idx.len());
+                let mut prefill_plan: Vec<(usize, usize)> = Vec::new();
+                for (i, r) in running.iter().enumerate() {
+                    if r.is_decoding() {
+                        continue;
+                    }
+                    let take = (r.req.seq_len - r.next_prefill)
+                        .min(opts.chunk)
+                        .min(opts.max_step_tokens.saturating_sub(step_tokens))
+                        .min(headroom);
+                    if take > 0 {
+                        prefill_plan.push((i, take));
+                        step_tokens += take;
+                        headroom -= take;
+                    }
                 }
-            }
-            break (decode_idx, prefill_plan);
-        };
+                break (decode_idx, prefill_plan);
+            };
 
-        // --- build the batch: prefill chunks enter the cache, then their
-        //     queries attend to the whole prefix (causal); decode queries
-        //     attend to their full resident context
-        let mut queries: Vec<DecodeQuery> = Vec::with_capacity(decode_idx.len() + prefill_plan.len());
-        let mut prefill_tokens = 0usize;
-        for &(i, take) in &prefill_plan {
-            let r = &running[i];
-            let start = r.next_prefill;
-            let (k, v) = source.kv(r.req.id, start, take);
-            let deltas = cache
-                .append_deltas(r.req.id, &k, &v)
-                .with_context(|| format!("step {step}: prefill append for request {}", r.req.id))?;
-            if let Some(ring) = ring.as_mut() {
-                ring.append(&deltas)
-                    .with_context(|| format!("step {step}: prefill deltas for request {}", r.req.id))?;
+            // --- build the batch: prefill chunks enter the cache, then
+            //     their queries attend to the whole prefix (causal);
+            //     decode queries attend to their full resident context
+            let mut queries: Vec<DecodeQuery> =
+                Vec::with_capacity(decode_idx.len() + prefill_plan.len());
+            let mut prefill_tokens = 0usize;
+            for &(i, take) in &prefill_plan {
+                let r = &running[i];
+                let start = r.next_prefill;
+                let (k, v) = source.kv(r.req.id, start, take);
+                let deltas = cache.append_deltas(r.req.id, &k, &v).with_context(|| {
+                    format!("step {step}: prefill append for request {}", r.req.id)
+                })?;
+                if let Some(ring) = ring.as_mut() {
+                    if let Err(e) = ring.append(&deltas) {
+                        break 'body Some(e.context(format!(
+                            "step {step}: prefill deltas for request {}",
+                            r.req.id
+                        )));
+                    }
+                }
+                queries.push(DecodeQuery {
+                    request: r.req.id,
+                    q: source.q(r.req.id, start, take),
+                    q_pos: (start as i32..(start + take) as i32).collect(),
+                });
+                prefill_tokens += take;
             }
-            queries.push(DecodeQuery {
-                request: r.req.id,
-                q: source.q(r.req.id, start, take),
-                q_pos: (start as i32..(start + take) as i32).collect(),
-            });
-            prefill_tokens += take;
-        }
-        for &i in &decode_idx {
-            let r = &running[i];
-            let pos = cache.seq_len(r.req.id);
-            debug_assert_eq!(pos, r.req.seq_len + r.produced);
-            queries.push(DecodeQuery {
-                request: r.req.id,
-                q: source.q(r.req.id, pos, 1),
-                q_pos: vec![pos as i32],
-            });
-        }
-        if queries.is_empty() {
-            bail!("serve loop composed an empty step (internal scheduling bug)");
-        }
+            for &i in &decode_idx {
+                let r = &running[i];
+                let pos = cache.seq_len(r.req.id);
+                debug_assert_eq!(pos, r.req.seq_len + r.produced);
+                queries.push(DecodeQuery {
+                    request: r.req.id,
+                    q: source.q(r.req.id, pos, 1),
+                    q_pos: vec![pos as i32],
+                });
+            }
+            if queries.is_empty() {
+                bail!("serve loop composed an empty step (internal scheduling bug)");
+            }
 
-        let batch = queries.len();
-        let running_now = running.len();
-        let t0 = clock;
-        let timer = Instant::now();
-        let res = match ring.as_mut() {
-            Some(ring) => ring
-                .step(queries)
-                .with_context(|| format!("actor-ring micro-step {step}"))?,
-            None => run_decode_ring(queries, &cache, n, &opts.engine)
-                .with_context(|| format!("spawn-per-step micro-step {step}"))?,
-        };
-        clock += timer.elapsed().as_secs_f64();
+            let batch = queries.len();
+            let running_now = running.len();
+            let t0 = clock;
+            let timer = Instant::now();
+            let res = match ring.as_mut() {
+                Some(ring) => match ring.step(queries) {
+                    Ok(res) => res,
+                    Err(e) => {
+                        break 'body Some(e.context(format!("actor-ring micro-step {step}")));
+                    }
+                },
+                None => run_decode_ring(queries, &cache, n, &opts.engine)
+                    .with_context(|| format!("spawn-per-step micro-step {step}"))?,
+            };
+            clock += timer.elapsed().as_secs_f64();
 
-        // --- advance request state
-        for &i in &decode_idx {
-            let r = &mut running[i];
-            let (out, _) = res.outputs.get(&r.req.id).with_context(|| {
-                format!("micro-step {step} produced no output for request {}", r.req.id)
-            })?;
-            meta.get_mut(&r.req.id)
-                .with_context(|| format!("request {} with no bookkeeping entry", r.req.id))?
-                .digest += out.data().iter().map(|x| x.abs() as f64).sum::<f64>();
-            if opts.keep_outputs {
-                outputs.entry(r.req.id).or_default().push(out.clone());
-            }
-            let pos = r.req.seq_len + r.produced;
-            let (k1, v1) = source.kv(r.req.id, pos, 1);
-            let deltas = cache
-                .append_deltas(r.req.id, &k1, &v1)
-                .with_context(|| format!("step {step}: decode append for request {}", r.req.id))?;
-            if let Some(ring) = ring.as_mut() {
-                ring.append(&deltas)
-                    .with_context(|| format!("step {step}: decode delta for request {}", r.req.id))?;
-            }
-            r.produced += 1;
-            total_decode += 1;
-        }
-        for &(i, take) in &prefill_plan {
-            let r = &mut running[i];
-            r.next_prefill += take;
-            total_prefill += take;
-            if r.next_prefill == r.req.seq_len {
+            // --- advance request state
+            for &i in &decode_idx {
+                let r = &mut running[i];
+                let (out, _) = res.outputs.get(&r.req.id).with_context(|| {
+                    format!("micro-step {step} produced no output for request {}", r.req.id)
+                })?;
                 meta.get_mut(&r.req.id)
                     .with_context(|| format!("request {} with no bookkeeping entry", r.req.id))?
-                    .first_token = Some(clock);
-            }
-        }
-
-        // peak residency: after this step's appends, before retirement
-        let kv_tokens = cache.total_tokens();
-
-        // --- retire finished requests
-        let mut still = Vec::with_capacity(running.len());
-        for r in running.drain(..) {
-            if r.is_decoding() && r.produced == r.req.decode_tokens {
-                let m = meta.get(&r.req.id).with_context(|| {
-                    format!("retiring request {} with no bookkeeping entry", r.req.id)
-                })?;
-                let (admitted, admitted_step) = m.admitted.with_context(|| {
-                    format!("request {} finished without ever being admitted", r.req.id)
-                })?;
-                finished.push(ServedRequest {
-                    id: r.req.id,
-                    seq_len: r.req.seq_len,
-                    decode_tokens: r.req.decode_tokens,
-                    priority: r.req.priority,
-                    arrival: r.req.arrival,
-                    admitted,
-                    admitted_step,
-                    eligible_step: m.eligible_step.unwrap_or(admitted_step),
-                    first_token: m.first_token.unwrap_or(clock),
-                    finish: clock,
-                    preemptions: m.preemptions,
-                    output_digest: m.digest,
-                });
-                cache.free(r.req.id);
-                if let Some(ring) = ring.as_mut() {
-                    ring.evict(r.req.id)
-                        .with_context(|| format!("step {step}: retiring request {}", r.req.id))?;
+                    .digest += out.data().iter().map(|x| x.abs() as f64).sum::<f64>();
+                if opts.keep_outputs {
+                    outputs.entry(r.req.id).or_default().push(out.clone());
                 }
-            } else {
-                still.push(r);
+                let pos = r.req.seq_len + r.produced;
+                let (k1, v1) = source.kv(r.req.id, pos, 1);
+                let deltas = cache.append_deltas(r.req.id, &k1, &v1).with_context(|| {
+                    format!("step {step}: decode append for request {}", r.req.id)
+                })?;
+                if let Some(ring) = ring.as_mut() {
+                    if let Err(e) = ring.append(&deltas) {
+                        break 'body Some(e.context(format!(
+                            "step {step}: decode delta for request {}",
+                            r.req.id
+                        )));
+                    }
+                }
+                r.produced += 1;
+                total_decode += 1;
             }
-        }
-        running = still;
+            for &(i, take) in &prefill_plan {
+                let r = &mut running[i];
+                r.next_prefill += take;
+                total_prefill += take;
+                if r.next_prefill == r.req.seq_len {
+                    meta.get_mut(&r.req.id)
+                        .with_context(|| format!("request {} with no bookkeeping entry", r.req.id))?
+                        .first_token = Some(clock);
+                }
+            }
 
-        trace.push(StepTrace {
-            step,
-            t0,
-            t1: clock,
-            batch,
-            running: running_now,
-            queued: queue.arrived_len(clock),
-            prefill_tokens,
-            decode_tokens: decode_idx.len(),
-            kv_tokens,
-            kv_budget: opts.kv_budget_tokens,
-        });
-        step += 1;
+            // peak residency: after this step's appends, before retirement
+            let kv_tokens = cache.total_tokens();
+
+            // --- retire finished requests (committed to `finished` before
+            //     the ring call: the work is done and delivered, so a
+            //     failed evict recovers without replaying it)
+            let mut i = 0;
+            while i < running.len() {
+                if running[i].is_decoding() && running[i].produced == running[i].req.decode_tokens
+                {
+                    let r = running.swap_remove(i);
+                    let m = meta.get(&r.req.id).with_context(|| {
+                        format!("retiring request {} with no bookkeeping entry", r.req.id)
+                    })?;
+                    let (admitted, admitted_step) = m.admitted.with_context(|| {
+                        format!("request {} finished without ever being admitted", r.req.id)
+                    })?;
+                    finished.push(ServedRequest {
+                        id: r.req.id,
+                        seq_len: r.req.seq_len,
+                        decode_tokens: r.req.decode_tokens,
+                        priority: r.req.priority,
+                        arrival: r.req.arrival,
+                        admitted,
+                        admitted_step,
+                        eligible_step: m.eligible_step.unwrap_or(admitted_step),
+                        first_token: m.first_token.unwrap_or(clock),
+                        finish: clock,
+                        preemptions: m.preemptions,
+                        output_digest: m.digest,
+                        status: RequestStatus::Completed,
+                    });
+                    cache.free(r.req.id);
+                    if let Some(ring) = ring.as_mut() {
+                        if let Err(e) = ring.evict(r.req.id) {
+                            break 'body Some(e.context(format!(
+                                "step {step}: retiring request {}",
+                                r.req.id
+                            )));
+                        }
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+
+            trace.push(StepTrace {
+                step,
+                t0,
+                t1: clock,
+                batch,
+                running: running_now,
+                queued: queue.arrived_len(clock),
+                prefill_tokens,
+                decode_tokens: decode_idx.len(),
+                kv_tokens,
+                kv_budget: opts.kv_budget_tokens,
+            });
+            step += 1;
+            None
+        };
+
+        // --- ring recovery: the poisoned ring is gone; replay in-flight
+        //     work on a fresh one, or fail the backlog gracefully once the
+        //     budget is spent. The step counter does not advance — a
+        //     recovery is not a micro-step.
+        if let Some(err) = ring_err {
+            let old = ring
+                .take()
+                .context("ring failure reported by the spawn-per-step runtime (driver bug)")?;
+            fault_acc.watchdog_retries += old.retries();
+            drop(old); // bounded-wait: joins exited workers, detaches stalled ones
+
+            if fault_acc.recoveries >= opts.max_recoveries {
+                // budget exhausted: fail what's left instead of erroring
+                // the whole session away
+                fault_acc.failure = Some(format!("{err:#}"));
+                for r in running.drain(..) {
+                    outputs.remove(&r.req.id);
+                    let m = meta.get(&r.req.id).copied().unwrap_or_default();
+                    finished.push(abandoned(&r.req, m, clock, step));
+                }
+                for req in queue.drain() {
+                    let m = meta.get(&req.id).copied().unwrap_or_default();
+                    finished.push(abandoned(&req, m, clock, step));
+                }
+                fault_acc.failed_requests =
+                    finished.iter().filter(|r| r.status == RequestStatus::Failed).count();
+                fault_acc.faults_injected = injector.as_ref().map_or(0, |i| i.fired());
+                finished.sort_by_key(|r| r.id);
+                return Ok(ContinuousServeReport {
+                    requests: finished,
+                    steps: trace,
+                    total_prefill_tokens: total_prefill,
+                    total_decode_tokens: total_decode,
+                    preemptions,
+                    wall: clock,
+                    outputs,
+                    faults: fault_acc,
+                });
+            }
+
+            fault_acc.recoveries += 1;
+            for r in running.drain(..) {
+                fault_acc.replayed_tokens += r.progress();
+                let m = meta.get_mut(&r.req.id).with_context(|| {
+                    format!("recovering request {} with no bookkeeping entry", r.req.id)
+                })?;
+                m.first_token = None;
+                m.digest = 0.0;
+                outputs.remove(&r.req.id);
+                queue.push(r.req);
+            }
+            if opts.degrade_on_recovery && devices_now > 1 {
+                devices_now -= 1;
+            }
+            // fresh cache and ring: every re-queued request replays its
+            // prompt and decode tokens from the deterministic source
+            cache = KvCache::new(devices_now, opts.heads, opts.head_dim, opts.chunk);
+            ring = Some(
+                ActorRing::spawn_with(
+                    devices_now,
+                    opts.heads,
+                    opts.head_dim,
+                    &opts.engine,
+                    policy,
+                    injector.clone(),
+                )
+                .context("respawning the actor ring after a failure")?,
+            );
+        }
     }
 
     if let Some(mut ring) = ring.take() {
+        // survived-stall retries on a ring that was never poisoned
+        fault_acc.watchdog_retries += ring.retries();
         let drained = ring.drain().context("draining the serve session's actor ring")?;
         // conservation: every token the cache grew by crossed the ring as
-        // a delta exactly once (replays after preemption included)
-        debug_assert_eq!(
-            drained.delta_tokens(),
-            total_prefill + total_decode,
-            "actor delta tokens must equal KV growth"
-        );
+        // a delta exactly once (replays after preemption included). A
+        // recovery replaces the ring mid-session, so its drain only saw
+        // the post-recovery traffic — the invariant is per-ring, not
+        // per-session, and is only asserted when no recovery happened.
+        if fault_acc.recoveries == 0 {
+            debug_assert_eq!(
+                drained.delta_tokens(),
+                total_prefill + total_decode,
+                "actor delta tokens must equal KV growth"
+            );
+        }
         ring.shutdown().context("shutting down the serve session's actor ring")?;
     }
+    fault_acc.faults_injected = injector.as_ref().map_or(0, |i| i.fired());
 
     finished.sort_by_key(|r| r.id);
     Ok(ContinuousServeReport {
@@ -754,6 +1015,7 @@ pub fn serve_continuous(
         preemptions,
         wall: clock,
         outputs,
+        faults: fault_acc,
     })
 }
 
@@ -811,7 +1073,9 @@ mod tests {
         assert!(rep.wall > 0.0);
         assert!(rep.throughput_tokens_per_s() > 0.0);
         assert_eq!(rep.max_occupancy(), 2, "simultaneous arrivals must batch");
+        assert!(rep.faults.is_clean(), "fault-free run must report clean accounting");
         for r in &rep.requests {
+            assert_eq!(r.status, RequestStatus::Completed);
             assert!(r.ttft() >= 0.0);
             assert!(r.tpot() > 0.0);
             assert!(r.finish >= r.first_token && r.first_token >= r.admitted);
@@ -857,7 +1121,7 @@ mod tests {
         for key in [
             "requests", "preemptions", "wall_s", "prefill_tokens", "decode_tokens",
             "throughput_tok_s", "decode_tok_s", "ttft", "tpot", "queue_delay",
-            "occupancy", "steps", "per_request",
+            "occupancy", "faults", "steps", "per_request",
         ] {
             assert!(j.get(key) != &Json::Null, "missing field '{key}'");
         }
@@ -870,6 +1134,9 @@ mod tests {
         for key in ["id", "seq_len", "decode_tokens", "priority", "output_digest"] {
             assert!(r0.get(key) != &Json::Null, "missing per_request field '{key}'");
         }
+        assert_eq!(r0.get("status").as_str(), Some("completed"));
+        assert_eq!(j.get("faults").get("recoveries").as_usize(), Some(0));
+        assert!(matches!(j.get("faults").get("failure"), &Json::Null));
     }
 
     #[test]
@@ -906,6 +1173,26 @@ mod tests {
         let mut nc = o.clone();
         nc.engine.causal = false;
         assert!(serve_continuous(&[req(0, 16, 2)], &nc).is_err());
+        // a zero watchdog can never collect a reply
+        let mut wd = o.clone();
+        wd.watchdog_ms = 0;
+        assert!(serve_continuous(&[req(0, 16, 2)], &wd).is_err());
+        // fault plans need the actors runtime to deliver into
+        let mut fp = o.clone();
+        fp.runtime = ServeRuntime::SpawnPerStep;
+        fp.faults = Some(FaultPlan::parse("panic@0:0").unwrap());
+        let e = serve_continuous(&[req(0, 16, 2)], &fp).unwrap_err().to_string();
+        assert!(e.contains("actors runtime"), "{e}");
+        // ...but an *empty* plan is fine on either runtime
+        fp.faults = Some(FaultPlan::default());
+        assert!(serve_continuous(&[req(0, 16, 2)], &fp).is_ok());
+    }
+
+    #[test]
+    fn request_status_names() {
+        assert_eq!(RequestStatus::default(), RequestStatus::Completed);
+        assert_eq!(RequestStatus::Completed.name(), "completed");
+        assert_eq!(RequestStatus::Failed.name(), "failed");
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub mod source;
 
 pub use continuous::{
     serve_continuous, serve_sequential, ContinuousServeOpts, ContinuousServeReport,
-    ServeRuntime, ServedRequest, StepTrace,
+    RequestStatus, ServeRuntime, ServedRequest, StepTrace,
 };
 pub use queue::AdmissionQueue;
 pub use source::TokenSource;

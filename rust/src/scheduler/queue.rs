@@ -81,7 +81,7 @@ impl AdmissionQueue {
             .iter()
             .map(|w| w.req.arrival)
             .filter(|&a| a > now)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(f64::total_cmp)
     }
 
     fn effective_class(&self, w: &Waiting, step: u64) -> usize {
@@ -109,7 +109,7 @@ impl AdmissionQueue {
             let better = match &best {
                 None => true,
                 Some((_, bk)) => {
-                    key.0.cmp(&bk.0).then(key.1.partial_cmp(&bk.1).unwrap()).then(key.2.cmp(&bk.2))
+                    key.0.cmp(&bk.0).then(key.1.total_cmp(&bk.1)).then(key.2.cmp(&bk.2))
                         == std::cmp::Ordering::Less
                 }
             };
@@ -122,7 +122,18 @@ impl AdmissionQueue {
             return None;
         }
         let w = self.waiting.swap_remove(i);
-        Some((w.req, w.eligible_step.expect("eligible by construction")))
+        // Eligible by construction (the scan skips unstamped entries); in
+        // release builds an impossible miss degrades to "eligible now"
+        // instead of a panic on the serve hot path.
+        debug_assert!(w.eligible_step.is_some(), "pop_if selected an unstamped request");
+        Some((w.req, w.eligible_step.unwrap_or(step)))
+    }
+
+    /// Remove and return every waiting request, arrived or not — the
+    /// terminal teardown path when a serve session exhausts its recovery
+    /// budget and must mark the backlog failed instead of serving it.
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).map(|w| w.req).collect()
     }
 }
 
@@ -180,6 +191,21 @@ mod tests {
         // boosted to class 0 and FCFS by arrival beats the interactive
         assert_eq!(q.pop_if(4, |_| true).unwrap().0.id, 0);
         assert_eq!(q.pop_if(4, |_| true).unwrap().0.id, 2);
+    }
+
+    #[test]
+    fn drain_empties_the_queue_arrived_or_not() {
+        let mut q = AdmissionQueue::new(8);
+        q.push(req(0, 0.0, Priority::Interactive));
+        q.push(req(1, 99.0, Priority::Batch)); // far-future arrival
+        q.mark_eligible(1.0, 0);
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(q.is_empty());
+        assert!(q.pop_if(0, |_| true).is_none());
+        let mut ids: Vec<usize> = drained.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
     }
 
     #[test]

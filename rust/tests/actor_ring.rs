@@ -5,11 +5,13 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Duration;
 
 use tokenring::attention::attention_block;
-use tokenring::engine::actors::ActorRing;
+use tokenring::engine::actors::{ActorRing, RingPolicy};
 use tokenring::engine::decode::DecodeQuery;
+use tokenring::engine::faults::{FaultInjector, FaultPlan};
 use tokenring::engine::kv_cache::{KvCache, KvDelta};
 use tokenring::engine::EngineOpts;
 use tokenring::tensor::Tensor;
@@ -48,7 +50,7 @@ fn admit_and_load(ring: &mut ActorRing, cache: &KvCache, req: usize) {
     for dev in 0..ring.devices() {
         let (k, v, positions) = cache.device_view(req, dev).unwrap();
         if !positions.is_empty() {
-            ring.append(&[KvDelta { request: req, device: dev, k, v, positions }]).unwrap();
+            ring.append(&[KvDelta::new(req, dev, k, v, positions, 0)]).unwrap();
         }
     }
 }
@@ -173,6 +175,39 @@ fn drop_without_explicit_shutdown_joins_workers() {
     done_rx
         .recv_timeout(Duration::from_secs(30))
         .expect("dropping the ring did not join its workers within 30s");
+    helper.join().unwrap();
+}
+
+#[test]
+fn dropping_a_poisoned_ring_under_a_stalled_reply_is_bounded() {
+    // Satellite regression for ActorRing::Drop: a worker wedged in an
+    // injected 5 s stall must be detached after a bounded grace, not
+    // joined for the whole stall (let alone forever).
+    let (done_tx, done_rx) = channel();
+    let helper = std::thread::spawn(move || {
+        let mut rng = Rng::new(76);
+        let (cache, _) = filled_cache(2, &[(1, 48)], &mut rng);
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::parse("stall@0:1:5000").unwrap()));
+        let policy = RingPolicy { watchdog: Duration::from_millis(10), max_retries: 1 };
+        let mut ring =
+            ActorRing::spawn_with(2, HEADS, HEAD_DIM, &opts(), policy, Some(inj)).unwrap();
+        admit_and_load(&mut ring, &cache, 1);
+        let dq = query(&mut rng, 1, 48);
+        let err = ring.step(vec![dq]).unwrap_err().to_string();
+        assert!(err.contains("stalled"), "{err}");
+        assert!(ring.is_poisoned());
+        let t0 = std::time::Instant::now();
+        drop(ring);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "dropping the poisoned ring took {:?} (must detach, not wait out the stall)",
+            t0.elapsed()
+        );
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("dropping a poisoned ring under a stalled reply wedged the session");
     helper.join().unwrap();
 }
 

@@ -68,13 +68,38 @@ pub trait Context<T> {
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 
-impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+/// Sealed conversion that lets [`Context`] accept both
+/// `Result<T, Error>` and `Result<T, E: std::error::Error>` receivers —
+/// the same shape the real crate gets from its private `ext::StdError`
+/// trait. The two impls do not overlap because [`Error`] deliberately
+/// does not implement `std::error::Error`.
+mod ext {
+    use super::{Error, StdError};
+
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+impl<T, E: ext::IntoError> Context<T> for Result<T, E> {
     fn context<C: fmt::Display>(self, c: C) -> Result<T> {
-        self.map_err(|e| Error::from(e).context(c))
+        self.map_err(|e| ext::IntoError::into_error(e).context(c))
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.map_err(|e| Error::from(e).context(f()))
+        self.map_err(|e| ext::IntoError::into_error(e).context(f()))
     }
 }
 
@@ -142,6 +167,17 @@ mod tests {
         assert_eq!(e.to_string(), "reading manifest: disk on fire");
         let o: Option<u8> = None;
         assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("root cause")
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause");
+        let e = inner().with_context(|| format!("attempt {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "attempt 2: root cause");
     }
 
     #[test]
