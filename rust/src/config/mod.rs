@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::comm::ComputeModel;
 use crate::engine::faults::FaultPlan;
+use crate::fleet::{FleetOpts, PrefixCacheConfig, RoutePolicy};
 use crate::json_obj;
 use crate::parallelism::partition::Partition;
 use crate::parallelism::ScheduleSpec;
@@ -576,6 +577,198 @@ impl ServeConfig {
     }
 }
 
+/// A declarative fleet serving run, as checked into `configs/fleet.json`
+/// and consumed by `tokenring fleet --config configs/fleet.json`.
+///
+/// A fleet config is a [`ServeConfig`] (the per-replica session) plus the
+/// fleet keys: `replicas`, `route`, and a `cache` object
+/// (`{"enabled", "hot_entries", "warm_bytes"}`). Validation happens at
+/// load time — unknown keys at every level are rejected, the route name
+/// must be registered, an enabled cache needs non-zero tiers, and the
+/// per-replica `kv_budget_tokens` must cover the mix's largest request —
+/// and again at use time ([`FleetConfig::opts`]) for hand-built configs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// The per-replica serve session (every replica runs the same one).
+    pub serve: ServeConfig,
+    /// Replica ring groups to spawn.
+    pub replicas: usize,
+    /// Route policy name (`round_robin` | `least_loaded` |
+    /// `prefix_affinity`); see [`RoutePolicy`].
+    pub route: String,
+    /// Whether the prefix cache is consulted at all.
+    pub cache_enabled: bool,
+    /// Hot-tier capacity in entries.
+    pub hot_entries: usize,
+    /// Warm-tier capacity in bytes.
+    pub warm_bytes: usize,
+}
+
+impl FleetConfig {
+    /// Keys a fleet config may contain *beyond* [`ServeConfig::KEYS`].
+    pub const FLEET_KEYS: &'static [&'static str] = &["replicas", "route", "cache"];
+
+    /// Keys the `cache` sub-object may contain.
+    pub const CACHE_KEYS: &'static [&'static str] = &["enabled", "hot_entries", "warm_bytes"];
+
+    /// The built-in default: two round-robin replicas of the default
+    /// serve session, cache on at the [`PrefixCacheConfig`] defaults.
+    pub fn default_fleet() -> FleetConfig {
+        let cache = PrefixCacheConfig::default();
+        FleetConfig {
+            serve: ServeConfig::default_poisson(),
+            replicas: 2,
+            route: RoutePolicy::default().name().to_string(),
+            cache_enabled: cache.enabled,
+            hot_entries: cache.hot_entries,
+            warm_bytes: cache.warm_bytes,
+        }
+    }
+
+    /// Load from JSON text. The serve keys are delegated to
+    /// [`ServeConfig::from_json`] (same defaults and validation); fleet
+    /// keys fall back to [`FleetConfig::default_fleet`]; unknown keys at
+    /// the top level and inside `cache` are rejected.
+    pub fn from_json(text: &str) -> Result<FleetConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("fleet config parse: {e}"))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("fleet config must be a JSON object"))?;
+        for k in obj.keys() {
+            let known = ServeConfig::KEYS.contains(&k.as_str())
+                || Self::FLEET_KEYS.contains(&k.as_str());
+            if !known {
+                bail!(
+                    "unknown fleet config key '{k}' (valid: {}, {})",
+                    ServeConfig::KEYS.join(", "),
+                    Self::FLEET_KEYS.join(", ")
+                );
+            }
+        }
+        // the serve part is the object minus the fleet keys, revalidated
+        // through the serve loader so the two stay byte-compatible
+        let mut serve_obj = obj.clone();
+        for k in Self::FLEET_KEYS {
+            serve_obj.remove(*k);
+        }
+        let serve = ServeConfig::from_json(&Json::Obj(serve_obj).to_string())?;
+        let d = FleetConfig::default_fleet();
+        let route = match j.get("route") {
+            Json::Null => d.route.clone(),
+            v => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("fleet config: 'route' must be a string"))?,
+        };
+        let (cache_enabled, hot_entries, warm_bytes) = match j.get("cache") {
+            Json::Null => (d.cache_enabled, d.hot_entries, d.warm_bytes),
+            c @ Json::Obj(map) => {
+                for k in map.keys() {
+                    if !Self::CACHE_KEYS.contains(&k.as_str()) {
+                        bail!(
+                            "unknown fleet config key 'cache.{k}' (valid: {})",
+                            Self::CACHE_KEYS.join(", ")
+                        );
+                    }
+                }
+                let enabled = match c.get("enabled") {
+                    Json::Null => d.cache_enabled,
+                    v => v.as_bool().ok_or_else(|| {
+                        anyhow!("fleet config: 'cache.enabled' must be a bool")
+                    })?,
+                };
+                let cache_usize = |key: &str, default: usize| -> Result<usize> {
+                    match c.get(key) {
+                        Json::Null => Ok(default),
+                        v => v.as_usize().ok_or_else(|| {
+                            anyhow!(
+                                "fleet config: 'cache.{key}' must be a non-negative integer"
+                            )
+                        }),
+                    }
+                };
+                (
+                    enabled,
+                    cache_usize("hot_entries", d.hot_entries)?,
+                    cache_usize("warm_bytes", d.warm_bytes)?,
+                )
+            }
+            _ => bail!("fleet config: 'cache' must be an object"),
+        };
+        let replicas = match j.get("replicas") {
+            Json::Null => d.replicas,
+            v => v.as_usize().ok_or_else(|| {
+                anyhow!("fleet config: 'replicas' must be a non-negative integer")
+            })?,
+        };
+        let cfg = FleetConfig {
+            serve,
+            replicas,
+            route,
+            cache_enabled,
+            hot_entries,
+            warm_bytes,
+        };
+        if cfg.replicas == 0 {
+            bail!("fleet config: 'replicas' must be positive");
+        }
+        RoutePolicy::parse(&cfg.route)?; // name must be registered
+        cfg.cache_config().validate().map_err(|e| e.context("fleet config"))?;
+        Ok(cfg)
+    }
+
+    /// Serialize back to JSON (the serve keys plus the fleet keys);
+    /// `from_json` of the output reproduces `self` exactly.
+    pub fn to_json(&self) -> Json {
+        let mut root = self.serve.to_json();
+        if let Json::Obj(map) = &mut root {
+            map.insert("replicas".to_string(), Json::from(self.replicas));
+            map.insert("route".to_string(), Json::from(self.route.clone()));
+            map.insert(
+                "cache".to_string(),
+                json_obj![
+                    ("enabled", self.cache_enabled),
+                    ("hot_entries", self.hot_entries),
+                    ("warm_bytes", self.warm_bytes),
+                ],
+            );
+        }
+        root
+    }
+
+    /// The prefix-cache sizing this config describes.
+    pub fn cache_config(&self) -> PrefixCacheConfig {
+        PrefixCacheConfig {
+            enabled: self.cache_enabled,
+            hot_entries: self.hot_entries,
+            warm_bytes: self.warm_bytes,
+        }
+    }
+
+    /// Generate the fleet's request set (deterministic in the serve
+    /// seed; the router assigns them to replicas at serve time).
+    pub fn generate(&self) -> Result<Vec<Request>> {
+        self.serve.generate()
+    }
+
+    /// The fleet options this config describes. Re-validates the route
+    /// name, replica count, and cache sizing, so a hand-constructed
+    /// config fails here rather than mid-serve.
+    pub fn opts(&self) -> Result<FleetOpts> {
+        if self.replicas == 0 {
+            bail!("fleet config: 'replicas' must be positive");
+        }
+        let cache = self.cache_config();
+        cache.validate().map_err(|e| e.context("fleet config"))?;
+        Ok(FleetOpts {
+            replicas: self.replicas,
+            route: RoutePolicy::parse(&self.route)?,
+            cache,
+            replica: self.serve.opts()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -731,6 +924,93 @@ mod tests {
         // no faults configured → the batcher gets no injector at all
         let none = ServeConfig::from_json("{}").unwrap().opts().unwrap();
         assert!(none.faults.is_none());
+    }
+
+    #[test]
+    fn fleet_config_defaults_and_round_trip() {
+        let cfg = FleetConfig::from_json("{}").unwrap();
+        assert_eq!(cfg, FleetConfig::default_fleet());
+        assert_eq!(cfg.serve, ServeConfig::default_poisson());
+        assert_eq!(cfg.route, "round_robin");
+        assert!(cfg.cache_enabled);
+        let custom = FleetConfig::from_json(
+            r#"{"name":"fleet","mix":"shared_prefix","requests":12,"rate":4000,
+                "devices":2,"heads":2,"head_dim":8,"chunk":32,
+                "max_batch":4,"max_step_tokens":128,"kv_budget_tokens":8192,
+                "aging_steps":4,"seed":5,"replicas":3,
+                "route":"prefix_affinity",
+                "cache":{"enabled":true,"hot_entries":4,"warm_bytes":1048576}}"#,
+        )
+        .unwrap();
+        assert_eq!(custom.replicas, 3);
+        assert_eq!(custom.route, "prefix_affinity");
+        assert_eq!(custom.hot_entries, 4);
+        assert_eq!(custom.warm_bytes, 1 << 20);
+        assert_eq!(custom.serve.mix, "shared_prefix");
+        assert_eq!(custom.serve.requests, 12);
+        // parse → serialize → parse is the identity
+        let again = FleetConfig::from_json(&custom.to_json().to_string()).unwrap();
+        assert_eq!(again, custom);
+        // partial cache objects inherit the remaining defaults
+        let partial = FleetConfig::from_json(r#"{"cache":{"hot_entries":2}}"#).unwrap();
+        assert_eq!(partial.hot_entries, 2);
+        assert_eq!(partial.warm_bytes, FleetConfig::default_fleet().warm_bytes);
+        assert!(partial.cache_enabled);
+    }
+
+    #[test]
+    fn fleet_config_builds_opts_and_workload() {
+        let cfg = FleetConfig::from_json(
+            r#"{"mix":"shared_prefix","replicas":2,"route":"least_loaded"}"#,
+        )
+        .unwrap();
+        let reqs = cfg.generate().unwrap();
+        assert_eq!(reqs.len(), cfg.serve.requests);
+        assert!(reqs.iter().any(|r| r.prefix.is_some()), "shared_prefix mix tags prefixes");
+        let opts = cfg.opts().unwrap();
+        assert_eq!(opts.replicas, 2);
+        assert_eq!(opts.route, crate::fleet::RoutePolicy::LeastLoaded);
+        assert!(opts.cache.enabled);
+        assert_eq!(opts.replica.devices, cfg.serve.devices);
+        // opts() re-validates for hand-constructed configs (use-time)
+        let mut bad = cfg.clone();
+        bad.replicas = 0;
+        assert!(bad.opts().is_err());
+        let mut bad = cfg.clone();
+        bad.route = "random".to_string();
+        assert!(bad.opts().is_err());
+        let mut bad = cfg.clone();
+        bad.warm_bytes = 0;
+        assert!(bad.opts().is_err(), "enabled cache needs a warm budget");
+        bad.cache_enabled = false;
+        assert!(bad.opts().is_ok(), "disabled cache may be zero-sized");
+    }
+
+    #[test]
+    fn fleet_config_rejected_at_load() {
+        // unknown keys at every level
+        assert!(FleetConfig::from_json(r#"{"replicaz":2}"#).is_err());
+        assert!(FleetConfig::from_json(r#"{"cache":{"warmbytes":8}}"#).is_err());
+        // serve-level validation still applies through the fleet loader
+        assert!(FleetConfig::from_json(r#"{"mix":"warp"}"#).is_err());
+        assert!(FleetConfig::from_json(r#"{"kv_budget_tokens":64}"#).is_err());
+        // wrong-typed fleet fields
+        assert!(FleetConfig::from_json(r#"{"route":42}"#).is_err());
+        assert!(FleetConfig::from_json(r#"{"cache":[1,2]}"#).is_err());
+        assert!(FleetConfig::from_json(r#"{"cache":{"enabled":"yes"}}"#).is_err());
+        assert!(FleetConfig::from_json(r#"{"cache":{"hot_entries":"big"}}"#).is_err());
+        // zero replicas and unregistered routes
+        assert!(FleetConfig::from_json(r#"{"replicas":0}"#).is_err());
+        let e = FleetConfig::from_json(r#"{"route":"random"}"#).unwrap_err().to_string();
+        assert!(e.contains("random") && e.contains("prefix_affinity"), "{e}");
+        // an enabled cache with a zero-sized tier is unusable
+        assert!(FleetConfig::from_json(r#"{"cache":{"hot_entries":0}}"#).is_err());
+        assert!(FleetConfig::from_json(r#"{"cache":{"warm_bytes":0}}"#).is_err());
+        // ...but zero tiers are fine when the cache is off
+        assert!(FleetConfig::from_json(
+            r#"{"cache":{"enabled":false,"hot_entries":0,"warm_bytes":0}}"#
+        )
+        .is_ok());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
+use crate::fleet::FleetReport;
 use crate::json_obj;
 use crate::metrics::timeline_from_sim;
 use crate::runtime::default_artifact_dir;
@@ -264,6 +265,94 @@ pub fn write_serve_artifact(name: &str, report: &ContinuousServeReport) -> Resul
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Fleet-run renderers (multi-replica router + prefix cache)
+// ---------------------------------------------------------------------------
+
+/// Headline fleet percentiles (merged across replicas) plus the token
+/// accounting, in the [`serve_summary_table`] shape.
+pub fn fleet_summary_table(report: &FleetReport) -> String {
+    let mut t = Table::new(&["metric", "p50 (ms)", "p95 (ms)", "mean (ms)", "max (ms)", "n"]);
+    for (name, s) in [
+        ("ttft", report.ttft_summary()),
+        ("tpot", report.tpot_summary()),
+        ("queue_delay", report.queue_delay_summary()),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{:.3}", s.p50 * 1e3),
+            format!("{:.3}", s.p95 * 1e3),
+            format!("{:.3}", s.mean * 1e3),
+            format!("{:.3}", s.max * 1e3),
+            s.n.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Per-replica occupancy rows: what the router assigned and what each
+/// replica actually did with it.
+pub fn fleet_replica_table(report: &FleetReport) -> String {
+    let mut t = Table::new(&[
+        "replica", "assigned", "served", "prefill tok", "elided tok",
+        "decode tok", "preempt", "max batch", "wall (ms)",
+    ]);
+    for (i, r) in report.per_replica.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            report.assigned[i].to_string(),
+            r.requests.len().to_string(),
+            r.total_prefill_tokens.to_string(),
+            r.prefill_tokens_elided.to_string(),
+            r.total_decode_tokens.to_string(),
+            r.preemptions.to_string(),
+            r.max_occupancy().to_string(),
+            format!("{:.3}", r.wall * 1e3),
+        ]);
+    }
+    t.render()
+}
+
+/// One-line cache digest for the CLI: hit/miss/tier counters and the
+/// prefill work elided.
+pub fn fleet_cache_line(report: &FleetReport) -> String {
+    let s = report.cache_stats();
+    format!(
+        "cache: {} lookups, {} hot + {} warm hits ({:.0}% hit rate), {} misses, \
+         {} demotions, {} evictions, {} prefill tokens elided",
+        s.lookups,
+        s.hits_hot,
+        s.hits_warm,
+        s.hit_rate() * 100.0,
+        s.misses,
+        s.demotions,
+        s.evictions,
+        report.prefill_tokens_elided()
+    )
+}
+
+/// Write a fleet report's JSON artifact to an explicit path (parent dirs
+/// created).
+pub fn write_fleet_json(path: &Path, report: &FleetReport) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, report.to_json().to_string())
+        .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Write the fleet artifact under the default artifact directory
+/// (`fleet/BENCH_<name>.json`), returning the path.
+pub fn write_fleet_artifact(name: &str, report: &FleetReport) -> Result<PathBuf> {
+    let path = default_artifact_dir().join("fleet").join(format!("BENCH_{name}.json"));
+    write_fleet_json(&path, report)?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::Experiment;
@@ -372,6 +461,7 @@ mod tests {
             total_decode_tokens: 2,
             preemptions: 0,
             wall: 0.004,
+            prefill_tokens_elided: 0,
             outputs: Default::default(),
             faults: Default::default(),
         }
@@ -407,6 +497,42 @@ mod tests {
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("requests").as_usize(), Some(1));
         assert!(j.get("occupancy").get("max").as_usize().unwrap() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn fleet_report() -> FleetReport {
+        use crate::fleet::{PrefixCache, PrefixCacheConfig, RoutePolicy};
+        FleetReport {
+            route: RoutePolicy::RoundRobin,
+            assigned: vec![1, 0],
+            per_replica: vec![serve_report(), ContinuousServeReport::default()],
+            cache: PrefixCache::new(PrefixCacheConfig::default()).unwrap(),
+        }
+    }
+
+    #[test]
+    fn fleet_tables_and_cache_line_render() {
+        let r = fleet_report();
+        let s = fleet_summary_table(&r);
+        assert!(s.contains("ttft") && s.contains("tpot") && s.contains("queue_delay"));
+        let t = fleet_replica_table(&r);
+        assert!(t.contains("replica") && t.contains("elided tok"));
+        assert_eq!(t.lines().count(), 4, "header + rule + one row per replica");
+        let c = fleet_cache_line(&r);
+        assert!(c.contains("0 lookups") && c.contains("hit rate"));
+    }
+
+    #[test]
+    fn fleet_artifact_writes_and_parses() {
+        let dir = std::env::temp_dir().join("tokenring_fleet_render_test");
+        let path = dir.join("nested").join("BENCH_fleet.json");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_fleet_json(&path, &fleet_report()).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("replicas").as_usize(), Some(2));
+        assert_eq!(j.get("route").as_str(), Some("round_robin"));
+        assert_eq!(j.get("per_replica").as_arr().unwrap().len(), 2);
+        assert!(j.get("cache").get("enabled").as_bool().is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

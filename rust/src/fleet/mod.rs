@@ -1,0 +1,355 @@
+//! Fleet serving: a router in front of N independent replica serve
+//! sessions sharing a content-addressed KV prefix cache.
+//!
+//! Dataflow (ARCHITECTURE.md §Fleet layer):
+//!
+//! ```text
+//!  requests ──▶ Router (round_robin | least_loaded | prefix_affinity)
+//!                 │                        │
+//!                 │   PrefixCache lookup/insert (hot ⇄ warm tiers)
+//!                 │        hit ──▶ WarmStart for the request
+//!                 ▼
+//!       replica buckets + warm maps ──▶ par_map:
+//!            serve_continuous_warm per replica (own ActorRing,
+//!            KV budget, fault policy) ──▶ FleetReport (merged
+//!            percentiles + per-replica reports + cache counters)
+//! ```
+//!
+//! Each replica is a full [`serve_continuous_warm`] session: its own
+//! [`crate::engine::actors::ActorRing`], KV budget, admission queue, and
+//! fault policy, driven concurrently via
+//! [`crate::simulator::sweep::par_map`]. The dispatcher walks requests in
+//! arrival order; for each shared-prefix request it consults the
+//! [`PrefixCache`] under the prefix's content address
+//! ([`TokenSource::prefix_key`]): a hit becomes a [`WarmStart`] — the
+//! replica admits the request at the cached position and skips the
+//! prefix's prefill micro-steps — while a miss inserts the prefix
+//! (synthesized by [`TokenSource::prefix_kv`], bit-identical to what any
+//! member request prefills) for the next member to hit. Warm-started
+//! requests are numerically identical to cold ones (`tests/fleet.rs`),
+//! so the cache changes *work*, never *answers*.
+//!
+//! Replica seeds are shared and request ids are globally unique, so a
+//! request's content — and therefore its outputs — do not depend on
+//! which replica serves it: routing policy is a pure performance choice.
+
+pub mod prefix_cache;
+pub mod router;
+
+pub use prefix_cache::{CacheStats, CachedPrefix, PrefixCache, PrefixCacheConfig};
+pub use router::{RoutePolicy, Router};
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json_obj;
+use crate::scheduler::{
+    serve_continuous_warm, ContinuousServeOpts, ContinuousServeReport, TokenSource, WarmStart,
+};
+use crate::simulator::sweep::par_map;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::Request;
+
+/// Options for a fleet serve run.
+#[derive(Debug, Clone)]
+pub struct FleetOpts {
+    /// Replica ring groups to spawn.
+    pub replicas: usize,
+    /// Request-dispatch policy.
+    pub route: RoutePolicy,
+    /// Prefix-cache sizing (`enabled: false` turns warm starts off).
+    pub cache: PrefixCacheConfig,
+    /// Per-replica serve options (every replica runs the same ones; the
+    /// shared `seed` is what makes routing output-invariant).
+    pub replica: ContinuousServeOpts,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            replicas: 2,
+            route: RoutePolicy::default(),
+            cache: PrefixCacheConfig::default(),
+            replica: ContinuousServeOpts::default(),
+        }
+    }
+}
+
+/// Aggregate report of a fleet serve run; serialized as
+/// `BENCH_fleet.json` (EXPERIMENTS.md §Fleet).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// The dispatch policy that ran.
+    pub route: RoutePolicy,
+    /// Requests assigned per replica (dispatch-order occupancy).
+    pub assigned: Vec<usize>,
+    /// One full serve report per replica (empty replicas carry a default
+    /// all-zero report).
+    pub per_replica: Vec<ContinuousServeReport>,
+    /// The prefix cache in its end-of-run state (counters + residency).
+    pub cache: PrefixCache,
+}
+
+impl FleetReport {
+    /// Requests served across the fleet.
+    pub fn requests(&self) -> usize {
+        self.per_replica.iter().map(|r| r.requests.len()).sum()
+    }
+
+    /// Fleet TTFT percentiles: per-replica summaries pooled via
+    /// [`Summary::merge`] (exact n/mean/std/min/max, approximate
+    /// percentiles — the per-replica reports keep the exact ones).
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::merge(&self.per_replica.iter().map(|r| r.ttft_summary()).collect::<Vec<_>>())
+    }
+
+    /// Fleet TPOT percentiles (pooled; see [`FleetReport::ttft_summary`]).
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::merge(&self.per_replica.iter().map(|r| r.tpot_summary()).collect::<Vec<_>>())
+    }
+
+    /// Fleet queue-delay percentiles (pooled).
+    pub fn queue_delay_summary(&self) -> Summary {
+        Summary::merge(
+            &self.per_replica.iter().map(|r| r.queue_delay_summary()).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Fleet wall time: replicas run concurrently, so the slowest replica
+    /// bounds the run.
+    pub fn wall(&self) -> f64 {
+        self.per_replica.iter().map(|r| r.wall).fold(0.0, f64::max)
+    }
+
+    /// Prompt tokens prefilled across replicas.
+    pub fn total_prefill_tokens(&self) -> usize {
+        self.per_replica.iter().map(|r| r.total_prefill_tokens).sum()
+    }
+
+    /// Decode tokens generated across replicas.
+    pub fn total_decode_tokens(&self) -> usize {
+        self.per_replica.iter().map(|r| r.total_decode_tokens).sum()
+    }
+
+    /// Prefill work the cache elided across replicas.
+    pub fn prefill_tokens_elided(&self) -> usize {
+        self.per_replica.iter().map(|r| r.prefill_tokens_elided).sum()
+    }
+
+    /// Preemptions across replicas.
+    pub fn preemptions(&self) -> usize {
+        self.per_replica.iter().map(|r| r.preemptions).sum()
+    }
+
+    /// End-of-run cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The `BENCH_fleet.json` artifact schema (EXPERIMENTS.md §Fleet).
+    pub fn to_json(&self) -> Json {
+        let per_replica: Vec<Json> = self
+            .per_replica
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut row = r.to_json();
+                if let Json::Obj(map) = &mut row {
+                    map.insert("replica".into(), Json::from(i));
+                    map.insert("assigned".into(), Json::from(self.assigned[i]));
+                }
+                row
+            })
+            .collect();
+        json_obj![
+            ("replicas", self.per_replica.len()),
+            ("route", self.route.name()),
+            ("requests", self.requests()),
+            ("prefill_tokens", self.total_prefill_tokens()),
+            ("prefill_tokens_elided", self.prefill_tokens_elided()),
+            ("decode_tokens", self.total_decode_tokens()),
+            ("preemptions", self.preemptions()),
+            ("wall_s", self.wall()),
+            ("ttft", self.ttft_summary().to_json()),
+            ("tpot", self.tpot_summary().to_json()),
+            ("queue_delay", self.queue_delay_summary().to_json()),
+            ("cache", self.cache.to_json()),
+            ("per_replica", Json::Arr(per_replica)),
+        ]
+    }
+}
+
+/// Serve `requests` across a fleet of replicas; see the module docs for
+/// the dispatch/cache dataflow and [`FleetReport`] for what is measured.
+pub fn serve_fleet(requests: &[Request], opts: &FleetOpts) -> Result<FleetReport> {
+    if opts.replicas == 0 {
+        bail!("fleet needs at least one replica");
+    }
+    if requests.is_empty() {
+        bail!("empty workload");
+    }
+    // use-time validation: a config can be hand-built, not just loaded
+    opts.cache.validate().context("fleet prefix-cache config")?;
+
+    let mut router = Router::new(opts.route, opts.replicas)?;
+    let source =
+        TokenSource::new(opts.replica.seed, opts.replica.heads, opts.replica.head_dim);
+    let mut cache = PrefixCache::new(opts.cache)?;
+
+    // --- dispatch: route each request, consulting the cache for
+    //     shared-prefix ones (arrival order = cache access order)
+    let mut buckets: Vec<Vec<Request>> = vec![Vec::new(); opts.replicas];
+    let mut warm: Vec<HashMap<usize, WarmStart>> = vec![HashMap::new(); opts.replicas];
+    for req in requests {
+        let r = router.route(req);
+        if opts.cache.enabled {
+            if let Some(p) = req.prefix {
+                let key = source.prefix_key(p.group, p.tokens);
+                match cache.lookup(key) {
+                    Some(hit) => {
+                        let ws = WarmStart::new(hit.k, hit.v).with_context(|| {
+                            format!("warm start for request {} from the prefix cache", req.id)
+                        })?;
+                        warm[r].insert(req.id, ws);
+                    }
+                    None => {
+                        // synthesize the shared rows once; every later
+                        // member of the group hits them
+                        let (k, v) = source.prefix_kv(p.group, p.tokens);
+                        cache.insert(key, p.tokens, k, v);
+                    }
+                }
+            }
+        }
+        buckets[r].push(*req);
+    }
+
+    // --- serve: one independent warm session per replica, concurrently
+    let jobs: Vec<(Vec<Request>, HashMap<usize, WarmStart>)> =
+        buckets.into_iter().zip(warm).collect();
+    let results = par_map(&jobs, |(reqs, warm)| {
+        if reqs.is_empty() {
+            Ok(ContinuousServeReport::default())
+        } else {
+            serve_continuous_warm(reqs, &opts.replica, warm)
+        }
+    });
+    let mut per_replica = Vec::with_capacity(results.len());
+    for (i, res) in results.into_iter().enumerate() {
+        per_replica.push(res.with_context(|| format!("fleet replica {i}"))?);
+    }
+
+    Ok(FleetReport {
+        route: opts.route,
+        assigned: jobs.iter().map(|(reqs, _)| reqs.len()).collect(),
+        per_replica,
+        cache,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ServeMix;
+
+    fn opts(replicas: usize, enabled: bool) -> FleetOpts {
+        FleetOpts {
+            replicas,
+            route: RoutePolicy::RoundRobin,
+            cache: PrefixCacheConfig { enabled, ..Default::default() },
+            replica: ContinuousServeOpts {
+                devices: 2,
+                heads: 2,
+                head_dim: 8,
+                chunk: 32,
+                max_batch: 4,
+                max_step_tokens: 512,
+                kv_budget_tokens: 1 << 20,
+                aging_steps: 8,
+                seed: 11,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn shared_prefix_requests(n: usize) -> Vec<Request> {
+        ServeMix::preset("shared_prefix", 1e5, 32).unwrap().generate(n, 5)
+    }
+
+    #[test]
+    fn invalid_fleets_rejected() {
+        let reqs = shared_prefix_requests(4);
+        let mut o = opts(0, true);
+        assert!(serve_fleet(&reqs, &o).is_err(), "zero replicas");
+        o = opts(2, true);
+        assert!(serve_fleet(&[], &o).is_err(), "empty workload");
+        // use-time cache validation, independent of config loading
+        o.cache.hot_entries = 0;
+        assert!(serve_fleet(&reqs, &o).is_err(), "enabled cache with no hot tier");
+        o = opts(2, false);
+        o.cache.hot_entries = 0;
+        o.cache.warm_bytes = 0;
+        assert!(serve_fleet(&reqs, &o).is_ok(), "disabled cache may be zero-sized");
+    }
+
+    #[test]
+    fn shared_prefix_fleet_hits_and_elides() {
+        let reqs = shared_prefix_requests(12);
+        let rep = serve_fleet(&reqs, &opts(2, true)).unwrap();
+        assert_eq!(rep.requests(), 12);
+        assert_eq!(rep.assigned.iter().sum::<usize>(), 12);
+        let s = rep.cache_stats();
+        assert!(s.hits() > 0, "repeat groups must hit: {s:?}");
+        assert!(rep.prefill_tokens_elided() > 0);
+        assert_eq!(s.lookups, s.hits() + s.misses);
+        // elided work is real: the cold fleet prefills strictly more
+        let cold = serve_fleet(&reqs, &opts(2, false)).unwrap();
+        assert_eq!(cold.cache_stats().lookups, 0, "disabled cache is never consulted");
+        assert_eq!(cold.prefill_tokens_elided(), 0);
+        assert_eq!(
+            cold.total_prefill_tokens(),
+            rep.total_prefill_tokens() + rep.prefill_tokens_elided(),
+            "warm and cold fleets must account for every prompt token"
+        );
+    }
+
+    #[test]
+    fn more_replicas_than_requests_is_fine() {
+        let reqs = shared_prefix_requests(2);
+        let rep = serve_fleet(&reqs, &opts(5, true)).unwrap();
+        assert_eq!(rep.requests(), 2);
+        assert_eq!(rep.per_replica.len(), 5);
+        assert!(rep.assigned.iter().filter(|&&n| n == 0).count() >= 3);
+        // empty replicas contribute empty summaries, not NaN
+        assert!(!rep.ttft_summary().p50.is_nan());
+        assert_eq!(rep.ttft_summary().n, 2);
+    }
+
+    #[test]
+    fn artifact_json_has_documented_fields() {
+        let reqs = shared_prefix_requests(6);
+        let rep = serve_fleet(&reqs, &opts(2, true)).unwrap();
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        for key in [
+            "replicas", "route", "requests", "prefill_tokens", "prefill_tokens_elided",
+            "decode_tokens", "preemptions", "wall_s", "ttft", "tpot", "queue_delay",
+            "cache", "per_replica",
+        ] {
+            assert!(j.get(key) != &Json::Null, "missing field '{key}'");
+        }
+        assert_eq!(j.get("replicas").as_usize(), Some(2));
+        assert_eq!(j.get("route").as_str(), Some("round_robin"));
+        let c = j.get("cache");
+        for key in ["enabled", "lookups", "hits_hot", "hits_warm", "misses", "hit_rate",
+            "hit_tokens", "inserts", "demotions", "evictions", "warm_bytes_budget"]
+        {
+            assert!(c.get(key) != &Json::Null, "missing cache field '{key}'");
+        }
+        let r0 = j.get("per_replica").at(0);
+        assert_eq!(r0.get("replica").as_usize(), Some(0));
+        assert!(r0.get("assigned").as_usize().is_some());
+        assert!(r0.get("ttft") != &Json::Null, "per-replica rows are full serve reports");
+    }
+}

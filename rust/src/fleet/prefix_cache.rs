@@ -1,0 +1,372 @@
+//! Content-addressed, two-tier KV prefix cache.
+//!
+//! Entries are keyed by [`crate::scheduler::TokenSource::prefix_key`] — a
+//! content hash of the prefix's full KV derivation — so a hit guarantees
+//! the cached rows are bit-identical to what the requester would have
+//! prefilled. Two tiers:
+//!
+//! * **hot** — up to `hot_entries` entries resident and immediately
+//!   reusable as [`crate::scheduler::WarmStart`] material;
+//! * **warm** — entries demoted from hot, held under a byte budget
+//!   (`warm_bytes`) and promoted back to hot on a hit.
+//!
+//! Both tiers are LRU (front = coldest, back = hottest; linear scan —
+//! tiers are small by construction). The warm byte budget is a hard
+//! invariant: eviction happens *before* insertion, so residency never
+//! exceeds the budget even transiently (`tests/fleet.rs` checks it at
+//! every step). An entry larger than the whole warm budget is dropped
+//! outright and counted as an eviction.
+
+use anyhow::{bail, Result};
+
+use crate::json_obj;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Prefix-cache sizing; the `cache` object in a fleet config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheConfig {
+    /// Whether the fleet consults the cache at all.
+    pub enabled: bool,
+    /// Hot-tier capacity in entries.
+    pub hot_entries: usize,
+    /// Warm-tier capacity in bytes (K + V payload).
+    pub warm_bytes: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig { enabled: true, hot_entries: 8, warm_bytes: 8 << 20 }
+    }
+}
+
+impl PrefixCacheConfig {
+    /// An enabled cache needs room in both tiers; validated at config
+    /// load and again at fleet construction (use-time).
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.hot_entries == 0 {
+            bail!("prefix cache enabled with hot_entries = 0");
+        }
+        if self.enabled && self.warm_bytes == 0 {
+            bail!("prefix cache enabled with warm_bytes = 0");
+        }
+        Ok(())
+    }
+}
+
+/// Lifetime counters of one cache instance; the `cache` object in
+/// `BENCH_fleet.json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups issued (hits + misses).
+    pub lookups: usize,
+    /// Hits served from the hot tier.
+    pub hits_hot: usize,
+    /// Hits served from the warm tier (promoted back to hot).
+    pub hits_warm: usize,
+    /// Lookups that found nothing.
+    pub misses: usize,
+    /// Entries inserted (duplicate keys are not re-inserted).
+    pub inserts: usize,
+    /// Hot-tier overflows pushed down to warm.
+    pub demotions: usize,
+    /// Warm-tier entries dropped for the byte budget.
+    pub evictions: usize,
+    /// Prefix tokens served by hits (the prefill work made elidable).
+    pub hit_tokens: usize,
+}
+
+impl CacheStats {
+    /// Total hits across both tiers.
+    pub fn hits(&self) -> usize {
+        self.hits_hot + self.hits_warm
+    }
+
+    /// Hits over lookups; 0.0 (never NaN) with no lookups.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// One cached prefix: the shared K/V rows plus their content address.
+#[derive(Debug, Clone)]
+struct Entry {
+    key: u64,
+    tokens: usize,
+    k: Tensor,
+    v: Tensor,
+}
+
+impl Entry {
+    /// Payload bytes: K and V rows at 4 bytes per element.
+    fn bytes(&self) -> usize {
+        (self.k.data().len() + self.v.data().len()) * 4
+    }
+}
+
+/// A cache hit: cloned prefix rows ready to wrap in a
+/// [`crate::scheduler::WarmStart`].
+#[derive(Debug, Clone)]
+pub struct CachedPrefix {
+    /// Shared K rows, `[tokens, heads, head_dim]`.
+    pub k: Tensor,
+    /// Shared V rows, same shape.
+    pub v: Tensor,
+    /// Prefix length the rows cover.
+    pub tokens: usize,
+}
+
+/// The two-tier cache. Tiers are `Vec`s in LRU order (index 0 coldest).
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    hot: Vec<Entry>,
+    warm: Vec<Entry>,
+    warm_bytes_now: usize,
+    stats: CacheStats,
+}
+
+impl PrefixCache {
+    /// Cache under `cfg` (validated: enabled configs need non-zero
+    /// tiers).
+    pub fn new(cfg: PrefixCacheConfig) -> Result<PrefixCache> {
+        cfg.validate()?;
+        Ok(PrefixCache { cfg, hot: Vec::new(), warm: Vec::new(), warm_bytes_now: 0, stats: CacheStats::default() })
+    }
+
+    /// Look `key` up. A hot hit touches the entry to MRU; a warm hit
+    /// promotes it back into the hot tier (demoting hot overflow). Hits
+    /// clone the rows — the cache keeps its copy.
+    pub fn lookup(&mut self, key: u64) -> Option<CachedPrefix> {
+        self.stats.lookups += 1;
+        if let Some(i) = self.hot.iter().position(|e| e.key == key) {
+            let e = self.hot.remove(i);
+            let hit = CachedPrefix { k: e.k.clone(), v: e.v.clone(), tokens: e.tokens };
+            self.stats.hits_hot += 1;
+            self.stats.hit_tokens += e.tokens;
+            self.hot.push(e);
+            return Some(hit);
+        }
+        if let Some(i) = self.warm.iter().position(|e| e.key == key) {
+            let e = self.warm.remove(i);
+            self.warm_bytes_now -= e.bytes();
+            let hit = CachedPrefix { k: e.k.clone(), v: e.v.clone(), tokens: e.tokens };
+            self.stats.hits_warm += 1;
+            self.stats.hit_tokens += e.tokens;
+            self.admit_hot(e);
+            return Some(hit);
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Insert a prefix under `key` (ignored if the key is already
+    /// resident in either tier — content addressing makes re-insertion
+    /// a no-op by definition).
+    pub fn insert(&mut self, key: u64, tokens: usize, k: Tensor, v: Tensor) {
+        if self.contains(key) {
+            return;
+        }
+        self.stats.inserts += 1;
+        self.admit_hot(Entry { key, tokens, k, v });
+    }
+
+    /// Whether `key` is resident in either tier (no LRU touch).
+    pub fn contains(&self, key: u64) -> bool {
+        self.hot.iter().chain(&self.warm).any(|e| e.key == key)
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Hot-tier entries resident now.
+    pub fn hot_len(&self) -> usize {
+        self.hot.len()
+    }
+
+    /// Warm-tier entries resident now.
+    pub fn warm_len(&self) -> usize {
+        self.warm.len()
+    }
+
+    /// Warm-tier payload bytes resident now (≤ `warm_bytes` always).
+    pub fn warm_bytes_now(&self) -> usize {
+        self.warm_bytes_now
+    }
+
+    /// The `cache` object of `BENCH_fleet.json`.
+    pub fn to_json(&self) -> Json {
+        let s = self.stats;
+        json_obj![
+            ("enabled", self.cfg.enabled),
+            ("lookups", s.lookups),
+            ("hits_hot", s.hits_hot),
+            ("hits_warm", s.hits_warm),
+            ("misses", s.misses),
+            ("hit_rate", s.hit_rate()),
+            ("hit_tokens", s.hit_tokens),
+            ("inserts", s.inserts),
+            ("demotions", s.demotions),
+            ("evictions", s.evictions),
+            ("hot_entries", self.hot.len()),
+            ("warm_entries", self.warm.len()),
+            ("warm_bytes", self.warm_bytes_now),
+            ("warm_bytes_budget", self.cfg.warm_bytes),
+        ]
+    }
+
+    /// Push to hot MRU; overflow demotes the hot LRU down to warm.
+    fn admit_hot(&mut self, e: Entry) {
+        self.hot.push(e);
+        while self.hot.len() > self.cfg.hot_entries {
+            let demoted = self.hot.remove(0);
+            self.stats.demotions += 1;
+            self.admit_warm(demoted);
+        }
+    }
+
+    /// Push to warm MRU, evicting warm LRU entries *first* so resident
+    /// bytes never exceed the budget, even transiently. An entry bigger
+    /// than the whole budget is dropped (counted as an eviction).
+    fn admit_warm(&mut self, e: Entry) {
+        let bytes = e.bytes();
+        if bytes > self.cfg.warm_bytes {
+            self.stats.evictions += 1;
+            return;
+        }
+        while self.warm_bytes_now + bytes > self.cfg.warm_bytes {
+            let evicted = self.warm.remove(0);
+            self.warm_bytes_now -= evicted.bytes();
+            self.stats.evictions += 1;
+        }
+        self.warm_bytes_now += bytes;
+        self.warm.push(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `tokens` rows of 1 head x 1 dim: 8 bytes of payload per token.
+    fn rows(tokens: usize, fill: f32) -> (Tensor, Tensor) {
+        (
+            Tensor::new(&[tokens, 1, 1], vec![fill; tokens]),
+            Tensor::new(&[tokens, 1, 1], vec![-fill; tokens]),
+        )
+    }
+
+    fn cache(hot: usize, warm_bytes: usize) -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig { enabled: true, hot_entries: hot, warm_bytes })
+            .unwrap()
+    }
+
+    #[test]
+    fn validation_rejects_zero_tiers_when_enabled() {
+        assert!(PrefixCache::new(PrefixCacheConfig {
+            enabled: true,
+            hot_entries: 0,
+            warm_bytes: 1
+        })
+        .is_err());
+        assert!(PrefixCache::new(PrefixCacheConfig {
+            enabled: true,
+            hot_entries: 1,
+            warm_bytes: 0
+        })
+        .is_err());
+        // a disabled cache can be all-zero (it is never constructed in
+        // the fleet, but the config must load)
+        PrefixCacheConfig { enabled: false, hot_entries: 0, warm_bytes: 0 }
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn hit_miss_and_promotion_flow() {
+        let mut c = cache(2, 1 << 20);
+        assert!(c.lookup(1).is_none(), "empty cache misses");
+        let (k, v) = rows(4, 1.0);
+        c.insert(1, 4, k.clone(), v.clone());
+        c.insert(1, 4, k.clone(), v.clone()); // duplicate: ignored
+        assert_eq!(c.stats().inserts, 1);
+        let hit = c.lookup(1).expect("hot hit");
+        assert_eq!(hit.tokens, 4);
+        assert_eq!(hit.k, k);
+        assert_eq!(hit.v, v);
+        // fill hot past capacity: entry 1 (LRU after 2,3 insert) demotes
+        c.insert(2, 4, rows(4, 2.0).0, rows(4, 2.0).1);
+        c.insert(3, 4, rows(4, 3.0).0, rows(4, 3.0).1);
+        assert_eq!(c.hot_len(), 2);
+        assert_eq!(c.warm_len(), 1);
+        assert_eq!(c.stats().demotions, 1);
+        // the demoted entry still hits, from warm, and promotes back
+        let hit = c.lookup(1).expect("warm hit");
+        assert_eq!(hit.k, k);
+        let s = c.stats();
+        assert_eq!((s.hits_hot, s.hits_warm, s.misses), (1, 1, 1));
+        assert_eq!(s.hit_tokens, 8);
+        assert!(s.hit_rate() > 0.6 && s.hit_rate() < 0.7);
+        // promotion displaced another hot entry down to warm
+        assert_eq!(c.hot_len(), 2);
+        assert_eq!(c.warm_len(), 1);
+    }
+
+    #[test]
+    fn lru_orders_eviction_and_touch_refreshes() {
+        // hot holds 1; warm holds two 32-byte entries (4 tokens x 8 B)
+        let mut c = cache(1, 64);
+        for key in 1..=3u64 {
+            let (k, v) = rows(4, key as f32);
+            c.insert(key, 4, k, v);
+        }
+        // hot: [3]; warm: [1, 2] — full. Touching 1 promotes it (3 drops
+        // to warm); inserting 4 then demotes 1, and the warm tier evicts
+        // its LRU (2) to make room — never the fresher entries.
+        assert!(c.lookup(1).is_some());
+        let (k, v) = rows(4, 4.0);
+        c.insert(4, 4, k, v);
+        assert!(c.lookup(2).is_none(), "LRU entry 2 must be the eviction victim");
+        assert!(c.lookup(3).is_some(), "recently demoted entry 3 must survive");
+        assert!(c.warm_bytes_now() <= 64);
+    }
+
+    #[test]
+    fn warm_budget_never_exceeded_and_oversize_dropped() {
+        let mut c = cache(1, 40); // room for one 32-byte entry only
+        for key in 1..=5u64 {
+            let (k, v) = rows(4, key as f32);
+            c.insert(key, 4, k, v);
+            assert!(c.warm_bytes_now() <= 40, "budget busted after insert {key}");
+            assert!(c.warm_len() <= 1);
+        }
+        assert!(c.stats().evictions >= 3);
+        // an entry larger than the whole budget is dropped outright
+        let before = c.warm_len();
+        let (k, v) = rows(100, 9.0);
+        c.insert(9, 100, k, v);
+        // hot holds it first; push it out with another insert
+        let (k, v) = rows(4, 10.0);
+        c.insert(10, 4, k, v);
+        assert!(c.lookup(9).is_none(), "oversize entry must not be retained in warm");
+        assert!(c.warm_len() <= before.max(1));
+        assert!(c.warm_bytes_now() <= 40);
+    }
+
+    #[test]
+    fn empty_stats_are_nan_free_and_json_serializes() {
+        let c = cache(1, 8);
+        assert_eq!(c.stats().hit_rate(), 0.0);
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(j.get("lookups").as_usize(), Some(0));
+        assert_eq!(j.get("hit_rate").as_f64(), Some(0.0));
+        assert_eq!(j.get("warm_bytes_budget").as_usize(), Some(8));
+        assert_eq!(j.get("enabled").as_bool(), Some(true));
+    }
+}

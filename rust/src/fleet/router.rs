@@ -1,0 +1,182 @@
+//! Request routing across fleet replicas.
+//!
+//! The router is a pure dispatch-time policy: it sees each request once,
+//! in arrival order, and assigns it to a replica before any replica runs.
+//! Load is therefore modeled as *cumulative assigned peak-KV tokens*
+//! ([`crate::workload::Request::peak_kv_tokens`]), not live occupancy —
+//! the fleet serves whole request sets per replica, so the dispatch-time
+//! view is the only one that exists. The policy names are the `route`
+//! config key and the `--route` CLI flag.
+
+use anyhow::{bail, Result};
+
+use crate::workload::Request;
+
+/// How the fleet assigns requests to replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in request-arrival order.
+    #[default]
+    RoundRobin,
+    /// Send each request to the replica with the fewest assigned peak-KV
+    /// tokens (ties break to the lowest replica index).
+    LeastLoaded,
+    /// Pin every request of a shared-prefix group to one replica (hash of
+    /// the group id), so the replica's warm starts — and the cache's hot
+    /// tier — see maximal reuse. Prefix-free requests fall back to
+    /// round-robin.
+    PrefixAffinity,
+}
+
+impl RoutePolicy {
+    /// Accepted names, in [`RoutePolicy::parse`] order.
+    pub const NAMES: [&'static str; 3] = ["round_robin", "least_loaded", "prefix_affinity"];
+
+    /// Parse a policy name (the `route` fleet-config key).
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s {
+            "round_robin" => Ok(RoutePolicy::RoundRobin),
+            "least_loaded" => Ok(RoutePolicy::LeastLoaded),
+            "prefix_affinity" => Ok(RoutePolicy::PrefixAffinity),
+            other => bail!(
+                "unknown route policy '{other}' (expected one of {:?})",
+                RoutePolicy::NAMES
+            ),
+        }
+    }
+
+    /// The canonical name ([`RoutePolicy::parse`] round-trips it).
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::PrefixAffinity => "prefix_affinity",
+        }
+    }
+}
+
+/// Finalizer of splitmix64: a well-mixed hash for small integers, so
+/// consecutive group ids spread across replicas instead of striding.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Dispatch-time request router over `replicas` replicas.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    replicas: usize,
+    cursor: usize,
+    /// Cumulative assigned peak-KV tokens per replica.
+    load: Vec<usize>,
+}
+
+impl Router {
+    /// Router over `replicas` replicas (must be positive).
+    pub fn new(policy: RoutePolicy, replicas: usize) -> Result<Router> {
+        if replicas == 0 {
+            bail!("router needs at least one replica");
+        }
+        Ok(Router { policy, replicas, cursor: 0, load: vec![0; replicas] })
+    }
+
+    /// Assign `req` to a replica index and account its peak-KV load.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => self.next_round_robin(),
+            RoutePolicy::LeastLoaded => {
+                (0..self.replicas).min_by_key(|&i| (self.load[i], i)).unwrap_or(0)
+            }
+            RoutePolicy::PrefixAffinity => match req.prefix {
+                Some(p) => (mix64(p.group) % self.replicas as u64) as usize,
+                None => self.next_round_robin(),
+            },
+        };
+        self.load[r] += req.peak_kv_tokens();
+        r
+    }
+
+    /// Assigned peak-KV tokens per replica so far.
+    pub fn load(&self) -> &[usize] {
+        &self.load
+    }
+
+    fn next_round_robin(&mut self) -> usize {
+        let r = self.cursor % self.replicas;
+        self.cursor += 1;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Priority, Request, SharedPrefix};
+
+    fn req(id: usize, seq_len: usize, prefix: Option<SharedPrefix>) -> Request {
+        Request {
+            id,
+            seq_len,
+            arrival: 0.0,
+            decode_tokens: 4,
+            priority: Priority::Standard,
+            prefix,
+        }
+    }
+
+    #[test]
+    fn policy_names_parse_and_round_trip() {
+        assert_eq!(RoutePolicy::default(), RoutePolicy::RoundRobin);
+        for name in RoutePolicy::NAMES {
+            assert_eq!(RoutePolicy::parse(name).unwrap().name(), name);
+        }
+        let e = RoutePolicy::parse("random").unwrap_err().to_string();
+        assert!(e.contains("random") && e.contains("round_robin"), "{e}");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3).unwrap();
+        let got: Vec<usize> = (0..6).map(|i| r.route(&req(i, 8, None))).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+        assert!(r.load().iter().all(|&l| l == 2 * (8 + 4)));
+    }
+
+    #[test]
+    fn least_loaded_balances_uneven_requests() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2).unwrap();
+        // a heavy request on replica 0 steers the next two to replica 1
+        assert_eq!(r.route(&req(0, 100, None)), 0);
+        assert_eq!(r.route(&req(1, 8, None)), 1);
+        assert_eq!(r.route(&req(2, 8, None)), 1);
+        // replica 1 catches up past 0's load only after enough tokens
+        assert!(r.load()[0] >= r.load()[1] || r.route(&req(3, 8, None)) == 1);
+    }
+
+    #[test]
+    fn prefix_affinity_pins_groups_and_spreads() {
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 4).unwrap();
+        let p = |g| Some(SharedPrefix { group: g, tokens: 4 });
+        // every member of a group lands on the same replica
+        let home = r.route(&req(0, 8, p(7)));
+        for i in 1..5 {
+            assert_eq!(r.route(&req(i, 8, p(7))), home);
+        }
+        // distinct groups are not all pinned to one replica
+        let homes: std::collections::HashSet<usize> =
+            (0..16).map(|g| r.route(&req(100 + g as usize, 8, p(g)))).collect();
+        assert!(homes.len() > 1, "16 groups over 4 replicas must spread");
+        // prefix-free requests fall back to round-robin
+        assert_eq!(r.route(&req(200, 8, None)), 0);
+        assert_eq!(r.route(&req(201, 8, None)), 1);
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(Router::new(RoutePolicy::RoundRobin, 0).is_err());
+    }
+}

@@ -22,6 +22,7 @@ pub mod comm;
 pub mod config;
 pub mod engine;
 pub mod experiment;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod parallelism;

@@ -16,6 +16,7 @@
 //! tokenring serve     --config configs/serve.json [--out report.json] [--runtime actors|spawn_per_step]
 //! tokenring serve     --config ... [--faults "panic@2:1,stall@4:0:200"] [--watchdog-ms 50] [--max-retries 2] [--max-recoveries 2]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
+//! tokenring fleet     --config configs/fleet.json [--out report.json] [--replicas N] [--route prefix_affinity] [--cache on|off]
 //! tokenring trace     --schedule token_ring --out trace.json
 //! tokenring schedules
 //! ```
@@ -26,15 +27,22 @@
 //! structured RunRecord JSON artifact (schema: EXPERIMENTS.md).
 //!
 //! `serve --config` runs the continuous-batching serve loop over a named
-//! workload mix (poisson | bursty | long_context), prints TTFT/TPOT/
-//! queue-delay percentiles plus batch occupancy, and writes the
+//! workload mix (poisson | bursty | long_context | shared_prefix), prints
+//! TTFT/TPOT/queue-delay percentiles plus batch occupancy, and writes the
 //! BENCH_serve.json artifact; without `--config` it runs the legacy
 //! prefill-only FIFO driver.
+//!
+//! `fleet --config` runs the multi-replica serving layer: a router
+//! (round_robin | least_loaded | prefix_affinity) dispatches the workload
+//! across N independent replica serve sessions that share a
+//! content-addressed KV prefix cache, then prints the merged fleet
+//! percentiles, per-replica occupancy, and cache counters, and writes the
+//! BENCH_fleet.json artifact.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use tokenring::config::{ExperimentConfig, ServeConfig};
+use tokenring::config::{ExperimentConfig, FleetConfig, ServeConfig};
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{self, EngineOpts};
 use tokenring::experiment::{render, Experiment};
@@ -42,6 +50,7 @@ use tokenring::parallelism::partition::Partition;
 use tokenring::parallelism::ScheduleSpec;
 use tokenring::reports;
 use tokenring::runtime::default_artifact_dir;
+use tokenring::fleet::serve_fleet;
 use tokenring::scheduler::{serve, serve_continuous, ServeOpts, ServeRuntime};
 use tokenring::tensor::Tensor;
 use tokenring::util::cli::{render_help, Args, OptSpec};
@@ -63,6 +72,7 @@ fn main() -> ExitCode {
         "hybrid" => cmd_hybrid(rest),
         "validate" => cmd_validate(rest),
         "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
         "trace" => cmd_trace(rest),
         "schedules" => {
             println!("registered schedules: {}", ScheduleSpec::valid_names());
@@ -85,9 +95,10 @@ fn main() -> ExitCode {
 
 fn usage() -> String {
     "tokenring — bidirectional sequence parallelism (paper reproduction)\n\
-     commands: run | fig6 | table1 | scaling | zigzag | hybrid | validate | serve | trace | schedules\n\
+     commands: run | fig6 | table1 | scaling | zigzag | hybrid | validate | serve | fleet | trace | schedules\n\
      `run --config configs/<x>.json` executes a declarative experiment grid;\n\
      `serve --config configs/serve.json` runs the continuous-batching serve loop;\n\
+     `fleet --config configs/fleet.json` runs the multi-replica router + prefix cache;\n\
      run `tokenring <cmd> --help` for options"
         .to_string()
 }
@@ -473,6 +484,76 @@ fn cmd_serve_config(
             p
         }
         None => render::write_serve_artifact(&cfg.name, &report).map_err(|e| e.to_string())?,
+    };
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `tokenring fleet`: the multi-replica serving layer (router + prefix
+/// cache in front of N continuous-batching replica sessions).
+fn cmd_fleet(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        OptSpec { name: "config", help: "fleet config JSON (see configs/fleet.json): a serve config plus replicas/route/cache", default: None, is_flag: false },
+        OptSpec { name: "out", help: "artifact path for the fleet report (default: <artifacts>/fleet/BENCH_<name>.json)", default: None, is_flag: false },
+        OptSpec { name: "replicas", help: "override the config's replica count", default: None, is_flag: false },
+        OptSpec { name: "route", help: "override the route policy: round_robin | least_loaded | prefix_affinity", default: None, is_flag: false },
+        OptSpec { name: "cache", help: "override the prefix cache: on | off (sizing stays from the config)", default: None, is_flag: false },
+    ];
+    let Some(args) =
+        parse_or_help(argv, "fleet", "multi-replica router + KV prefix cache", &specs)?
+    else {
+        return Ok(());
+    };
+    let path = args.get_str("config")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let mut cfg = FleetConfig::from_json(&text).map_err(|e| format!("{path}: {e}"))?;
+    if let Some(v) = args.get("replicas") {
+        cfg.replicas = v.parse().map_err(|_| format!("--replicas: bad integer '{v}'"))?;
+    }
+    if let Some(r) = args.get("route") {
+        cfg.route = r.to_string();
+    }
+    if let Some(c) = args.get("cache") {
+        cfg.cache_enabled = match c {
+            "on" => true,
+            "off" => false,
+            other => return Err(format!("--cache: expected 'on' or 'off', got '{other}'")),
+        };
+    }
+    let requests = cfg.generate().map_err(|e| e.to_string())?;
+    // opts() re-validates replicas/route/cache, so override typos fail here
+    let opts = cfg.opts().map_err(|e| e.to_string())?;
+    let report = serve_fleet(&requests, &opts).map_err(|e| e.to_string())?;
+    println!(
+        "{} — {} requests over {} replicas x {} devices (mix '{}', route {}, cache {})\n",
+        cfg.serve.name,
+        report.requests(),
+        cfg.replicas,
+        cfg.serve.devices,
+        cfg.serve.mix,
+        report.route.name(),
+        if cfg.cache_enabled { "on" } else { "off" },
+    );
+    println!("{}", render::fleet_summary_table(&report));
+    println!("{}", render::fleet_replica_table(&report));
+    println!("{}", render::fleet_cache_line(&report));
+    println!(
+        "prefill {} tok (+{} elided) | decode {} tok | preemptions {} | wall {:.3}s",
+        report.total_prefill_tokens(),
+        report.prefill_tokens_elided(),
+        report.total_decode_tokens(),
+        report.preemptions(),
+        report.wall(),
+    );
+    let out_path = match args.get("out") {
+        Some(p) => {
+            let p = PathBuf::from(p);
+            render::write_fleet_json(&p, &report).map_err(|e| e.to_string())?;
+            p
+        }
+        None => {
+            render::write_fleet_artifact(&cfg.serve.name, &report).map_err(|e| e.to_string())?
+        }
     };
     println!("wrote {}", out_path.display());
     Ok(())

@@ -55,6 +55,21 @@
 //! [`RequestStatus::Failed`] and the terminal cause recorded in
 //! [`FaultAccounting::failure`]. Deterministic fault injection for tests
 //! and chaos smokes is wired through [`ContinuousServeOpts::faults`].
+//!
+//! # Warm-started admission (fleet prefix cache)
+//!
+//! [`serve_continuous_warm`] admits selected requests *at a pre-warmed KV
+//! position*: a [`WarmStart`] holds the K/V rows of the request's shared
+//! prefix (see [`crate::workload::SharedPrefix`]), and at admission the
+//! loop imports them into the cache (and ships them to the actors as
+//! ordinary deltas) instead of scheduling prefill micro-steps for them.
+//! Because prefix content is a pure function of `(seed, group, position)`
+//! and prefill query outputs are discarded (only decode outputs are
+//! delivered), a warm start is numerically identical to cold prefill —
+//! `tests/fleet.rs` proves outputs match to 1e-4. Preemption and ring
+//! recovery compose naturally: a replayed warm request simply re-imports
+//! its prefix. The elided work is accounted in
+//! [`ContinuousServeReport::prefill_tokens_elided`].
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
@@ -325,6 +340,11 @@ pub struct ContinuousServeReport {
     pub preemptions: usize,
     /// Virtual-clock end of the run.
     pub wall: f64,
+    /// Prompt tokens admitted from warm starts instead of being
+    /// prefilled — chunked-prefill work the prefix cache elided
+    /// (re-imports after preemption or recovery included, mirroring how
+    /// `total_prefill_tokens` counts re-prefills). 0 on cold runs.
+    pub prefill_tokens_elided: usize,
     /// Per-request decode outputs, populated only under
     /// [`ContinuousServeOpts::keep_outputs`].
     pub outputs: HashMap<usize, Vec<Tensor>>,
@@ -454,6 +474,7 @@ impl ContinuousServeReport {
             ("preemptions", self.preemptions),
             ("wall_s", self.wall),
             ("prefill_tokens", self.total_prefill_tokens),
+            ("prefill_tokens_elided", self.prefill_tokens_elided),
             ("decode_tokens", self.total_decode_tokens),
             ("throughput_tok_s", self.throughput_tokens_per_s()),
             ("decode_tok_s", self.decode_tokens_per_s()),
@@ -503,7 +524,49 @@ impl Running {
     }
 }
 
-fn validate(requests: &[Request], opts: &ContinuousServeOpts) -> Result<()> {
+/// The pre-warmed KV rows a request's shared prefix admits at — the
+/// currency of the fleet prefix cache. Holds K and V as
+/// `[tokens, heads, head_dim]` tensors; the content must equal what
+/// [`TokenSource::prefix_kv`] regenerates for the request's group (the
+/// cache guarantees this by construction, and `validate` cross-checks the
+/// shape against the session's request set and model dims).
+#[derive(Debug, Clone)]
+pub struct WarmStart {
+    k: Tensor,
+    v: Tensor,
+}
+
+impl WarmStart {
+    /// Wrap prefix K/V rows, validating they are a matching pair of
+    /// non-empty `[tokens, heads, head_dim]` tensors.
+    pub fn new(k: Tensor, v: Tensor) -> Result<WarmStart> {
+        if k.shape() != v.shape() {
+            bail!(
+                "warm-start K/V shapes disagree ({:?} vs {:?})",
+                k.shape(),
+                v.shape()
+            );
+        }
+        if k.shape().len() != 3 || k.shape()[0] == 0 {
+            bail!(
+                "warm-start KV must be [tokens, heads, head_dim] with tokens > 0, got {:?}",
+                k.shape()
+            );
+        }
+        Ok(WarmStart { k, v })
+    }
+
+    /// Prefix tokens this warm start covers (admission position).
+    pub fn tokens(&self) -> usize {
+        self.k.shape()[0]
+    }
+}
+
+fn validate(
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+    warm: &HashMap<usize, WarmStart>,
+) -> Result<()> {
     if requests.is_empty() {
         bail!("empty workload");
     }
@@ -543,6 +606,42 @@ fn validate(requests: &[Request], opts: &ContinuousServeOpts) -> Result<()> {
                 opts.kv_budget_tokens
             );
         }
+        if let Some(p) = r.prefix {
+            // `tokens < seq_len` keeps at least one cold prompt token, so
+            // prefill completion (the TTFT endpoint) is always observed
+            if p.tokens == 0 || p.tokens >= r.seq_len {
+                bail!(
+                    "request {}: shared prefix of {} tokens must be in 1..{} (seq_len)",
+                    r.id,
+                    p.tokens,
+                    r.seq_len
+                );
+            }
+        }
+    }
+    for (&id, ws) in warm {
+        let req = requests.iter().find(|r| r.id == id).with_context(|| {
+            format!("warm start for request {id} which is not in the workload")
+        })?;
+        let p = req.prefix.with_context(|| {
+            format!("warm start for request {id} which carries no shared prefix")
+        })?;
+        if ws.tokens() != p.tokens {
+            bail!(
+                "warm start for request {id} covers {} tokens but its prefix is {}",
+                ws.tokens(),
+                p.tokens
+            );
+        }
+        if ws.k.shape()[1] != opts.heads || ws.k.shape()[2] != opts.head_dim {
+            bail!(
+                "warm start for request {id} has row shape [{}, {}], session expects [{}, {}]",
+                ws.k.shape()[1],
+                ws.k.shape()[2],
+                opts.heads,
+                opts.head_dim
+            );
+        }
     }
     Ok(())
 }
@@ -563,7 +662,20 @@ pub fn serve_continuous(
     requests: &[Request],
     opts: &ContinuousServeOpts,
 ) -> Result<ContinuousServeReport> {
-    validate(requests, opts)?;
+    serve_continuous_warm(requests, opts, &HashMap::new())
+}
+
+/// [`serve_continuous`] with warm-started admission: requests with an
+/// entry in `warm` import the held prefix KV at admission and begin
+/// prefill at that position instead of streaming the prefix through
+/// chunked-prefill micro-steps (module docs, "Warm-started admission").
+/// An empty map degenerates to the cold path exactly.
+pub fn serve_continuous_warm(
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+    warm: &HashMap<usize, WarmStart>,
+) -> Result<ContinuousServeReport> {
+    validate(requests, opts, warm)?;
     let n = opts.devices;
     let source = TokenSource::new(opts.seed, opts.heads, opts.head_dim);
     // One injector for the whole session, shared across ring respawns:
@@ -613,6 +725,7 @@ pub fn serve_continuous(
     let mut step = 0u64;
     let mut total_prefill = 0usize;
     let mut total_decode = 0usize;
+    let mut elided = 0usize;
     let mut preemptions = 0usize;
 
     // Replays are bounded, but a pathological budget could thrash; fail
@@ -683,6 +796,30 @@ pub fn serve_continuous(
                             e.context(format!("step {step}: admitting request {}", req.id)),
                         );
                     }
+                }
+                // --- warm start: import the cached prefix KV and admit at
+                //     its end. The admission reservation above already
+                //     covered the full prompt, so the import cannot bust
+                //     the budget; the deltas cross the ring like any
+                //     prefill append. Replays after preemption or recovery
+                //     land back here and re-import.
+                if let Some(ws) = warm.get(&req.id) {
+                    let deltas = cache.append_deltas(req.id, &ws.k, &ws.v).with_context(|| {
+                        format!("step {step}: warm-start import for request {}", req.id)
+                    })?;
+                    if let Some(ring) = ring.as_mut() {
+                        if let Err(e) = ring.append(&deltas) {
+                            break 'body Some(e.context(format!(
+                                "step {step}: warm-start deltas for request {}",
+                                req.id
+                            )));
+                        }
+                    }
+                    let r = running.last_mut().with_context(|| {
+                        format!("warm-starting request {} that was never pushed", req.id)
+                    })?;
+                    r.next_prefill = ws.tokens();
+                    elided += ws.tokens();
                 }
             }
 
@@ -765,7 +902,7 @@ pub fn serve_continuous(
             for &(i, take) in &prefill_plan {
                 let r = &running[i];
                 let start = r.next_prefill;
-                let (k, v) = source.kv(r.req.id, start, take);
+                let (k, v) = source.request_kv(&r.req, start, take);
                 let deltas = cache.append_deltas(r.req.id, &k, &v).with_context(|| {
                     format!("step {step}: prefill append for request {}", r.req.id)
                 })?;
@@ -779,7 +916,7 @@ pub fn serve_continuous(
                 }
                 queries.push(DecodeQuery {
                     request: r.req.id,
-                    q: source.q(r.req.id, start, take),
+                    q: source.request_q(&r.req, start, take),
                     q_pos: (start as i32..(start + take) as i32).collect(),
                 });
                 prefill_tokens += take;
@@ -790,7 +927,7 @@ pub fn serve_continuous(
                 debug_assert_eq!(pos, r.req.seq_len + r.produced);
                 queries.push(DecodeQuery {
                     request: r.req.id,
-                    q: source.q(r.req.id, pos, 1),
+                    q: source.request_q(&r.req, pos, 1),
                     q_pos: vec![pos as i32],
                 });
             }
@@ -827,7 +964,7 @@ pub fn serve_continuous(
                     outputs.entry(r.req.id).or_default().push(out.clone());
                 }
                 let pos = r.req.seq_len + r.produced;
-                let (k1, v1) = source.kv(r.req.id, pos, 1);
+                let (k1, v1) = source.request_kv(&r.req, pos, 1);
                 let deltas = cache.append_deltas(r.req.id, &k1, &v1).with_context(|| {
                     format!("step {step}: decode append for request {}", r.req.id)
                 })?;
@@ -950,6 +1087,7 @@ pub fn serve_continuous(
                     total_decode_tokens: total_decode,
                     preemptions,
                     wall: clock,
+                    prefill_tokens_elided: elided,
                     outputs,
                     faults: fault_acc,
                 });
@@ -996,9 +1134,11 @@ pub fn serve_continuous(
         // the post-recovery traffic — the invariant is per-ring, not
         // per-session, and is only asserted when no recovery happened.
         if fault_acc.recoveries == 0 {
+            // warm-started tokens grow the cache without counting as
+            // prefill, but they still crossed the ring as deltas
             debug_assert_eq!(
                 drained.delta_tokens(),
-                total_prefill + total_decode,
+                total_prefill + total_decode + elided,
                 "actor delta tokens must equal KV growth"
             );
         }
@@ -1014,6 +1154,7 @@ pub fn serve_continuous(
         total_decode_tokens: total_decode,
         preemptions,
         wall: clock,
+        prefill_tokens_elided: elided,
         outputs,
         faults: fault_acc,
     })
@@ -1059,6 +1200,7 @@ mod tests {
             arrival: 0.0,
             decode_tokens: decode,
             priority: Priority::Standard,
+            prefix: None,
         }
     }
 
@@ -1119,9 +1261,9 @@ mod tests {
         let rep = serve_continuous(&reqs, &opts()).unwrap();
         let j = Json::parse(&rep.to_json().to_string()).unwrap();
         for key in [
-            "requests", "preemptions", "wall_s", "prefill_tokens", "decode_tokens",
-            "throughput_tok_s", "decode_tok_s", "ttft", "tpot", "queue_delay",
-            "occupancy", "faults", "steps", "per_request",
+            "requests", "preemptions", "wall_s", "prefill_tokens", "prefill_tokens_elided",
+            "decode_tokens", "throughput_tok_s", "decode_tok_s", "ttft", "tpot",
+            "queue_delay", "occupancy", "faults", "steps", "per_request",
         ] {
             assert!(j.get(key) != &Json::Null, "missing field '{key}'");
         }
@@ -1186,6 +1328,44 @@ mod tests {
         // ...but an *empty* plan is fine on either runtime
         fp.faults = Some(FaultPlan::default());
         assert!(serve_continuous(&[req(0, 16, 2)], &fp).is_ok());
+    }
+
+    #[test]
+    fn warm_starts_and_prefixes_are_validated() {
+        use crate::workload::SharedPrefix;
+        let o = opts();
+        let source = TokenSource::new(o.seed, o.heads, o.head_dim);
+        let prefixed = |tokens| {
+            let mut r = req(0, 16, 2);
+            r.prefix = Some(SharedPrefix { group: 0, tokens });
+            r
+        };
+        // prefix bounds: at least one token, at least one cold prompt token
+        assert!(serve_continuous(&[prefixed(0)], &o).is_err());
+        assert!(serve_continuous(&[prefixed(16)], &o).is_err());
+        assert!(serve_continuous(&[prefixed(8)], &o).is_ok());
+
+        let (k, v) = source.prefix_kv(0, 8);
+        let ws = WarmStart::new(k.clone(), v.clone()).unwrap();
+        assert_eq!(ws.tokens(), 8);
+        // mismatched K/V pair and non-rank-3 rows are rejected at wrap
+        assert!(WarmStart::new(k.clone(), source.prefix_kv(0, 4).1).is_err());
+        assert!(WarmStart::new(Tensor::new(&[8], vec![0.0; 8]), Tensor::new(&[8], vec![0.0; 8]))
+            .is_err());
+
+        // warm entry for a request outside the workload
+        let warm: HashMap<usize, WarmStart> = [(7, ws.clone())].into();
+        assert!(serve_continuous_warm(&[prefixed(8)], &o, &warm).is_err());
+        // warm entry for a request with no prefix
+        let warm: HashMap<usize, WarmStart> = [(0, ws.clone())].into();
+        assert!(serve_continuous_warm(&[req(0, 16, 2)], &o, &warm).is_err());
+        // warm length must equal the prefix length
+        assert!(serve_continuous_warm(&[prefixed(4)], &o, &warm).is_err());
+        // and a matching warm start serves with the prefix work elided
+        let rep = serve_continuous_warm(&[prefixed(8)], &o, &warm).unwrap();
+        assert_eq!(rep.prefill_tokens_elided, 8);
+        assert_eq!(rep.total_prefill_tokens, 8, "only the cold tail prefills");
+        assert_eq!(rep.requests[0].status, RequestStatus::Completed);
     }
 
     #[test]

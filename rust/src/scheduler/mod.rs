@@ -42,8 +42,8 @@ pub mod queue;
 pub mod source;
 
 pub use continuous::{
-    serve_continuous, serve_sequential, ContinuousServeOpts, ContinuousServeReport,
-    RequestStatus, ServeRuntime, ServedRequest, StepTrace,
+    serve_continuous, serve_continuous_warm, serve_sequential, ContinuousServeOpts,
+    ContinuousServeReport, RequestStatus, ServeRuntime, ServedRequest, StepTrace, WarmStart,
 };
 pub use queue::AdmissionQueue;
 pub use source::TokenSource;
@@ -485,6 +485,7 @@ mod cached_tests {
             arrival: 0.0,
             decode_tokens: 0,
             priority: crate::workload::Priority::Standard,
+            prefix: None,
         }];
         assert!(serve_cached(&reqs, &copts()).is_err());
     }

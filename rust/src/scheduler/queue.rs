@@ -143,7 +143,7 @@ mod tests {
     use crate::workload::Priority;
 
     fn req(id: usize, arrival: f64, priority: Priority) -> Request {
-        Request { id, seq_len: 32, arrival, decode_tokens: 4, priority }
+        Request { id, seq_len: 32, arrival, decode_tokens: 4, priority, prefix: None }
     }
 
     #[test]

@@ -9,13 +9,29 @@
 //! `(seed, request id, stream, position)`: there is no shared mutable RNG,
 //! so batch composition and interleaving order cannot change any request's
 //! data.
+//!
+//! Requests carrying a [`SharedPrefix`] extend the purity contract:
+//! positions inside the prefix derive from `(seed, prefix group, stream,
+//! position)` instead of the request id, so every request in a group
+//! shares those KV rows *exactly*. That is the invariant the fleet layer's
+//! prefix cache exploits — [`TokenSource::prefix_kv`] regenerates the
+//! shared rows for cache insertion, and a warm-started request that
+//! imports them is numerically indistinguishable from one that prefilled
+//! them itself. [`TokenSource::prefix_key`] rolls a content hash over the
+//! same per-row seeds, giving the cache its content address.
 
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::workload::{Request, SharedPrefix};
 
 const STREAM_K: u64 = 0x4B;
 const STREAM_V: u64 = 0x56;
 const STREAM_Q: u64 = 0x51;
+
+/// Namespacing tag separating shared-prefix row identities from
+/// per-request row identities (request ids are small integers; tagged
+/// group identities can never collide with them).
+const PREFIX_TAG: u64 = 0x5052_4546_4958_2121; // "PREFIX!!"
 
 /// Pure-function activation source: row `pos` of request `req`'s K/V/Q is
 /// derived from a per-row seed, independent of generation order.
@@ -28,6 +44,11 @@ pub struct TokenSource {
     pub head_dim: usize,
 }
 
+/// The row identity a shared-prefix group keys content under.
+fn prefix_ident(group: u64) -> u64 {
+    PREFIX_TAG ^ group.wrapping_mul(0xD6E8_FEB8_6659_FD93)
+}
+
 impl TokenSource {
     /// Source for `(heads, head_dim)` activations under content seed
     /// `seed`.
@@ -35,38 +56,120 @@ impl TokenSource {
         TokenSource { seed, heads, head_dim }
     }
 
-    fn row(&self, req: usize, stream: u64, pos: usize) -> Vec<f32> {
-        let mix = self
-            .seed
+    /// The per-row seed: everything a row's content is a function of.
+    fn mix(&self, ident: u64, stream: u64, pos: usize) -> u64 {
+        self.seed
             .wrapping_mul(0x9E3779B97F4A7C15)
-            ^ (req as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+            ^ ident.wrapping_mul(0xC2B2AE3D27D4EB4F)
             ^ stream.wrapping_mul(0xFF51AFD7ED558CCD)
-            ^ (pos as u64).wrapping_mul(0x165667B19E3779F9);
-        Rng::new(mix).normal_vec(self.heads * self.head_dim, 1.0)
+            ^ (pos as u64).wrapping_mul(0x165667B19E3779F9)
     }
 
-    fn rows(&self, req: usize, stream: u64, start: usize, len: usize) -> Tensor {
+    fn row(&self, ident: u64, stream: u64, pos: usize) -> Vec<f32> {
+        Rng::new(self.mix(ident, stream, pos)).normal_vec(self.heads * self.head_dim, 1.0)
+    }
+
+    fn rows(&self, ident: u64, stream: u64, start: usize, len: usize) -> Tensor {
         let mut data = Vec::with_capacity(len * self.heads * self.head_dim);
         for pos in start..start + len {
-            data.extend_from_slice(&self.row(req, stream, pos));
+            data.extend_from_slice(&self.row(ident, stream, pos));
         }
         Tensor::new(&[len, self.heads, self.head_dim], data)
     }
 
-    /// K and V rows for positions `start..start + len` of request `req`.
+    /// Rows for a request, dispatching each position's identity: positions
+    /// inside the shared prefix key on the group, the rest on the request
+    /// id. Decode positions (`>= seq_len`) are always past the prefix.
+    fn request_rows(&self, req: &Request, stream: u64, start: usize, len: usize) -> Tensor {
+        let mut data = Vec::with_capacity(len * self.heads * self.head_dim);
+        for pos in start..start + len {
+            let ident = match req.prefix {
+                Some(SharedPrefix { group, tokens }) if pos < tokens => prefix_ident(group),
+                _ => req.id as u64,
+            };
+            data.extend_from_slice(&self.row(ident, stream, pos));
+        }
+        Tensor::new(&[len, self.heads, self.head_dim], data)
+    }
+
+    /// K and V rows for positions `start..start + len` of request `req`
+    /// (prefix-free content; see [`TokenSource::request_kv`] for requests
+    /// that may carry a shared prefix).
     pub fn kv(&self, req: usize, start: usize, len: usize) -> (Tensor, Tensor) {
-        (self.rows(req, STREAM_K, start, len), self.rows(req, STREAM_V, start, len))
+        let id = req as u64;
+        (self.rows(id, STREAM_K, start, len), self.rows(id, STREAM_V, start, len))
     }
 
     /// Query rows for positions `start..start + len` of request `req`.
     pub fn q(&self, req: usize, start: usize, len: usize) -> Tensor {
-        self.rows(req, STREAM_Q, start, len)
+        self.rows(req as u64, STREAM_Q, start, len)
+    }
+
+    /// K and V rows for a request, honoring its shared prefix: rows at
+    /// positions `< prefix.tokens` are the group's shared content.
+    pub fn request_kv(&self, req: &Request, start: usize, len: usize) -> (Tensor, Tensor) {
+        (
+            self.request_rows(req, STREAM_K, start, len),
+            self.request_rows(req, STREAM_V, start, len),
+        )
+    }
+
+    /// Query rows for a request, honoring its shared prefix.
+    pub fn request_q(&self, req: &Request, start: usize, len: usize) -> Tensor {
+        self.request_rows(req, STREAM_Q, start, len)
+    }
+
+    /// The shared K and V rows of prefix `group` at positions `0..len` —
+    /// bit-identical to what any member request regenerates over that
+    /// range, so a cache can synthesize entries without capturing a
+    /// replica's KV.
+    pub fn prefix_kv(&self, group: u64, len: usize) -> (Tensor, Tensor) {
+        let ident = prefix_ident(group);
+        (self.rows(ident, STREAM_K, 0, len), self.rows(ident, STREAM_V, 0, len))
+    }
+
+    /// Content address of a shared prefix: a rolling FNV-1a hash over the
+    /// per-row seeds of the K and V streams for positions `0..len`, folded
+    /// with the row shape. Two prefixes collide only if their full KV
+    /// content derivation agrees — same source seed, group, length, heads,
+    /// and head dim.
+    pub fn prefix_key(&self, group: u64, len: usize) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let fold = |mut h: u64, x: u64| -> u64 {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            h
+        };
+        let ident = prefix_ident(group);
+        let mut h = fold(FNV_OFFSET, self.heads as u64);
+        h = fold(h, self.head_dim as u64);
+        h = fold(h, len as u64);
+        for pos in 0..len {
+            h = fold(h, self.mix(ident, STREAM_K, pos));
+            h = fold(h, self.mix(ident, STREAM_V, pos));
+        }
+        h
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::Priority;
+
+    fn req(id: usize, seq_len: usize, prefix: Option<SharedPrefix>) -> Request {
+        Request {
+            id,
+            seq_len,
+            arrival: 0.0,
+            decode_tokens: 0,
+            priority: Priority::Standard,
+            prefix,
+        }
+    }
 
     #[test]
     fn content_is_deterministic_and_order_free() {
@@ -92,5 +195,55 @@ mod tests {
         assert_ne!(k, q);
         assert_ne!(s.q(1, 0, 1), q, "requests must not share content");
         assert_ne!(TokenSource::new(8, 2, 4).q(0, 0, 1), q, "seeds must differ");
+    }
+
+    #[test]
+    fn prefix_rows_are_shared_exactly_across_requests() {
+        let s = TokenSource::new(7, 2, 4);
+        let p = SharedPrefix { group: 9, tokens: 4 };
+        let a = req(0, 8, Some(p));
+        let b = req(1, 8, Some(p));
+        // inside the prefix: identical content regardless of request id...
+        let (ka, va) = s.request_kv(&a, 0, 4);
+        let (kb, vb) = s.request_kv(&b, 0, 4);
+        assert_eq!(ka, kb);
+        assert_eq!(va, vb);
+        // ...and identical to the synthesized prefix rows
+        let (kp, vp) = s.prefix_kv(9, 4);
+        assert_eq!(ka, kp);
+        assert_eq!(va, vp);
+        // past the prefix: content diverges per request
+        let (ka, _) = s.request_kv(&a, 4, 4);
+        let (kb, _) = s.request_kv(&b, 4, 4);
+        assert_ne!(ka, kb);
+        // a request without a prefix matches the raw-id path everywhere
+        let c = req(2, 8, None);
+        assert_eq!(s.request_kv(&c, 0, 8).0, s.kv(2, 0, 8).0);
+        assert_eq!(s.request_q(&c, 0, 8), s.q(2, 0, 8));
+    }
+
+    #[test]
+    fn prefix_rows_split_at_the_boundary() {
+        // a chunk straddling the prefix boundary stitches both identities
+        let s = TokenSource::new(3, 2, 4);
+        let p = SharedPrefix { group: 1, tokens: 3 };
+        let r = req(5, 6, Some(p));
+        let (k, _) = s.request_kv(&r, 0, 6);
+        let (kp, _) = s.prefix_kv(1, 3);
+        let (k_own, _) = s.kv(5, 3, 3);
+        assert_eq!(Tensor::concat_rows(&[&kp, &k_own]), k);
+    }
+
+    #[test]
+    fn prefix_keys_address_content() {
+        let s = TokenSource::new(7, 2, 4);
+        let k = s.prefix_key(9, 4);
+        // same derivation → same key
+        assert_eq!(TokenSource::new(7, 2, 4).prefix_key(9, 4), k);
+        // any ingredient change → different key
+        assert_ne!(s.prefix_key(8, 4), k, "group must differentiate");
+        assert_ne!(s.prefix_key(9, 5), k, "length must differentiate");
+        assert_ne!(TokenSource::new(8, 2, 4).prefix_key(9, 4), k, "seed must differentiate");
+        assert_ne!(TokenSource::new(7, 4, 2).prefix_key(9, 4), k, "shape must differentiate");
     }
 }

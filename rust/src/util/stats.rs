@@ -50,6 +50,47 @@ impl Summary {
         }
     }
 
+    /// Merge per-part summaries into a fleet-level one without access to
+    /// the underlying samples. `n`, `mean`, `min`, and `max` are exact
+    /// (weighted mean; pooled variance via E[x²]). The percentiles are an
+    /// **approximation**: the n-weighted average of the parts' percentiles,
+    /// clamped to `[min, max]` — exact when parts are identically
+    /// distributed, and within the parts' percentile spread otherwise
+    /// (good enough for fleet dashboards; per-replica exact percentiles
+    /// stay in the per-replica reports). Empty parts (`n == 0`) are
+    /// skipped; an empty or all-empty input yields [`Summary::empty`] —
+    /// never NaN.
+    pub fn merge(parts: &[Summary]) -> Summary {
+        let live: Vec<&Summary> = parts.iter().filter(|s| s.n > 0).collect();
+        if live.is_empty() {
+            return Summary::empty();
+        }
+        let n: usize = live.iter().map(|s| s.n).sum();
+        let nf = n as f64;
+        let mean = live.iter().map(|s| s.n as f64 * s.mean).sum::<f64>() / nf;
+        // pooled variance: E[x²] reconstructed per part from std and mean
+        let ex2 = live
+            .iter()
+            .map(|s| s.n as f64 * (s.std * s.std + s.mean * s.mean))
+            .sum::<f64>()
+            / nf;
+        let var = (ex2 - mean * mean).max(0.0);
+        let min = live.iter().map(|s| s.min).fold(f64::INFINITY, f64::min);
+        let max = live.iter().map(|s| s.max).fold(f64::NEG_INFINITY, f64::max);
+        let wavg = |f: fn(&Summary) -> f64| {
+            (live.iter().map(|s| s.n as f64 * f(s)).sum::<f64>() / nf).clamp(min, max)
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min,
+            p50: wavg(|s| s.p50),
+            p95: wavg(|s| s.p95),
+            max,
+        }
+    }
+
     /// "12.3 µs ± 0.4" style rendering for bench tables.
     pub fn human_time(&self) -> String {
         format!("{} ± {}", fmt_time(self.p50), fmt_time(self.std))
@@ -201,6 +242,59 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert!((s.p50 - 50.5).abs() < 1e-9);
         assert!((s.p95 - 95.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn merge_of_nothing_is_empty_not_nan() {
+        let m = Summary::merge(&[]);
+        assert_eq!(m, Summary::empty());
+        assert!(!m.mean.is_nan() && !m.std.is_nan() && !m.p50.is_nan());
+        // all-empty parts behave the same (a fleet where no replica
+        // completed anything)
+        let m = Summary::merge(&[Summary::empty(), Summary::empty()]);
+        assert_eq!(m, Summary::empty());
+    }
+
+    #[test]
+    fn merge_skips_empty_parts_and_keeps_single_part_exact() {
+        let s = Summary::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        let m = Summary::merge(&[Summary::empty(), s.clone(), Summary::empty()]);
+        assert_eq!(m.n, s.n);
+        assert!((m.mean - s.mean).abs() < 1e-12);
+        assert!((m.std - s.std).abs() < 1e-9);
+        assert_eq!(m.min, s.min);
+        assert_eq!(m.max, s.max);
+        assert!((m.p50 - s.p50).abs() < 1e-12);
+        assert!((m.p95 - s.p95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_pools_disjoint_parts_exactly_where_exactness_is_claimed() {
+        let xs: Vec<f64> = (1..=8).map(|i| i as f64).collect();
+        let a = Summary::from_samples(xs[..4].to_vec());
+        let b = Summary::from_samples(xs[4..].to_vec());
+        let m = Summary::merge(&[a, b]);
+        let whole = Summary::from_samples(xs);
+        // n, mean, std, min, max are exact under pooling
+        assert_eq!(m.n, whole.n);
+        assert!((m.mean - whole.mean).abs() < 1e-12);
+        assert!((m.std - whole.std).abs() < 1e-9);
+        assert_eq!(m.min, whole.min);
+        assert_eq!(m.max, whole.max);
+        // percentiles are approximate but bounded by the extremes
+        assert!(m.p50 >= m.min && m.p50 <= m.max);
+        assert!(m.p95 >= m.min && m.p95 <= m.max);
+        assert!(m.p95 >= m.p50 - 1e-12, "percentile order preserved");
+    }
+
+    #[test]
+    fn merge_of_identical_parts_reproduces_percentiles() {
+        let part = Summary::from_samples(vec![1.0, 2.0, 3.0]);
+        let m = Summary::merge(&[part.clone(), part.clone(), part.clone()]);
+        assert_eq!(m.n, 9);
+        assert!((m.p50 - part.p50).abs() < 1e-12);
+        assert!((m.p95 - part.p95).abs() < 1e-12);
+        assert!((m.std - part.std).abs() < 1e-9);
     }
 
     #[test]

@@ -8,8 +8,15 @@
 //!   arrivals, no decode phase, all requests [`Priority::Standard`]); kept
 //!   for the legacy prefill serving driver.
 //! * [`ServeMix`] — named serving mixes (`poisson`, `bursty`,
-//!   `long_context`) producing full requests with decode lengths and
-//!   priority classes for the continuous batcher.
+//!   `long_context`, `shared_prefix`) producing full requests with decode
+//!   lengths, priority classes, and optional shared-prefix session
+//!   structure for the continuous batcher and the fleet layer.
+//!
+//! `ServeMix` generation is streaming: [`ServeMix::stream`] yields
+//! requests one at a time from an iterator holding O(1) state, so a
+//! fleet run over millions of requests never materializes the trace.
+//! [`ServeMix::generate`] is `stream().collect()` — both paths share one
+//! sampling routine and are deterministic in the seed.
 
 use anyhow::{anyhow, Result};
 
@@ -50,11 +57,27 @@ impl Priority {
     }
 }
 
+/// A shared prompt prefix (system prompt / few-shot header) carried by a
+/// request. Prefix *content* is a pure function of `(seed, group,
+/// position)` in the token source — every request in the same group shares
+/// the first `tokens` KV rows exactly, which is what makes the fleet
+/// layer's content-addressed prefix cache a numerically invisible
+/// optimization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedPrefix {
+    /// Prefix identity: requests with the same group share content.
+    pub group: u64,
+    /// Prefix length in tokens; always `< seq_len` (the request has at
+    /// least one token of its own after the shared header).
+    pub tokens: usize,
+}
+
 /// One inference request.
 #[derive(Debug, Clone, Copy)]
 pub struct Request {
     pub id: usize,
-    /// Prompt length in tokens (prefill work).
+    /// Prompt length in tokens (prefill work), *including* any shared
+    /// prefix.
     pub seq_len: usize,
     /// Arrival time, seconds from workload start.
     pub arrival: f64,
@@ -63,6 +86,9 @@ pub struct Request {
     pub decode_tokens: usize,
     /// Scheduling class (see [`Priority`]).
     pub priority: Priority,
+    /// Shared prompt header, if the request opens with one (see
+    /// [`SharedPrefix`]). `None` for standalone prompts.
+    pub prefix: Option<SharedPrefix>,
 }
 
 impl Request {
@@ -133,6 +159,7 @@ impl WorkloadGen {
                     arrival: t,
                     decode_tokens: 0,
                     priority: Priority::Standard,
+                    prefix: None,
                 }
             })
             .collect()
@@ -158,18 +185,36 @@ pub enum DecodeDist {
     Uniform { lo: usize, hi: usize },
 }
 
+/// Shared-prefix session structure of a mix: what fraction of requests
+/// open with a shared header, how many distinct headers circulate, and
+/// how long they are.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixMix {
+    /// Fraction of requests carrying a shared prefix.
+    pub frac: f64,
+    /// Distinct prefix groups (system prompts) in circulation.
+    pub groups: usize,
+    /// Prefix-length distribution (rounded to the mix's `multiple`).
+    pub len: LenDist,
+}
+
 /// A named serving workload mix: arrival process + prompt-length
-/// distribution + decode lengths + priority-class fractions.
+/// distribution + decode lengths + priority-class fractions + optional
+/// shared-prefix session structure.
 ///
 /// The registered presets ([`ServeMix::preset`], names in
 /// [`ServeMix::NAMES`]) are the workload classes EXPERIMENTS.md §Serve
-/// measures:
+/// and §Fleet measure:
 /// * `poisson` — steady Poisson arrivals, short-to-medium prompts.
 /// * `bursty` — the same prompts arriving in bursts of 4.
 /// * `long_context` — bimodal prompts with a heavy long-document tail.
+/// * `shared_prefix` — Poisson arrivals where most requests open with
+///   one of a few shared headers (the fleet prefix cache's target).
 #[derive(Debug, Clone, Copy)]
 pub struct ServeMix {
     pub arrivals: ArrivalPattern,
+    /// Distribution of the request's *own* prompt tokens (the suffix
+    /// after any shared prefix).
     pub dist: LenDist,
     pub decode: DecodeDist,
     /// Fraction of requests in [`Priority::Interactive`].
@@ -179,11 +224,46 @@ pub struct ServeMix {
     pub batch_frac: f64,
     /// Prompt lengths round up to a multiple of this.
     pub multiple: usize,
+    /// Shared-prefix session structure; `None` = standalone prompts only.
+    pub prefix: Option<PrefixMix>,
 }
+
+/// Streaming request generator: an iterator holding O(1) state (RNG,
+/// virtual clock, next id), so arbitrarily long traces never materialize.
+/// Created by [`ServeMix::stream`]; yields exactly `count` requests.
+#[derive(Debug, Clone)]
+pub struct ServeStream {
+    mix: ServeMix,
+    rng: Rng,
+    t: f64,
+    next_id: usize,
+    remaining: usize,
+}
+
+impl Iterator for ServeStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(self.mix.next_request(id, &mut self.rng, &mut self.t))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for ServeStream {}
 
 impl ServeMix {
     /// Registered mix names, in the order `preset` resolves them.
-    pub const NAMES: &'static [&'static str] = &["poisson", "bursty", "long_context"];
+    pub const NAMES: &'static [&'static str] =
+        &["poisson", "bursty", "long_context", "shared_prefix"];
 
     /// Resolve a registered mix at the given arrival `rate` (requests per
     /// second) and length `multiple`.
@@ -197,6 +277,7 @@ impl ServeMix {
                 interactive_frac: 0.25,
                 batch_frac: 0.25,
                 multiple: m,
+                prefix: None,
             },
             "bursty" => ServeMix {
                 arrivals: ArrivalPattern::Bursty { rate, burst: 4 },
@@ -205,6 +286,7 @@ impl ServeMix {
                 interactive_frac: 0.25,
                 batch_frac: 0.25,
                 multiple: m,
+                prefix: None,
             },
             "long_context" => ServeMix {
                 arrivals: ArrivalPattern::Poisson { rate },
@@ -213,6 +295,20 @@ impl ServeMix {
                 interactive_frac: 0.1,
                 batch_frac: 0.4,
                 multiple: m,
+                prefix: None,
+            },
+            "shared_prefix" => ServeMix {
+                arrivals: ArrivalPattern::Poisson { rate },
+                dist: LenDist::Uniform { lo: 64, hi: 192 },
+                decode: DecodeDist::Fixed(8),
+                interactive_frac: 0.25,
+                batch_frac: 0.25,
+                multiple: m,
+                prefix: Some(PrefixMix {
+                    frac: 0.75,
+                    groups: 4,
+                    len: LenDist::Bimodal { short: 64, long: 128, long_frac: 0.25 },
+                }),
             },
             other => {
                 return Err(anyhow!(
@@ -226,7 +322,7 @@ impl ServeMix {
     /// Largest [`Request::peak_kv_tokens`] this mix can emit — what a KV
     /// budget must cover for every request to be servable.
     pub fn max_peak_tokens(&self) -> usize {
-        let max_len = match self.dist {
+        let max_len = |dist: LenDist| match dist {
             LenDist::Fixed(n) => n,
             LenDist::Uniform { hi, .. } => hi,
             LenDist::Bimodal { short, long, .. } => short.max(long),
@@ -235,40 +331,60 @@ impl ServeMix {
             DecodeDist::Fixed(n) => n,
             DecodeDist::Uniform { hi, .. } => hi,
         };
-        round_len(max_len, self.multiple) + max_dec
+        let max_prefix = self
+            .prefix
+            .map_or(0, |p| round_len(max_len(p.len), self.multiple));
+        round_len(max_len(self.dist), self.multiple) + max_prefix + max_dec
     }
 
-    /// Generate `count` requests; deterministic in `seed`.
-    pub fn generate(&self, count: usize, seed: u64) -> Vec<Request> {
-        let mut rng = Rng::new(seed);
-        let mut t = 0.0;
-        (0..count)
-            .map(|id| {
-                match self.arrivals {
-                    ArrivalPattern::Poisson { rate } => t += rng.exponential(rate),
-                    ArrivalPattern::Bursty { rate, burst } => {
-                        let b = burst.max(1);
-                        if id % b == 0 {
-                            t += rng.exponential(rate / b as f64);
-                        }
-                    }
+    /// Sample the next request — the one routine both [`ServeMix::stream`]
+    /// and [`ServeMix::generate`] draw from, so the two are identical.
+    fn next_request(&self, id: usize, rng: &mut Rng, t: &mut f64) -> Request {
+        match self.arrivals {
+            ArrivalPattern::Poisson { rate } => *t += rng.exponential(rate),
+            ArrivalPattern::Bursty { rate, burst } => {
+                let b = burst.max(1);
+                if id % b == 0 {
+                    *t += rng.exponential(rate / b as f64);
                 }
-                let seq_len = round_len(sample_len(self.dist, &mut rng), self.multiple);
-                let decode_tokens = match self.decode {
-                    DecodeDist::Fixed(n) => n,
-                    DecodeDist::Uniform { lo, hi } => rng.range(lo, hi),
-                };
-                let u = rng.uniform();
-                let priority = if u < self.interactive_frac {
-                    Priority::Interactive
-                } else if u >= 1.0 - self.batch_frac {
-                    Priority::Batch
-                } else {
-                    Priority::Standard
-                };
-                Request { id, seq_len, arrival: t, decode_tokens, priority }
-            })
-            .collect()
+            }
+        }
+        let own_len = round_len(sample_len(self.dist, rng), self.multiple);
+        let decode_tokens = match self.decode {
+            DecodeDist::Fixed(n) => n,
+            DecodeDist::Uniform { lo, hi } => rng.range(lo, hi),
+        };
+        let u = rng.uniform();
+        let priority = if u < self.interactive_frac {
+            Priority::Interactive
+        } else if u >= 1.0 - self.batch_frac {
+            Priority::Batch
+        } else {
+            Priority::Standard
+        };
+        // seq_len = shared header + the request's own tokens, so the
+        // prefix is always a strict prefix of the prompt
+        let prefix = match self.prefix {
+            Some(p) if rng.uniform() < p.frac => Some(SharedPrefix {
+                group: rng.below(p.groups.max(1)) as u64,
+                tokens: round_len(sample_len(p.len, rng), self.multiple),
+            }),
+            _ => None,
+        };
+        let seq_len = own_len + prefix.map_or(0, |p| p.tokens);
+        Request { id, seq_len, arrival: *t, decode_tokens, priority, prefix }
+    }
+
+    /// Stream `count` requests one at a time (constant memory);
+    /// deterministic in `seed`.
+    pub fn stream(&self, count: usize, seed: u64) -> ServeStream {
+        ServeStream { mix: *self, rng: Rng::new(seed), t: 0.0, next_id: 0, remaining: count }
+    }
+
+    /// Generate `count` requests; deterministic in `seed`. Exactly
+    /// [`ServeMix::stream`] collected.
+    pub fn generate(&self, count: usize, seed: u64) -> Vec<Request> {
+        self.stream(count, seed).collect()
     }
 }
 
@@ -364,6 +480,55 @@ mod tests {
         // across bursts, time advances
         assert!(reqs[4].arrival > reqs[3].arrival);
         assert!(reqs.last().unwrap().arrival > 0.0);
+    }
+
+    #[test]
+    fn stream_matches_generate_and_is_sized() {
+        for name in ServeMix::NAMES {
+            let m = ServeMix::preset(name, 50.0, 16).unwrap();
+            let streamed: Vec<Request> = m.stream(200, 13).collect();
+            let generated = m.generate(200, 13);
+            assert_eq!(streamed.len(), 200);
+            for (a, b) in streamed.iter().zip(&generated) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.seq_len, b.seq_len);
+                assert_eq!(a.arrival, b.arrival);
+                assert_eq!(a.decode_tokens, b.decode_tokens);
+                assert_eq!(a.priority, b.priority);
+                assert_eq!(a.prefix, b.prefix);
+            }
+            // the iterator advertises its exact remaining length
+            let mut s = m.stream(5, 1);
+            assert_eq!(s.len(), 5);
+            s.next();
+            assert_eq!(s.size_hint(), (4, Some(4)));
+        }
+    }
+
+    #[test]
+    fn shared_prefix_mix_structure() {
+        let m = ServeMix::preset("shared_prefix", 100.0, 32).unwrap();
+        let reqs = m.generate(2000, 21);
+        let prefixed: Vec<&Request> = reqs.iter().filter(|r| r.prefix.is_some()).collect();
+        let frac = prefixed.len() as f64 / 2000.0;
+        assert!((frac - 0.75).abs() < 0.05, "prefix frac={frac}");
+        let mut groups = std::collections::HashSet::new();
+        for r in &prefixed {
+            let p = r.prefix.unwrap();
+            assert!(p.tokens > 0 && p.tokens < r.seq_len, "prefix must be strict: {p:?}");
+            assert_eq!(p.tokens % 32, 0, "prefix lengths round to the multiple");
+            assert!((p.group as usize) < 4);
+            groups.insert((p.group, p.tokens));
+            assert!(r.peak_kv_tokens() <= m.max_peak_tokens());
+        }
+        assert!(groups.len() > 1, "multiple prefix identities must circulate");
+        // shared headers really are shared: some (group, len) repeats
+        assert!(prefixed.len() > groups.len(), "prefix keys must repeat across requests");
+        // the other presets never attach prefixes
+        for name in ["poisson", "bursty", "long_context"] {
+            let m = ServeMix::preset(name, 100.0, 8).unwrap();
+            assert!(m.generate(50, 3).iter().all(|r| r.prefix.is_none()));
+        }
     }
 
     #[test]

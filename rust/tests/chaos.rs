@@ -39,6 +39,7 @@ fn requests() -> Vec<Request> {
             arrival: 0.0,
             decode_tokens: 4,
             priority: Priority::Standard,
+            prefix: None,
         })
         .collect()
 }

@@ -1,0 +1,224 @@
+//! Acceptance tests for the fleet serving layer:
+//!
+//! 1. A single-replica, cache-off fleet is the continuous serve loop —
+//!    same per-request outputs and token totals on the same workload.
+//! 2. Warm-started admission is numerically invisible: a request admitted
+//!    at a cached prefix position decodes the exact outputs of a cold
+//!    prefill, and the token accounting shifts from prefilled to elided.
+//! 3. The whole fleet stays numerically invariant under the cache: the
+//!    cache-on and cache-off fleets produce the same decode outputs.
+//! 4. The warm tier's byte budget is a hard invariant under a randomized
+//!    insert/lookup workload — checked after every operation.
+
+use std::collections::HashMap;
+
+use tokenring::fleet::{serve_fleet, FleetOpts, PrefixCache, PrefixCacheConfig, RoutePolicy};
+use tokenring::scheduler::{
+    serve_continuous, serve_continuous_warm, ContinuousServeOpts, TokenSource, WarmStart,
+};
+use tokenring::tensor::Tensor;
+use tokenring::workload::{Priority, Request, ServeMix, SharedPrefix};
+
+fn replica_opts() -> ContinuousServeOpts {
+    ContinuousServeOpts {
+        devices: 2,
+        heads: 2,
+        head_dim: 8,
+        chunk: 32,
+        max_batch: 4,
+        max_step_tokens: 512,
+        kv_budget_tokens: 1 << 20,
+        aging_steps: 8,
+        seed: 11,
+        keep_outputs: true,
+        ..Default::default()
+    }
+}
+
+fn fleet_opts(replicas: usize, enabled: bool) -> FleetOpts {
+    FleetOpts {
+        replicas,
+        route: RoutePolicy::RoundRobin,
+        cache: PrefixCacheConfig { enabled, ..Default::default() },
+        replica: replica_opts(),
+    }
+}
+
+fn shared_prefix_requests(n: usize) -> Vec<Request> {
+    ServeMix::preset("shared_prefix", 1e5, 32).unwrap().generate(n, 5)
+}
+
+/// Collect every replica's decode outputs into one id-keyed map.
+fn fleet_outputs(
+    report: &tokenring::fleet::FleetReport,
+) -> HashMap<usize, Vec<Tensor>> {
+    let mut out = HashMap::new();
+    for r in &report.per_replica {
+        for (id, toks) in &r.outputs {
+            assert!(out.insert(*id, toks.clone()).is_none(), "request {id} served twice");
+        }
+    }
+    out
+}
+
+fn assert_same_outputs(
+    a: &HashMap<usize, Vec<Tensor>>,
+    b: &HashMap<usize, Vec<Tensor>>,
+    tol: f32,
+    label: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{label}: request counts");
+    for (id, xs) in a {
+        let ys = &b[id];
+        assert_eq!(xs.len(), ys.len(), "{label} req {id}: output count");
+        for (t, (x, y)) in xs.iter().zip(ys).enumerate() {
+            assert!(
+                x.allclose(y, tol),
+                "{label} req {id} decode token {t}: diverges by {}",
+                x.max_abs_diff(y)
+            );
+        }
+    }
+}
+
+#[test]
+fn single_replica_cache_off_fleet_is_serve_continuous() {
+    let requests = shared_prefix_requests(8);
+    let opts = fleet_opts(1, false);
+    let fleet = serve_fleet(&requests, &opts).unwrap();
+    let solo = serve_continuous(&requests, &opts.replica).unwrap();
+
+    assert_eq!(fleet.per_replica.len(), 1);
+    assert_eq!(fleet.assigned, vec![8]);
+    assert_eq!(fleet.requests(), solo.requests.len());
+    assert_eq!(fleet.total_prefill_tokens(), solo.total_prefill_tokens);
+    assert_eq!(fleet.total_decode_tokens(), solo.total_decode_tokens);
+    assert_eq!(fleet.prefill_tokens_elided(), 0);
+    assert_eq!(fleet.cache_stats().lookups, 0, "disabled cache is never consulted");
+
+    // merged summaries of one replica are that replica's exact summaries
+    let (m, s) = (fleet.ttft_summary(), solo.ttft_summary());
+    assert_eq!(m.n, s.n);
+    assert!((m.p50 - s.p50).abs() < 1e-3 && (m.p95 - s.p95).abs() < 1e-3);
+
+    let mut solo_out = HashMap::new();
+    for (id, toks) in &solo.outputs {
+        solo_out.insert(*id, toks.clone());
+    }
+    assert_same_outputs(&fleet_outputs(&fleet), &solo_out, 1e-3, "fleet-vs-solo");
+}
+
+#[test]
+fn warm_start_matches_cold_prefill_exactly() {
+    // Two requests sharing a 32-token prefix header. The cold run
+    // prefills both in full; the warm run imports the prefix KV for the
+    // second one and must decode identical outputs.
+    let prefix = SharedPrefix { group: 3, tokens: 32 };
+    let requests: Vec<Request> = (0..2)
+        .map(|id| Request {
+            id,
+            seq_len: 64,
+            arrival: 0.0,
+            decode_tokens: 4,
+            priority: Priority::Standard,
+            prefix: Some(prefix),
+        })
+        .collect();
+    let opts = replica_opts();
+
+    let cold = serve_continuous(&requests, &opts).unwrap();
+
+    let source = TokenSource::new(opts.seed, opts.heads, opts.head_dim);
+    let (k, v) = source.prefix_kv(prefix.group, prefix.tokens);
+    let mut warm = HashMap::new();
+    warm.insert(1usize, WarmStart::new(k, v).unwrap());
+    let warmed = serve_continuous_warm(&requests, &opts, &warm).unwrap();
+
+    // accounting: the imported prefix moved from prefilled to elided
+    assert_eq!(warmed.prefill_tokens_elided, prefix.tokens);
+    assert_eq!(
+        warmed.total_prefill_tokens + prefix.tokens,
+        cold.total_prefill_tokens,
+        "every prompt token is either prefilled or elided"
+    );
+    assert_eq!(cold.prefill_tokens_elided, 0);
+
+    // numerics: decode outputs are identical, not just close
+    for r in &requests {
+        let a = &cold.outputs[&r.id];
+        let b = &warmed.outputs[&r.id];
+        assert_eq!(a.len(), r.decode_tokens);
+        for (t, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                x.allclose(y, 1e-4),
+                "req {} decode token {t}: warm start diverges by {}",
+                r.id,
+                x.max_abs_diff(y)
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_outputs_invariant_under_cache() {
+    let requests = shared_prefix_requests(12);
+    let warm = serve_fleet(&requests, &fleet_opts(2, true)).unwrap();
+    let cold = serve_fleet(&requests, &fleet_opts(2, false)).unwrap();
+
+    // the cache must actually engage on this mix...
+    assert!(warm.cache_stats().hits() > 0, "shared-prefix mix must hit");
+    assert!(warm.prefill_tokens_elided() > 0);
+    assert_eq!(
+        cold.total_prefill_tokens(),
+        warm.total_prefill_tokens() + warm.prefill_tokens_elided(),
+    );
+    // ...and routing is cache-independent, so assignments line up
+    assert_eq!(warm.assigned, cold.assigned);
+
+    // the work changed; the answers did not
+    assert_same_outputs(
+        &fleet_outputs(&warm),
+        &fleet_outputs(&cold),
+        1e-3,
+        "cache-on-vs-off",
+    );
+}
+
+#[test]
+fn warm_budget_holds_at_every_step_of_a_randomized_workload() {
+    // hot holds 2 entries; warm holds at most ~3 of the 8-byte/token
+    // entries below. A deterministic pseudo-random mix of inserts and
+    // lookups must never leave the warm tier over budget, even
+    // transiently between demotion and eviction.
+    let budget = 200;
+    let mut cache = PrefixCache::new(PrefixCacheConfig {
+        enabled: true,
+        hot_entries: 2,
+        warm_bytes: budget,
+    })
+    .unwrap();
+    let mut x = 0x9e37_79b9_u64; // xorshift state
+    for step in 0..500 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let key = x % 24;
+        if x % 3 == 0 {
+            let tokens = 4 + (x % 5) as usize; // 32..=64 payload bytes
+            let data = vec![step as f32; tokens];
+            let k = Tensor::new(&[tokens, 1, 1], data.clone());
+            let v = Tensor::new(&[tokens, 1, 1], data);
+            cache.insert(key, tokens, k, v);
+        } else {
+            let _ = cache.lookup(key);
+        }
+        assert!(
+            cache.warm_bytes_now() <= budget,
+            "step {step}: warm tier at {} bytes over budget {budget}",
+            cache.warm_bytes_now()
+        );
+    }
+    let s = cache.stats();
+    assert!(s.evictions > 0, "the workload must actually stress the budget");
+    assert!(s.hits() > 0 && s.misses > 0 && s.demotions > 0);
+}

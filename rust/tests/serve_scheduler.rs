@@ -33,7 +33,7 @@ fn opts(devices: usize, chunk: usize) -> ContinuousServeOpts {
 }
 
 fn req(id: usize, seq_len: usize, decode: usize, priority: Priority) -> Request {
-    Request { id, seq_len, arrival: 0.0, decode_tokens: decode, priority }
+    Request { id, seq_len, arrival: 0.0, decode_tokens: decode, priority, prefix: None }
 }
 
 #[test]
