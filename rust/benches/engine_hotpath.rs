@@ -12,6 +12,7 @@
 //!
 //! Every run writes a machine-readable summary to
 //! `<artifacts>/bench/BENCH_engine.json` (kernel ns/block old vs new,
+//! per-KV-dtype kernel time / delta wire bytes / error-vs-reference,
 //! ring-step bytes before/after zero-copy, and the decode setup-cost
 //! section: per-step thread spawns and channel bytes for the legacy
 //! spawn-per-step wrapper vs the persistent actor ring).
@@ -26,7 +27,7 @@ use tokenring::parallelism::partition::Partition;
 use tokenring::parallelism::{AttnJob, Schedule, ScheduleSpec};
 use tokenring::runtime::default_artifact_dir;
 use tokenring::simulator::{sweep, CompiledGraph};
-use tokenring::tensor::Tensor;
+use tokenring::tensor::{Dtype as KvDtype, Tensor};
 use tokenring::topology::Topology;
 use tokenring::util::json::Json;
 use tokenring::util::rng::Rng;
@@ -199,6 +200,71 @@ fn main() {
         ])
     };
 
+    // --- KV precision: the same tiled kernel reading packed half-precision
+    // KV tiles (decoded per KV head on load) vs plain f32, plus the
+    // KvDelta wire bytes one decode step ships at each storage dtype.
+    // Kernel arithmetic is f32 throughout — only the resident KV
+    // representation changes — so the f32 row doubles as the
+    // SIMD-vs-reference equivalence smoke CI asserts on.
+    let kv_precision = {
+        use tokenring::engine::kv_cache::KvCache;
+
+        let (sq, skv, h, d) = if smoke { (64, 128, 4, 32) } else { (128, 512, 8, 64) };
+        let q = rand_t(&mut rng, &[sq, h, d]);
+        let k = rand_t(&mut rng, &[skv, h, d]);
+        let v = rand_t(&mut rng, &[skv, h, d]);
+        let qp: Vec<i32> = (skv as i32..(skv + sq) as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        let (o_ref, _) = attention_block_reference(&q, &k, &v, &qp, &kp, true, None);
+        let flops = 4.0 * sq as f64 * skv as f64 * (h * d) as f64;
+        let mut rows = Vec::new();
+        for dt in [KvDtype::F32, KvDtype::Bf16, KvDtype::F16] {
+            let (kd, vd) = (k.encode(dt), v.encode(dt));
+            let s = bench_fn(warm, iters, || {
+                let _ = attention_block(&q, &kd, &vd, &qp, &kp, true, None);
+            });
+            let (o, _) = attention_block(&q, &kd, &vd, &qp, &kp, true, None);
+            let max_err = o
+                .data()
+                .iter()
+                .zip(o_ref.data())
+                .map(|(a, b)| f64::from((a - b).abs()))
+                .fold(0.0, f64::max);
+            // storage-dtype tolerance: half the f32 streaming-vs-single-pass
+            // slack, or a unit-roundoff multiple for the packed formats
+            // (same bound kernel_equivalence uses)
+            let tol = if dt.is_packed() { 48.0 * f64::from(dt.unit_roundoff()) } else { 1e-5 };
+            // per-decode-step wire bytes: one appended token per request,
+            // counted the way Msg::bytes charges a KvDelta payload
+            let (n, page, reqs) = (4usize, 16usize, 4usize);
+            let mut cache = KvCache::new_with_dtype(n, h, d, page, dt);
+            let mut step_bytes = 0usize;
+            for r in 0..reqs {
+                let k1 = rand_t(&mut rng, &[1, h, d]);
+                let v1 = rand_t(&mut rng, &[1, h, d]);
+                for delta in cache.append_deltas(r, &k1, &v1).unwrap() {
+                    step_bytes +=
+                        delta.k.size_bytes() + delta.v.size_bytes() + delta.positions.len() * 4;
+                }
+            }
+            t.row(&[
+                format!("attn_block kv={} {sq}x{skv} H{h} D{d}", dt.name()),
+                s.human_time(),
+                format!("{:.2} GFLOP/s, max|err| {max_err:.2e}", flops / s.p50 / 1e9),
+            ]);
+            rows.push(obj(vec![
+                ("kv_dtype", Json::Str(dt.name().to_string())),
+                ("kernel_ns_per_block", Json::Num(s.p50 * 1e9)),
+                ("kv_resident_bytes", Json::Num((kd.size_bytes() + vd.size_bytes()) as f64)),
+                ("ring_step_delta_bytes", Json::Num(step_bytes as f64)),
+                ("max_abs_err_vs_f32_reference", Json::Num(max_err)),
+                ("tolerance", Json::Num(tol)),
+                ("within_tolerance", Json::Bool(max_err <= tol)),
+            ]));
+        }
+        Json::Arr(rows)
+    };
+
     // --- decode setup cost: the per-call wrapper respawns n threads and
     // re-ships every resident KV view on every micro-step; a persistent
     // ActorRing pays the spawn once per session and ships only the newly
@@ -218,6 +284,7 @@ fn main() {
             partition: Partition::Contiguous,
             backend: BackendSpec::Native,
             record: false,
+            ..Default::default()
         };
         let mut cache = KvCache::new(n, h, d, page);
         for r in 0..reqs {
@@ -318,6 +385,7 @@ fn main() {
             partition: Partition::Zigzag,
             backend: BackendSpec::Native,
             record: false,
+            ..Default::default()
         };
         let s = bench_fn(2, 10, || {
             let _ = run_token_ring(&q, &k, &v, n, &opts).unwrap();
@@ -419,6 +487,7 @@ fn main() {
         ("bench", Json::Str("engine_hotpath".into())),
         ("smoke", Json::Bool(smoke)),
         ("kernel", Json::Arr(kernel_rows)),
+        ("kv_precision", kv_precision),
         ("ring_step_bytes", ring_bytes),
         ("decode_setup", decode_setup),
     ]);

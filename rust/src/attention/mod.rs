@@ -16,6 +16,7 @@
 //!   loop, kept verbatim as the in-crate oracle and the "before" row of
 //!   the `engine_hotpath` bench.
 
+pub mod simd;
 pub mod tiled;
 
 pub use tiled::{attention_block_into, classify, AttnScratch, TileClass, KV_TILE, Q_TILE};
@@ -53,9 +54,10 @@ pub fn attention_block(
 }
 
 /// The pre-tiling scalar kernel: one pass per (head, q-row) with a
-/// per-element mask test. Kept as the independent oracle for the tiled
-/// kernel's property tests and as the "old kernel" row of
-/// `cargo bench --bench engine_hotpath`.
+/// per-element mask test, serially-accumulated scalar inner products (no
+/// lane tricks, no SIMD module). Kept as the independent oracle for the
+/// vectorized tiled kernel's property tests and as the "old kernel" row
+/// of `cargo bench --bench engine_hotpath`.
 pub fn attention_block_reference(
     q: &Tensor,
     k: &Tensor,
@@ -102,7 +104,7 @@ pub fn attention_block_reference(
                     continue;
                 }
                 let krow = &kd[(j * h_kv + hk) * d..(j * h_kv + hk + 1) * d];
-                let sc = dot(qrow, krow) * scale;
+                let sc = scalar_dot(qrow, krow) * scale;
                 *sj = sc;
                 if sc > m {
                     m = sc;
@@ -125,7 +127,9 @@ pub fn attention_block_reference(
                 let p = (sj - m).exp();
                 l += p;
                 let vrow = &vd[(j * h_kv + hk) * d..(j * h_kv + hk + 1) * d];
-                axpy(orow, p, vrow);
+                for (o, &x) in orow.iter_mut().zip(vrow) {
+                    *o += p * x;
+                }
             }
             let inv = 1.0 / l;
             for t in orow.iter_mut() {
@@ -137,38 +141,16 @@ pub fn attention_block_reference(
     (out, lse)
 }
 
-/// SIMD-friendly dot product: four independent accumulators so the
-/// autovectorizer emits packed FMAs instead of a serial reduction chain.
-///
-/// Lengths must match — a shape bug must fail loudly (debug assert +
-/// out-of-bounds panic in release), never silently truncate to the
-/// shorter operand.
+/// Serial scalar dot product — deliberately naive: the reference kernel
+/// must share no accumulation structure with the SIMD path it oracles.
 #[inline]
-pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len(), "dot length mismatch: {} vs {}", a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        let (x, y) = (&a[i..i + 8], &b[i..i + 8]);
-        for t in 0..8 {
-            acc[t] += x[t] * y[t];
-        }
-    }
-    let mut s: f32 = acc.iter().sum();
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
     }
     s
-}
-
-/// Vectorizable y += a·x.
-#[inline]
-pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
 }
 
 /// The paper's Update rule (§3.1), in place — the L3 merge hot path.
@@ -221,11 +203,10 @@ pub fn merge_into(
                 lrow[i] = b;
                 continue;
             }
-            // mixed row: stable sigmoid blend + logaddexp.
+            // mixed row: stable sigmoid blend + logaddexp. The weighted
+            // row blend is the SIMD primitive (same per-element formula).
             let w = sigmoid(delta);
-            for t in 0..d {
-                orow[t] -= w * (orow[t] - brow[t]);
-            }
+            simd::blend(orow, brow, w);
             lrow[i] = logaddexp(a, b);
         }
     }

@@ -1,0 +1,335 @@
+//! Portable explicit-width SIMD primitives for the attention hot path.
+//!
+//! The vendored build has no external crates and `std::simd` is nightly,
+//! so vectors are modeled as fixed lane arrays ([`F32x8`]) with every op
+//! written as a branch-free per-lane loop over a `[f32; 8]`. rustc/LLVM
+//! reliably lowers these to packed vector instructions at `-O` (the same
+//! contract the old 8-accumulator `dot` relied on), and the fallback —
+//! plain unrolled scalar code — is exactly what the source spells, so
+//! correctness never depends on the autovectorizer.
+//!
+//! Conventions:
+//! * main loops advance `LANES` at a time and never over-read: callers do
+//!   not need padded inputs, but padded buffers (e.g. [`super::tiled`]'s
+//!   lane-padded accumulator rows) skip the scalar tail entirely;
+//! * horizontal reductions are tree-shaped, so the f32 rounding of a
+//!   reduction is permutation-stable across calls with the same inputs.
+
+/// Lane width: 8 × f32 = one AVX/AVX2 ymm register, two NEON q registers.
+pub const LANES: usize = 8;
+
+/// Portable 8-lane f32 vector. `#[repr(align(32))]` keeps spills and
+/// scratch arrays on vector-register alignment.
+#[derive(Clone, Copy, Debug)]
+#[repr(align(32))]
+pub struct F32x8(pub [f32; LANES]);
+
+// arithmetic methods deliberately mirror the `std::simd` API surface
+// (add/sub/mul by name, not operator traits): every call site stays an
+// explicit method chain, which is the shape the autovectorizer contract
+// above is written against.
+#[allow(clippy::should_implement_trait)]
+impl F32x8 {
+    /// All lanes = `x`.
+    #[inline(always)]
+    pub fn splat(x: f32) -> F32x8 {
+        F32x8([x; LANES])
+    }
+
+    /// All lanes zero.
+    #[inline(always)]
+    pub fn zero() -> F32x8 {
+        F32x8::splat(0.0)
+    }
+
+    /// Load 8 contiguous lanes from the head of `s` (must hold ≥ 8).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; LANES];
+        v.copy_from_slice(&s[..LANES]);
+        F32x8(v)
+    }
+
+    /// Store all lanes to the head of `d` (must hold ≥ 8).
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for t in 0..LANES {
+            v[t] += o.0[t];
+        }
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for t in 0..LANES {
+            v[t] -= o.0[t];
+        }
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for t in 0..LANES {
+            v[t] *= o.0[t];
+        }
+        F32x8(v)
+    }
+
+    /// Per-lane `self * a + b` — the FMA shape the vectorizer fuses.
+    #[inline(always)]
+    pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
+        let mut v = b.0;
+        for t in 0..LANES {
+            v[t] += self.0[t] * a.0[t];
+        }
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn max(self, o: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for t in 0..LANES {
+            if o.0[t] > v[t] {
+                v[t] = o.0[t];
+            }
+        }
+        F32x8(v)
+    }
+
+    /// Horizontal sum, tree-reduced (4+4 → 2+2 → 1+1).
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let v = self.0;
+        let a = [v[0] + v[4], v[1] + v[5], v[2] + v[6], v[3] + v[7]];
+        (a[0] + a[2]) + (a[1] + a[3])
+    }
+
+    /// Horizontal max, tree-reduced.
+    #[inline(always)]
+    pub fn hmax(self) -> f32 {
+        let v = self.0;
+        let a = [
+            v[0].max(v[4]),
+            v[1].max(v[5]),
+            v[2].max(v[6]),
+            v[3].max(v[7]),
+        ];
+        a[0].max(a[2]).max(a[1].max(a[3]))
+    }
+}
+
+/// SIMD dot product: four independent `F32x8` accumulators (32 elements
+/// in flight) so the reduction has no serial dependence chain, then an
+/// 8-wide loop and a scalar tail.
+///
+/// Lengths must match — a shape bug must fail loudly (debug assert +
+/// out-of-bounds panic in release), never silently truncate to the
+/// shorter operand.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot length mismatch: {} vs {}", a.len(), b.len());
+    let n = a.len();
+    let mut i = 0;
+    let mut acc0 = F32x8::zero();
+    let mut acc1 = F32x8::zero();
+    let mut acc2 = F32x8::zero();
+    let mut acc3 = F32x8::zero();
+    while i + 4 * LANES <= n {
+        acc0 = F32x8::load(&a[i..]).mul_add(F32x8::load(&b[i..]), acc0);
+        acc1 = F32x8::load(&a[i + LANES..]).mul_add(F32x8::load(&b[i + LANES..]), acc1);
+        acc2 = F32x8::load(&a[i + 2 * LANES..]).mul_add(F32x8::load(&b[i + 2 * LANES..]), acc2);
+        acc3 = F32x8::load(&a[i + 3 * LANES..]).mul_add(F32x8::load(&b[i + 3 * LANES..]), acc3);
+        i += 4 * LANES;
+    }
+    while i + LANES <= n {
+        acc0 = F32x8::load(&a[i..]).mul_add(F32x8::load(&b[i..]), acc0);
+        i += LANES;
+    }
+    let mut s = acc0.add(acc1).add(acc2.add(acc3)).hsum();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// SIMD `y += a · x` (lengths must match).
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len(), "axpy length mismatch: {} vs {}", y.len(), x.len());
+    let n = y.len();
+    let av = F32x8::splat(a);
+    let mut i = 0;
+    while i + LANES <= n {
+        F32x8::load(&x[i..]).mul_add(av, F32x8::load(&y[i..])).store(&mut y[i..]);
+        i += LANES;
+    }
+    while i < n {
+        y[i] += a * x[i];
+        i += 1;
+    }
+}
+
+/// SIMD in-place scale `y *= c` — the streaming-softmax renormalization.
+#[inline]
+pub fn scale(y: &mut [f32], c: f32) {
+    let n = y.len();
+    let cv = F32x8::splat(c);
+    let mut i = 0;
+    while i + LANES <= n {
+        F32x8::load(&y[i..]).mul(cv).store(&mut y[i..]);
+        i += LANES;
+    }
+    while i < n {
+        y[i] *= c;
+        i += 1;
+    }
+}
+
+/// SIMD `o[t] = a[t] * c` — the softmax finalization `out = acc / l`.
+#[inline]
+pub fn scale_into(o: &mut [f32], a: &[f32], c: f32) {
+    debug_assert_eq!(o.len(), a.len(), "scale_into length mismatch");
+    let n = o.len();
+    let cv = F32x8::splat(c);
+    let mut i = 0;
+    while i + LANES <= n {
+        F32x8::load(&a[i..]).mul(cv).store(&mut o[i..]);
+        i += LANES;
+    }
+    while i < n {
+        o[i] = a[i] * c;
+        i += 1;
+    }
+}
+
+/// SIMD max over a slice (−∞ for an empty slice) — the score-tile row max.
+#[inline]
+pub fn row_max(s: &[f32]) -> f32 {
+    let n = s.len();
+    let mut i = 0;
+    let mut mv = F32x8::splat(f32::NEG_INFINITY);
+    while i + LANES <= n {
+        mv = mv.max(F32x8::load(&s[i..]));
+        i += LANES;
+    }
+    let mut m = mv.hmax();
+    while i < n {
+        if s[i] > m {
+            m = s[i];
+        }
+        i += 1;
+    }
+    m
+}
+
+/// SIMD weighted row blend `o[t] -= w · (o[t] − b[t])` — the merge rule's
+/// per-row update, same per-element formula as the scalar loop.
+#[inline]
+pub fn blend(o: &mut [f32], b: &[f32], w: f32) {
+    debug_assert_eq!(o.len(), b.len(), "blend length mismatch");
+    let n = o.len();
+    let wv = F32x8::splat(w);
+    let mut i = 0;
+    while i + LANES <= n {
+        let ov = F32x8::load(&o[i..]);
+        let bv = F32x8::load(&b[i..]);
+        ov.sub(ov.sub(bv).mul(wv)).store(&mut o[i..]);
+        i += LANES;
+    }
+    while i < n {
+        o[i] -= w * (o[i] - b[i]);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    fn seq(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.37 + seed).sin()) * 2.0).collect()
+    }
+
+    #[test]
+    fn dot_matches_scalar_across_tail_lengths() {
+        // lengths straddling the 32- and 8-element unroll boundaries
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 31, 32, 33, 63, 64, 65, 100, 128] {
+            let a = seq(n, 0.1);
+            let b = seq(n, 0.9);
+            let got = dot(&a, &b) as f64;
+            let exp = scalar_dot(&a, &b);
+            assert!((got - exp).abs() <= 1e-4 * exp.abs().max(1.0), "n={n}: {got} vs {exp}");
+        }
+    }
+
+    #[test]
+    fn axpy_scale_blend_match_scalar() {
+        for n in [1usize, 5, 8, 13, 16, 40, 67] {
+            let x = seq(n, 0.3);
+            let base = seq(n, 0.7);
+
+            let mut y = base.clone();
+            axpy(&mut y, 1.5, &x);
+            for t in 0..n {
+                assert_eq!(y[t], base[t] + 1.5 * x[t], "axpy n={n} t={t}");
+            }
+
+            let mut z = base.clone();
+            scale(&mut z, 0.25);
+            for t in 0..n {
+                assert_eq!(z[t], base[t] * 0.25, "scale n={n} t={t}");
+            }
+
+            let mut o = vec![0.0; n];
+            scale_into(&mut o, &base, 3.0);
+            for t in 0..n {
+                assert_eq!(o[t], base[t] * 3.0, "scale_into n={n} t={t}");
+            }
+
+            let mut m = base.clone();
+            blend(&mut m, &x, 0.375);
+            for t in 0..n {
+                assert_eq!(m[t], base[t] - 0.375 * (base[t] - x[t]), "blend n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_max_handles_tails_and_neg_infinity() {
+        assert_eq!(row_max(&[]), f32::NEG_INFINITY);
+        assert_eq!(row_max(&[f32::NEG_INFINITY; 11]), f32::NEG_INFINITY);
+        for n in [1usize, 7, 8, 9, 64, 65] {
+            let mut v = seq(n, 0.2);
+            let exp = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(row_max(&v), exp, "n={n}");
+            // max in the scalar tail position
+            v[n - 1] = 1e9;
+            assert_eq!(row_max(&v), 1e9, "n={n} tail");
+        }
+    }
+
+    #[test]
+    fn lane_ops_are_elementwise() {
+        let a = F32x8([1., 2., 3., 4., 5., 6., 7., 8.]);
+        let b = F32x8([8., 7., 6., 5., 4., 3., 2., 1.]);
+        assert_eq!(a.add(b).0, [9.0; 8]);
+        assert_eq!(a.mul(b).0, [8., 14., 18., 20., 20., 18., 14., 8.]);
+        assert_eq!(a.max(b).0, [8., 7., 6., 5., 5., 6., 7., 8.]);
+        assert_eq!(a.hsum(), 36.0);
+        assert_eq!(a.hmax(), 8.0);
+        assert_eq!(a.mul_add(F32x8::splat(2.0), b).0, [10., 11., 12., 13., 14., 15., 16., 17.]);
+    }
+}

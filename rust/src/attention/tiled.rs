@@ -1,4 +1,4 @@
-//! Tiled, mask-classified flash-style attention kernel.
+//! Tiled, mask-classified, SIMD-vectorized flash-style attention kernel.
 //!
 //! The scalar reference kernel walks every (head, q-row, key) triple and
 //! tests the causal mask per element. This kernel restructures the same
@@ -17,16 +17,39 @@
 //! rescaling, so tile order does not change the math beyond f32 rounding.
 //! All working memory lives in a caller-provided [`AttnScratch`], so the
 //! steady-state kernel performs zero heap allocations.
+//!
+//! ## Vectorization
+//!
+//! Every inner loop runs on the explicit-width lane primitives in
+//! [`super::simd`]: scores via the 4×8-lane [`simd::dot`], the running-max
+//! scan via [`simd::row_max`], renormalization via [`simd::scale`], the
+//! V-accumulate via [`simd::axpy`], and finalization via
+//! [`simd::scale_into`]. Scratch rows are lane-padded: the score tile is
+//! `KV_TILE` (a lane multiple) wide by construction, and accumulator rows
+//! are strided to the next multiple of [`simd::LANES`] so no row straddles
+//! a partial lane.
+//!
+//! ## Half-precision KV
+//!
+//! K/V may arrive packed ([`Dtype::Bf16`](crate::tensor::Dtype) /
+//! [`Dtype::F16`](crate::tensor::Dtype)). The kernel computes in f32
+//! regardless: on the first query head of each GQA group it decodes that
+//! KV head's rows once into scratch (`kdec`/`vdec`, laid out contiguously
+//! at stride `D`), and every tile then reads the same f32 row layout the
+//! full-width path uses — masking, classification, and the streaming
+//! softmax are entirely dtype-oblivious. Q, out, and lse are always f32.
 
 use crate::tensor::Tensor;
 
-use super::{axpy, dims3, dot, MASK_VALUE};
+use super::simd::{self, LANES};
+use super::{dims3, MASK_VALUE};
 
 /// Rows of Q per tile. Matches the reference artifact granularity closely
 /// enough that engine blocks (S/N rows) split into a handful of tiles.
 pub const Q_TILE: usize = 32;
 /// Keys per tile; wider than `Q_TILE` because the score-tile inner loop
-/// streams keys.
+/// streams keys. A multiple of [`simd::LANES`], so score rows are
+/// lane-padded by construction.
 pub const KV_TILE: usize = 64;
 
 /// Per-tile mask classification (exposed for tests and the bench harness).
@@ -115,17 +138,27 @@ pub fn classify(q: Extent, k: Extent, causal: bool) -> TileClass {
 /// reused with no further allocation.
 #[derive(Debug, Default)]
 pub struct AttnScratch {
-    /// (Q_TILE, KV_TILE) score tile, row-major.
+    /// (Q_TILE, KV_TILE) score tile, row-major. KV_TILE is a lane
+    /// multiple, so every score row is lane-padded by construction.
     scores: Vec<f32>,
     /// Running row maxima, Q_TILE.
     m: Vec<f32>,
     /// Running row denominators, Q_TILE.
     l: Vec<f32>,
-    /// Unnormalized output rows, (Q_TILE, D).
+    /// Unnormalized output rows, (Q_TILE, dpad) with `dpad` the head dim
+    /// rounded up to the lane width — rows never straddle a partial lane.
     acc: Vec<f32>,
     /// Per-tile classification metadata.
     q_ext: Vec<Extent>,
     k_ext: Vec<Extent>,
+    /// Decoded f32 rows of one KV head ((Skv, D), stride D) when K/V are
+    /// packed; untouched on the full-width path.
+    kdec: Vec<f32>,
+    vdec: Vec<f32>,
+    /// Which KV head `kdec`/`vdec` currently hold (usize::MAX = none) —
+    /// resets per call, so each KV head decodes at most once per call
+    /// even when several GQA query heads share it.
+    dec_head: usize,
 }
 
 impl AttnScratch {
@@ -133,7 +166,7 @@ impl AttnScratch {
         AttnScratch::default()
     }
 
-    fn ensure(&mut self, d: usize) {
+    fn ensure(&mut self, dpad: usize, dec_len: usize) {
         if self.scores.len() < Q_TILE * KV_TILE {
             self.scores.resize(Q_TILE * KV_TILE, 0.0);
         }
@@ -141,8 +174,12 @@ impl AttnScratch {
             self.m.resize(Q_TILE, 0.0);
             self.l.resize(Q_TILE, 0.0);
         }
-        if self.acc.len() < Q_TILE * d {
-            self.acc.resize(Q_TILE * d, 0.0);
+        if self.acc.len() < Q_TILE * dpad {
+            self.acc.resize(Q_TILE * dpad, 0.0);
+        }
+        if self.kdec.len() < dec_len {
+            self.kdec.resize(dec_len, 0.0);
+            self.vdec.resize(dec_len, 0.0);
         }
     }
 }
@@ -152,6 +189,9 @@ impl AttnScratch {
 /// the scalar reference (`attention_block_reference`) at f32-rounding
 /// distance; fully-masked rows produce `(out = 0, lse = MASK_VALUE)`
 /// exactly.
+///
+/// `q` must be f32; `k`/`v` may share any storage dtype (f32 or a packed
+/// half format — decoded to f32 rows on load, see the module docs).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_block_into(
     q: &Tensor,
@@ -173,15 +213,27 @@ pub fn attention_block_into(
         "GQA wants q heads {h} divisible by kv heads {h_kv}"
     );
     assert_eq!(k.shape(), v.shape(), "k/v shape mismatch");
+    assert_eq!(
+        k.dtype(),
+        v.dtype(),
+        "k/v dtype mismatch: {} vs {}",
+        k.dtype(),
+        v.dtype()
+    );
+    assert!(!q.dtype().is_packed(), "q must be f32, got {}", q.dtype());
     assert_eq!(q_pos.len(), sq, "q_pos length");
     assert_eq!(k_pos.len(), skv, "k_pos length");
     assert_eq!(out.shape(), &[sq, h, d], "out shape");
     assert_eq!(lse.shape(), &[h, sq], "lse shape");
     let group = h / h_kv; // GQA: `group` query heads share one KV head
     let scale = sm_scale.unwrap_or(1.0 / (d as f32).sqrt());
+    let packed = k.dtype().is_packed();
 
-    scratch.ensure(d);
-    let AttnScratch { scores, m, l, acc, q_ext, k_ext } = scratch;
+    // accumulator row stride, lane-padded
+    let dpad = d.div_ceil(LANES) * LANES;
+    scratch.ensure(dpad, if packed { skv * d } else { 0 });
+    let AttnScratch { scores, m, l, acc, q_ext, k_ext, kdec, vdec, dec_head } = scratch;
+    *dec_head = usize::MAX; // decode cache never carries across calls
 
     // tile extents: computed once, shared by every head
     q_ext.clear();
@@ -190,19 +242,36 @@ pub fn attention_block_into(
     k_ext.extend(k_pos.chunks(KV_TILE).map(Extent::of_keys));
 
     let qd = q.data();
-    let kd = k.data();
-    let vd = v.data();
+    let empty: &[f32] = &[];
+    let (kd, vd) = if packed { (empty, empty) } else { (k.data(), v.data()) };
     let od = out.data_mut();
     let ld = lse.data_mut();
 
     for hi in 0..h {
         let hk = hi / group;
+        // One row layout for both storage widths: key row j lives at
+        // `base + j * stride`. Full-width K/V are read in place (stride
+        // H_kv·D); packed K/V are decoded per KV head into contiguous
+        // stride-D scratch rows, at most once per call per head.
+        let (kb, vb, base, stride): (&[f32], &[f32], usize, usize) = if packed {
+            if *dec_head != hk {
+                for t in 0..skv {
+                    k.decode_slice_into((t * h_kv + hk) * d, &mut kdec[t * d..(t + 1) * d]);
+                    v.decode_slice_into((t * h_kv + hk) * d, &mut vdec[t * d..(t + 1) * d]);
+                }
+                *dec_head = hk;
+            }
+            (&kdec[..], &vdec[..], 0, d)
+        } else {
+            (kd, vd, hk * d, h_kv * d)
+        };
+
         for (qt, qe) in q_ext.iter().enumerate() {
             let i0 = qt * Q_TILE;
             let tq = sq.min(i0 + Q_TILE) - i0;
             m[..tq].fill(f32::NEG_INFINITY);
             l[..tq].fill(0.0);
-            acc[..tq * d].fill(0.0);
+            acc[..tq * dpad].fill(0.0);
 
             for (kt, ke) in k_ext.iter().enumerate() {
                 let j0 = kt * KV_TILE;
@@ -215,8 +284,8 @@ pub fn attention_block_into(
                             let qrow = &qd[((i0 + ii) * h + hi) * d..][..d];
                             let srow = &mut scores[ii * KV_TILE..ii * KV_TILE + tk];
                             for (jj, sj) in srow.iter_mut().enumerate() {
-                                let krow = &kd[((j0 + jj) * h_kv + hk) * d..][..d];
-                                *sj = dot(qrow, krow) * scale;
+                                let krow = &kb[base + (j0 + jj) * stride..][..d];
+                                *sj = simd::dot(qrow, krow) * scale;
                             }
                         }
                     }
@@ -230,8 +299,8 @@ pub fn attention_block_into(
                                 if kp < 0 || (causal && qp < kp) {
                                     *sj = f32::NEG_INFINITY; // sentinel
                                 } else {
-                                    let krow = &kd[((j0 + jj) * h_kv + hk) * d..][..d];
-                                    *sj = dot(qrow, krow) * scale;
+                                    let krow = &kb[base + (j0 + jj) * stride..][..d];
+                                    *sj = simd::dot(qrow, krow) * scale;
                                 }
                             }
                         }
@@ -241,25 +310,18 @@ pub fn attention_block_into(
                 // streaming softmax update across KV tiles
                 for ii in 0..tq {
                     let srow = &scores[ii * KV_TILE..ii * KV_TILE + tk];
-                    let mut tile_m = f32::NEG_INFINITY;
-                    for &sj in srow {
-                        if sj > tile_m {
-                            tile_m = sj;
-                        }
-                    }
+                    let tile_m = simd::row_max(srow);
                     if tile_m == f32::NEG_INFINITY {
                         continue; // row fully masked within this tile
                     }
-                    let arow = &mut acc[ii * d..(ii + 1) * d];
+                    let arow = &mut acc[ii * dpad..ii * dpad + d];
                     if tile_m > m[ii] {
                         // renormalize prior state to the new max (no-op on
                         // the first contributing tile: l and acc are zero)
                         if m[ii] != f32::NEG_INFINITY {
                             let corr = (m[ii] - tile_m).exp();
                             l[ii] *= corr;
-                            for t in arow.iter_mut() {
-                                *t *= corr;
-                            }
+                            simd::scale(arow, corr);
                         }
                         m[ii] = tile_m;
                     }
@@ -271,8 +333,8 @@ pub fn attention_block_into(
                         }
                         let p = (sj - mx).exp();
                         lsum += p;
-                        let vrow = &vd[((j0 + jj) * h_kv + hk) * d..][..d];
-                        axpy(arow, p, vrow);
+                        let vrow = &vb[base + (j0 + jj) * stride..][..d];
+                        simd::axpy(arow, p, vrow);
                     }
                     l[ii] += lsum;
                 }
@@ -287,10 +349,7 @@ pub fn attention_block_into(
                     ld[hi * sq + gi] = MASK_VALUE;
                 } else {
                     let inv = 1.0 / l[ii];
-                    let arow = &acc[ii * d..(ii + 1) * d];
-                    for (o, &a) in orow.iter_mut().zip(arow) {
-                        *o = a * inv;
-                    }
+                    simd::scale_into(orow, &acc[ii * dpad..ii * dpad + d], inv);
                     ld[hi * sq + gi] = m[ii] + l[ii].ln();
                 }
             }
@@ -301,6 +360,7 @@ pub fn attention_block_into(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Dtype;
 
     fn qext(pos: &[i32]) -> Extent {
         Extent::of_queries(pos)
@@ -372,12 +432,15 @@ mod tests {
 
     #[test]
     fn scratch_reuse_is_stable() {
-        // same scratch across calls with different shapes must not corrupt
+        // same scratch across calls with different shapes must not corrupt;
+        // head dims off the lane width exercise the padded-accumulator tail
         use crate::attention::attention_block_reference;
         use crate::util::rng::Rng;
         let mut rng = Rng::new(99);
         let mut scratch = AttnScratch::new();
-        for &(sq, skv, h, d) in &[(5usize, 9usize, 2usize, 4usize), (33, 65, 1, 8), (16, 16, 2, 4)] {
+        for &(sq, skv, h, d) in
+            &[(5usize, 9usize, 2usize, 4usize), (33, 65, 1, 8), (16, 16, 2, 4), (9, 70, 2, 12)]
+        {
             let q = Tensor::new(&[sq, h, d], rng.normal_vec(sq * h * d, 1.0));
             let k = Tensor::new(&[skv, h, d], rng.normal_vec(skv * h * d, 1.0));
             let v = Tensor::new(&[skv, h, d], rng.normal_vec(skv * h * d, 1.0));
@@ -390,5 +453,55 @@ mod tests {
             assert!(out.allclose(&eo, 1e-5), "sq={sq} diff={}", out.max_abs_diff(&eo));
             assert!(lse.allclose(&el, 1e-4));
         }
+    }
+
+    #[test]
+    fn packed_kv_matches_f32_within_dtype_tolerance() {
+        // the kernel's decode path: packed K/V against the same call with
+        // full-width K/V. The only divergence is KV rounding, so the gap
+        // is bounded by a small multiple of the dtype's unit roundoff.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let (sq, skv, h, h_kv, d) = (21usize, 130usize, 4usize, 2usize, 12usize);
+        let q = Tensor::new(&[sq, h, d], rng.normal_vec(sq * h * d, 1.0));
+        let k = Tensor::new(&[skv, h_kv, d], rng.normal_vec(skv * h_kv * d, 1.0));
+        let v = Tensor::new(&[skv, h_kv, d], rng.normal_vec(skv * h_kv * d, 1.0));
+        let qp: Vec<i32> = (100..100 + sq as i32).collect();
+        let kp: Vec<i32> = (0..skv as i32).collect();
+        let mut scratch = AttnScratch::new();
+        let mut out = Tensor::zeros(&[sq, h, d]);
+        let mut lse = Tensor::zeros(&[h, sq]);
+        attention_block_into(&q, &k, &v, &qp, &kp, true, None, &mut scratch, &mut out, &mut lse);
+        for dt in [Dtype::Bf16, Dtype::F16] {
+            let (kp16, vp16) = (k.encode(dt), v.encode(dt));
+            assert_eq!(kp16.size_bytes(), k.size_bytes() / 2);
+            let mut o2 = Tensor::zeros(&[sq, h, d]);
+            let mut l2 = Tensor::zeros(&[h, sq]);
+            attention_block_into(&q, &kp16, &vp16, &qp, &kp, true, None, &mut scratch, &mut o2, &mut l2);
+            let atol = 48.0 * dt.unit_roundoff();
+            assert!(
+                o2.allclose(&out, atol),
+                "{dt}: out diff {} > {atol}",
+                o2.max_abs_diff(&out)
+            );
+            assert!(l2.allclose(&lse, atol), "{dt}: lse diff {}", l2.max_abs_diff(&lse));
+            // a second call with the same scratch must decode afresh
+            let mut o3 = Tensor::zeros(&[sq, h, d]);
+            let mut l3 = Tensor::zeros(&[h, sq]);
+            attention_block_into(&q, &kp16, &vp16, &qp, &kp, true, None, &mut scratch, &mut o3, &mut l3);
+            assert!(o3.allclose(&o2, 0.0), "{dt}: repeat call must be identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k/v dtype mismatch")]
+    fn mixed_kv_dtypes_are_rejected() {
+        let q = Tensor::zeros(&[1, 1, 8]);
+        let k = Tensor::zeros(&[2, 1, 8]);
+        let v = k.encode(Dtype::Bf16);
+        let mut scratch = AttnScratch::new();
+        let mut out = Tensor::zeros(&[1, 1, 8]);
+        let mut lse = Tensor::zeros(&[1, 1]);
+        attention_block_into(&q, &k, &v, &[0], &[0, 1], true, None, &mut scratch, &mut out, &mut lse);
     }
 }

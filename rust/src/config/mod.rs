@@ -12,6 +12,7 @@ use crate::json_obj;
 use crate::parallelism::partition::Partition;
 use crate::parallelism::ScheduleSpec;
 use crate::scheduler::{ContinuousServeOpts, ServeRuntime};
+use crate::tensor::Dtype;
 use crate::topology::Topology;
 use crate::util::json::Json;
 use crate::workload::{Request, ServeMix};
@@ -357,6 +358,10 @@ pub struct ServeConfig {
     /// `"stall@4:0:200"` (see `engine::faults::FaultSpec`). Empty = no
     /// injection. Non-empty plans require `"runtime": "actors"`.
     pub faults: Vec<String>,
+    /// KV storage dtype (`f32` | `bf16` | `f16`, see
+    /// [`Dtype::parse`]). Half formats store and ship packed KV bytes,
+    /// halving cache budget pressure and ring-step traffic.
+    pub kv_dtype: String,
 }
 
 fn field_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
@@ -374,6 +379,7 @@ impl ServeConfig {
         "name", "mix", "requests", "rate", "seed", "devices", "heads", "head_dim",
         "chunk", "max_batch", "max_step_tokens", "kv_budget_tokens", "aging_steps",
         "runtime", "watchdog_ms", "max_retries", "max_recoveries", "faults",
+        "kv_dtype",
     ];
 
     /// The built-in default: the Poisson mix on 4 devices.
@@ -397,6 +403,7 @@ impl ServeConfig {
             max_retries: 2,
             max_recoveries: 2,
             faults: Vec::new(),
+            kv_dtype: Dtype::F32.name().to_string(),
         }
     }
 
@@ -463,8 +470,10 @@ impl ServeConfig {
             max_retries: field_usize(&j, "max_retries", d.max_retries)?,
             max_recoveries: field_usize(&j, "max_recoveries", d.max_recoveries)?,
             faults,
+            kv_dtype: field_str("kv_dtype", &d.kv_dtype)?,
         };
         let runtime = ServeRuntime::parse(&cfg.runtime)?; // name must be registered
+        cfg.parsed_kv_dtype()?; // dtype name must be registered
         if cfg.watchdog_ms == 0 {
             bail!("serve config: 'watchdog_ms' must be positive");
         }
@@ -532,7 +541,19 @@ impl ServeConfig {
             ("max_retries", self.max_retries),
             ("max_recoveries", self.max_recoveries),
             ("faults", self.faults.clone()),
+            ("kv_dtype", self.kv_dtype.clone()),
         ]
+    }
+
+    /// The [`Dtype`] this config's `kv_dtype` names; a structured error
+    /// listing the accepted names when it is unregistered.
+    pub fn parsed_kv_dtype(&self) -> Result<Dtype> {
+        Dtype::parse(&self.kv_dtype).ok_or_else(|| {
+            anyhow!(
+                "serve config: unknown kv_dtype '{}' (valid: f32, bf16, f16)",
+                self.kv_dtype
+            )
+        })
     }
 
     /// The parsed [`FaultPlan`] this config's `faults` entries describe
@@ -557,7 +578,7 @@ impl ServeConfig {
     /// via [`ServeConfig::from_json`] is already validated).
     pub fn opts(&self) -> Result<ContinuousServeOpts> {
         let plan = self.fault_plan()?;
-        Ok(ContinuousServeOpts {
+        let mut opts = ContinuousServeOpts {
             devices: self.devices,
             heads: self.heads,
             head_dim: self.head_dim,
@@ -573,7 +594,9 @@ impl ServeConfig {
             max_recoveries: self.max_recoveries,
             faults: if plan.is_empty() { None } else { Some(plan) },
             ..Default::default()
-        })
+        };
+        opts.engine.kv_dtype = self.parsed_kv_dtype()?;
+        Ok(opts)
     }
 }
 
@@ -1011,6 +1034,29 @@ mod tests {
             r#"{"cache":{"enabled":false,"hot_entries":0,"warm_bytes":0}}"#
         )
         .is_ok());
+    }
+
+    #[test]
+    fn serve_config_kv_dtype_round_trips_and_wires_into_opts() {
+        // default is full-width f32
+        let cfg = ServeConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.kv_dtype, "f32");
+        assert_eq!(cfg.opts().unwrap().engine.kv_dtype, Dtype::F32);
+        // half formats parse (aliases included) and reach the engine opts
+        for (name, dt) in [("bf16", Dtype::Bf16), ("f16", Dtype::F16), ("float16", Dtype::F16)] {
+            let cfg =
+                ServeConfig::from_json(&format!(r#"{{"kv_dtype":"{name}"}}"#)).unwrap();
+            assert_eq!(cfg.opts().unwrap().engine.kv_dtype, dt, "{name}");
+            let again = ServeConfig::from_json(&cfg.to_json().to_string()).unwrap();
+            assert_eq!(again, cfg);
+        }
+        // unknown names fail at load with the registry listed
+        let e = ServeConfig::from_json(r#"{"kv_dtype":"int4"}"#).unwrap_err().to_string();
+        assert!(e.contains("int4") && e.contains("bf16"), "{e}");
+        assert!(ServeConfig::from_json(r#"{"kv_dtype":8}"#).is_err());
+        // the fleet loader inherits the key and threads it to replicas
+        let f = FleetConfig::from_json(r#"{"kv_dtype":"bf16"}"#).unwrap();
+        assert_eq!(f.opts().unwrap().replica.engine.kv_dtype, Dtype::Bf16);
     }
 
     #[test]

@@ -53,7 +53,7 @@ use anyhow::{anyhow, bail, ensure, Context, Error, Result};
 use crate::attention::MASK_VALUE;
 use crate::metrics::{Clock, Event, Timeline};
 use crate::simulator::SpanTag;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 
 use super::backend::{Backend, Scratch};
 use super::decode::{DecodeQuery, DecodeResult};
@@ -196,10 +196,10 @@ struct ResidentView {
 }
 
 impl ResidentView {
-    fn empty(heads: usize, head_dim: usize) -> ResidentView {
+    fn empty(heads: usize, head_dim: usize, dtype: Dtype) -> ResidentView {
         ResidentView {
-            k: Tensor::zeros(&[0, heads, head_dim]),
-            v: Tensor::zeros(&[0, heads, head_dim]),
+            k: Tensor::zeros_dtype(&[0, heads, head_dim], dtype),
+            v: Tensor::zeros_dtype(&[0, heads, head_dim], dtype),
             positions: Vec::new(),
         }
     }
@@ -328,7 +328,7 @@ impl Actor {
     fn admit(&mut self, request: usize) -> Result<()> {
         let prior = self
             .views
-            .insert(request, ResidentView::empty(self.heads, self.head_dim));
+            .insert(request, ResidentView::empty(self.heads, self.head_dim, self.opts.kv_dtype));
         ensure!(
             prior.is_none(),
             "device {}: request {request} admitted twice without an evict",
@@ -594,13 +594,14 @@ impl Actor {
 
 /// Manifest an injected [`FaultKind::CorruptDelta`]: flip one payload
 /// value *after* the checksum was stamped. The mutation is copy-on-write
-/// (`Tensor::data_mut`), so only this actor's copy is perturbed — the
-/// driver's cache page is untouched, exactly like corruption in transit.
+/// (`Tensor::perturb_bits`, which flips a stored bit regardless of dtype),
+/// so only this actor's copy is perturbed — the driver's cache page is
+/// untouched, exactly like corruption in transit.
 fn corrupt(mut delta: KvDelta) -> KvDelta {
-    if let Some(x) = delta.k.data_mut().first_mut() {
-        *x += 1.0;
-    } else if let Some(p) = delta.positions.first_mut() {
-        *p += 1;
+    if !delta.k.perturb_bits() {
+        if let Some(p) = delta.positions.first_mut() {
+            *p += 1;
+        }
     }
     delta
 }

@@ -208,7 +208,12 @@ impl Backend for PjrtBackend {
         _scratch: &mut Scratch,
     ) -> Result<(Tensor, Tensor)> {
         let artifact = self.rt.manifest().attn_name(&self.profile, causal);
-        self.rt.attn_block(&artifact, q, k, v, q_pos, k_pos)
+        // The AOT artifacts are compiled against f32 operands, so packed
+        // KV is widened at this boundary (the native kernel instead
+        // decodes per-head inside its tile loop). F32 inputs pass through
+        // as zero-copy clones.
+        let (k, v) = (k.to_f32(), v.to_f32());
+        self.rt.attn_block(&artifact, q, &k, &v, q_pos, k_pos)
     }
 
     fn merge(

@@ -105,6 +105,7 @@ mod tests {
             partition: Partition::Contiguous,
             backend: BackendSpec::Native,
             record: false,
+            ..Default::default()
         }
     }
 

@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 
 /// One page: `tokens` consecutive positions of K and V for one request.
 #[derive(Debug, Clone)]
@@ -61,8 +61,12 @@ pub struct KvDelta {
     pub checksum: u64,
 }
 
-/// FNV-1a over the delta payload: K and V f32 bit patterns, then
-/// positions. Deterministic and byte-order-free (we hash values, not
+/// FNV-1a over the delta payload: the *stored* K and V bit patterns
+/// (f32 bits for full-width tensors, packed u16 bits for bf16/f16), then
+/// positions. Hashing the packed representation — the bytes actually on
+/// the wire — means corrupt-fault detection behaves identically under
+/// every `kv_dtype`: a single flipped storage bit always changes the
+/// digest. Deterministic and byte-order-free (we hash values, not
 /// memory), so driver and actor always agree.
 fn payload_checksum(k: &Tensor, v: &Tensor, positions: &[i32]) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -71,13 +75,20 @@ fn payload_checksum(k: &Tensor, v: &Tensor, positions: &[i32]) -> u64 {
         *h ^= bits;
         *h = h.wrapping_mul(PRIME);
     }
+    fn mix_tensor(h: &mut u64, t: &Tensor) {
+        if t.dtype().is_packed() {
+            for &b in t.half_bits() {
+                mix(h, u64::from(b));
+            }
+        } else {
+            for &x in t.data() {
+                mix(h, u64::from(x.to_bits()));
+            }
+        }
+    }
     let mut h = OFFSET;
-    for &x in k.data() {
-        mix(&mut h, u64::from(x.to_bits()));
-    }
-    for &x in v.data() {
-        mix(&mut h, u64::from(x.to_bits()));
-    }
+    mix_tensor(&mut h, k);
+    mix_tensor(&mut h, v);
     for &p in positions {
         mix(&mut h, p as u32 as u64);
     }
@@ -133,16 +144,33 @@ pub struct KvCache {
     pub heads: usize,
     pub head_dim: usize,
     pub page_tokens: usize,
+    /// Storage dtype for resident pages and outgoing deltas. Appends are
+    /// encoded once at this boundary (the model always hands us f32), so
+    /// everything downstream — resident views, delta channels, budget
+    /// accounting — carries packed bytes when a half format is selected.
+    pub dtype: Dtype,
     seqs: HashMap<usize, SeqEntry>,
 }
 
 impl KvCache {
     pub fn new(devices: usize, heads: usize, head_dim: usize, page_tokens: usize) -> KvCache {
+        KvCache::new_with_dtype(devices, heads, head_dim, page_tokens, Dtype::F32)
+    }
+
+    /// [`KvCache::new`] with an explicit storage dtype — the `kv_dtype`
+    /// knob's landing point.
+    pub fn new_with_dtype(
+        devices: usize,
+        heads: usize,
+        head_dim: usize,
+        page_tokens: usize,
+        dtype: Dtype,
+    ) -> KvCache {
         assert!(
             devices > 0 && page_tokens > 0,
             "KvCache::new: devices ({devices}) and page_tokens ({page_tokens}) must be positive"
         );
-        KvCache { devices, heads, head_dim, page_tokens, seqs: HashMap::new() }
+        KvCache { devices, heads, head_dim, page_tokens, dtype, seqs: HashMap::new() }
     }
 
     /// Ensure `id` has a (possibly empty) entry, so [`KvCache::device_view`]
@@ -175,6 +203,11 @@ impl KvCache {
         if k.shape() != [t, self.heads, self.head_dim] || k.shape() != v.shape() {
             bail!("kv append shape mismatch for request {id}: {:?}", k.shape());
         }
+        // Encode once at the cache boundary; the pages and every delta
+        // window below slice the encoded tensors. Same-dtype encode is a
+        // zero-copy clone, so f32 deltas stay windows of the caller's
+        // append (the messaging layer's refcount-bump contract).
+        let (k, v) = (k.encode(self.dtype), v.encode(self.dtype));
         let devices = self.devices;
         let page_tokens = self.page_tokens;
         let entry = self.seqs.entry(id).or_insert_with(|| SeqEntry {
@@ -232,8 +265,8 @@ impl KvCache {
         let pages = &e.pages[device];
         if pages.is_empty() {
             return Ok((
-                Tensor::zeros(&[0, self.heads, self.head_dim]),
-                Tensor::zeros(&[0, self.heads, self.head_dim]),
+                Tensor::zeros_dtype(&[0, self.heads, self.head_dim], self.dtype),
+                Tensor::zeros_dtype(&[0, self.heads, self.head_dim], self.dtype),
                 Vec::new(),
             ));
         }
@@ -457,6 +490,58 @@ mod tests {
         bad.k.data_mut()[0] += 1.0;
         let e = bad.verify().unwrap_err().to_string();
         assert!(e.contains("request 6") && e.contains("device 0"), "{e}");
+    }
+
+    #[test]
+    fn packed_cache_halves_resident_and_wire_bytes() {
+        let mut rng = Rng::new(21);
+        let (k, v) = kv(&mut rng, 16);
+        let mut full = KvCache::new(2, 2, 8, 4);
+        let mut half = KvCache::new_with_dtype(2, 2, 8, 4, Dtype::Bf16);
+        let df = full.append_deltas(1, &k, &v).unwrap();
+        let dh = half.append_deltas(1, &k, &v).unwrap();
+        // resident accounting reports true packed bytes, not numel×4
+        let bf: usize = full.bytes_per_device().iter().sum();
+        let bh: usize = half.bytes_per_device().iter().sum();
+        assert_eq!(bh * 2, bf);
+        // wire bytes: K+V halve, the positions overhead (4B/token) stays
+        let tokens: usize = df.iter().map(KvDelta::tokens).sum();
+        let wf: usize = df.iter().map(KvDelta::bytes).sum();
+        let wh: usize = dh.iter().map(KvDelta::bytes).sum();
+        assert_eq!(wh, (wf - tokens * 4) / 2 + tokens * 4);
+        // deltas and views carry the cache dtype
+        for d in &dh {
+            assert_eq!(d.k.dtype(), Dtype::Bf16);
+            assert_eq!(d.v.dtype(), Dtype::Bf16);
+        }
+        let (kd, _, _) = half.device_view(1, 0).unwrap();
+        assert_eq!(kd.dtype(), Dtype::Bf16);
+        // empty views are explicitly typed too
+        half.admit(9);
+        let (ke, ve, _) = half.device_view(9, 0).unwrap();
+        assert_eq!((ke.dtype(), ve.dtype()), (Dtype::Bf16, Dtype::Bf16));
+        // the packed rows decode to the original values within bf16 rounding
+        let orig = k.slice_rows(0, 4);
+        assert!(kd.slice_rows(0, 4).max_abs_diff(&orig) <= 4.0 * Dtype::Bf16.unit_roundoff());
+    }
+
+    #[test]
+    fn packed_delta_checksums_detect_bit_corruption() {
+        let mut rng = Rng::new(22);
+        let (k, v) = kv(&mut rng, 8);
+        for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            let mut c = KvCache::new_with_dtype(2, 2, 8, 4, dt);
+            let deltas = c.append_deltas(3, &k, &v).unwrap();
+            for d in &deltas {
+                d.verify().unwrap();
+            }
+            // a single flipped storage bit must break verification under
+            // every dtype — the corrupt-fault detection contract
+            let mut bad = deltas[0].clone();
+            assert!(bad.k.perturb_bits());
+            let e = bad.verify().unwrap_err().to_string();
+            assert!(e.contains("request 3"), "{dt}: {e}");
+        }
     }
 
     #[test]

@@ -45,7 +45,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::metrics::{Clock, Event, Timeline};
 use crate::parallelism::partition::Partition;
 use crate::simulator::SpanTag;
-use crate::tensor::Tensor;
+use crate::tensor::{Dtype, Tensor};
 use backend::{Backend, BackendSpec, Scratch};
 
 /// Inter-device message. Tensor payloads share storage with the sender's
@@ -84,6 +84,10 @@ pub struct EngineOpts {
     /// Record a timeline (small overhead; on by default, disabled on the
     /// serving hot path).
     pub record: bool,
+    /// Storage dtype for resident KV and KvDelta payloads (queries,
+    /// outputs, and kernel arithmetic stay f32). Bf16/F16 halve cache
+    /// budget pressure and ring-step bytes at a bounded rounding cost.
+    pub kv_dtype: Dtype,
 }
 
 impl Default for EngineOpts {
@@ -93,6 +97,7 @@ impl Default for EngineOpts {
             partition: Partition::Zigzag,
             backend: BackendSpec::Native,
             record: true,
+            kv_dtype: Dtype::F32,
         }
     }
 }
@@ -749,6 +754,7 @@ mod tests {
                     partition,
                     backend: BackendSpec::Native,
                     record,
+                    ..Default::default()
                 };
                 check_against_oracle(
                     |q, k, v| run_token_ring(q, k, v, 4, &opts).unwrap(),
@@ -768,6 +774,7 @@ mod tests {
                     partition: Partition::Zigzag,
                     backend: BackendSpec::Native,
                     record,
+                    ..Default::default()
                 };
                 check_against_oracle(
                     |q, k, v| run_ring_attention(q, k, v, 4, &opts).unwrap(),
@@ -787,6 +794,7 @@ mod tests {
                     partition: Partition::Zigzag,
                     backend: BackendSpec::Native,
                     record,
+                    ..Default::default()
                 };
                 check_against_oracle(
                     |q, k, v| run_hybrid(q, k, v, nodes, per_node, &opts).unwrap(),
@@ -816,6 +824,7 @@ mod tests {
                     partition: Partition::Zigzag,
                     backend: BackendSpec::Native,
                     record,
+                    ..Default::default()
                 };
                 let (q, k, v) = rand_qkv(64, 2, 16, 13 + n as u64);
                 let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();

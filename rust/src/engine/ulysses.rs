@@ -228,6 +228,7 @@ mod tests {
             partition: Partition::Contiguous,
             backend: BackendSpec::Native,
             record: true,
+            ..Default::default()
         }
     }
 

@@ -216,9 +216,15 @@ pub fn serve_fleet(requests: &[Request], opts: &FleetOpts) -> Result<FleetReport
                     }
                     None => {
                         // synthesize the shared rows once; every later
-                        // member of the group hits them
+                        // member of the group hits them. Stored at the
+                        // replica KV dtype: the warm tier holds packed
+                        // bytes, and a hit re-enters the serve cache via
+                        // a zero-copy same-dtype append. Half rounding is
+                        // idempotent, so warm-started members still match
+                        // cold ones bit-for-bit.
+                        let dt = opts.replica.engine.kv_dtype;
                         let (k, v) = source.prefix_kv(p.group, p.tokens);
-                        cache.insert(key, p.tokens, k, v);
+                        cache.insert(key, p.tokens, k.encode(dt), v.encode(dt));
                     }
                 }
             }

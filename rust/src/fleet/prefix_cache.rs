@@ -102,9 +102,11 @@ struct Entry {
 }
 
 impl Entry {
-    /// Payload bytes: K and V rows at 4 bytes per element.
+    /// Payload bytes: K and V rows at their *stored* width, so a packed
+    /// (bf16/f16) prefix charges the warm budget half of what an f32 one
+    /// does — doubling warm-tier capacity in prefixes.
     fn bytes(&self) -> usize {
-        (self.k.data().len() + self.v.data().len()) * 4
+        self.k.size_bytes() + self.v.size_bytes()
     }
 }
 
@@ -357,6 +359,25 @@ mod tests {
         assert!(c.lookup(9).is_none(), "oversize entry must not be retained in warm");
         assert!(c.warm_len() <= before.max(1));
         assert!(c.warm_bytes_now() <= 40);
+    }
+
+    #[test]
+    fn packed_entries_charge_half_the_warm_budget() {
+        use crate::tensor::Dtype;
+        // 4-token 1×1 rows: 32 B per entry at f32, 16 B packed — the
+        // same 64-byte warm budget holds twice as many bf16 prefixes
+        let mut c = cache(1, 64);
+        for key in 1..=6u64 {
+            let (k, v) = rows(4, key as f32);
+            c.insert(key, 4, k.encode(Dtype::Bf16), v.encode(Dtype::Bf16));
+        }
+        // hot holds entry 6; warm packs four 16-byte entries exactly
+        assert_eq!(c.warm_len(), 4);
+        assert_eq!(c.warm_bytes_now(), 64);
+        // hits hand back the packed rows as stored
+        let hit = c.lookup(5).expect("warm hit");
+        assert_eq!(hit.k.dtype(), Dtype::Bf16);
+        assert_eq!(hit.k.size_bytes(), 4 * 2);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! tokenring validate  [--backend native|pjrt] [--profile tiny]
 //! tokenring serve     --config configs/serve.json [--out report.json] [--runtime actors|spawn_per_step]
 //! tokenring serve     --config ... [--faults "panic@2:1,stall@4:0:200"] [--watchdog-ms 50] [--max-retries 2] [--max-recoveries 2]
+//! tokenring serve     --config ... [--kv-dtype f32|bf16|f16]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
 //! tokenring fleet     --config configs/fleet.json [--out report.json] [--replicas N] [--route prefix_affinity] [--cache on|off]
 //! tokenring trace     --schedule token_ring --out trace.json
@@ -297,6 +298,7 @@ fn cmd_validate(argv: &[String]) -> Result<(), String> {
             partition,
             backend: backend.clone(),
             record: false,
+            ..Default::default()
         };
         let runs: [(&str, RunFn); 2] = [
             ("token_ring", engine::run_token_ring),
@@ -331,6 +333,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "watchdog-ms", help: "per-reply watchdog override in milliseconds (with --config)", default: None, is_flag: false },
         OptSpec { name: "max-retries", help: "watchdog extensions before a stalled reply poisons the ring (with --config)", default: None, is_flag: false },
         OptSpec { name: "max-recoveries", help: "ring respawns before the serve session fails remaining requests (with --config)", default: None, is_flag: false },
+        OptSpec { name: "kv-dtype", help: "KV storage dtype override: f32 | bf16 | f16 (with --config; kernel math stays f32)", default: None, is_flag: false },
         OptSpec { name: "requests", help: "request count (legacy driver)", default: Some("16"), is_flag: false },
         OptSpec { name: "devices", help: "SP degree (legacy driver)", default: Some("4"), is_flag: false },
         OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention; legacy driver)", default: Some("token_ring"), is_flag: false },
@@ -347,10 +350,11 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             watchdog_ms: args.get("watchdog-ms"),
             max_retries: args.get("max-retries"),
             max_recoveries: args.get("max-recoveries"),
+            kv_dtype: args.get("kv-dtype"),
         };
         return cmd_serve_config(path, args.get("out"), args.get("trace"), &overrides);
     }
-    for flag in ["runtime", "faults", "watchdog-ms", "max-retries", "max-recoveries"] {
+    for flag in ["runtime", "faults", "watchdog-ms", "max-retries", "max-recoveries", "kv-dtype"] {
         if args.get(flag).is_some() {
             return Err(format!("--{flag} only applies to the continuous path (use --config)"));
         }
@@ -374,6 +378,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             partition: Partition::Zigzag,
             backend: BackendSpec::Native,
             record: false,
+            ..Default::default()
         },
     };
     let rep = serve(&reqs, &opts).map_err(|e| e.to_string())?;
@@ -403,6 +408,7 @@ struct ServeOverrides<'a> {
     watchdog_ms: Option<&'a str>,
     max_retries: Option<&'a str>,
     max_recoveries: Option<&'a str>,
+    kv_dtype: Option<&'a str>,
 }
 
 /// `tokenring serve --config`: the continuous-batching path.
@@ -433,6 +439,10 @@ fn cmd_serve_config(
     if let Some(v) = overrides.max_recoveries {
         cfg.max_recoveries =
             v.parse().map_err(|_| format!("--max-recoveries: bad integer '{v}'"))?;
+    }
+    if let Some(v) = overrides.kv_dtype {
+        cfg.kv_dtype = v.to_string();
+        cfg.parsed_kv_dtype().map_err(|e| e.to_string())?;
     }
     let plan = cfg.fault_plan().map_err(|e| format!("--faults: {e}"))?;
     let runtime = ServeRuntime::parse(&cfg.runtime).map_err(|e| e.to_string())?;
@@ -498,6 +508,7 @@ fn cmd_fleet(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "replicas", help: "override the config's replica count", default: None, is_flag: false },
         OptSpec { name: "route", help: "override the route policy: round_robin | least_loaded | prefix_affinity", default: None, is_flag: false },
         OptSpec { name: "cache", help: "override the prefix cache: on | off (sizing stays from the config)", default: None, is_flag: false },
+        OptSpec { name: "kv-dtype", help: "KV storage dtype override for every replica: f32 | bf16 | f16", default: None, is_flag: false },
     ];
     let Some(args) =
         parse_or_help(argv, "fleet", "multi-replica router + KV prefix cache", &specs)?
@@ -520,8 +531,11 @@ fn cmd_fleet(argv: &[String]) -> Result<(), String> {
             other => return Err(format!("--cache: expected 'on' or 'off', got '{other}'")),
         };
     }
+    if let Some(v) = args.get("kv-dtype") {
+        cfg.serve.kv_dtype = v.to_string();
+    }
     let requests = cfg.generate().map_err(|e| e.to_string())?;
-    // opts() re-validates replicas/route/cache, so override typos fail here
+    // opts() re-validates replicas/route/cache/kv_dtype, so override typos fail here
     let opts = cfg.opts().map_err(|e| e.to_string())?;
     let report = serve_fleet(&requests, &opts).map_err(|e| e.to_string())?;
     println!(

@@ -206,6 +206,7 @@ impl Default for ContinuousServeOpts {
                 partition: Partition::Contiguous,
                 backend: BackendSpec::Native,
                 record: false,
+                ..Default::default()
             },
             runtime: ServeRuntime::default(),
             watchdog_ms: 120_000,
@@ -693,7 +694,13 @@ pub fn serve_continuous_warm(
     let mut fault_acc = FaultAccounting::default();
     // Recovery may degrade the ring; the cache device count tracks it.
     let mut devices_now = n;
-    let mut cache = KvCache::new(devices_now, opts.heads, opts.head_dim, opts.chunk);
+    let mut cache = KvCache::new_with_dtype(
+        devices_now,
+        opts.heads,
+        opts.head_dim,
+        opts.chunk,
+        opts.engine.kv_dtype,
+    );
     // the session's only thread spawns happen here (and on recovery
     // respawns), not per micro-step
     let mut ring = match opts.runtime {
@@ -1109,7 +1116,13 @@ pub fn serve_continuous_warm(
             }
             // fresh cache and ring: every re-queued request replays its
             // prompt and decode tokens from the deterministic source
-            cache = KvCache::new(devices_now, opts.heads, opts.head_dim, opts.chunk);
+            cache = KvCache::new_with_dtype(
+                devices_now,
+                opts.heads,
+                opts.head_dim,
+                opts.chunk,
+                opts.engine.kv_dtype,
+            );
             ring = Some(
                 ActorRing::spawn_with(
                     devices_now,

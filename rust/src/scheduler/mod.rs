@@ -231,6 +231,7 @@ mod tests {
                 partition: Partition::Zigzag,
                 backend: BackendSpec::Native,
                 record: false,
+                ..Default::default()
             },
         }
     }
@@ -377,7 +378,13 @@ pub fn serve_cached(
     }
     let n = opts.devices;
     let mut rng = Rng::new(0xDEC0DE);
-    let mut cache = KvCache::new(n, opts.heads, opts.head_dim, opts.chunk.max(1));
+    let mut cache = KvCache::new_with_dtype(
+        n,
+        opts.heads,
+        opts.head_dim,
+        opts.chunk.max(1),
+        opts.engine.kv_dtype,
+    );
     let mut out = Vec::with_capacity(requests.len());
 
     for req in requests {
@@ -460,6 +467,7 @@ mod cached_tests {
                 partition: Partition::Contiguous,
                 backend: BackendSpec::Native,
                 record: false,
+                ..Default::default()
             },
         }
     }

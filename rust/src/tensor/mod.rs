@@ -1,41 +1,232 @@
-//! Minimal dense f32 tensor for the coordinator hot path.
+//! Minimal dense tensor for the coordinator hot path.
 //!
 //! The engine circulates attention blocks as row-major `(S, H, D)` tensors
-//! and `(H, S)` log-sum-exp matrices. Storage is a shared `Arc<Vec<f32>>`
+//! and `(H, S)` log-sum-exp matrices. Storage is a shared `Arc` buffer
 //! with an `(off, len)` window, so `clone()` and `slice_rows()` are
 //! refcount bumps, not buffer copies — a channel send of a cloned tensor
 //! is the zero-copy device-to-device handle pass of the real system.
 //! Mutation is copy-on-write: `data_mut` materializes a uniquely-owned,
 //! un-windowed buffer first, so sharing is never observable through the
 //! API, only through `shares_storage`/`storage_refcount`.
+//!
+//! ## Precision
+//!
+//! Compute tensors (Q, outputs, lse) are always f32. KV storage may be
+//! packed to half width ([`Dtype::Bf16`] / [`Dtype::F16`], 2 bytes per
+//! element) via [`Tensor::encode`]: packing happens once where KV enters
+//! the cache, every downstream hop (delta channels, resident views, fleet
+//! warm tier) ships the packed bits, and the attention kernel decodes
+//! rows back to f32 on tile load ([`Tensor::decode_slice_into`]). The
+//! f32 element API (`data`/`data_mut`) stays f32-only and fails loudly on
+//! packed storage — there is no implicit widening.
 
 use std::fmt;
 use std::sync::Arc;
 
-/// Row-major dense f32 tensor (shared storage + view window).
+/// Element storage format. `F32` is the compute dtype; `Bf16`/`F16` are
+/// packed 16-bit KV storage formats (encode-on-append, decode-on-load —
+/// all arithmetic still happens in f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dtype {
+    /// IEEE 754 single precision (the compute dtype).
+    #[default]
+    F32,
+    /// bfloat16: f32's exponent range, 8-bit mantissa. Round-to-nearest-even.
+    Bf16,
+    /// IEEE 754 half precision: 5-bit exponent, 11-bit mantissa.
+    F16,
+}
+
+impl Dtype {
+    /// Bytes per element as stored.
+    pub fn bytes_per_el(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+
+    /// True for the 16-bit packed formats.
+    pub fn is_packed(self) -> bool {
+        !matches!(self, Dtype::F32)
+    }
+
+    /// Canonical lowercase name (the `kv_dtype` config value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::F16 => "f16",
+        }
+    }
+
+    /// Parse a `kv_dtype` config value.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" | "fp32" | "float32" => Some(Dtype::F32),
+            "bf16" | "bfloat16" => Some(Dtype::Bf16),
+            "f16" | "fp16" | "float16" => Some(Dtype::F16),
+            _ => None,
+        }
+    }
+
+    /// Worst-case absolute rounding error for values of unit order — the
+    /// per-dtype tolerance anchor the equivalence tests derive their atol
+    /// from. Half a ULP at 1.0: bf16 keeps 8 mantissa bits (2^-9), f16
+    /// keeps 11 (2^-12).
+    pub fn unit_roundoff(self) -> f32 {
+        match self {
+            Dtype::F32 => f32::EPSILON * 0.5,
+            Dtype::Bf16 => 1.0 / 512.0,
+            Dtype::F16 => 1.0 / 4096.0,
+        }
+    }
+
+    fn encode_one(self, x: f32) -> u16 {
+        match self {
+            Dtype::F32 => unreachable!("f32 is not packed"),
+            Dtype::Bf16 => f32_to_bf16(x),
+            Dtype::F16 => f32_to_f16(x),
+        }
+    }
+
+    fn decode_one(self, bits: u16) -> f32 {
+        match self {
+            Dtype::F32 => unreachable!("f32 is not packed"),
+            Dtype::Bf16 => bf16_to_f32(bits),
+            Dtype::F16 => f16_to_f32(bits),
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// f32 → bf16, round-to-nearest-even. NaN stays NaN (quieted).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet, preserve sign
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 → IEEE f16, round-to-nearest-even with subnormal and inf handling.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 255 {
+        // inf / nan
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        // subnormal half (or zero): shift the implicit-1 mantissa down
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half_man = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let up = (rem > halfway || (rem == halfway && half_man & 1 == 1)) as u32;
+        return sign | (half_man + up) as u16;
+    }
+    let half_man = man >> 13;
+    let rem = man & 0x1fff;
+    let mut out = (sign as u32) | ((e as u32) << 10) | half_man;
+    if rem > 0x1000 || (rem == 0x1000 && out & 1 == 1) {
+        out += 1; // may carry into the exponent — that is correct rounding
+    }
+    out as u16
+}
+
+/// IEEE f16 → f32 (exact).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // subnormal: renormalize
+        let mut e = 0u32;
+        let mut m = man;
+        while m & 0x0400 == 0 {
+            m <<= 1;
+            e += 1;
+        }
+        let m = m & 0x03ff;
+        return f32::from_bits(sign | ((113 - e) << 23) | (m << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Backing storage: full-width f32 or packed 16-bit payload.
+#[derive(Clone)]
+enum Store {
+    F32(Arc<Vec<f32>>),
+    Half(Arc<Vec<u16>>),
+}
+
+/// Row-major dense tensor (shared storage + view window).
 #[derive(Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
     off: usize,
     len: usize,
-    data: Arc<Vec<f32>>,
+    dtype: Dtype,
+    store: Store,
 }
 
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
-        if self.len <= 8 {
+        if self.dtype.is_packed() {
+            write!(f, "<{}>", self.dtype)?;
+        } else if self.len <= 8 {
             write!(f, "{:?}", self.data())?;
         }
         Ok(())
     }
 }
 
-/// Equality is over shape and *viewed* contents — two tensors compare equal
-/// whether or not they share storage.
+/// Equality is over shape, dtype, and *viewed* stored bits — two tensors
+/// compare equal whether or not they share storage. Tensors of different
+/// dtypes never compare equal (compare decoded values via `allclose`).
 impl PartialEq for Tensor {
     fn eq(&self, other: &Tensor) -> bool {
-        self.shape == other.shape && self.data() == other.data()
+        if self.shape != other.shape || self.dtype != other.dtype {
+            return false;
+        }
+        match (&self.store, &other.store) {
+            (Store::F32(_), Store::F32(_)) => self.data() == other.data(),
+            (Store::Half(_), Store::Half(_)) => self.half_bits() == other.half_bits(),
+            _ => false,
+        }
     }
 }
 
@@ -50,12 +241,34 @@ impl Tensor {
             data.len()
         );
         let len = data.len();
-        Tensor { shape: shape.to_vec(), off: 0, len, data: Arc::new(data) }
+        Tensor {
+            shape: shape.to_vec(),
+            off: 0,
+            len,
+            dtype: Dtype::F32,
+            store: Store::F32(Arc::new(data)),
+        }
     }
 
-    /// All-zero tensor.
+    /// All-zero f32 tensor.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor::new(shape, vec![0.0; shape.iter().product()])
+    }
+
+    /// All-zero tensor in the given storage dtype (zero encodes to zero
+    /// bits in every supported format).
+    pub fn zeros_dtype(shape: &[usize], dtype: Dtype) -> Tensor {
+        let len = shape.iter().product();
+        match dtype {
+            Dtype::F32 => Tensor::zeros(shape),
+            _ => Tensor {
+                shape: shape.to_vec(),
+                off: 0,
+                len,
+                dtype,
+                store: Store::Half(Arc::new(vec![0u16; len])),
+            },
+        }
     }
 
     /// Tensor filled with `v`.
@@ -68,66 +281,205 @@ impl Tensor {
         &self.shape
     }
 
+    /// Storage dtype of the viewed elements.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
     /// Total viewed elements.
     pub fn numel(&self) -> usize {
         self.len
     }
 
-    /// Bytes on the wire — what the comm simulator charges for transfers.
+    /// Bytes on the wire — what the comm simulator and the KV budget
+    /// charge for transfers/storage. Dtype-aware: a packed tensor reports
+    /// its true 2-byte-per-element footprint, not numel×4.
     pub fn size_bytes(&self) -> usize {
-        self.len * std::mem::size_of::<f32>()
+        self.len * self.dtype.bytes_per_el()
     }
 
-    /// The viewed elements, row-major.
+    /// The viewed f32 elements, row-major. Panics on packed storage —
+    /// decode explicitly with [`Tensor::to_f32`] or
+    /// [`Tensor::decode_slice_into`] instead of silently widening.
     pub fn data(&self) -> &[f32] {
-        &self.data[self.off..self.off + self.len]
-    }
-
-    /// Mutable view of the elements. Copy-on-write: if the storage is
-    /// shared with another tensor, or this tensor is a narrowed window,
-    /// the viewed range is copied into a fresh uniquely-owned buffer first.
-    pub fn data_mut(&mut self) -> &mut [f32] {
-        if self.off != 0 || self.len != self.data.len() || Arc::get_mut(&mut self.data).is_none() {
-            let owned = self.data[self.off..self.off + self.len].to_vec();
-            self.off = 0;
-            self.data = Arc::new(owned);
+        match &self.store {
+            Store::F32(d) => &d[self.off..self.off + self.len],
+            Store::Half(_) => panic!(
+                "Tensor::data on packed {} storage — use to_f32()/decode_slice_into()",
+                self.dtype
+            ),
         }
-        Arc::get_mut(&mut self.data).expect("unique after materialize")
     }
 
-    /// Consume into the viewed elements — zero-copy when uniquely owned
-    /// and un-windowed, otherwise one copy of the window.
+    /// Mutable view of the f32 elements (panics on packed storage).
+    /// Copy-on-write: if the storage is shared with another tensor, or
+    /// this tensor is a narrowed window, the viewed range is copied into
+    /// a fresh uniquely-owned buffer first.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        let d = match &mut self.store {
+            Store::F32(d) => d,
+            Store::Half(_) => panic!(
+                "Tensor::data_mut on packed {} storage — use to_f32()/perturb_bits()",
+                self.dtype
+            ),
+        };
+        if self.off != 0 || self.len != d.len() || Arc::get_mut(d).is_none() {
+            let owned = d[self.off..self.off + self.len].to_vec();
+            self.off = 0;
+            *d = Arc::new(owned);
+        }
+        Arc::get_mut(d).expect("unique after materialize")
+    }
+
+    /// The viewed packed 16-bit payload. Panics on f32 storage — this is
+    /// the checksum/serialization view of a packed tensor.
+    pub fn half_bits(&self) -> &[u16] {
+        match &self.store {
+            Store::Half(d) => &d[self.off..self.off + self.len],
+            Store::F32(_) => panic!("Tensor::half_bits on f32 storage"),
+        }
+    }
+
+    /// Re-encode into `dtype`. Same-dtype conversion is a zero-copy clone
+    /// (shares storage — the KV cache relies on this so f32 deltas stay
+    /// windows of the appended tensor). Cross-dtype conversion rounds
+    /// through f32 and allocates.
+    pub fn encode(&self, dtype: Dtype) -> Tensor {
+        if dtype == self.dtype {
+            return self.clone();
+        }
+        let values: Vec<f32> = match &self.store {
+            Store::F32(d) => d[self.off..self.off + self.len].to_vec(),
+            Store::Half(d) => d[self.off..self.off + self.len]
+                .iter()
+                .map(|&b| self.dtype.decode_one(b))
+                .collect(),
+        };
+        match dtype {
+            Dtype::F32 => Tensor {
+                shape: self.shape.clone(),
+                off: 0,
+                len: self.len,
+                dtype,
+                store: Store::F32(Arc::new(values)),
+            },
+            _ => Tensor {
+                shape: self.shape.clone(),
+                off: 0,
+                len: self.len,
+                dtype,
+                store: Store::Half(Arc::new(
+                    values.into_iter().map(|x| dtype.encode_one(x)).collect(),
+                )),
+            },
+        }
+    }
+
+    /// Decode to an f32 tensor (zero-copy clone when already f32).
+    pub fn to_f32(&self) -> Tensor {
+        self.encode(Dtype::F32)
+    }
+
+    /// Decode `out.len()` elements starting at viewed element `elem_off`
+    /// into `out` — the kernel's KV-tile load. On f32 storage this is a
+    /// plain copy, so the packed and full-width paths share one row
+    /// layout inside the kernel.
+    pub fn decode_slice_into(&self, elem_off: usize, out: &mut [f32]) {
+        assert!(
+            elem_off + out.len() <= self.len,
+            "decode_slice_into range {elem_off}..{} out of bounds ({})",
+            elem_off + out.len(),
+            self.len
+        );
+        let start = self.off + elem_off;
+        match &self.store {
+            Store::F32(d) => out.copy_from_slice(&d[start..start + out.len()]),
+            Store::Half(d) => {
+                let src = &d[start..start + out.len()];
+                match self.dtype {
+                    Dtype::Bf16 => {
+                        for (o, &b) in out.iter_mut().zip(src) {
+                            *o = bf16_to_f32(b);
+                        }
+                    }
+                    _ => {
+                        for (o, &b) in out.iter_mut().zip(src) {
+                            *o = f16_to_f32(b);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Flip the first element's stored bits in place (copy-on-write) —
+    /// a dtype-generic payload corruption for fault injection. No-op on
+    /// an empty tensor; returns whether anything changed.
+    pub fn perturb_bits(&mut self) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        match &mut self.store {
+            Store::F32(_) => {
+                self.data_mut()[0] += 1.0;
+            }
+            Store::Half(d) => {
+                if self.off != 0 || self.len != d.len() || Arc::get_mut(d).is_none() {
+                    let owned = d[self.off..self.off + self.len].to_vec();
+                    self.off = 0;
+                    *d = Arc::new(owned);
+                }
+                Arc::get_mut(d).expect("unique after materialize")[0] ^= 1;
+            }
+        }
+        true
+    }
+
+    /// Consume into the viewed f32 elements — zero-copy when uniquely
+    /// owned and un-windowed, otherwise one copy of the window. Panics on
+    /// packed storage.
     pub fn into_data(self) -> Vec<f32> {
-        if self.off == 0 && self.len == self.data.len() {
-            match Arc::try_unwrap(self.data) {
+        let d = match self.store {
+            Store::F32(d) => d,
+            Store::Half(_) => panic!("Tensor::into_data on packed {} storage", self.dtype),
+        };
+        if self.off == 0 && self.len == d.len() {
+            match Arc::try_unwrap(d) {
                 Ok(v) => v,
                 Err(shared) => shared[..].to_vec(),
             }
         } else {
-            self.data[self.off..self.off + self.len].to_vec()
+            d[self.off..self.off + self.len].to_vec()
         }
     }
 
-    /// Reclaim the backing buffer without copying — `None` if the storage
-    /// is shared or windowed. The engine's scratch arena uses this to
-    /// recycle merged-partial buffers into the next kernel call.
+    /// Reclaim the backing f32 buffer without copying — `None` if the
+    /// storage is shared, windowed, or packed. The engine's scratch arena
+    /// uses this to recycle merged-partial buffers into the next kernel
+    /// call.
     pub fn into_unique_data(self) -> Option<Vec<f32>> {
-        if self.off == 0 && self.len == self.data.len() {
-            Arc::try_unwrap(self.data).ok()
-        } else {
-            None
+        match self.store {
+            Store::F32(d) if self.off == 0 && self.len == d.len() => Arc::try_unwrap(d).ok(),
+            _ => None,
         }
     }
 
     /// True if both tensors view the same underlying allocation — the
     /// observable form of a zero-copy send.
     pub fn shares_storage(&self, other: &Tensor) -> bool {
-        Arc::ptr_eq(&self.data, &other.data)
+        match (&self.store, &other.store) {
+            (Store::F32(a), Store::F32(b)) => Arc::ptr_eq(a, b),
+            (Store::Half(a), Store::Half(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
     }
 
     /// Number of tensors (clones/views) holding the underlying buffer.
     pub fn storage_refcount(&self) -> usize {
-        Arc::strong_count(&self.data)
+        match &self.store {
+            Store::F32(d) => Arc::strong_count(d),
+            Store::Half(d) => Arc::strong_count(d),
+        }
     }
 
     /// Reinterpret with a new shape of identical element count.
@@ -153,7 +505,7 @@ impl Tensor {
     }
 
     /// Slice rows `[start, end)` along dim 0 — a zero-copy view sharing
-    /// this tensor's storage.
+    /// this tensor's storage (any dtype).
     pub fn slice_rows(&self, start: usize, end: usize) -> Tensor {
         assert!(start <= end && end <= self.shape[0], "bad row slice {start}..{end}");
         let stride = self.row_stride();
@@ -163,11 +515,13 @@ impl Tensor {
             shape,
             off: self.off + start * stride,
             len: (end - start) * stride,
-            data: Arc::clone(&self.data),
+            dtype: self.dtype,
+            store: self.store.clone(),
         }
     }
 
-    /// Gather rows by index along dim 0 (zigzag/striped reordering; copies).
+    /// Gather rows by index along dim 0 (zigzag/striped reordering;
+    /// copies; f32 only).
     pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
         let stride = self.row_stride();
         let mut shape = self.shape.clone();
@@ -219,13 +573,14 @@ impl Tensor {
         }
     }
 
-    /// Append `delta`'s rows in place (dim-0 concatenation). When this
-    /// tensor uniquely owns an un-windowed buffer the append is an
-    /// amortized `extend_from_slice`, so a resident KV view held by a
-    /// device actor grows by exactly the delta each decode step with no
-    /// O(resident) copy. Shared or windowed storage is materialized into
-    /// a fresh uniquely-owned buffer first (the same copy-on-write rule
-    /// as [`Tensor::data_mut`]), so sharing is never observable.
+    /// Append `delta`'s rows in place (dim-0 concatenation; dtypes must
+    /// match). When this tensor uniquely owns an un-windowed buffer the
+    /// append is an amortized `extend_from_slice`, so a resident KV view
+    /// held by a device actor grows by exactly the delta each decode step
+    /// with no O(resident) copy. Shared or windowed storage is
+    /// materialized into a fresh uniquely-owned buffer first (the same
+    /// copy-on-write rule as [`Tensor::data_mut`]), so sharing is never
+    /// observable.
     pub fn extend_rows(&mut self, delta: &Tensor) {
         assert_eq!(
             &self.shape[1..],
@@ -234,41 +589,88 @@ impl Tensor {
             self.shape,
             delta.shape
         );
-        if self.off != 0 || self.len != self.data.len() || Arc::get_mut(&mut self.data).is_none() {
-            let mut owned = Vec::with_capacity(self.len + delta.len);
-            owned.extend_from_slice(self.data());
-            self.off = 0;
-            self.data = Arc::new(owned);
+        assert_eq!(
+            self.dtype, delta.dtype,
+            "extend_rows dtype mismatch: {} vs {}",
+            self.dtype, delta.dtype
+        );
+        match (&mut self.store, &delta.store) {
+            (Store::F32(d), Store::F32(src)) => {
+                if self.off != 0 || self.len != d.len() || Arc::get_mut(d).is_none() {
+                    let mut owned = Vec::with_capacity(self.len + delta.len);
+                    owned.extend_from_slice(&d[self.off..self.off + self.len]);
+                    self.off = 0;
+                    *d = Arc::new(owned);
+                }
+                let buf = Arc::get_mut(d).expect("unique after materialize");
+                buf.extend_from_slice(&src[delta.off..delta.off + delta.len]);
+            }
+            (Store::Half(d), Store::Half(src)) => {
+                if self.off != 0 || self.len != d.len() || Arc::get_mut(d).is_none() {
+                    let mut owned = Vec::with_capacity(self.len + delta.len);
+                    owned.extend_from_slice(&d[self.off..self.off + self.len]);
+                    self.off = 0;
+                    *d = Arc::new(owned);
+                }
+                let buf = Arc::get_mut(d).expect("unique after materialize");
+                buf.extend_from_slice(&src[delta.off..delta.off + delta.len]);
+            }
+            _ => unreachable!("dtype equality implies matching store variants"),
         }
-        let buf = Arc::get_mut(&mut self.data).expect("unique after materialize");
-        buf.extend_from_slice(delta.data());
         self.len += delta.len;
         self.shape[0] += delta.shape[0];
     }
 
-    /// Concatenate along dim 0.
+    /// Concatenate along dim 0 (all parts must share one dtype).
     pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty());
         let stride = parts[0].row_stride();
+        let dtype = parts[0].dtype;
         let mut shape = parts[0].shape.clone();
-        let mut data = Vec::new();
         let mut rows = 0;
         for p in parts {
             assert_eq!(p.row_stride(), stride, "row stride mismatch in concat");
+            assert_eq!(p.dtype, dtype, "dtype mismatch in concat: {} vs {dtype}", p.dtype);
             rows += p.shape[0];
-            data.extend_from_slice(p.data());
         }
         shape[0] = rows;
-        Tensor::new(&shape, data)
+        match dtype {
+            Dtype::F32 => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.data());
+                }
+                Tensor::new(&shape, data)
+            }
+            _ => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.half_bits());
+                }
+                let len = data.len();
+                Tensor { shape, off: 0, len, dtype, store: Store::Half(Arc::new(data)) }
+            }
+        }
     }
 
-    /// Max |a - b| over all elements (allclose support).
+    /// Max |a - b| over all elements (allclose support). Packed operands
+    /// are compared by decoded value.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
-        self.data()
+        if let (Store::F32(_), Store::F32(_)) = (&self.store, &other.store) {
+            return self
+                .data()
+                .iter()
+                .zip(other.data())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+        }
+        let a = self.to_f32();
+        let b = other.to_f32();
+        a.data()
             .iter()
-            .zip(other.data())
-            .map(|(a, b)| (a - b).abs())
+            .zip(b.data())
+            .map(|(x, y)| (x - y).abs())
             .fold(0.0, f32::max)
     }
 
@@ -290,6 +692,7 @@ mod tests {
         assert_eq!(t.size_bytes(), 24);
         assert_eq!(t.rows(), 2);
         assert_eq!(t.row_stride(), 3);
+        assert_eq!(t.dtype(), Dtype::F32);
     }
 
     #[test]
@@ -451,5 +854,157 @@ mod tests {
         assert!((a.max_abs_diff(&b) - 0.1).abs() < 1e-6);
         assert!(a.allclose(&b, 0.2));
         assert!(!a.allclose(&b, 0.05));
+    }
+
+    // ---- packed storage -------------------------------------------------
+
+    #[test]
+    fn half_conversions_roundtrip_representable_values() {
+        // values exactly representable in both bf16 and f16 roundtrip
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 0.25, -3.0, 1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)).to_bits(), x.to_bits(), "bf16 {x}");
+            assert_eq!(f16_to_f32(f32_to_f16(x)).to_bits(), x.to_bits(), "f16 {x}");
+        }
+        // specials
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // f16 overflow saturates to inf; tiny values underflow to zero
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)), 0.0);
+        // f16 subnormal range roundtrips through the renormalizer
+        let sub = f16_to_f32(1); // smallest positive f16 subnormal = 2^-24
+        assert_eq!(sub, 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16(sub), 1);
+    }
+
+    #[test]
+    fn half_rounding_error_is_bounded() {
+        // pseudo-random values in [-4, 4): error bounded by value·roundoff
+        let mut x = 0x2545_f491u32;
+        for _ in 0..2000 {
+            // xorshift
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            let v = ((x % 8192) as f32 / 1024.0) - 4.0;
+            let b = bf16_to_f32(f32_to_bf16(v));
+            let h = f16_to_f32(f32_to_f16(v));
+            let tol_b = v.abs().max(1.0) * Dtype::Bf16.unit_roundoff();
+            let tol_h = v.abs().max(1.0) * Dtype::F16.unit_roundoff();
+            assert!((b - v).abs() <= tol_b, "bf16 {v} -> {b}");
+            assert!((h - v).abs() <= tol_h, "f16 {v} -> {h}");
+        }
+    }
+
+    #[test]
+    fn dtype_parse_and_names() {
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("bf16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse("float16"), Some(Dtype::F16));
+        assert_eq!(Dtype::parse("int8"), None);
+        assert_eq!(Dtype::Bf16.name(), "bf16");
+        assert_eq!(Dtype::F32.bytes_per_el(), 4);
+        assert_eq!(Dtype::F16.bytes_per_el(), 2);
+        assert!(!Dtype::F32.is_packed() && Dtype::Bf16.is_packed());
+    }
+
+    #[test]
+    fn encode_packs_and_halves_bytes() {
+        let t = Tensor::new(&[4, 2], vec![1.0, -0.5, 2.25, 3.0, -1.75, 0.0, 8.0, 0.125]);
+        for dt in [Dtype::Bf16, Dtype::F16] {
+            let p = t.encode(dt);
+            assert_eq!(p.dtype(), dt);
+            assert_eq!(p.shape(), t.shape());
+            assert_eq!(p.size_bytes(), t.size_bytes() / 2, "packed bytes must halve");
+            // these values are exactly representable → decode is exact
+            assert_eq!(p.to_f32(), t);
+            assert!(p.allclose(&t, 0.0));
+        }
+    }
+
+    #[test]
+    fn encode_same_dtype_is_zero_copy() {
+        let t = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        assert!(t.encode(Dtype::F32).shares_storage(&t), "f32→f32 must share");
+        let p = t.encode(Dtype::Bf16);
+        assert!(p.encode(Dtype::Bf16).shares_storage(&p), "bf16→bf16 must share");
+        assert!(!p.shares_storage(&t));
+    }
+
+    #[test]
+    fn packed_views_extend_and_concat() {
+        let t = Tensor::new(&[4, 2], (0..8).map(|i| i as f32).collect());
+        let p = t.encode(Dtype::F16);
+        // zero-copy slice of packed storage
+        let s = p.slice_rows(1, 3);
+        assert!(s.shares_storage(&p));
+        assert_eq!(s.to_f32().data(), &[2., 3., 4., 5.]);
+        // extend_rows on packed storage (the resident-view growth path)
+        let mut view = Tensor::zeros_dtype(&[0, 2], Dtype::F16);
+        view.extend_rows(&s);
+        view.extend_rows(&p.slice_rows(0, 1));
+        assert_eq!(view.shape(), &[3, 2]);
+        assert_eq!(view.to_f32().data(), &[2., 3., 4., 5., 0., 1.]);
+        // concat of packed parts stays packed
+        let c = Tensor::concat_rows(&[&s, &p.slice_rows(3, 4)]);
+        assert_eq!(c.dtype(), Dtype::F16);
+        assert_eq!(c.to_f32().data(), &[2., 3., 4., 5., 6., 7.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn extend_rows_rejects_dtype_mismatch() {
+        let mut t = Tensor::zeros(&[0, 2]);
+        t.extend_rows(&Tensor::zeros_dtype(&[1, 2], Dtype::Bf16));
+    }
+
+    #[test]
+    #[should_panic(expected = "packed")]
+    fn data_on_packed_storage_fails_loudly() {
+        let p = Tensor::zeros(&[2, 2]).encode(Dtype::Bf16);
+        let _ = p.data();
+    }
+
+    #[test]
+    fn decode_slice_into_matches_to_f32() {
+        let vals: Vec<f32> = (0..12).map(|i| (i as f32) * 0.375 - 2.0).collect();
+        let t = Tensor::new(&[6, 2], vals);
+        for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            let p = t.encode(dt);
+            let full = p.to_f32();
+            let mut row = [0.0f32; 4];
+            p.decode_slice_into(4, &mut row);
+            assert_eq!(&row, &full.data()[4..8], "{dt}");
+            // windows decode relative to the view, not the buffer
+            let w = p.slice_rows(2, 5);
+            let mut wrow = [0.0f32; 2];
+            w.decode_slice_into(2, &mut wrow);
+            assert_eq!(&wrow, &full.data()[6..8], "{dt} window");
+        }
+    }
+
+    #[test]
+    fn perturb_bits_is_cow_and_changes_payload() {
+        for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            let t = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).encode(dt);
+            let mut c = t.clone();
+            assert!(c.perturb_bits());
+            assert!(!c.shares_storage(&t), "perturb must copy-on-write ({dt})");
+            assert_ne!(c, t, "perturbed payload must differ ({dt})");
+            assert_eq!(t.to_f32().data()[0], 1.0, "source untouched ({dt})");
+        }
+        let mut empty = Tensor::zeros_dtype(&[0, 2], Dtype::Bf16);
+        assert!(!empty.perturb_bits());
+    }
+
+    #[test]
+    fn zeros_dtype_is_zero_everywhere() {
+        for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            let z = Tensor::zeros_dtype(&[3, 2], dt);
+            assert_eq!(z.dtype(), dt);
+            assert!(z.to_f32().data().iter().all(|&x| x == 0.0));
+        }
     }
 }

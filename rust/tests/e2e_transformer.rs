@@ -156,6 +156,7 @@ fn distributed_layer(x: &Tensor, w: &Weights, rt: &mut Runtime) -> Tensor {
         partition: Partition::Contiguous,
         backend: BackendSpec::Pjrt { dir: default_artifact_dir(), profile: "tiny".into() },
         record: false,
+        ..Default::default()
     };
     let attn = run_token_ring(&q, &k, &v, N_DEV, &opts).unwrap();
 

@@ -47,6 +47,7 @@ fn pjrt_token_ring_matches_oracle_contiguous_and_zigzag() {
                 profile: "tiny".into(),
             },
             record: true,
+            ..Default::default()
         };
         let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
         assert!(
@@ -74,6 +75,7 @@ fn pjrt_ring_attention_matches_oracle() {
         partition: Partition::Zigzag,
         backend: BackendSpec::Pjrt { dir: default_artifact_dir(), profile: "tiny".into() },
         record: false,
+        ..Default::default()
     };
     let got = run_ring_attention(&q, &k, &v, n, &opts).unwrap();
     let (eo, el) = full_attention(&q, &k, &v, true);
@@ -95,6 +97,7 @@ fn pjrt_noncausal_dit_case() {
         partition: Partition::Contiguous,
         backend: BackendSpec::Pjrt { dir: default_artifact_dir(), profile: "tiny".into() },
         record: false,
+        ..Default::default()
     };
     let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
     let (eo, el) = full_attention(&q, &k, &v, false);
@@ -119,6 +122,7 @@ fn native_and_pjrt_backends_agree() {
             partition: Partition::Zigzag,
             backend: BackendSpec::Native,
             record: false,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -132,6 +136,7 @@ fn native_and_pjrt_backends_agree() {
             partition: Partition::Zigzag,
             backend: BackendSpec::Pjrt { dir: default_artifact_dir(), profile: "tiny".into() },
             record: false,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -151,6 +156,7 @@ fn hybrid_multi_node_native() {
         partition: Partition::Zigzag,
         backend: BackendSpec::Native,
         record: true,
+        ..Default::default()
     };
     let got = run_hybrid(&q, &k, &v, 2, 4, &opts).unwrap();
     let (eo, el) = full_attention(&q, &k, &v, true);
@@ -176,6 +182,7 @@ fn stress_many_degrees_native() {
             partition: Partition::Zigzag,
             backend: BackendSpec::Native,
             record: false,
+            ..Default::default()
         };
         let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
         let (eo, _) = full_attention(&q, &k, &v, true);
@@ -191,6 +198,7 @@ fn repeated_runs_are_consistent() {
         partition: Partition::Zigzag,
         backend: BackendSpec::Native,
         record: false,
+        ..Default::default()
     };
     let a = run_token_ring(&q, &k, &v, 4, &opts).unwrap();
     let b = run_token_ring(&q, &k, &v, 4, &opts).unwrap();
@@ -231,6 +239,7 @@ fn gqa_token_ring_matches_oracle_native_and_pjrt() {
             partition: Partition::Zigzag,
             backend,
             record: false,
+            ..Default::default()
         };
         let got = run_token_ring(&q, &k, &v, n, &opts).unwrap();
         assert!(

@@ -3,7 +3,10 @@
 //! across tile-boundary shapes, GQA groups, padding keys, fully-masked
 //! tiles, and zigzag position orders — and the threaded engines must keep
 //! matching `full_attention` with the new kernel under both recording
-//! modes.
+//! modes. A per-dtype sweep repeats the kernel comparison with the KV
+//! operands packed to bf16/f16 (documented roundoff tolerances), and a
+//! serve-level check pins the continuous batcher's f32 digests while
+//! bounding the packed-storage drift.
 
 use tokenring::attention::{
     attention_block, attention_block_reference, full_attention, MASK_VALUE, KV_TILE, Q_TILE,
@@ -11,7 +14,7 @@ use tokenring::attention::{
 use tokenring::engine::backend::BackendSpec;
 use tokenring::engine::{run_hybrid, run_ring_attention, run_token_ring, EngineOpts};
 use tokenring::parallelism::partition::Partition;
-use tokenring::tensor::Tensor;
+use tokenring::tensor::{Dtype, Tensor};
 use tokenring::util::rng::Rng;
 
 fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
@@ -132,6 +135,184 @@ fn tiled_vs_reference_zigzag_shard_positions() {
     }
 }
 
+/// Per-dtype output tolerance for the packed-KV sweep.
+///
+/// f32 KV is bit-identical storage, so the only divergence from the
+/// scalar reference is streaming-softmax rounding: 1e-6 on outputs, 1e-5
+/// on LSE. The packed formats add one encode roundoff per KV element
+/// before any arithmetic; with O(1)-scale inputs and d <= 16 the score
+/// perturbation stays well inside 48 unit roundoffs (bf16 ~ 9.4e-2,
+/// f16 ~ 1.2e-2), the same bound BENCH_engine.json's kv_precision rows
+/// assert in CI.
+fn dtype_tols(dt: Dtype) -> (f32, f32) {
+    if dt.is_packed() {
+        let atol = 48.0 * dt.unit_roundoff();
+        (atol, atol)
+    } else {
+        (1e-6, 1e-5)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_pair_dtype(
+    rng: &mut Rng,
+    dt: Dtype,
+    sq: usize,
+    skv: usize,
+    h: usize,
+    h_kv: usize,
+    d: usize,
+    qp: &[i32],
+    kp: &[i32],
+    causal: bool,
+    label: &str,
+) {
+    // sigma 0.5 keeps raw scores O(1), so the 1e-6 f32 bound measures
+    // summation-order rounding (SIMD tree vs serial) rather than
+    // exp()-amplified score noise at large |score|
+    let scaled = |rng: &mut Rng, shape: &[usize]| -> Tensor {
+        Tensor::new(shape, rng.normal_vec(shape.iter().product(), 0.5))
+    };
+    let q = scaled(rng, &[sq, h, d]);
+    let k = scaled(rng, &[skv, h_kv, d]);
+    let v = scaled(rng, &[skv, h_kv, d]);
+    let (kd, vd) = (k.encode(dt), v.encode(dt));
+    assert_eq!(kd.dtype(), dt, "{label}: encode dtype");
+    let (out, lse) = attention_block(&q, &kd, &vd, qp, kp, causal, None);
+    // oracle reads the unpacked f32 operands — the packed kernel path must
+    // land within the storage format's roundoff of the exact answer
+    let (eo, el) = attention_block_reference(&q, &k, &v, qp, kp, causal, None);
+    let (out_tol, lse_tol) = dtype_tols(dt);
+    assert!(
+        out.allclose(&eo, out_tol),
+        "{label} dtype={}: out diff={} > {out_tol}",
+        dt.name(),
+        out.max_abs_diff(&eo)
+    );
+    assert!(
+        lse.allclose(&el, lse_tol),
+        "{label} dtype={}: lse diff={} > {lse_tol}",
+        dt.name(),
+        lse.max_abs_diff(&el)
+    );
+}
+
+#[test]
+fn per_dtype_sweep_tile_boundaries_and_gqa() {
+    // the ISSUE-9 acceptance sweep: every storage dtype, over shapes that
+    // straddle Q_TILE/KV_TILE boundaries and GQA group layouts
+    for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+        let mut rng = Rng::new(7060);
+        for &sq in &[Q_TILE - 1, Q_TILE, 2 * Q_TILE + 1] {
+            for &skv in &[KV_TILE - 1, KV_TILE, 2 * KV_TILE] {
+                let qp: Vec<i32> = ((skv / 2) as i32..(skv / 2 + sq) as i32).collect();
+                let kp: Vec<i32> = (0..skv as i32).collect();
+                for &(h, h_kv) in &[(2usize, 2usize), (4, 2), (4, 1)] {
+                    check_pair_dtype(
+                        &mut rng,
+                        dt,
+                        sq,
+                        skv,
+                        h,
+                        h_kv,
+                        12, // off-lane-width head dim: exercises the SIMD tail
+                        &qp,
+                        &kp,
+                        true,
+                        &format!("sq={sq} skv={skv} h={h}/{h_kv}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_dtype_sweep_zigzag_shard_positions() {
+    // packed KV under the zigzag position order device actors see
+    for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+        let mut rng = Rng::new(7070);
+        let n = 4usize;
+        let chunk = 8 * n * 7 / (2 * n);
+        for dev in 0..n {
+            let mut pos: Vec<i32> = Vec::new();
+            pos.extend((dev * chunk) as i32..((dev + 1) * chunk) as i32);
+            let hi = 2 * n - 1 - dev;
+            pos.extend((hi * chunk) as i32..((hi + 1) * chunk) as i32);
+            let s = pos.len();
+            check_pair_dtype(
+                &mut rng,
+                dt,
+                s,
+                s,
+                4,
+                2,
+                8,
+                &pos,
+                &pos,
+                true,
+                &format!("zigzag dev={dev}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_digests_pinned_for_f32_and_bounded_for_packed() {
+    // Serve-level acceptance: declaring kv_dtype=f32 is a no-op (encode
+    // passes f32 deltas through as storage-sharing clones, so digests are
+    // bit-identical to the default path), and packed storage moves every
+    // digest by no more than the format's roundoff allows.
+    use tokenring::scheduler::{serve_continuous, ContinuousServeOpts, RequestStatus};
+    use tokenring::workload::{Priority, Request};
+
+    let requests: Vec<Request> = (0..4)
+        .map(|id| Request {
+            id,
+            seq_len: 32 + 16 * (id % 2),
+            arrival: 0.0,
+            decode_tokens: 4,
+            priority: Priority::Standard,
+            prefix: None,
+        })
+        .collect();
+    let opts = ContinuousServeOpts {
+        devices: 2,
+        heads: 2,
+        head_dim: 8,
+        chunk: 16,
+        seed: 42,
+        ..Default::default()
+    };
+    let serve = |dt: Dtype| {
+        let mut o = opts.clone();
+        o.engine.kv_dtype = dt;
+        let rep = serve_continuous(&requests, &o).unwrap();
+        for r in &rep.requests {
+            assert_eq!(r.status, RequestStatus::Completed, "dtype={} req {}", dt.name(), r.id);
+            assert!(r.output_digest > 0.0, "dtype={} req {} digest", dt.name(), r.id);
+        }
+        rep.requests.iter().map(|r| r.output_digest).collect::<Vec<f64>>()
+    };
+    let baseline = serve(Dtype::F32);
+    let default_path = {
+        let rep = serve_continuous(&requests, &opts).unwrap();
+        rep.requests.iter().map(|r| r.output_digest).collect::<Vec<f64>>()
+    };
+    assert_eq!(baseline, default_path, "explicit f32 must be bit-identical to the default");
+    for dt in [Dtype::Bf16, Dtype::F16] {
+        let got = serve(dt);
+        for (i, (a, b)) in got.iter().zip(&baseline).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1.0);
+            assert!(
+                rel <= 64.0 * f64::from(dt.unit_roundoff()),
+                "dtype={} request {i}: digest {a} drifted {rel:.3e} from f32 {b}",
+                dt.name()
+            );
+        }
+    }
+}
+
 #[test]
 fn engines_match_oracle_with_and_without_recording() {
     // the kernel rewrite must be invisible to the engine oracle tests in
@@ -149,6 +330,7 @@ fn engines_match_oracle_with_and_without_recording() {
             partition: Partition::Zigzag,
             backend: BackendSpec::Native,
             record,
+            ..Default::default()
         };
         for (name, got) in [
             ("token_ring", run_token_ring(&q, &k, &v, 4, &opts).unwrap()),
