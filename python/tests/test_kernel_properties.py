@@ -5,6 +5,15 @@ layouts and value scales are drawn randomly and the kernel must always agree
 with the oracle.
 """
 
+import pytest
+
+# Quarantine (ISSUE 10 satellite): the container image ships jax but not
+# hypothesis, so collecting this module raised ModuleNotFoundError and
+# failed the whole pytest run. Skip cleanly when the dependency is absent;
+# the sweeps run wherever hypothesis is installed (see EXPERIMENTS.md
+# §Quarantined tests).
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -11,7 +11,7 @@ use crate::fleet::{FleetOpts, PrefixCacheConfig, RoutePolicy};
 use crate::json_obj;
 use crate::parallelism::partition::Partition;
 use crate::parallelism::ScheduleSpec;
-use crate::scheduler::{ContinuousServeOpts, ServeRuntime};
+use crate::scheduler::{ContinuousServeOpts, DisaggOpts, PoolSplit, ServeRuntime};
 use crate::tensor::Dtype;
 use crate::topology::Topology;
 use crate::util::json::Json;
@@ -362,6 +362,15 @@ pub struct ServeConfig {
     /// [`Dtype::parse`]). Half formats store and ship packed KV bytes,
     /// halving cache budget pressure and ring-step traffic.
     pub kv_dtype: String,
+    /// Pool split: `"unified"` (the classic single-ring loop, the
+    /// default) or `"<P>p+<D>d"` (disaggregated prefill/decode pools,
+    /// see [`PoolSplit`]). A split must cover exactly `devices` and
+    /// requires the actors runtime.
+    pub pools: String,
+    /// Cluster preset the disaggregated handoff cost is modeled from
+    /// (see [`Cluster::by_name`]); only consulted — and validated — when
+    /// `pools` is a split.
+    pub cluster: String,
 }
 
 fn field_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
@@ -379,7 +388,7 @@ impl ServeConfig {
         "name", "mix", "requests", "rate", "seed", "devices", "heads", "head_dim",
         "chunk", "max_batch", "max_step_tokens", "kv_budget_tokens", "aging_steps",
         "runtime", "watchdog_ms", "max_retries", "max_recoveries", "faults",
-        "kv_dtype",
+        "kv_dtype", "pools", "cluster",
     ];
 
     /// The built-in default: the Poisson mix on 4 devices.
@@ -404,6 +413,8 @@ impl ServeConfig {
             max_recoveries: 2,
             faults: Vec::new(),
             kv_dtype: Dtype::F32.name().to_string(),
+            pools: "unified".to_string(),
+            cluster: "uniform:16".to_string(),
         }
     }
 
@@ -471,6 +482,8 @@ impl ServeConfig {
             max_recoveries: field_usize(&j, "max_recoveries", d.max_recoveries)?,
             faults,
             kv_dtype: field_str("kv_dtype", &d.kv_dtype)?,
+            pools: field_str("pools", &d.pools)?,
+            cluster: field_str("cluster", &d.cluster)?,
         };
         let runtime = ServeRuntime::parse(&cfg.runtime)?; // name must be registered
         cfg.parsed_kv_dtype()?; // dtype name must be registered
@@ -507,6 +520,7 @@ impl ServeConfig {
                 bail!("serve config: '{key}' must be positive");
             }
         }
+        cfg.disagg_opts()?; // pool split + cluster must be coherent
         let mix = cfg.mix()?; // mix name must be registered
         if cfg.kv_budget_tokens < mix.max_peak_tokens() {
             bail!(
@@ -542,6 +556,8 @@ impl ServeConfig {
             ("max_recoveries", self.max_recoveries),
             ("faults", self.faults.clone()),
             ("kv_dtype", self.kv_dtype.clone()),
+            ("pools", self.pools.clone()),
+            ("cluster", self.cluster.clone()),
         ]
     }
 
@@ -597,6 +613,42 @@ impl ServeConfig {
         };
         opts.engine.kv_dtype = self.parsed_kv_dtype()?;
         Ok(opts)
+    }
+
+    /// The pool split this config's `pools` knob names (`None` for
+    /// `"unified"`); syntax-only — coherence with the device count is
+    /// checked by [`ServeConfig::disagg_opts`].
+    pub fn pool_split(&self) -> Result<Option<PoolSplit>> {
+        PoolSplit::parse(&self.pools).map_err(|e| e.context("serve config: 'pools'"))
+    }
+
+    /// The disaggregation options this config describes: `None` when
+    /// `pools` is `"unified"`, otherwise the validated split — it must
+    /// cover exactly `devices`, needs the actors runtime, and its
+    /// `cluster` preset must resolve at the device count.
+    pub fn disagg_opts(&self) -> Result<Option<DisaggOpts>> {
+        let Some(split) = self.pool_split()? else {
+            return Ok(None);
+        };
+        if split.devices() != self.devices {
+            bail!(
+                "serve config: pools '{}' covers {} devices but 'devices' is {}",
+                self.pools,
+                split.devices(),
+                self.devices
+            );
+        }
+        if ServeRuntime::parse(&self.runtime)? != ServeRuntime::Actors {
+            bail!(
+                "serve config: 'pools' requires \"runtime\": \"actors\" (each pool \
+                 holds a persistent ring)"
+            );
+        }
+        Cluster::by_name(&self.cluster, self.devices)
+            .map_err(|e| e.context("serve config: 'cluster'"))?;
+        let mut d = DisaggOpts::new(split);
+        d.cluster = self.cluster.clone();
+        Ok(Some(d))
     }
 }
 
@@ -788,6 +840,7 @@ impl FleetConfig {
             route: RoutePolicy::parse(&self.route)?,
             cache,
             replica: self.serve.opts()?,
+            disagg: self.serve.disagg_opts()?,
         })
     }
 }
@@ -1057,6 +1110,45 @@ mod tests {
         // the fleet loader inherits the key and threads it to replicas
         let f = FleetConfig::from_json(r#"{"kv_dtype":"bf16"}"#).unwrap();
         assert_eq!(f.opts().unwrap().replica.engine.kv_dtype, Dtype::Bf16);
+    }
+
+    #[test]
+    fn serve_config_pools_round_trip_and_build_disagg_opts() {
+        // default is unified: no split, no disagg opts, cluster key inert
+        let cfg = ServeConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.pools, "unified");
+        assert!(cfg.pool_split().unwrap().is_none());
+        assert!(cfg.disagg_opts().unwrap().is_none());
+        // a split parses, round-trips, and builds DisaggOpts (defaults:
+        // devices = 4, so 3p+1d covers them exactly)
+        let cfg = ServeConfig::from_json(r#"{"pools":"3p+1d","cluster":"nvswitch"}"#).unwrap();
+        let split = cfg.pool_split().unwrap().unwrap();
+        assert_eq!((split.prefill, split.decode), (3, 1));
+        let d = cfg.disagg_opts().unwrap().unwrap();
+        assert_eq!(d.split, split);
+        assert_eq!(d.cluster, "nvswitch");
+        let again = ServeConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(again, cfg);
+        // load-time rejection: split/device mismatch, malformed split,
+        // unknown cluster, and the thread-per-step runtime
+        assert!(ServeConfig::from_json(r#"{"pools":"2p+1d"}"#).is_err(), "covers 3 of 4");
+        assert!(ServeConfig::from_json(r#"{"pools":"4p"}"#).is_err());
+        assert!(ServeConfig::from_json(r#"{"pools":"3p+1d","cluster":"warp_fabric"}"#).is_err());
+        let e = ServeConfig::from_json(r#"{"pools":"3p+1d","runtime":"spawn_per_step"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("actors"), "{e}");
+        // the fleet loader inherits the keys and threads them to replicas
+        let f = FleetConfig::from_json(r#"{"pools":"3p+1d"}"#).unwrap();
+        let fo = f.opts().unwrap();
+        assert_eq!(fo.disagg.as_ref().map(|d| d.split.name()), Some("3p+1d".to_string()));
+        // the shipped example config loads and resolves to a split
+        let text = std::fs::read_to_string(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/disagg.json"),
+        )
+        .unwrap();
+        let example = ServeConfig::from_json(&text).unwrap();
+        assert!(example.disagg_opts().unwrap().is_some());
     }
 
     #[test]

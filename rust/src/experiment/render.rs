@@ -16,7 +16,7 @@ use crate::fleet::FleetReport;
 use crate::json_obj;
 use crate::metrics::timeline_from_sim;
 use crate::runtime::default_artifact_dir;
-use crate::scheduler::ContinuousServeReport;
+use crate::scheduler::{ContinuousServeReport, DisaggReport};
 use crate::util::json::Json;
 use crate::util::stats::Table;
 
@@ -262,6 +262,30 @@ pub fn write_serve_json(path: &Path, report: &ContinuousServeReport) -> Result<(
 pub fn write_serve_artifact(name: &str, report: &ContinuousServeReport) -> Result<PathBuf> {
     let path = default_artifact_dir().join("serve").join(format!("BENCH_{name}.json"));
     write_serve_json(&path, report)?;
+    Ok(path)
+}
+
+/// Write a disaggregated serving report to an explicit path (parent dirs
+/// created). The JSON is a strict superset of the unified serve schema:
+/// the core keys are identical, plus `pools` and `handoff` objects.
+pub fn write_disagg_json(path: &Path, report: &DisaggReport) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, report.to_json().to_string())
+        .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Write the disaggregated serving artifact under the default artifact
+/// directory (`serve/BENCH_<name>.json` — same slot as the unified
+/// artifact, since the schema is a superset), returning the path.
+pub fn write_disagg_artifact(name: &str, report: &DisaggReport) -> Result<PathBuf> {
+    let path = default_artifact_dir().join("serve").join(format!("BENCH_{name}.json"));
+    write_disagg_json(&path, report)?;
     Ok(path)
 }
 

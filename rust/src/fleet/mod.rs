@@ -45,7 +45,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::json_obj;
 use crate::scheduler::{
-    serve_continuous_warm, ContinuousServeOpts, ContinuousServeReport, TokenSource, WarmStart,
+    serve_continuous_warm, serve_disagg_warm, ContinuousServeOpts, ContinuousServeReport,
+    DisaggOpts, TokenSource, WarmStart,
 };
 use crate::simulator::sweep::par_map;
 use crate::util::json::Json;
@@ -64,6 +65,10 @@ pub struct FleetOpts {
     /// Per-replica serve options (every replica runs the same ones; the
     /// shared `seed` is what makes routing output-invariant).
     pub replica: ContinuousServeOpts,
+    /// When set, every replica runs disaggregated prefill/decode pools
+    /// ([`crate::scheduler::serve_disagg_warm`]) instead of the unified
+    /// loop; `per_replica` reports stay unified-schema (the disagg core).
+    pub disagg: Option<DisaggOpts>,
 }
 
 impl Default for FleetOpts {
@@ -73,6 +78,7 @@ impl Default for FleetOpts {
             route: RoutePolicy::default(),
             cache: PrefixCacheConfig::default(),
             replica: ContinuousServeOpts::default(),
+            disagg: None,
         }
     }
 }
@@ -239,7 +245,13 @@ pub fn serve_fleet(requests: &[Request], opts: &FleetOpts) -> Result<FleetReport
         if reqs.is_empty() {
             Ok(ContinuousServeReport::default())
         } else {
-            serve_continuous_warm(reqs, &opts.replica, warm)
+            match &opts.disagg {
+                // disaggregated replicas: same admission/warm-start
+                // semantics, pooled engine; the unified-schema core is
+                // what the fleet aggregates
+                Some(d) => serve_disagg_warm(reqs, &opts.replica, d, warm).map(|r| r.core),
+                None => serve_continuous_warm(reqs, &opts.replica, warm),
+            }
         }
     });
     let mut per_replica = Vec::with_capacity(results.len());
@@ -264,6 +276,7 @@ mod tests {
         FleetOpts {
             replicas,
             route: RoutePolicy::RoundRobin,
+            disagg: None,
             cache: PrefixCacheConfig { enabled, ..Default::default() },
             replica: ContinuousServeOpts {
                 devices: 2,

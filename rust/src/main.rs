@@ -16,6 +16,7 @@
 //! tokenring serve     --config configs/serve.json [--out report.json] [--runtime actors|spawn_per_step]
 //! tokenring serve     --config ... [--faults "panic@2:1,stall@4:0:200"] [--watchdog-ms 50] [--max-retries 2] [--max-recoveries 2]
 //! tokenring serve     --config ... [--kv-dtype f32|bf16|f16]
+//! tokenring serve     --config ... [--pools unified|3p+1d] [--cluster uniform:16]
 //! tokenring serve     [--requests 16] [--devices 4] [--schedule token_ring]
 //! tokenring fleet     --config configs/fleet.json [--out report.json] [--replicas N] [--route prefix_affinity] [--cache on|off]
 //! tokenring trace     --schedule token_ring --out trace.json
@@ -52,11 +53,13 @@ use tokenring::parallelism::ScheduleSpec;
 use tokenring::reports;
 use tokenring::runtime::default_artifact_dir;
 use tokenring::fleet::serve_fleet;
-use tokenring::scheduler::{serve, serve_continuous, ServeOpts, ServeRuntime};
+use tokenring::scheduler::{
+    serve, serve_continuous, serve_disagg, ContinuousServeOpts, DisaggOpts, ServeOpts, ServeRuntime,
+};
 use tokenring::tensor::Tensor;
 use tokenring::util::cli::{render_help, Args, OptSpec};
 use tokenring::util::rng::Rng;
-use tokenring::workload::{LenDist, WorkloadGen};
+use tokenring::workload::{LenDist, Request, WorkloadGen};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -334,6 +337,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         OptSpec { name: "max-retries", help: "watchdog extensions before a stalled reply poisons the ring (with --config)", default: None, is_flag: false },
         OptSpec { name: "max-recoveries", help: "ring respawns before the serve session fails remaining requests (with --config)", default: None, is_flag: false },
         OptSpec { name: "kv-dtype", help: "KV storage dtype override: f32 | bf16 | f16 (with --config; kernel math stays f32)", default: None, is_flag: false },
+        OptSpec { name: "pools", help: "pool split override: unified | <P>p+<D>d disaggregated prefill/decode (with --config; actors runtime)", default: None, is_flag: false },
+        OptSpec { name: "cluster", help: "cluster preset for the handoff cost model, e.g. uniform:16 | nvswitch | two_level (with --config --pools)", default: None, is_flag: false },
         OptSpec { name: "requests", help: "request count (legacy driver)", default: Some("16"), is_flag: false },
         OptSpec { name: "devices", help: "SP degree (legacy driver)", default: Some("4"), is_flag: false },
         OptSpec { name: "schedule", help: "registered schedule name (engine-backed: token_ring, ring_attention; legacy driver)", default: Some("token_ring"), is_flag: false },
@@ -351,10 +356,14 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             max_retries: args.get("max-retries"),
             max_recoveries: args.get("max-recoveries"),
             kv_dtype: args.get("kv-dtype"),
+            pools: args.get("pools"),
+            cluster: args.get("cluster"),
         };
         return cmd_serve_config(path, args.get("out"), args.get("trace"), &overrides);
     }
-    for flag in ["runtime", "faults", "watchdog-ms", "max-retries", "max-recoveries", "kv-dtype"] {
+    for flag in
+        ["runtime", "faults", "watchdog-ms", "max-retries", "max-recoveries", "kv-dtype", "pools", "cluster"]
+    {
         if args.get(flag).is_some() {
             return Err(format!("--{flag} only applies to the continuous path (use --config)"));
         }
@@ -409,6 +418,8 @@ struct ServeOverrides<'a> {
     max_retries: Option<&'a str>,
     max_recoveries: Option<&'a str>,
     kv_dtype: Option<&'a str>,
+    pools: Option<&'a str>,
+    cluster: Option<&'a str>,
 }
 
 /// `tokenring serve --config`: the continuous-batching path.
@@ -444,6 +455,18 @@ fn cmd_serve_config(
         cfg.kv_dtype = v.to_string();
         cfg.parsed_kv_dtype().map_err(|e| e.to_string())?;
     }
+    if let Some(p) = overrides.pools {
+        cfg.pools = p.to_string();
+    }
+    if let Some(c) = overrides.cluster {
+        cfg.cluster = c.to_string();
+    }
+    let disagg = cfg.disagg_opts().map_err(|e| e.to_string())?;
+    if disagg.is_none() {
+        if let Some(c) = overrides.cluster {
+            return Err(format!("--cluster '{c}' only applies to a disaggregated split (--pools)"));
+        }
+    }
     let plan = cfg.fault_plan().map_err(|e| format!("--faults: {e}"))?;
     let runtime = ServeRuntime::parse(&cfg.runtime).map_err(|e| e.to_string())?;
     if !plan.is_empty() && runtime != ServeRuntime::Actors {
@@ -453,6 +476,9 @@ fn cmd_serve_config(
     }
     let requests = cfg.generate().map_err(|e| e.to_string())?;
     let opts = cfg.opts().map_err(|e| e.to_string())?;
+    if let Some(dopts) = disagg {
+        return cmd_serve_disagg(&cfg, &requests, &opts, &dopts, out, trace);
+    }
     let report = serve_continuous(&requests, &opts).map_err(|e| e.to_string())?;
     println!(
         "{} — {} requests over {} devices (mix '{}', continuous batching, {} runtime)\n",
@@ -494,6 +520,76 @@ fn cmd_serve_config(
             p
         }
         None => render::write_serve_artifact(&cfg.name, &report).map_err(|e| e.to_string())?,
+    };
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `tokenring serve --config` with a `<P>p+<D>d` pool split: the
+/// disaggregated prefill/decode path. Prints the same per-request summary
+/// as the unified loop (the report core is schema-compatible), then the
+/// per-pool occupancy/KV lines and the handoff counters.
+fn cmd_serve_disagg(
+    cfg: &ServeConfig,
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+    dopts: &DisaggOpts,
+    out: Option<&str>,
+    trace: Option<&str>,
+) -> Result<(), String> {
+    let report = serve_disagg(requests, opts, dopts).map_err(|e| e.to_string())?;
+    println!(
+        "{} — {} requests over {} devices (mix '{}', disaggregated {}, cluster '{}')\n",
+        cfg.name,
+        report.core.requests.len(),
+        cfg.devices,
+        cfg.mix,
+        report.split.name(),
+        cfg.cluster,
+    );
+    println!("{}", render::serve_summary_table(&report.core));
+    for (label, pool) in [("prefill", &report.prefill), ("decode", &report.decode)] {
+        println!(
+            "{label} pool: {} devices | {} tokens / {} steps | occupancy max {} mean {:.2} | \
+             peak kv {}/{} | recoveries {} | failed {}",
+            pool.devices,
+            pool.tokens,
+            pool.steps.len(),
+            pool.max_occupancy(),
+            pool.mean_occupancy(),
+            pool.peak_kv_tokens(),
+            pool.kv_budget_tokens,
+            pool.faults.recoveries,
+            pool.faults.failed_requests,
+        );
+    }
+    let h = &report.handoff;
+    let hl = h.latency_summary();
+    println!(
+        "handoff: {} requests | {} tokens shipped, {} imported | {:.2} MiB | \
+         latency p50 {:.2} ms p95 {:.2} ms",
+        h.requests,
+        h.tokens,
+        h.imported_tokens,
+        h.bytes as f64 / (1024.0 * 1024.0),
+        hl.p50 * 1e3,
+        hl.p95 * 1e3,
+    );
+    if let Some(cause) = &report.core.faults.failure {
+        println!("serve session exhausted its recovery budget: {cause}");
+    }
+    if let Some(prefix) = trace {
+        std::fs::write(prefix, render::serve_chrome_trace(&report.core))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {prefix} — open in chrome://tracing or Perfetto");
+    }
+    let out_path = match out {
+        Some(p) => {
+            let p = PathBuf::from(p);
+            render::write_disagg_json(&p, &report).map_err(|e| e.to_string())?;
+            p
+        }
+        None => render::write_disagg_artifact(&cfg.name, &report).map_err(|e| e.to_string())?,
     };
     println!("wrote {}", out_path.display());
     Ok(())

@@ -493,34 +493,36 @@ impl ContinuousServeReport {
     }
 }
 
-/// Per-request bookkeeping that survives preemption.
+/// Per-request bookkeeping that survives preemption. Shared with the
+/// disaggregated serve loop ([`super::disagg`]), which keeps one table
+/// spanning both pools.
 #[derive(Debug, Default, Clone, Copy)]
-struct Meta {
-    admitted: Option<(f64, u64)>,
-    eligible_step: Option<u64>,
-    first_token: Option<f64>,
-    preemptions: usize,
+pub(crate) struct Meta {
+    pub(crate) admitted: Option<(f64, u64)>,
+    pub(crate) eligible_step: Option<u64>,
+    pub(crate) first_token: Option<f64>,
+    pub(crate) preemptions: usize,
     /// Running sum of |out| over decode outputs; reset on preemption
     /// (the replay regenerates every output).
-    digest: f64,
+    pub(crate) digest: f64,
 }
 
-/// An admitted request.
+/// An admitted request. Shared with [`super::disagg`].
 #[derive(Debug, Clone, Copy)]
-struct Running {
-    req: Request,
+pub(crate) struct Running {
+    pub(crate) req: Request,
     /// Next prompt position to prefill (== seq_len once resident).
-    next_prefill: usize,
+    pub(crate) next_prefill: usize,
     /// Decode tokens generated so far.
-    produced: usize,
+    pub(crate) produced: usize,
 }
 
 impl Running {
-    fn is_decoding(&self) -> bool {
+    pub(crate) fn is_decoding(&self) -> bool {
         self.next_prefill == self.req.seq_len
     }
 
-    fn progress(&self) -> usize {
+    pub(crate) fn progress(&self) -> usize {
         self.next_prefill + self.produced
     }
 }
@@ -563,7 +565,7 @@ impl WarmStart {
     }
 }
 
-fn validate(
+pub(crate) fn validate(
     requests: &[Request],
     opts: &ContinuousServeOpts,
     warm: &HashMap<usize, WarmStart>,
@@ -649,11 +651,33 @@ fn validate(
 
 /// Victim for preemption: highest class first, then least progress (least
 /// wasted work), then highest id. `None` on an empty running set.
-fn pick_victim(running: &[Running]) -> Option<usize> {
+pub(crate) fn pick_victim(running: &[Running]) -> Option<usize> {
     (0..running.len()).max_by_key(|&i| {
         let r = &running[i];
         (r.req.priority.class(), std::cmp::Reverse(r.progress()), r.req.id)
     })
+}
+
+/// A request abandoned by recovery-budget exhaustion: placeholder
+/// timing (excluded from summaries), no delivered output. Shared with
+/// [`super::disagg`].
+pub(crate) fn abandoned(req: &Request, m: Meta, clock: f64, step: u64) -> ServedRequest {
+    let (admitted, admitted_step) = m.admitted.unwrap_or((clock, step));
+    ServedRequest {
+        id: req.id,
+        seq_len: req.seq_len,
+        decode_tokens: 0,
+        priority: req.priority,
+        arrival: req.arrival,
+        admitted,
+        admitted_step,
+        eligible_step: m.eligible_step.unwrap_or(admitted_step),
+        first_token: clock,
+        finish: clock,
+        preemptions: m.preemptions,
+        output_digest: 0.0,
+        status: RequestStatus::Failed,
+    }
 }
 
 /// Serve `requests` to completion with continuous batching; see the
@@ -742,27 +766,6 @@ pub fn serve_continuous_warm(
         .map(|r| r.seq_len.div_ceil(opts.chunk) + r.decode_tokens + 1)
         .sum();
     let max_steps = 64 * work as u64 + 1024;
-
-    /// A request abandoned by recovery-budget exhaustion: placeholder
-    /// timing (excluded from summaries), no delivered output.
-    fn abandoned(req: &Request, m: Meta, clock: f64, step: u64) -> ServedRequest {
-        let (admitted, admitted_step) = m.admitted.unwrap_or((clock, step));
-        ServedRequest {
-            id: req.id,
-            seq_len: req.seq_len,
-            decode_tokens: 0,
-            priority: req.priority,
-            arrival: req.arrival,
-            admitted,
-            admitted_step,
-            eligible_step: m.eligible_step.unwrap_or(admitted_step),
-            first_token: clock,
-            finish: clock,
-            preemptions: m.preemptions,
-            output_digest: 0.0,
-            status: RequestStatus::Failed,
-        }
-    }
 
     while finished.len() < requests.len() {
         if step >= max_steps {

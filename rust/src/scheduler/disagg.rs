@@ -1,0 +1,1337 @@
+//! Disaggregated prefill/decode serving: two pools, one handoff queue.
+//!
+//! The unified continuous batcher ([`super::continuous`]) runs chunked
+//! prefill and iteration-level decode through one ring. Context
+//! Parallelism for Million-Token Inference (arXiv:2411.01783) observes
+//! they are different jobs — prefill is compute-bound and wants wide
+//! sequence parallelism, decode is latency-bound and wants small rings —
+//! and TASP (arXiv:2509.26541) argues the device split should follow the
+//! interconnect. This module splits the device set accordingly:
+//!
+//! ```text
+//!             ┌─────────────────────┐   KV handoff queue    ┌────────────────────┐
+//!  arrivals → │ prefill pool (P dev)│ ─── KvDelta windows ─→│ decode pool (D dev)│ → outputs
+//!             │ wide ActorRing      │   cost = bandwidth     │ narrow ActorRing   │
+//!             │ chunked prefill only│   matrix bottleneck    │ decode only        │
+//!             └─────────────────────┘                        └────────────────────┘
+//! ```
+//!
+//! A request is admitted to the **prefill pool** (its own
+//! [`AdmissionQueue`], KV budget, watchdog, and fault policy), streams its
+//! prompt through chunked-prefill micro-steps, and on completion its full
+//! prompt KV is shipped to the **decode pool** as an explicit handoff.
+//! The transfer cost is modeled from the cluster's bandwidth matrix
+//! (reusing [`Cluster`] presets): prefill devices occupy global slots
+//! `0..P`, decode devices `P..P+D`, the bottleneck cross-pool link sets
+//! the rate, and the `D` destination shards move in parallel unless the
+//! topology serializes through a shared root port. When the handoff
+//! lands (virtual clock ≥ `ready_at`), the request enters the decode
+//! pool's admission queue, imports its KV exactly like a
+//! [`WarmStart`] — one [`KvCache::append_deltas`] window crossing the
+//! ring as ordinary deltas — and decodes to completion on the narrow
+//! ring.
+//!
+//! # Numerical invisibility
+//!
+//! Disaggregation is numerically invisible because nothing the decode
+//! math consumes changes:
+//!
+//! * KV content is a pure function of `(seed, request, position)`
+//!   ([`TokenSource`]), so the shipped rows regenerated at handoff are
+//!   bit-identical to the rows the prefill pool appended — and to the
+//!   rows a unified run would have appended.
+//! * Prefill query outputs are discarded in both modes; only decode
+//!   outputs are delivered. The prefill ring's width is therefore
+//!   invisible to delivered numerics.
+//! * A decode query attends only to its own request's resident rows
+//!   (causal, batching-invariant), so batch composition — which pool
+//!   peers share a micro-step — is invisible.
+//!
+//! What *does* matter is the decode ring's width and page layout: partial
+//! softmax sums merge across devices, so a `Pp+Dd` run is **bit-exact**
+//! against unified `serve_continuous` at `devices = D` when the one-shot
+//! handoff import deals the same pages as unified's chunked prefill
+//! (chunk-aligned prompts and caps that never split a chunk — the
+//! configuration `tests/disagg.rs` pins digests under), and allclose
+//! (1e-4) against unified at `devices = P+D`, where only the merge
+//! rounding differs. The unified loop stays the oracle either way.
+//!
+//! # Fault isolation
+//!
+//! Each pool owns its failure domain: a poisoned ring tears down and
+//! respawns *its pool only*, replaying that pool's in-flight requests
+//! from the deterministic source while the other pool keeps stepping —
+//! `tests/chaos.rs` proves a prefill-pool fault leaves decode-pool
+//! digests untouched (and vice versa). Handoffs in flight during a
+//! respawn are unaffected: their payload is already materialized, they
+//! land on schedule. Recoveries are bounded per pool by
+//! [`ContinuousServeOpts::max_recoveries`]; exhaustion fails the
+//! remaining requests gracefully, like the unified loop.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Cluster;
+use crate::engine::actors::{ActorRing, RingPolicy};
+use crate::engine::decode::DecodeQuery;
+use crate::engine::faults::{FaultInjector, FaultPlan};
+use crate::engine::kv_cache::KvCache;
+use crate::json_obj;
+use crate::metrics::FaultAccounting;
+use crate::tensor::Tensor;
+use crate::topology::LinkSpec;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::Request;
+
+use super::continuous::{
+    abandoned, pick_victim, validate, ContinuousServeOpts, ContinuousServeReport, Meta,
+    RequestStatus, Running, ServeRuntime, ServedRequest, StepTrace, WarmStart,
+};
+use super::queue::AdmissionQueue;
+use super::source::TokenSource;
+
+/// How the device set is split between the two pools — the value of the
+/// `pools: "<P>p+<D>d"` serve-config knob (`"unified"` parses to `None`:
+/// no split, the classic single-ring loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSplit {
+    /// Devices in the prefill pool (global ring slots `0..P`).
+    pub prefill: usize,
+    /// Devices in the decode pool (global ring slots `P..P+D`).
+    pub decode: usize,
+}
+
+impl PoolSplit {
+    /// Parse a pool-split knob: `"unified"` → `None`, `"<P>p+<D>d"`
+    /// (e.g. `"3p+1d"`) → `Some(split)` with both pools non-empty.
+    pub fn parse(s: &str) -> Result<Option<PoolSplit>> {
+        if s == "unified" {
+            return Ok(None);
+        }
+        let err =
+            || anyhow!("bad pool split '{s}' (expected \"unified\" or \"<P>p+<D>d\", e.g. \"3p+1d\")");
+        let (p, d) = s.split_once('+').ok_or_else(err)?;
+        let p = p.strip_suffix('p').ok_or_else(err)?;
+        let d = d.strip_suffix('d').ok_or_else(err)?;
+        let prefill: usize = p.parse().map_err(|_| err())?;
+        let decode: usize = d.parse().map_err(|_| err())?;
+        if prefill == 0 || decode == 0 {
+            bail!("pool split '{s}' needs at least one device in each pool");
+        }
+        Ok(Some(PoolSplit { prefill, decode }))
+    }
+
+    /// The canonical `"<P>p+<D>d"` name ([`PoolSplit::parse`] round-trips
+    /// it).
+    pub fn name(&self) -> String {
+        format!("{}p+{}d", self.prefill, self.decode)
+    }
+
+    /// Total devices across both pools (must equal
+    /// [`ContinuousServeOpts::devices`]).
+    pub fn devices(&self) -> usize {
+        self.prefill + self.decode
+    }
+}
+
+/// Disaggregation options layered on top of [`ContinuousServeOpts`] (the
+/// shared knobs — dims, chunk, budgets, watchdog — apply to *each* pool).
+#[derive(Debug, Clone)]
+pub struct DisaggOpts {
+    /// The device split.
+    pub split: PoolSplit,
+    /// Cluster preset naming the bandwidth matrix the handoff cost is
+    /// modeled from (resolved via [`Cluster::by_name`] at the total
+    /// device count).
+    pub cluster: String,
+    /// Fault plan delivered into the prefill pool's ring.
+    pub prefill_faults: Option<FaultPlan>,
+    /// Fault plan delivered into the decode pool's ring. When `None`,
+    /// [`ContinuousServeOpts::faults`] routes here — decode is the
+    /// serving-critical ring, so the base plan targets it.
+    pub decode_faults: Option<FaultPlan>,
+}
+
+impl DisaggOpts {
+    /// Disaggregation with defaults: a uniform 16 GB/s mesh and no
+    /// pool-specific fault plans.
+    pub fn new(split: PoolSplit) -> DisaggOpts {
+        DisaggOpts {
+            split,
+            cluster: "uniform:16".to_string(),
+            prefill_faults: None,
+            decode_faults: None,
+        }
+    }
+}
+
+/// One pool's side of the disaggregated report.
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    /// Ring width the pool finished the session at (degraded restarts
+    /// included).
+    pub devices: usize,
+    /// The KV budget this pool's batcher held residency under.
+    pub kv_budget_tokens: usize,
+    /// Tokens this pool processed: prompt tokens prefilled (prefill
+    /// pool) or output tokens generated (decode pool), replays included.
+    pub tokens: usize,
+    /// This pool's micro-steps (step ids are session-global; the core
+    /// report's `steps` is the two pools' traces merged).
+    pub steps: Vec<StepTrace>,
+    /// Per-request pool sojourn: admission→ship for the prefill pool,
+    /// import→finish for the decode pool.
+    pub latency: Summary,
+    /// This pool's fault accounting (its own injector, watchdog, and
+    /// recovery budget).
+    pub faults: FaultAccounting,
+}
+
+impl PoolReport {
+    /// Peak resident KV tokens observed in this pool's trace.
+    pub fn peak_kv_tokens(&self) -> usize {
+        self.steps.iter().map(|s| s.kv_tokens).max().unwrap_or(0)
+    }
+
+    /// Largest number of requests composed into one of this pool's
+    /// micro-steps.
+    pub fn max_occupancy(&self) -> usize {
+        self.steps.iter().map(|s| s.batch).max().unwrap_or(0)
+    }
+
+    /// Mean requests per micro-step (0.0 for an empty trace).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps.is_empty() {
+            0.0
+        } else {
+            self.steps.iter().map(|s| s.batch).sum::<usize>() as f64 / self.steps.len() as f64
+        }
+    }
+
+    /// The `pools.{prefill,decode}` object in `BENCH_serve.json`
+    /// (EXPERIMENTS.md §Disagg). Full step rows live in the core trace;
+    /// here only the count.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("devices", self.devices),
+            ("kv_budget_tokens", self.kv_budget_tokens),
+            ("peak_kv_tokens", self.peak_kv_tokens()),
+            ("tokens", self.tokens),
+            ("steps", self.steps.len()),
+            (
+                "occupancy",
+                json_obj![("max", self.max_occupancy()), ("mean", self.mean_occupancy())]
+            ),
+            ("latency", self.latency.to_json()),
+            ("faults", self.faults.to_json()),
+        ]
+    }
+}
+
+/// Aggregate accounting of the KV handoff queue.
+#[derive(Debug, Clone, Default)]
+pub struct HandoffStats {
+    /// Requests shipped prefill → decode (each exactly once).
+    pub requests: usize,
+    /// Prompt tokens shipped.
+    pub tokens: usize,
+    /// Modeled bytes on the wire: per token, K and V rows at the cache
+    /// dtype plus a 4-byte position index.
+    pub bytes: usize,
+    /// Prompt tokens imported into the decode pool's cache (replays
+    /// after decode-pool preemption or recovery re-import and re-count,
+    /// mirroring how prefill replays re-count).
+    pub imported_tokens: usize,
+    /// Per-handoff modeled transfer latencies (seconds).
+    pub latencies: Vec<f64>,
+}
+
+impl HandoffStats {
+    /// Transfer-latency percentiles (empty-safe).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from_samples(self.latencies.clone())
+    }
+
+    /// The `handoff` object in `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("requests", self.requests),
+            ("tokens", self.tokens),
+            ("bytes", self.bytes),
+            ("imported_tokens", self.imported_tokens),
+            ("latency", self.latency_summary().to_json()),
+        ]
+    }
+}
+
+/// Report of a disaggregated serve run: the unified-schema core plus
+/// per-pool and handoff views.
+#[derive(Debug, Clone)]
+pub struct DisaggReport {
+    /// The unified-schema report (per-request metrics, merged step
+    /// trace, summed fault accounting) — `BENCH_serve.json` consumers
+    /// that don't know about pools read this part unchanged.
+    pub core: ContinuousServeReport,
+    /// The device split the run used.
+    pub split: PoolSplit,
+    /// Prefill-pool view.
+    pub prefill: PoolReport,
+    /// Decode-pool view.
+    pub decode: PoolReport,
+    /// KV handoff accounting.
+    pub handoff: HandoffStats,
+}
+
+impl DisaggReport {
+    /// The unified artifact schema extended with `pools` and `handoff`
+    /// objects (EXPERIMENTS.md §Disagg).
+    pub fn to_json(&self) -> Json {
+        let mut m = self.core.to_json().as_obj().cloned().unwrap_or_default();
+        m.insert(
+            "pools".to_string(),
+            json_obj![
+                ("split", self.split.name()),
+                ("prefill", self.prefill.to_json()),
+                ("decode", self.decode.to_json()),
+            ],
+        );
+        m.insert("handoff".to_string(), self.handoff.to_json());
+        Json::Obj(m)
+    }
+}
+
+/// A completed prefill waiting out its modeled transfer to the decode
+/// pool.
+struct Handoff {
+    req: Request,
+    k: Tensor,
+    v: Tensor,
+    ready_at: f64,
+    bytes: usize,
+}
+
+/// Serve `requests` to completion with disaggregated prefill/decode
+/// pools; see the module docs for the dataflow and [`DisaggReport`] for
+/// what is measured.
+pub fn serve_disagg(
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+    dopts: &DisaggOpts,
+) -> Result<DisaggReport> {
+    serve_disagg_warm(requests, opts, dopts, &HashMap::new())
+}
+
+/// [`serve_disagg`] with warm-started admission into the *prefill* pool:
+/// requests with an entry in `warm` import the held prefix KV at prefill
+/// admission, exactly as [`super::serve_continuous_warm`] does.
+pub fn serve_disagg_warm(
+    requests: &[Request],
+    opts: &ContinuousServeOpts,
+    dopts: &DisaggOpts,
+    warm: &HashMap<usize, WarmStart>,
+) -> Result<DisaggReport> {
+    validate(requests, opts, warm)?;
+    let split = dopts.split;
+    if split.devices() != opts.devices {
+        bail!(
+            "pool split {} covers {} devices but the session has {}",
+            split.name(),
+            split.devices(),
+            opts.devices
+        );
+    }
+    if opts.runtime != ServeRuntime::Actors {
+        bail!(
+            "disaggregated serving requires the actors runtime (each pool holds a \
+             persistent ring across micro-steps)"
+        );
+    }
+    let cluster = Cluster::by_name(&dopts.cluster, opts.devices)
+        .with_context(|| format!("resolving disagg cluster '{}'", dopts.cluster))?;
+    // The handoff rate is set by the weakest cross-pool link in the
+    // global device numbering (prefill 0..P, decode P..P+D).
+    let mut link: Option<LinkSpec> = None;
+    for a in 0..split.prefill {
+        for b in split.prefill..opts.devices {
+            if let Some(l) = cluster.topology.link(a, b) {
+                match link {
+                    Some(cur) if cur.bandwidth <= l.bandwidth => {}
+                    _ => link = Some(l),
+                }
+            }
+        }
+    }
+    let link = link.with_context(|| {
+        format!(
+            "cluster '{}' has no link between the prefill and decode pools",
+            dopts.cluster
+        )
+    })?;
+    let shared_port = cluster.topology.shared_port;
+    // Per handoff token: K and V rows at the cache dtype + a 4-byte
+    // position index (what a KvDelta window carries).
+    let row_bytes = 2 * opts.heads * opts.head_dim * opts.engine.kv_dtype.bytes_per_el() + 4;
+    // The D destination shards transfer in parallel, unless the topology
+    // funnels every device through a shared root port.
+    let transfer = |bytes: usize| -> f64 {
+        let b = bytes as f64;
+        if shared_port {
+            link.transfer_time(b)
+        } else {
+            link.latency + (b / split.decode as f64) / link.bandwidth
+        }
+    };
+
+    let source = TokenSource::new(opts.seed, opts.heads, opts.head_dim);
+    let policy = RingPolicy {
+        watchdog: Duration::from_millis(opts.watchdog_ms),
+        max_retries: opts.max_retries,
+    };
+    // One injector per pool, shared across that pool's respawns (slots
+    // fire at most once). The base `opts.faults` plan routes to the
+    // decode pool when no pool-specific plan overrides it.
+    let p_injector: Option<Arc<FaultInjector>> = dopts
+        .prefill_faults
+        .as_ref()
+        .filter(|p| !p.is_empty())
+        .map(|p| Arc::new(FaultInjector::new(p)));
+    let d_injector: Option<Arc<FaultInjector>> = dopts
+        .decode_faults
+        .as_ref()
+        .or(opts.faults.as_ref())
+        .filter(|p| !p.is_empty())
+        .map(|p| Arc::new(FaultInjector::new(p)));
+
+    // --- per-pool state (each pool mirrors the unified loop's failure
+    //     domain: cache + ring + running set + fault accounting)
+    let mut p_acc = FaultAccounting::default();
+    let mut d_acc = FaultAccounting::default();
+    let mut p_devices_now = split.prefill;
+    let mut d_devices_now = split.decode;
+    let mut p_cache = KvCache::new_with_dtype(
+        p_devices_now,
+        opts.heads,
+        opts.head_dim,
+        opts.chunk,
+        opts.engine.kv_dtype,
+    );
+    let mut d_cache = KvCache::new_with_dtype(
+        d_devices_now,
+        opts.heads,
+        opts.head_dim,
+        opts.chunk,
+        opts.engine.kv_dtype,
+    );
+    let mut p_ring = Some(
+        ActorRing::spawn_with(
+            p_devices_now,
+            opts.heads,
+            opts.head_dim,
+            &opts.engine,
+            policy,
+            p_injector.clone(),
+        )
+        .context("spawning the prefill pool's actor ring")?,
+    );
+    let mut d_ring = Some(
+        ActorRing::spawn_with(
+            d_devices_now,
+            opts.heads,
+            opts.head_dim,
+            &opts.engine,
+            policy,
+            d_injector.clone(),
+        )
+        .context("spawning the decode pool's actor ring")?,
+    );
+    let mut queue = AdmissionQueue::new(opts.aging_steps);
+    let mut d_queue = AdmissionQueue::new(opts.aging_steps);
+    let mut meta: HashMap<usize, Meta> = HashMap::with_capacity(requests.len());
+    for r in requests {
+        queue.push(*r);
+        meta.insert(r.id, Meta::default());
+    }
+
+    let mut p_running: Vec<Running> = Vec::new();
+    let mut d_running: Vec<Running> = Vec::new();
+    let mut in_flight: Vec<Handoff> = Vec::new();
+    // Landed handoff payloads, held until the request retires so
+    // decode-pool preemption and recovery can re-import deterministically.
+    let mut imported: HashMap<usize, (Tensor, Tensor)> = HashMap::new();
+    let mut finished: Vec<ServedRequest> = Vec::new();
+    let mut outputs: HashMap<usize, Vec<Tensor>> = HashMap::new();
+    let mut p_trace: Vec<StepTrace> = Vec::new();
+    let mut d_trace: Vec<StepTrace> = Vec::new();
+    let mut p_latencies: Vec<f64> = Vec::new();
+    let mut d_latencies: Vec<f64> = Vec::new();
+    let mut handoff = HandoffStats::default();
+    let mut clock = 0.0f64;
+    let mut step = 0u64;
+    let mut total_prefill = 0usize;
+    let mut total_decode = 0usize;
+    let mut elided = 0usize;
+    let mut preemptions = 0usize;
+    let mut terminal = false;
+
+    let work: usize = requests
+        .iter()
+        .map(|r| r.seq_len.div_ceil(opts.chunk) + r.decode_tokens + 1)
+        .sum();
+    let max_steps = 64 * work as u64 + 1024;
+
+    while finished.len() < requests.len() {
+        if step >= max_steps {
+            bail!("disagg serve loop exceeded {max_steps} steps (KV budget too tight to converge?)");
+        }
+        let mut progress = false;
+
+        // --- land handoffs whose modeled transfer has completed
+        let mut i = 0;
+        while i < in_flight.len() {
+            if in_flight[i].ready_at <= clock {
+                let h = in_flight.swap_remove(i);
+                imported.insert(h.req.id, (h.k, h.v));
+                d_queue.push(h.req);
+                progress = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        // --- prefill-pool micro-step. Same two failure domains as the
+        //     unified loop: ring-command failures break out recoverable,
+        //     driver invariants stay terminal via `?`.
+        let p_err: Option<anyhow::Error> = 'p: {
+            queue.mark_eligible(clock, step);
+            // admission reserves the full prompt against the pool budget,
+            // so prefill never needs preemption: residency is bounded by
+            // the sum of reservations.
+            while p_running.len() < opts.max_batch {
+                let projected: usize = p_cache.total_tokens()
+                    + p_running.iter().map(|r| r.req.seq_len - r.next_prefill).sum::<usize>();
+                let budget = opts.kv_budget_tokens;
+                let Some((req, eligible)) = queue.pop_if(step, |c| projected + c.seq_len <= budget)
+                else {
+                    break;
+                };
+                let m = meta.get_mut(&req.id).with_context(|| {
+                    format!("admitting request {} with no bookkeeping entry", req.id)
+                })?;
+                if m.eligible_step.is_none() {
+                    m.eligible_step = Some(eligible);
+                }
+                if m.admitted.is_none() {
+                    m.admitted = Some((clock, step));
+                }
+                progress = true;
+                p_running.push(Running { req, next_prefill: 0, produced: 0 });
+                let ring = p_ring.as_mut().context("prefill pool lost its ring (driver bug)")?;
+                if let Err(e) = ring.admit(req.id) {
+                    break 'p Some(
+                        e.context(format!("step {step}: prefill-pool admit of request {}", req.id)),
+                    );
+                }
+                if let Some(ws) = warm.get(&req.id) {
+                    let deltas = p_cache.append_deltas(req.id, &ws.k, &ws.v).with_context(|| {
+                        format!("step {step}: warm-start import for request {}", req.id)
+                    })?;
+                    if let Err(e) = ring.append(&deltas) {
+                        break 'p Some(e.context(format!(
+                            "step {step}: warm-start deltas for request {}",
+                            req.id
+                        )));
+                    }
+                    let r = p_running.last_mut().with_context(|| {
+                        format!("warm-starting request {} that was never pushed", req.id)
+                    })?;
+                    r.next_prefill = ws.tokens();
+                    elided += ws.tokens();
+                }
+            }
+
+            if p_running.is_empty() {
+                break 'p None;
+            }
+
+            // --- compose the prefill micro-step (no decode queries here)
+            let mut step_tokens = 0usize;
+            let mut plan: Vec<(usize, usize)> = Vec::new();
+            for (i, r) in p_running.iter().enumerate() {
+                let take = (r.req.seq_len - r.next_prefill)
+                    .min(opts.chunk)
+                    .min(opts.max_step_tokens.saturating_sub(step_tokens));
+                if take > 0 {
+                    plan.push((i, take));
+                    step_tokens += take;
+                }
+            }
+            if plan.is_empty() {
+                bail!("prefill pool composed an empty step (internal scheduling bug)");
+            }
+
+            let mut queries: Vec<DecodeQuery> = Vec::with_capacity(plan.len());
+            let mut prefill_tokens = 0usize;
+            for &(i, take) in &plan {
+                let r = &p_running[i];
+                let start = r.next_prefill;
+                let (k, v) = source.request_kv(&r.req, start, take);
+                let deltas = p_cache.append_deltas(r.req.id, &k, &v).with_context(|| {
+                    format!("step {step}: prefill append for request {}", r.req.id)
+                })?;
+                let ring = p_ring.as_mut().context("prefill pool lost its ring (driver bug)")?;
+                if let Err(e) = ring.append(&deltas) {
+                    break 'p Some(
+                        e.context(format!("step {step}: prefill deltas for request {}", r.req.id)),
+                    );
+                }
+                queries.push(DecodeQuery {
+                    request: r.req.id,
+                    q: source.request_q(&r.req, start, take),
+                    q_pos: (start as i32..(start + take) as i32).collect(),
+                });
+                prefill_tokens += take;
+            }
+
+            let batch = queries.len();
+            let running_now = p_running.len();
+            let t0 = clock;
+            let timer = Instant::now();
+            let ring = p_ring.as_mut().context("prefill pool lost its ring (driver bug)")?;
+            // prefill query outputs are discarded — only the KV appends
+            // matter, which is why the prefill ring's width is invisible
+            // to delivered numerics
+            if let Err(e) = ring.step(queries) {
+                break 'p Some(e.context(format!("prefill-pool micro-step {step}")));
+            }
+            clock += timer.elapsed().as_secs_f64();
+
+            for &(i, take) in &plan {
+                let r = &mut p_running[i];
+                r.next_prefill += take;
+                total_prefill += take;
+            }
+
+            // peak residency: after this step's appends, before shipping
+            let kv_tokens = p_cache.total_tokens();
+
+            // --- ship completed prompts to the decode pool (committed to
+            //     the handoff queue before the evict: a failed evict
+            //     recovers with the handoff already safe in flight)
+            let mut i = 0;
+            while i < p_running.len() {
+                if p_running[i].next_prefill == p_running[i].req.seq_len {
+                    let r = p_running.swap_remove(i);
+                    // regenerate the full prompt KV from the source —
+                    // bit-identical to the rows just prefilled (and to
+                    // the warm-started prefix rows)
+                    let (k, v) = source.request_kv(&r.req, 0, r.req.seq_len);
+                    let bytes = r.req.seq_len * row_bytes;
+                    let dt = transfer(bytes);
+                    in_flight.push(Handoff {
+                        req: r.req,
+                        k,
+                        v,
+                        ready_at: clock + dt,
+                        bytes,
+                    });
+                    handoff.requests += 1;
+                    handoff.tokens += r.req.seq_len;
+                    handoff.bytes += bytes;
+                    handoff.latencies.push(dt);
+                    let m = meta.get(&r.req.id).with_context(|| {
+                        format!("shipping request {} with no bookkeeping entry", r.req.id)
+                    })?;
+                    let (admitted, _) = m.admitted.with_context(|| {
+                        format!("request {} shipped without ever being admitted", r.req.id)
+                    })?;
+                    p_latencies.push(clock - admitted);
+                    p_cache.free(r.req.id);
+                    let ring =
+                        p_ring.as_mut().context("prefill pool lost its ring (driver bug)")?;
+                    if let Err(e) = ring.evict(r.req.id) {
+                        break 'p Some(e.context(format!(
+                            "step {step}: prefill-pool evict of shipped request {}",
+                            r.req.id
+                        )));
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+
+            p_trace.push(StepTrace {
+                step,
+                t0,
+                t1: clock,
+                batch,
+                running: running_now,
+                queued: queue.arrived_len(clock),
+                prefill_tokens,
+                decode_tokens: 0,
+                kv_tokens,
+                kv_budget: opts.kv_budget_tokens,
+            });
+            step += 1;
+            progress = true;
+            None
+        };
+
+        // --- prefill-pool recovery: tear down and respawn this pool
+        //     only; the decode pool keeps stepping untouched.
+        if let Some(err) = p_err {
+            let old = p_ring.take().context("prefill ring failure with no ring (driver bug)")?;
+            p_acc.watchdog_retries += old.retries();
+            drop(old);
+            if p_acc.recoveries >= opts.max_recoveries {
+                p_acc.failure = Some(format!("prefill pool: {err:#}"));
+                terminal = true;
+            } else {
+                p_acc.recoveries += 1;
+                for r in p_running.drain(..) {
+                    p_acc.replayed_tokens += r.progress();
+                    let m = meta.get_mut(&r.req.id).with_context(|| {
+                        format!("recovering request {} with no bookkeeping entry", r.req.id)
+                    })?;
+                    m.first_token = None;
+                    m.digest = 0.0;
+                    queue.push(r.req);
+                }
+                if opts.degrade_on_recovery && p_devices_now > 1 {
+                    p_devices_now -= 1;
+                }
+                p_cache = KvCache::new_with_dtype(
+                    p_devices_now,
+                    opts.heads,
+                    opts.head_dim,
+                    opts.chunk,
+                    opts.engine.kv_dtype,
+                );
+                p_ring = Some(
+                    ActorRing::spawn_with(
+                        p_devices_now,
+                        opts.heads,
+                        opts.head_dim,
+                        &opts.engine,
+                        policy,
+                        p_injector.clone(),
+                    )
+                    .context("respawning the prefill pool's actor ring")?,
+                );
+            }
+            progress = true;
+        }
+
+        // --- decode-pool micro-step (skipped once a terminal failure is
+        //     winding the session down)
+        let d_err: Option<anyhow::Error> = if terminal {
+            None
+        } else {
+            'd: {
+                d_queue.mark_eligible(clock, step);
+                // admission reserves the full prompt against this pool's
+                // budget, then imports the handed-off KV exactly like a
+                // warm start: one append_deltas window crossing the ring
+                while d_running.len() < opts.max_batch {
+                    let projected = d_cache.total_tokens();
+                    let budget = opts.kv_budget_tokens;
+                    let Some((req, _)) = d_queue.pop_if(step, |c| projected + c.seq_len <= budget)
+                    else {
+                        break;
+                    };
+                    progress = true;
+                    d_running.push(Running {
+                        req,
+                        next_prefill: req.seq_len,
+                        produced: 0,
+                    });
+                    let ring =
+                        d_ring.as_mut().context("decode pool lost its ring (driver bug)")?;
+                    if let Err(e) = ring.admit(req.id) {
+                        break 'd Some(e.context(format!(
+                            "step {step}: decode-pool admit of request {}",
+                            req.id
+                        )));
+                    }
+                    let (k, v) = imported
+                        .get(&req.id)
+                        .cloned()
+                        .with_context(|| format!("request {} landed without a handoff payload", req.id))?;
+                    let deltas = d_cache.append_deltas(req.id, &k, &v).with_context(|| {
+                        format!("step {step}: handoff import for request {}", req.id)
+                    })?;
+                    if let Err(e) = ring.append(&deltas) {
+                        break 'd Some(e.context(format!(
+                            "step {step}: handoff deltas for request {}",
+                            req.id
+                        )));
+                    }
+                    handoff.imported_tokens += req.seq_len;
+                    let m = meta.get_mut(&req.id).with_context(|| {
+                        format!("importing request {} with no bookkeeping entry", req.id)
+                    })?;
+                    // the first output token becomes computable here —
+                    // TTFT includes the modeled handoff latency
+                    m.first_token = Some(clock);
+                    if req.decode_tokens == 0 {
+                        // no decode phase: the request is done the moment
+                        // its KV lands (committed to `finished` before
+                        // the evict, like any retirement)
+                        let r = d_running.pop().with_context(|| {
+                            format!("retiring request {} that was never pushed", req.id)
+                        })?;
+                        let (admitted, admitted_step) = m.admitted.with_context(|| {
+                            format!("request {} finished without ever being admitted", req.id)
+                        })?;
+                        finished.push(ServedRequest {
+                            id: r.req.id,
+                            seq_len: r.req.seq_len,
+                            decode_tokens: 0,
+                            priority: r.req.priority,
+                            arrival: r.req.arrival,
+                            admitted,
+                            admitted_step,
+                            eligible_step: m.eligible_step.unwrap_or(admitted_step),
+                            first_token: clock,
+                            finish: clock,
+                            preemptions: m.preemptions,
+                            output_digest: 0.0,
+                            status: RequestStatus::Completed,
+                        });
+                        d_latencies.push(0.0);
+                        d_cache.free(r.req.id);
+                        imported.remove(&r.req.id);
+                        let ring =
+                            d_ring.as_mut().context("decode pool lost its ring (driver bug)")?;
+                        if let Err(e) = ring.evict(r.req.id) {
+                            break 'd Some(e.context(format!(
+                                "step {step}: decode-pool evict of request {}",
+                                r.req.id
+                            )));
+                        }
+                    }
+                }
+
+                if d_running.is_empty() {
+                    break 'd None;
+                }
+
+                // --- compose the decode batch (preempting if growth
+                //     exceeds the pool budget)
+                let decode_idx = loop {
+                    // one query token per resident request, capped like the
+                    // unified composer
+                    let idx: Vec<usize> =
+                        (0..d_running.len().min(opts.max_step_tokens)).collect();
+                    let resident = d_cache.total_tokens();
+                    if resident + idx.len() > opts.kv_budget_tokens && d_running.len() > 1 {
+                        let v = pick_victim(&d_running).with_context(|| {
+                            format!("step {step}: preempting from an empty decode running set")
+                        })?;
+                        let victim = d_running.swap_remove(v);
+                        d_cache.free(victim.req.id);
+                        let m = meta.get_mut(&victim.req.id).with_context(|| {
+                            format!(
+                                "preempting request {} with no bookkeeping entry",
+                                victim.req.id
+                            )
+                        })?;
+                        m.preemptions += 1;
+                        m.first_token = None;
+                        m.digest = 0.0;
+                        preemptions += 1;
+                        outputs.remove(&victim.req.id);
+                        // the payload stays in `imported`: re-admission
+                        // re-imports and replays the decode tokens
+                        d_queue.push(victim.req);
+                        let ring =
+                            d_ring.as_mut().context("decode pool lost its ring (driver bug)")?;
+                        if let Err(e) = ring.evict(victim.req.id) {
+                            break 'd Some(e.context(format!(
+                                "step {step}: decode-pool preemption of request {}",
+                                victim.req.id
+                            )));
+                        }
+                        continue;
+                    }
+                    break idx;
+                };
+
+                let mut queries: Vec<DecodeQuery> = Vec::with_capacity(decode_idx.len());
+                for &i in &decode_idx {
+                    let r = &d_running[i];
+                    let pos = d_cache.seq_len(r.req.id);
+                    debug_assert_eq!(pos, r.req.seq_len + r.produced);
+                    queries.push(DecodeQuery {
+                        request: r.req.id,
+                        q: source.request_q(&r.req, pos, 1),
+                        q_pos: vec![pos as i32],
+                    });
+                }
+                if queries.is_empty() {
+                    bail!("decode pool composed an empty step (internal scheduling bug)");
+                }
+
+                let batch = queries.len();
+                let running_now = d_running.len();
+                let t0 = clock;
+                let timer = Instant::now();
+                let ring = d_ring.as_mut().context("decode pool lost its ring (driver bug)")?;
+                let res = match ring.step(queries) {
+                    Ok(res) => res,
+                    Err(e) => {
+                        break 'd Some(e.context(format!("decode-pool micro-step {step}")));
+                    }
+                };
+                clock += timer.elapsed().as_secs_f64();
+
+                for &i in &decode_idx {
+                    let r = &mut d_running[i];
+                    let (out, _) = res.outputs.get(&r.req.id).with_context(|| {
+                        format!("micro-step {step} produced no output for request {}", r.req.id)
+                    })?;
+                    meta.get_mut(&r.req.id)
+                        .with_context(|| {
+                            format!("request {} with no bookkeeping entry", r.req.id)
+                        })?
+                        .digest += out.data().iter().map(|x| x.abs() as f64).sum::<f64>();
+                    if opts.keep_outputs {
+                        outputs.entry(r.req.id).or_default().push(out.clone());
+                    }
+                    let pos = r.req.seq_len + r.produced;
+                    let (k1, v1) = source.request_kv(&r.req, pos, 1);
+                    let deltas = d_cache.append_deltas(r.req.id, &k1, &v1).with_context(|| {
+                        format!("step {step}: decode append for request {}", r.req.id)
+                    })?;
+                    let ring =
+                        d_ring.as_mut().context("decode pool lost its ring (driver bug)")?;
+                    if let Err(e) = ring.append(&deltas) {
+                        break 'd Some(e.context(format!(
+                            "step {step}: decode delta for request {}",
+                            r.req.id
+                        )));
+                    }
+                    r.produced += 1;
+                    total_decode += 1;
+                }
+
+                let kv_tokens = d_cache.total_tokens();
+
+                // --- retire finished requests
+                let mut i = 0;
+                while i < d_running.len() {
+                    if d_running[i].produced == d_running[i].req.decode_tokens {
+                        let r = d_running.swap_remove(i);
+                        let m = meta.get(&r.req.id).with_context(|| {
+                            format!("retiring request {} with no bookkeeping entry", r.req.id)
+                        })?;
+                        let (admitted, admitted_step) = m.admitted.with_context(|| {
+                            format!("request {} finished without ever being admitted", r.req.id)
+                        })?;
+                        let first_token = m.first_token.unwrap_or(clock);
+                        finished.push(ServedRequest {
+                            id: r.req.id,
+                            seq_len: r.req.seq_len,
+                            decode_tokens: r.req.decode_tokens,
+                            priority: r.req.priority,
+                            arrival: r.req.arrival,
+                            admitted,
+                            admitted_step,
+                            eligible_step: m.eligible_step.unwrap_or(admitted_step),
+                            first_token,
+                            finish: clock,
+                            preemptions: m.preemptions,
+                            output_digest: m.digest,
+                            status: RequestStatus::Completed,
+                        });
+                        d_latencies.push(clock - first_token);
+                        d_cache.free(r.req.id);
+                        imported.remove(&r.req.id);
+                        let ring =
+                            d_ring.as_mut().context("decode pool lost its ring (driver bug)")?;
+                        if let Err(e) = ring.evict(r.req.id) {
+                            break 'd Some(e.context(format!(
+                                "step {step}: decode-pool retire of request {}",
+                                r.req.id
+                            )));
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+
+                d_trace.push(StepTrace {
+                    step,
+                    t0,
+                    t1: clock,
+                    batch,
+                    running: running_now,
+                    queued: d_queue.arrived_len(clock),
+                    prefill_tokens: 0,
+                    decode_tokens: decode_idx.len(),
+                    kv_tokens,
+                    kv_budget: opts.kv_budget_tokens,
+                });
+                step += 1;
+                progress = true;
+                None
+            }
+        };
+
+        // --- decode-pool recovery: this pool only; in-flight handoffs
+        //     and the prefill pool are untouched, and re-queued requests
+        //     re-import their payload from `imported` on re-admission.
+        if let Some(err) = d_err {
+            let old = d_ring.take().context("decode ring failure with no ring (driver bug)")?;
+            d_acc.watchdog_retries += old.retries();
+            drop(old);
+            if d_acc.recoveries >= opts.max_recoveries {
+                d_acc.failure = Some(format!("decode pool: {err:#}"));
+                terminal = true;
+            } else {
+                d_acc.recoveries += 1;
+                for r in d_running.drain(..) {
+                    d_acc.replayed_tokens += r.progress();
+                    let m = meta.get_mut(&r.req.id).with_context(|| {
+                        format!("recovering request {} with no bookkeeping entry", r.req.id)
+                    })?;
+                    m.first_token = None;
+                    m.digest = 0.0;
+                    outputs.remove(&r.req.id);
+                    d_queue.push(r.req);
+                }
+                if opts.degrade_on_recovery && d_devices_now > 1 {
+                    d_devices_now -= 1;
+                }
+                d_cache = KvCache::new_with_dtype(
+                    d_devices_now,
+                    opts.heads,
+                    opts.head_dim,
+                    opts.chunk,
+                    opts.engine.kv_dtype,
+                );
+                d_ring = Some(
+                    ActorRing::spawn_with(
+                        d_devices_now,
+                        opts.heads,
+                        opts.head_dim,
+                        &opts.engine,
+                        policy,
+                        d_injector.clone(),
+                    )
+                    .context("respawning the decode pool's actor ring")?,
+                );
+            }
+            progress = true;
+        }
+
+        // --- terminal failure: a pool exhausted its recovery budget;
+        //     fail everything unfinished gracefully, like the unified
+        //     loop's backlog fail.
+        if terminal {
+            for r in p_running.drain(..) {
+                let m = meta.get(&r.req.id).copied().unwrap_or_default();
+                finished.push(abandoned(&r.req, m, clock, step));
+            }
+            for req in queue.drain() {
+                let m = meta.get(&req.id).copied().unwrap_or_default();
+                finished.push(abandoned(&req, m, clock, step));
+            }
+            for h in in_flight.drain(..) {
+                let m = meta.get(&h.req.id).copied().unwrap_or_default();
+                finished.push(abandoned(&h.req, m, clock, step));
+            }
+            for req in d_queue.drain() {
+                let m = meta.get(&req.id).copied().unwrap_or_default();
+                finished.push(abandoned(&req, m, clock, step));
+            }
+            for r in d_running.drain(..) {
+                outputs.remove(&r.req.id);
+                let m = meta.get(&r.req.id).copied().unwrap_or_default();
+                finished.push(abandoned(&r.req, m, clock, step));
+            }
+            break;
+        }
+
+        // --- idle: neither pool progressed; jump the virtual clock to
+        //     the next arrival or the next handoff landing
+        if !progress {
+            let mut t = f64::INFINITY;
+            if let Some(a) = queue.next_arrival_after(clock) {
+                t = t.min(a);
+            }
+            for h in &in_flight {
+                t = t.min(h.ready_at);
+            }
+            if t.is_finite() && t > clock {
+                clock = t;
+            } else {
+                bail!("disagg serve loop stalled with no admissible requests in either pool");
+            }
+        }
+    }
+
+    // --- drain both rings; conservation is per-ring, asserted only when
+    //     that pool never recovered (a respawn replaces the ring
+    //     mid-session) and the session ran to completion
+    if let Some(mut ring) = p_ring.take() {
+        p_acc.watchdog_retries += ring.retries();
+        let drained = ring.drain().context("draining the prefill pool's actor ring")?;
+        if p_acc.recoveries == 0 && !terminal {
+            // every token the prefill cache grew by (cold prefill + warm
+            // imports) crossed the prefill ring as a delta exactly once
+            debug_assert_eq!(
+                drained.delta_tokens(),
+                total_prefill + elided,
+                "prefill-pool delta tokens must equal prompt KV growth"
+            );
+        }
+        ring.shutdown().context("shutting down the prefill pool's actor ring")?;
+    }
+    if let Some(mut ring) = d_ring.take() {
+        d_acc.watchdog_retries += ring.retries();
+        let drained = ring.drain().context("draining the decode pool's actor ring")?;
+        if d_acc.recoveries == 0 && !terminal {
+            // every token the decode cache grew by arrived either as an
+            // imported handoff window or as a decode append
+            debug_assert_eq!(
+                drained.delta_tokens(),
+                handoff.imported_tokens + total_decode,
+                "decode-pool delta tokens must equal imported + generated KV growth"
+            );
+        }
+        ring.shutdown().context("shutting down the decode pool's actor ring")?;
+    }
+    p_acc.faults_injected = p_injector.as_ref().map_or(0, |i| i.fired());
+    d_acc.faults_injected = d_injector.as_ref().map_or(0, |i| i.fired());
+    let failed = finished.iter().filter(|r| r.status == RequestStatus::Failed).count();
+    if p_acc.failure.is_some() {
+        p_acc.failed_requests = failed;
+    } else if d_acc.failure.is_some() {
+        d_acc.failed_requests = failed;
+    }
+
+    finished.sort_by_key(|r| r.id);
+    let mut steps = Vec::with_capacity(p_trace.len() + d_trace.len());
+    steps.extend(p_trace.iter().copied());
+    steps.extend(d_trace.iter().copied());
+    steps.sort_by_key(|s| s.step);
+
+    let combined = FaultAccounting {
+        faults_injected: p_acc.faults_injected + d_acc.faults_injected,
+        watchdog_retries: p_acc.watchdog_retries + d_acc.watchdog_retries,
+        recoveries: p_acc.recoveries + d_acc.recoveries,
+        replayed_tokens: p_acc.replayed_tokens + d_acc.replayed_tokens,
+        failed_requests: failed,
+        failure: p_acc.failure.clone().or_else(|| d_acc.failure.clone()),
+    };
+    let core = ContinuousServeReport {
+        requests: finished,
+        steps,
+        total_prefill_tokens: total_prefill,
+        total_decode_tokens: total_decode,
+        preemptions,
+        wall: clock,
+        prefill_tokens_elided: elided,
+        outputs,
+        faults: combined,
+    };
+    Ok(DisaggReport {
+        core,
+        split,
+        prefill: PoolReport {
+            devices: p_devices_now,
+            kv_budget_tokens: opts.kv_budget_tokens,
+            tokens: total_prefill,
+            steps: p_trace,
+            latency: Summary::from_samples(p_latencies),
+            faults: p_acc,
+        },
+        decode: PoolReport {
+            devices: d_devices_now,
+            kv_budget_tokens: opts.kv_budget_tokens,
+            tokens: total_decode,
+            steps: d_trace,
+            latency: Summary::from_samples(d_latencies),
+            faults: d_acc,
+        },
+        handoff,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Priority;
+
+    fn opts(devices: usize) -> ContinuousServeOpts {
+        ContinuousServeOpts {
+            devices,
+            heads: 2,
+            head_dim: 8,
+            chunk: 8,
+            max_batch: 4,
+            max_step_tokens: 64,
+            kv_budget_tokens: 4096,
+            aging_steps: 8,
+            seed: 1,
+            keep_outputs: false,
+            ..Default::default()
+        }
+    }
+
+    fn req(id: usize, seq_len: usize, decode: usize) -> Request {
+        Request {
+            id,
+            seq_len,
+            arrival: 0.0,
+            decode_tokens: decode,
+            priority: Priority::Standard,
+            prefix: None,
+        }
+    }
+
+    #[test]
+    fn pool_split_parses_and_round_trips() {
+        assert_eq!(PoolSplit::parse("unified").unwrap(), None);
+        let s = PoolSplit::parse("3p+1d").unwrap().unwrap();
+        assert_eq!(s, PoolSplit { prefill: 3, decode: 1 });
+        assert_eq!(s.name(), "3p+1d");
+        assert_eq!(s.devices(), 4);
+        assert_eq!(PoolSplit::parse(&s.name()).unwrap(), Some(s));
+        for bad in ["", "3p1d", "p+d", "3p+2x", "3d+1p", "0p+2d", "2p+0d", "-1p+2d"] {
+            assert!(PoolSplit::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn serves_small_disagg_batch_to_completion() {
+        let reqs = vec![req(0, 16, 2), req(1, 16, 2)];
+        let o = opts(3);
+        let d = DisaggOpts::new(PoolSplit { prefill: 2, decode: 1 });
+        let rep = serve_disagg(&reqs, &o, &d).unwrap();
+        assert_eq!(rep.core.requests.len(), 2);
+        assert_eq!(rep.core.total_prefill_tokens, 32);
+        assert_eq!(rep.core.total_decode_tokens, 4);
+        assert!(rep.core.faults.is_clean());
+        for r in &rep.core.requests {
+            assert_eq!(r.status, RequestStatus::Completed);
+            assert!(r.output_digest > 0.0);
+            assert!(r.finish >= r.first_token && r.first_token >= r.admitted);
+        }
+        // handoff conservation: shipped == imported == prompt tokens
+        assert_eq!(rep.handoff.requests, 2);
+        assert_eq!(rep.handoff.tokens, 32);
+        assert_eq!(rep.handoff.imported_tokens, 32);
+        assert!(rep.handoff.bytes > 0);
+        assert_eq!(rep.handoff.latencies.len(), 2);
+        assert!(rep.handoff.latencies.iter().all(|&t| t > 0.0));
+        // both pools actually stepped and stayed under budget
+        assert!(!rep.prefill.steps.is_empty() && !rep.decode.steps.is_empty());
+        for s in rep.prefill.steps.iter().chain(&rep.decode.steps) {
+            assert!(s.kv_tokens <= s.kv_budget);
+        }
+        assert_eq!(rep.prefill.tokens, 32);
+        assert_eq!(rep.decode.tokens, 4);
+        // the merged core trace is the two pool traces, step-sorted
+        assert_eq!(rep.core.steps.len(), rep.prefill.steps.len() + rep.decode.steps.len());
+        assert!(rep.core.steps.windows(2).all(|w| w[0].step < w[1].step));
+    }
+
+    #[test]
+    fn zero_decode_request_finishes_at_import() {
+        let reqs = vec![req(0, 16, 0)];
+        let o = opts(2);
+        let d = DisaggOpts::new(PoolSplit { prefill: 1, decode: 1 });
+        let rep = serve_disagg(&reqs, &o, &d).unwrap();
+        assert_eq!(rep.core.requests.len(), 1);
+        let r = &rep.core.requests[0];
+        assert_eq!(r.status, RequestStatus::Completed);
+        assert_eq!(r.finish, r.first_token);
+        // the KV still crossed the handoff (conservation holds for
+        // requests with no decode phase)
+        assert_eq!(rep.handoff.tokens, 16);
+        assert_eq!(rep.handoff.imported_tokens, 16);
+        assert!(rep.decode.steps.is_empty(), "no decode micro-steps needed");
+        // TTFT includes the modeled transfer latency
+        assert!(r.ttft() >= rep.handoff.latencies[0]);
+    }
+
+    #[test]
+    fn matches_unified_loop_at_equal_decode_width() {
+        use super::super::serve_continuous;
+        // 1p+1d vs unified at devices=1: the decode ring is width 1 in
+        // both, prompts are chunk-aligned, and no cap binds — the page
+        // layout and merge order are identical, so digests are bit-equal.
+        let reqs = vec![req(0, 16, 2), req(1, 24, 3)];
+        let d = DisaggOpts::new(PoolSplit { prefill: 1, decode: 1 });
+        let disagg = serve_disagg(&reqs, &opts(2), &d).unwrap();
+        let unified = serve_continuous(&reqs, &opts(1)).unwrap();
+        for (a, b) in disagg.core.requests.iter().zip(&unified.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output_digest, b.output_digest, "request {} digest drifted", a.id);
+        }
+    }
+
+    #[test]
+    fn invalid_configurations_rejected() {
+        let reqs = vec![req(0, 16, 2)];
+        // split must cover exactly the session's devices
+        let d = DisaggOpts::new(PoolSplit { prefill: 2, decode: 1 });
+        assert!(serve_disagg(&reqs, &opts(4), &d).is_err());
+        // spawn-per-step has no persistent ring per pool
+        let mut o = opts(3);
+        o.runtime = ServeRuntime::SpawnPerStep;
+        let e = serve_disagg(&reqs, &o, &d).unwrap_err().to_string();
+        assert!(e.contains("actors runtime"), "{e}");
+        // unknown cluster preset
+        let mut bad = d.clone();
+        bad.cluster = "warp_fabric".to_string();
+        assert!(serve_disagg(&reqs, &opts(3), &bad).is_err());
+        // the underlying serve validation still applies
+        assert!(serve_disagg(&[], &opts(3), &d).is_err());
+    }
+
+    #[test]
+    fn artifact_json_has_pool_and_handoff_fields() {
+        let reqs = vec![req(0, 16, 2)];
+        let d = DisaggOpts::new(PoolSplit { prefill: 1, decode: 1 });
+        let rep = serve_disagg(&reqs, &opts(2), &d).unwrap();
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        // the unified schema is intact...
+        for key in ["requests", "wall_s", "ttft", "tpot", "occupancy", "faults", "per_request"] {
+            assert!(j.get(key) != &Json::Null, "missing core field '{key}'");
+        }
+        // ...and the disagg extension is present
+        assert_eq!(j.get("pools").get("split").as_str(), Some("1p+1d"));
+        for pool in ["prefill", "decode"] {
+            let p = j.get("pools").get(pool);
+            for key in [
+                "devices", "kv_budget_tokens", "peak_kv_tokens", "tokens", "steps",
+                "occupancy", "latency", "faults",
+            ] {
+                assert!(p.get(key) != &Json::Null, "missing pools.{pool} field '{key}'");
+            }
+        }
+        assert!(j.get("handoff").get("bytes").as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("handoff").get("tokens").as_usize(),
+            j.get("handoff").get("imported_tokens").as_usize()
+        );
+    }
+
+    #[test]
+    fn shared_port_topology_serializes_the_handoff() {
+        // nvswitch funnels through a shared switch port: the transfer
+        // must not get the parallel-shard discount
+        let reqs = vec![req(0, 32, 1)];
+        let mut d = DisaggOpts::new(PoolSplit { prefill: 2, decode: 2 });
+        d.cluster = "nvswitch".to_string();
+        let rep = serve_disagg(&reqs, &opts(4), &d).unwrap();
+        assert_eq!(rep.handoff.requests, 1);
+        assert!(rep.handoff.latencies[0] > 0.0);
+    }
+}

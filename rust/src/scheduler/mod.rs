@@ -1,7 +1,7 @@
 //! The serving subsystem: schedulers that drive the distributed engine
 //! over request workloads and report latency/throughput.
 //!
-//! Three serving paths, oldest to newest:
+//! Four serving paths, oldest to newest:
 //!
 //! 1. **Prefill-only FIFO** ([`serve`]): each request's prompt runs
 //!    `layers` distributed attention passes through an engine-backed
@@ -19,6 +19,12 @@
 //!    against. The engine side is selected by [`ServeRuntime`]: one
 //!    persistent actor ring per session (default) or the legacy
 //!    spawn-per-step path kept as an equivalence oracle.
+//! 4. **Disaggregated prefill/decode** ([`serve_disagg`], module
+//!    [`disagg`]): the device set splits into a wide prefill pool and a
+//!    narrow decode pool (`pools: "<P>p+<D>d"`), connected by an explicit
+//!    KV handoff queue whose transfer cost is modeled from a cluster's
+//!    bandwidth matrix. Per-request outputs match the unified loop — the
+//!    oracle — exactly at matched decode width (see the module docs).
 //!
 //! All paths advance a virtual clock with measured wall time, so latency
 //! statistics are meaningful without real-time sleeping.
@@ -38,12 +44,17 @@
 //! ```
 
 pub mod continuous;
+pub mod disagg;
 pub mod queue;
 pub mod source;
 
 pub use continuous::{
     serve_continuous, serve_continuous_warm, serve_sequential, ContinuousServeOpts,
     ContinuousServeReport, RequestStatus, ServeRuntime, ServedRequest, StepTrace, WarmStart,
+};
+pub use disagg::{
+    serve_disagg, serve_disagg_warm, DisaggOpts, DisaggReport, HandoffStats, PoolReport,
+    PoolSplit,
 };
 pub use queue::AdmissionQueue;
 pub use source::TokenSource;

@@ -3,22 +3,21 @@
 //! no leaked threads, and the delta-token conservation property between
 //! the ring and the paged KV cache.
 
+mod common;
+
 use std::collections::HashMap;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{decode_query as query, rand_t, HEADS, HEAD_DIM};
 use tokenring::attention::attention_block;
 use tokenring::engine::actors::{ActorRing, RingPolicy};
-use tokenring::engine::decode::DecodeQuery;
 use tokenring::engine::faults::{FaultInjector, FaultPlan};
 use tokenring::engine::kv_cache::{KvCache, KvDelta};
 use tokenring::engine::EngineOpts;
 use tokenring::tensor::Tensor;
 use tokenring::util::rng::Rng;
-
-const HEADS: usize = 2;
-const HEAD_DIM: usize = 8;
 
 fn opts() -> EngineOpts {
     EngineOpts { record: false, ..Default::default() }
@@ -34,9 +33,8 @@ fn filled_cache(
     let mut cache = KvCache::new(n, HEADS, HEAD_DIM, 8);
     let mut truth = HashMap::new();
     for &(req, ctx) in reqs {
-        let sz = ctx * HEADS * HEAD_DIM;
-        let k = Tensor::new(&[ctx, HEADS, HEAD_DIM], rng.normal_vec(sz, 1.0));
-        let v = Tensor::new(&[ctx, HEADS, HEAD_DIM], rng.normal_vec(sz, 1.0));
+        let k = rand_t(rng, &[ctx, HEADS, HEAD_DIM]);
+        let v = rand_t(rng, &[ctx, HEADS, HEAD_DIM]);
         cache.append(req, &k, &v).unwrap();
         truth.insert(req, (k, v));
     }
@@ -52,14 +50,6 @@ fn admit_and_load(ring: &mut ActorRing, cache: &KvCache, req: usize) {
         if !positions.is_empty() {
             ring.append(&[KvDelta::new(req, dev, k, v, positions, 0)]).unwrap();
         }
-    }
-}
-
-fn query(rng: &mut Rng, req: usize, pos: i32) -> DecodeQuery {
-    DecodeQuery {
-        request: req,
-        q: Tensor::new(&[1, HEADS, HEAD_DIM], rng.normal_vec(HEADS * HEAD_DIM, 1.0)),
-        q_pos: vec![pos],
     }
 }
 

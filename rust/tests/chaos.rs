@@ -10,54 +10,27 @@
 //! the remaining requests gracefully (per-request `Failed` status, not a
 //! process-level `Err`).
 
+mod common;
+
+use common::{digests, std_requests};
 use tokenring::engine::faults::FaultPlan;
-use tokenring::scheduler::{serve_continuous, ContinuousServeOpts, RequestStatus};
-use tokenring::workload::{Priority, Request};
+use tokenring::scheduler::{
+    serve_continuous, serve_disagg, ContinuousServeOpts, DisaggOpts, PoolSplit, RequestStatus,
+};
+use tokenring::workload::Request;
 
 /// Two-device actors-runtime serve session, small enough that every fault
 /// kind lands within ~8 micro-steps.
 fn opts() -> ContinuousServeOpts {
-    ContinuousServeOpts {
-        devices: 2,
-        heads: 2,
-        head_dim: 8,
-        chunk: 16,
-        max_batch: 8,
-        max_step_tokens: 512,
-        kv_budget_tokens: 1 << 20,
-        aging_steps: 16,
-        seed: 42,
-        ..Default::default()
-    }
+    common::serve_opts(2, 16)
 }
 
 fn requests() -> Vec<Request> {
-    (0..6)
-        .map(|id| Request {
-            id,
-            seq_len: 32 + 16 * (id % 3),
-            arrival: 0.0,
-            decode_tokens: 4,
-            priority: Priority::Standard,
-            prefix: None,
-        })
-        .collect()
-}
-
-/// Per-request digests in id order (the report sorts by id).
-fn digests(report: &tokenring::scheduler::ContinuousServeReport) -> Vec<f64> {
-    report.requests.iter().map(|r| r.output_digest).collect()
+    std_requests(6)
 }
 
 fn assert_digests_match(got: &[f64], want: &[f64], label: &str) {
-    assert_eq!(got.len(), want.len(), "{label}: request count");
-    for (i, (a, b)) in got.iter().zip(want).enumerate() {
-        assert!(
-            (a - b).abs() < 1e-3,
-            "{label}: request {i} digest diverges from the fault-free run \
-             ({a} vs {b})"
-        );
-    }
+    common::assert_digests_match(got, want, 1e-3, label);
 }
 
 fn assert_all_completed(report: &tokenring::scheduler::ContinuousServeReport, label: &str) {
@@ -190,6 +163,139 @@ fn degraded_recovery_still_matches_digests() {
     // the respawned ring runs with one device fewer, but the attention
     // math is device-count-invariant, so the digests must not move
     assert_digests_match(&digests(&report), &baseline, "degraded recovery");
+}
+
+// ---------------------------------------------------------------------------
+// Disaggregated pools: fault isolation (ISSUE 10 satellite)
+// ---------------------------------------------------------------------------
+
+/// 3-device disaggregated session: 2-device prefill pool + 1-device
+/// decode pool over the same workload the unified chaos tests use.
+fn disagg_opts() -> (ContinuousServeOpts, DisaggOpts) {
+    let split = PoolSplit::parse("2p+1d").unwrap().unwrap();
+    (common::serve_opts(3, 16), DisaggOpts::new(split))
+}
+
+fn disagg_digests(o: &ContinuousServeOpts, d: &DisaggOpts, label: &str) -> Vec<f64> {
+    let report = serve_disagg(&requests(), o, d)
+        .unwrap_or_else(|e| panic!("{label}: serve must recover, got Err: {e:#}"));
+    assert_all_completed(&report.core, label);
+    assert!(report.core.faults.failure.is_none(), "{label}: session must not fail");
+    digests(&report.core)
+}
+
+#[test]
+fn prefill_pool_fault_does_not_disturb_decode_pool() {
+    let (o, base) = disagg_opts();
+    let baseline = disagg_digests(&o, &base, "disagg baseline");
+
+    let mut d = base.clone();
+    d.prefill_faults = Some(FaultPlan::parse("panic@1:0").unwrap());
+    let report = serve_disagg(&requests(), &o, &d).unwrap();
+    assert_all_completed(&report.core, "prefill-pool fault");
+    assert!(
+        report.prefill.faults.faults_injected >= 1,
+        "the prefill-pool fault never fired ({:?})",
+        report.prefill.faults
+    );
+    assert!(
+        report.prefill.faults.recoveries >= 1,
+        "prefill fault absorbed without a pool recovery ({:?})",
+        report.prefill.faults
+    );
+    // isolation: the decode pool's ring never sees a fault or a respawn
+    assert_eq!(report.decode.faults.faults_injected, 0, "decode pool saw a fault");
+    assert_eq!(report.decode.faults.recoveries, 0, "decode pool respawned");
+    assert_eq!(report.decode.faults.replayed_tokens, 0, "decode pool replayed work");
+    assert_digests_match(&digests(&report.core), &baseline, "prefill-pool fault");
+}
+
+#[test]
+fn decode_pool_fault_does_not_disturb_prefill_pool() {
+    let (o, base) = disagg_opts();
+    let baseline = disagg_digests(&o, &base, "disagg baseline");
+
+    let mut d = base.clone();
+    d.decode_faults = Some(FaultPlan::parse("panic@1:0").unwrap());
+    let report = serve_disagg(&requests(), &o, &d).unwrap();
+    assert_all_completed(&report.core, "decode-pool fault");
+    assert!(report.decode.faults.faults_injected >= 1, "the decode-pool fault never fired");
+    assert!(
+        report.decode.faults.recoveries >= 1,
+        "decode fault absorbed without a pool recovery ({:?})",
+        report.decode.faults
+    );
+    assert_eq!(report.prefill.faults.faults_injected, 0, "prefill pool saw a fault");
+    assert_eq!(report.prefill.faults.recoveries, 0, "prefill pool respawned");
+    // a decode-pool respawn re-imports handed-off KV, so imports can
+    // exceed the shipped total — but never undershoot it
+    assert!(
+        report.handoff.imported_tokens >= report.handoff.tokens,
+        "re-imported {} of {} shipped tokens",
+        report.handoff.imported_tokens,
+        report.handoff.tokens
+    );
+    assert_digests_match(&digests(&report.core), &baseline, "decode-pool fault");
+}
+
+#[test]
+fn base_fault_plan_routes_to_the_decode_pool() {
+    // `opts.faults` (the unified knob, e.g. `--faults` without a pool
+    // prefix) lands on the decode pool when no per-pool plan is set.
+    let (mut o, d) = disagg_opts();
+    let baseline = disagg_digests(&o, &d, "disagg baseline");
+    o.faults = Some(FaultPlan::parse("panic@1:0").unwrap());
+    let report = serve_disagg(&requests(), &o, &d).unwrap();
+    assert_all_completed(&report.core, "base-plan routing");
+    assert!(report.decode.faults.faults_injected >= 1, "base plan must hit the decode pool");
+    assert_eq!(report.prefill.faults.faults_injected, 0);
+    assert_digests_match(&digests(&report.core), &baseline, "base-plan routing");
+}
+
+#[test]
+fn in_flight_handoffs_survive_simultaneous_pool_respawns() {
+    // Panic both pools at their first ring step: the prefill pool
+    // respawns with requests mid-prefill, the decode pool respawns with
+    // landed handoffs resident and more still in flight. Every request
+    // must re-queue, re-import its handed-off KV, and finish with the
+    // fault-free digests.
+    let (o, base) = disagg_opts();
+    let baseline = disagg_digests(&o, &base, "disagg baseline");
+
+    let mut d = base.clone();
+    d.prefill_faults = Some(FaultPlan::parse("panic@0:1").unwrap());
+    d.decode_faults = Some(FaultPlan::parse("panic@0:0").unwrap());
+    let report = serve_disagg(&requests(), &o, &d).unwrap();
+    assert_all_completed(&report.core, "dual-pool respawn");
+    assert!(report.prefill.faults.recoveries >= 1, "prefill pool must respawn");
+    assert!(report.decode.faults.recoveries >= 1, "decode pool must respawn");
+    assert_eq!(
+        report.core.faults.recoveries,
+        report.prefill.faults.recoveries + report.decode.faults.recoveries,
+        "combined accounting sums the pools"
+    );
+    // nothing is lost across the respawns: every prompt token still
+    // arrives in the decode pool (re-imports may repeat a shipment)
+    let prompt_tokens: usize = requests().iter().map(|r| r.seq_len).sum();
+    assert_eq!(report.handoff.tokens, prompt_tokens, "every prompt ships exactly once");
+    assert!(report.handoff.imported_tokens >= prompt_tokens);
+    assert_digests_match(&digests(&report.core), &baseline, "dual-pool respawn");
+}
+
+#[test]
+fn exhausted_decode_pool_budget_fails_requests_gracefully() {
+    let (mut o, mut d) = disagg_opts();
+    o.max_recoveries = 0;
+    d.decode_faults = Some(FaultPlan::parse("panic@0:0").unwrap());
+    let report = serve_disagg(&requests(), &o, &d)
+        .expect("budget exhaustion is a graceful per-request failure, not an Err");
+    assert_eq!(report.core.requests.len(), 6);
+    for r in &report.core.requests {
+        assert_eq!(r.status, RequestStatus::Failed, "request {} should have failed", r.id);
+    }
+    assert!(report.core.faults.failure.is_some(), "the report must carry the cause");
+    assert_eq!(report.decode.faults.failed_requests, 6, "the decode pool owns the failure");
+    assert_eq!(report.prefill.faults.failed_requests, 0);
 }
 
 #[test]

@@ -1,0 +1,181 @@
+//! Shared helpers for the integration-test suite. Each test binary
+//! compiles this module independently (`mod common;`), so helpers unused
+//! by a given binary are expected — hence the blanket `dead_code` allow.
+//!
+//! Everything here is deduplicated from serve_scheduler.rs / chaos.rs /
+//! fleet.rs / actor_ring.rs / kernel_equivalence.rs: serve-opts and
+//! request builders, workload-mix generation, digest and output diffing,
+//! and the randomized shape generator for the kernel property sweep.
+
+#![allow(dead_code)]
+
+use std::collections::HashMap;
+
+use tokenring::engine::decode::DecodeQuery;
+use tokenring::scheduler::{ContinuousServeOpts, ContinuousServeReport};
+use tokenring::tensor::Tensor;
+use tokenring::util::rng::Rng;
+use tokenring::workload::{Priority, Request, ServeMix};
+
+/// Head count shared by the ring-level tests (actor_ring, disagg).
+pub const HEADS: usize = 2;
+/// Head dim shared by the ring-level tests.
+pub const HEAD_DIM: usize = 8;
+
+/// The canonical small serve configuration (2-head / 8-dim requests,
+/// roomy budgets, seed 42). serve_scheduler and chaos use it as-is;
+/// fleet and disagg tweak fields on top.
+pub fn serve_opts(devices: usize, chunk: usize) -> ContinuousServeOpts {
+    ContinuousServeOpts {
+        devices,
+        heads: HEADS,
+        head_dim: HEAD_DIM,
+        chunk,
+        max_batch: 8,
+        max_step_tokens: 512,
+        kv_budget_tokens: 1 << 20,
+        aging_steps: 16,
+        seed: 42,
+        keep_outputs: false,
+        ..Default::default()
+    }
+}
+
+/// An all-at-t=0 request with an explicit priority class.
+pub fn req(id: usize, seq_len: usize, decode: usize, priority: Priority) -> Request {
+    Request { id, seq_len, arrival: 0.0, decode_tokens: decode, priority, prefix: None }
+}
+
+/// The standard n-request workload the chaos and equivalence tests share:
+/// staggered 32/48/64-token prompts, 4 decode tokens each, all standard
+/// priority at t=0.
+pub fn std_requests(n: usize) -> Vec<Request> {
+    (0..n).map(|id| req(id, 32 + 16 * (id % 3), 4, Priority::Standard)).collect()
+}
+
+/// Generate `n` requests from a registered [`ServeMix`] preset at a high
+/// arrival rate (so requests overlap) with 32-token length granularity.
+pub fn mix_requests(mix_name: &str, n: usize, seed: u64) -> Vec<Request> {
+    ServeMix::preset(mix_name, 1e5, 32)
+        .unwrap_or_else(|e| panic!("mix '{mix_name}': {e:#}"))
+        .generate(n, seed)
+}
+
+/// Per-request output digests in id order (reports sort by id).
+pub fn digests(report: &ContinuousServeReport) -> Vec<f64> {
+    report.requests.iter().map(|r| r.output_digest).collect()
+}
+
+/// Absolute-tolerance digest comparison against a reference run.
+pub fn assert_digests_match(got: &[f64], want: &[f64], tol: f64, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: request count");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() < tol,
+            "{label}: request {i} digest diverges from the reference run ({a} vs {b})"
+        );
+    }
+}
+
+/// Clone a report's id-keyed decode outputs (requires `keep_outputs`).
+pub fn outputs_map(report: &ContinuousServeReport) -> HashMap<usize, Vec<Tensor>> {
+    report.outputs.iter().map(|(id, toks)| (*id, toks.clone())).collect()
+}
+
+/// Element-wise allclose over two id-keyed output maps: same request
+/// set, same token counts, every decode token within `tol`.
+pub fn assert_outputs_close(
+    a: &HashMap<usize, Vec<Tensor>>,
+    b: &HashMap<usize, Vec<Tensor>>,
+    tol: f32,
+    label: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{label}: request counts");
+    for (id, xs) in a {
+        let ys = b.get(id).unwrap_or_else(|| panic!("{label}: request {id} missing"));
+        assert_eq!(xs.len(), ys.len(), "{label} req {id}: output count");
+        for (t, (x, y)) in xs.iter().zip(ys).enumerate() {
+            assert!(
+                x.allclose(y, tol),
+                "{label} req {id} decode token {t}: diverges by {}",
+                x.max_abs_diff(y)
+            );
+        }
+    }
+}
+
+/// Every step's resident-KV budget invariant, over a report's trace.
+pub fn assert_kv_budget_invariant(report: &ContinuousServeReport, label: &str) {
+    for s in &report.steps {
+        assert!(
+            s.kv_tokens <= s.kv_budget,
+            "{label} step {}: resident {} tokens over budget {}",
+            s.step,
+            s.kv_tokens,
+            s.kv_budget
+        );
+    }
+}
+
+/// A normally-distributed tensor for kernel/ring tests.
+pub fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+    Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
+}
+
+/// A single-token decode query at `pos` using the shared HEADS/HEAD_DIM.
+pub fn decode_query(rng: &mut Rng, req: usize, pos: i32) -> DecodeQuery {
+    DecodeQuery {
+        request: req,
+        q: Tensor::new(&[1, HEADS, HEAD_DIM], rng.normal_vec(HEADS * HEAD_DIM, 1.0)),
+        q_pos: vec![pos],
+    }
+}
+
+/// One randomized attention-shape case for the kernel property sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct PropShape {
+    pub sq: usize,
+    pub skv: usize,
+    pub h: usize,
+    pub h_kv: usize,
+    pub d: usize,
+    pub causal: bool,
+    /// Query position offset: places the causal frontier inside, before,
+    /// and after the key range across trials.
+    pub q_offset: i32,
+}
+
+impl PropShape {
+    pub fn q_positions(&self) -> Vec<i32> {
+        (self.q_offset..self.q_offset + self.sq as i32).collect()
+    }
+
+    pub fn k_positions(&self) -> Vec<i32> {
+        (0..self.skv as i32).collect()
+    }
+
+    pub fn label(&self, trial: usize) -> String {
+        format!(
+            "trial={trial} sq={} skv={} h={}/{} d={} causal={}",
+            self.sq, self.skv, self.h, self.h_kv, self.d, self.causal
+        )
+    }
+}
+
+/// Deterministic randomized shape generator: `trials` cases straddling
+/// Q_TILE/KV_TILE boundaries with mixed GQA group layouts. Seed 7002 with
+/// 40 trials reproduces the historical kernel_equivalence sweep exactly.
+pub fn prop_shapes(seed: u64, trials: usize) -> Vec<PropShape> {
+    let mut shape_rng = Rng::new(seed);
+    (0..trials)
+        .map(|trial| {
+            let sq = 1 + (shape_rng.normal_vec(1, 1.0)[0].abs() * 37.0) as usize % 97;
+            let skv = 1 + (shape_rng.normal_vec(1, 1.0)[0].abs() * 53.0) as usize % 180;
+            let d = [4usize, 8, 16][trial % 3];
+            let (h, h_kv) = [(1usize, 1usize), (2, 1), (4, 2), (4, 4)][trial % 4];
+            let causal = trial % 2 == 0;
+            let q_offset = (trial % 5) as i32 * (skv as i32 / 2).max(1) / 2;
+            PropShape { sq, skv, h, h_kv, d, causal, q_offset }
+        })
+        .collect()
+}

@@ -1,0 +1,289 @@
+//! Acceptance tests for disaggregated prefill/decode serving (ISSUE 10).
+//!
+//! The contract: splitting a session's devices into a prefill pool and a
+//! decode pool connected by a modeled KV handoff is *numerically
+//! invisible*. Concretely:
+//!
+//! 1. Per-request decode outputs match the unified continuous loop run
+//!    over the same P+D devices (1e-4 allclose; merge rounding differs
+//!    because the rings have different widths) — over every registered
+//!    workload mix, every pool split, and every KV storage dtype.
+//! 2. At f32 with chunk-aligned prompts and non-binding caps, the disagg
+//!    run is digest-*exact* against the unified loop at `devices = D`
+//!    (the decode ring's width): the handed-off KV regenerates bit-equal
+//!    rows and page layout depends only on total tokens, not on append
+//!    granularity.
+//! 3. Handoff conservation: prefill-pool delta tokens == shipped tokens
+//!    == decode-pool imported tokens == total prompt tokens.
+//! 4. The KV-budget invariant holds at every step of *both* pool traces,
+//!    including under decode-pool preemption pressure.
+
+mod common;
+
+use std::collections::HashMap;
+
+use common::{mix_requests, req, serve_opts, std_requests};
+use tokenring::scheduler::{
+    serve_continuous, serve_continuous_warm, serve_disagg, serve_disagg_warm,
+    ContinuousServeOpts, ContinuousServeReport, DisaggOpts, DisaggReport, PoolSplit,
+    TokenSource, WarmStart,
+};
+use tokenring::tensor::Dtype;
+use tokenring::workload::{Priority, Request, ServeMix, SharedPrefix};
+
+/// The pool splits under test: the narrowest possible, asymmetric, and
+/// symmetric-wide (2..4 devices).
+const SPLITS: [&str; 3] = ["1p+1d", "2p+1d", "2p+2d"];
+
+fn split(s: &str) -> PoolSplit {
+    PoolSplit::parse(s).unwrap().unwrap()
+}
+
+fn opts_for(devices: usize, dt: Dtype) -> ContinuousServeOpts {
+    let mut o = serve_opts(devices, 16);
+    o.keep_outputs = true;
+    o.engine.kv_dtype = dt;
+    o
+}
+
+fn run_unified(requests: &[Request], devices: usize, dt: Dtype) -> ContinuousServeReport {
+    serve_continuous(requests, &opts_for(devices, dt)).unwrap()
+}
+
+fn run_disagg(requests: &[Request], split_name: &str, dt: Dtype) -> DisaggReport {
+    let sp = split(split_name);
+    let o = opts_for(sp.devices(), dt);
+    serve_disagg(requests, &o, &DisaggOpts::new(sp)).unwrap()
+}
+
+fn assert_pool_invariants(report: &DisaggReport, label: &str) {
+    for (pool_name, pool) in [("prefill", &report.prefill), ("decode", &report.decode)] {
+        for s in &pool.steps {
+            assert!(
+                s.kv_tokens <= s.kv_budget,
+                "{label} {pool_name} step {}: resident {} tokens over budget {}",
+                s.step,
+                s.kv_tokens,
+                s.kv_budget
+            );
+        }
+    }
+}
+
+fn assert_handoff_conservation(report: &DisaggReport, requests: &[Request], label: &str) {
+    let prompt_tokens: usize = requests.iter().map(|r| r.seq_len).sum();
+    let h = &report.handoff;
+    assert_eq!(h.requests, requests.len(), "{label}: every request hands off once");
+    assert_eq!(h.tokens, prompt_tokens, "{label}: shipped tokens == prompt tokens");
+    assert_eq!(h.imported_tokens, prompt_tokens, "{label}: imported == shipped");
+    assert_eq!(h.latencies.len(), h.requests, "{label}: one latency sample per handoff");
+    assert!(h.latencies.iter().all(|&l| l > 0.0), "{label}: transfers take time");
+    assert!(h.bytes > 0, "{label}: the cost model must charge bytes");
+}
+
+#[test]
+fn disagg_matches_unified_on_every_mix_split_and_dtype() {
+    // The full equivalence grid. The unified oracle runs over the same
+    // P+D devices with the same KV storage dtype; per-request decode
+    // outputs must agree to 1e-4 and digests to 1e-3 — batching across
+    // two pools instead of one is invisible.
+    for &mix_name in ServeMix::NAMES {
+        let requests = mix_requests(mix_name, 5, 3);
+        for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            let mut oracle: HashMap<usize, ContinuousServeReport> = HashMap::new();
+            for split_name in SPLITS {
+                let label = format!("{mix_name}/{split_name}/{}", dt.name());
+                let devices = split(split_name).devices();
+                let unified = oracle
+                    .entry(devices)
+                    .or_insert_with(|| run_unified(&requests, devices, dt));
+                let disagg = run_disagg(&requests, split_name, dt);
+
+                assert_eq!(disagg.core.requests.len(), requests.len(), "{label}");
+                assert_eq!(
+                    disagg.core.total_prefill_tokens, unified.total_prefill_tokens,
+                    "{label}: prefill totals"
+                );
+                assert_eq!(
+                    disagg.core.total_decode_tokens, unified.total_decode_tokens,
+                    "{label}: decode totals"
+                );
+                common::assert_outputs_close(
+                    &common::outputs_map(&disagg.core),
+                    &common::outputs_map(unified),
+                    1e-4,
+                    &label,
+                );
+                common::assert_digests_match(
+                    &common::digests(&disagg.core),
+                    &common::digests(unified),
+                    1e-3,
+                    &label,
+                );
+                assert_handoff_conservation(&disagg, &requests, &label);
+                assert_pool_invariants(&disagg, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn disagg_is_digest_exact_against_unified_at_decode_width_f32() {
+    // The bit-for-bit oracle leg: with chunk-aligned prompts, roomy caps
+    // and f32 storage, every split with a <=2-wide decode ring must land
+    // digest-*equal* (not allclose) on the unified loop at devices = D.
+    // (Wider decode rings merge remote partials in arrival order, so
+    // exactness stops at D = 2.)
+    let requests: Vec<Request> = (0..6)
+        .map(|id| req(id, 32 + 16 * (id % 3), 4, Priority::Standard))
+        .collect();
+    for split_name in ["1p+1d", "2p+1d", "3p+1d", "2p+2d", "3p+2d"] {
+        let sp = split(split_name);
+        let disagg = run_disagg(&requests, split_name, Dtype::F32);
+        let unified = run_unified(&requests, sp.decode, Dtype::F32);
+        assert_eq!(disagg.core.preemptions, 0, "{split_name}: caps must not bind");
+        assert_eq!(unified.preemptions, 0, "{split_name}: oracle caps must not bind");
+        let got = common::digests(&disagg.core);
+        let want = common::digests(&unified);
+        assert_eq!(
+            got, want,
+            "{split_name}: disagg digests must be bit-equal to unified at devices={}",
+            sp.decode
+        );
+    }
+}
+
+#[test]
+fn handoff_bytes_follow_the_kv_dtype() {
+    // The transfer cost model charges real KvDelta bytes: K+V rows at the
+    // storage dtype plus a 4-byte position index per token. Packing to
+    // bf16/f16 must halve the row payload, not the position index.
+    let requests = std_requests(4);
+    let o = opts_for(2, Dtype::F32);
+    let row = |dt: Dtype| 2 * o.heads * o.head_dim * dt.bytes_per_el() + 4;
+    for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+        let report = run_disagg(&requests, "1p+1d", dt);
+        let prompt_tokens: usize = requests.iter().map(|r| r.seq_len).sum();
+        assert_eq!(
+            report.handoff.bytes,
+            prompt_tokens * row(dt),
+            "dtype={}: handoff bytes",
+            dt.name()
+        );
+    }
+}
+
+#[test]
+fn decode_pool_preemption_respects_budget_and_replays_exactly() {
+    // A budget that fits the three 32-token prompts exactly: the first
+    // decode appends must preempt in the decode pool. The invariant holds
+    // at every step of both pool traces and the preempted requests replay
+    // to the roomy run's digests.
+    let requests: Vec<Request> = (0..3).map(|id| req(id, 32, 8, Priority::Standard)).collect();
+    let sp = split("1p+1d");
+    let mut tight = opts_for(2, Dtype::F32);
+    tight.kv_budget_tokens = 96;
+    tight.max_step_tokens = 64;
+    let report = serve_disagg(&requests, &tight, &DisaggOpts::new(sp)).unwrap();
+
+    assert_eq!(report.core.requests.len(), 3, "every request must finish");
+    assert!(report.core.preemptions >= 1, "decode growth over the budget must preempt");
+    assert_pool_invariants(&report, "tight");
+    // re-imports after preemption repeat the shipment, never lose it
+    assert!(report.handoff.imported_tokens >= report.handoff.tokens);
+
+    let roomy = run_disagg(&requests, "1p+1d", Dtype::F32);
+    assert_eq!(roomy.core.preemptions, 0);
+    common::assert_digests_match(
+        &common::digests(&report.core),
+        &common::digests(&roomy.core),
+        1e-9,
+        "preemption replay",
+    );
+}
+
+#[test]
+fn warm_started_prefill_elides_the_prefix_and_matches_cold() {
+    // The fleet's prefix cache hands disagg replicas a WarmStart exactly
+    // as it does unified ones: the prefix KV is imported at prefill-pool
+    // admission, the accounting moves from prefilled to elided, and the
+    // decode outputs do not move.
+    let prefix = SharedPrefix { group: 3, tokens: 32 };
+    let requests: Vec<Request> = (0..2)
+        .map(|id| Request {
+            id,
+            seq_len: 64,
+            arrival: 0.0,
+            decode_tokens: 4,
+            priority: Priority::Standard,
+            prefix: Some(prefix),
+        })
+        .collect();
+    let o = opts_for(2, Dtype::F32);
+    let d = DisaggOpts::new(split("1p+1d"));
+
+    let cold = serve_disagg(&requests, &o, &d).unwrap();
+
+    let source = TokenSource::new(o.seed, o.heads, o.head_dim);
+    let (k, v) = source.prefix_kv(prefix.group, prefix.tokens);
+    let mut warm = HashMap::new();
+    warm.insert(1usize, WarmStart::new(k, v).unwrap());
+    let warmed = serve_disagg_warm(&requests, &o, &d, &warm).unwrap();
+
+    assert_eq!(warmed.core.prefill_tokens_elided, prefix.tokens);
+    assert_eq!(
+        warmed.core.total_prefill_tokens + prefix.tokens,
+        cold.core.total_prefill_tokens,
+        "every prompt token is either prefilled or elided"
+    );
+    // the handoff still ships the *full* prompt (the decode pool needs
+    // the prefix rows too, wherever they came from)
+    assert_eq!(warmed.handoff.tokens, 2 * 64);
+    common::assert_outputs_close(
+        &common::outputs_map(&warmed.core),
+        &common::outputs_map(&cold.core),
+        1e-4,
+        "warm-vs-cold",
+    );
+}
+
+#[test]
+fn zero_decode_requests_complete_at_import() {
+    // A prefill-only request (decode_tokens = 0) finishes the moment its
+    // KV lands in the decode pool: TTFT == finish, no decode steps burn.
+    let requests = vec![req(0, 32, 0, Priority::Standard), req(1, 32, 2, Priority::Standard)];
+    let report = run_disagg(&requests, "1p+1d", Dtype::F32);
+    assert_eq!(report.core.requests.len(), 2);
+    let r0 = report.core.requests.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(r0.decode_tokens, 0);
+    assert_eq!(r0.first_token, r0.finish, "zero-decode retires at import");
+    assert_handoff_conservation(&report, &requests, "zero-decode");
+}
+
+#[test]
+fn ttft_includes_the_modeled_handoff_latency() {
+    // On a slow uniform link the transfer time dominates: every
+    // first-token latency must be at least its request's handoff latency
+    // (the decode pool cannot answer before the KV arrives).
+    let requests = std_requests(3);
+    let sp = split("1p+1d");
+    let o = opts_for(2, Dtype::F32);
+    let mut d = DisaggOpts::new(sp);
+    d.cluster = "uniform:1".to_string();
+    let report = serve_disagg(&requests, &o, &d).unwrap();
+    let min_latency = report
+        .handoff
+        .latencies
+        .iter()
+        .cloned()
+        .fold(f64::INFINITY, f64::min);
+    for r in &report.core.requests {
+        assert!(
+            r.ttft() >= min_latency,
+            "req {}: ttft {} beats the fastest possible handoff {}",
+            r.id,
+            r.ttft(),
+            min_latency
+        );
+    }
+}

@@ -10,29 +10,26 @@
 //! 4. The warm tier's byte budget is a hard invariant under a randomized
 //!    insert/lookup workload — checked after every operation.
 
+mod common;
+
 use std::collections::HashMap;
 
+use common::{assert_outputs_close as assert_same_outputs, mix_requests};
 use tokenring::fleet::{serve_fleet, FleetOpts, PrefixCache, PrefixCacheConfig, RoutePolicy};
 use tokenring::scheduler::{
-    serve_continuous, serve_continuous_warm, ContinuousServeOpts, TokenSource, WarmStart,
+    serve_continuous, serve_continuous_warm, serve_disagg, ContinuousServeOpts, DisaggOpts,
+    PoolSplit, TokenSource, WarmStart,
 };
 use tokenring::tensor::Tensor;
-use tokenring::workload::{Priority, Request, ServeMix, SharedPrefix};
+use tokenring::workload::{Priority, Request, SharedPrefix};
 
 fn replica_opts() -> ContinuousServeOpts {
-    ContinuousServeOpts {
-        devices: 2,
-        heads: 2,
-        head_dim: 8,
-        chunk: 32,
-        max_batch: 4,
-        max_step_tokens: 512,
-        kv_budget_tokens: 1 << 20,
-        aging_steps: 8,
-        seed: 11,
-        keep_outputs: true,
-        ..Default::default()
-    }
+    let mut o = common::serve_opts(2, 32);
+    o.max_batch = 4;
+    o.aging_steps = 8;
+    o.seed = 11;
+    o.keep_outputs = true;
+    o
 }
 
 fn fleet_opts(replicas: usize, enabled: bool) -> FleetOpts {
@@ -41,11 +38,12 @@ fn fleet_opts(replicas: usize, enabled: bool) -> FleetOpts {
         route: RoutePolicy::RoundRobin,
         cache: PrefixCacheConfig { enabled, ..Default::default() },
         replica: replica_opts(),
+        disagg: None,
     }
 }
 
 fn shared_prefix_requests(n: usize) -> Vec<Request> {
-    ServeMix::preset("shared_prefix", 1e5, 32).unwrap().generate(n, 5)
+    mix_requests("shared_prefix", n, 5)
 }
 
 /// Collect every replica's decode outputs into one id-keyed map.
@@ -181,6 +179,33 @@ fn fleet_outputs_invariant_under_cache() {
         &fleet_outputs(&cold),
         1e-3,
         "cache-on-vs-off",
+    );
+}
+
+#[test]
+fn disaggregated_replicas_serve_the_fleet_to_the_same_outputs() {
+    // A fleet whose replicas run the disaggregated prefill/decode loop
+    // (1p+1d over each replica's 2 devices) must produce the same decode
+    // outputs as the direct serve_disagg call on the same assignment —
+    // and, transitively, as the unified replicas (disagg.rs proves that
+    // leg).
+    let requests = shared_prefix_requests(8);
+    let split = PoolSplit::parse("1p+1d").unwrap().unwrap();
+    let mut opts = fleet_opts(1, false);
+    opts.disagg = Some(DisaggOpts::new(split));
+
+    let fleet = serve_fleet(&requests, &opts).unwrap();
+    let solo = serve_disagg(&requests, &opts.replica, opts.disagg.as_ref().unwrap()).unwrap();
+
+    assert_eq!(fleet.per_replica.len(), 1);
+    assert_eq!(fleet.requests(), solo.core.requests.len());
+    assert_eq!(fleet.total_prefill_tokens(), solo.core.total_prefill_tokens);
+    assert_eq!(fleet.total_decode_tokens(), solo.core.total_decode_tokens);
+    assert_same_outputs(
+        &fleet_outputs(&fleet),
+        &common::outputs_map(&solo.core),
+        1e-4,
+        "disagg-fleet-vs-solo",
     );
 }
 

@@ -8,6 +8,9 @@
 //! serve-level check pins the continuous batcher's f32 digests while
 //! bounding the packed-storage drift.
 
+mod common;
+
+use common::{prop_shapes, rand_t};
 use tokenring::attention::{
     attention_block, attention_block_reference, full_attention, MASK_VALUE, KV_TILE, Q_TILE,
 };
@@ -16,10 +19,6 @@ use tokenring::engine::{run_hybrid, run_ring_attention, run_token_ring, EngineOp
 use tokenring::parallelism::partition::Partition;
 use tokenring::tensor::{Dtype, Tensor};
 use tokenring::util::rng::Rng;
-
-fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
-    Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
-}
 
 #[allow(clippy::too_many_arguments)]
 fn check_pair(
@@ -55,29 +54,21 @@ fn check_pair(
 fn tiled_vs_reference_random_shapes() {
     // Randomized sweep across shapes that straddle Q_TILE/KV_TILE
     // boundaries, with query offsets placing the causal frontier inside,
-    // before, and after the key range.
+    // before, and after the key range. Seed 7002/40 trials reproduces the
+    // historical inline generator bit-for-bit (see common::prop_shapes).
     let mut rng = Rng::new(7001);
-    let mut shape_rng = Rng::new(7002);
-    for trial in 0..40 {
-        let sq = 1 + (shape_rng.normal_vec(1, 1.0)[0].abs() * 37.0) as usize % 97;
-        let skv = 1 + (shape_rng.normal_vec(1, 1.0)[0].abs() * 53.0) as usize % 180;
-        let d = [4usize, 8, 16][trial % 3];
-        let (h, h_kv) = [(1usize, 1usize), (2, 1), (4, 2), (4, 4)][trial % 4];
-        let causal = trial % 2 == 0;
-        let off = (trial % 5) as i32 * (skv as i32 / 2).max(1) / 2;
-        let qp: Vec<i32> = (off..off + sq as i32).collect();
-        let kp: Vec<i32> = (0..skv as i32).collect();
+    for (trial, s) in prop_shapes(7002, 40).iter().enumerate() {
         check_pair(
             &mut rng,
-            sq,
-            skv,
-            h,
-            h_kv,
-            d,
-            &qp,
-            &kp,
-            causal,
-            &format!("trial={trial} sq={sq} skv={skv} h={h}/{h_kv} d={d} causal={causal}"),
+            s.sq,
+            s.skv,
+            s.h,
+            s.h_kv,
+            s.d,
+            &s.q_positions(),
+            &s.k_positions(),
+            s.causal,
+            &s.label(trial),
         );
     }
 }

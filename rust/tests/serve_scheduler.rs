@@ -11,30 +11,11 @@
 //!    runtime produce equivalent per-request outputs on every workload
 //!    mix (the serve-runtime equivalence proof).
 
-use tokenring::scheduler::{
-    serve_continuous, serve_sequential, ContinuousServeOpts, ServeRuntime,
-};
+mod common;
+
+use common::{mix_requests, req, serve_opts as opts};
+use tokenring::scheduler::{serve_continuous, serve_sequential, ServeRuntime};
 use tokenring::workload::{Priority, Request, ServeMix};
-
-fn opts(devices: usize, chunk: usize) -> ContinuousServeOpts {
-    ContinuousServeOpts {
-        devices,
-        heads: 2,
-        head_dim: 8,
-        chunk,
-        max_batch: 8,
-        max_step_tokens: 512,
-        kv_budget_tokens: 1 << 20,
-        aging_steps: 16,
-        seed: 42,
-        keep_outputs: false,
-        ..Default::default()
-    }
-}
-
-fn req(id: usize, seq_len: usize, decode: usize, priority: Priority) -> Request {
-    Request { id, seq_len, arrival: 0.0, decode_tokens: decode, priority, prefix: None }
-}
 
 #[test]
 fn continuous_matches_sequential_outputs() {
@@ -98,15 +79,7 @@ fn preemption_respects_kv_budget_and_replays_exactly() {
 
     // the budget invariant holds at every step (peak residency after the
     // step's appends)
-    for s in &report.steps {
-        assert!(
-            s.kv_tokens <= s.kv_budget,
-            "step {}: resident {} tokens over budget {}",
-            s.step,
-            s.kv_tokens,
-            s.kv_budget
-        );
-    }
+    common::assert_kv_budget_invariant(&report, "preemption");
     let preempted: usize = report.requests.iter().map(|r| r.preemptions).sum();
     assert_eq!(preempted, report.preemptions);
 
@@ -219,8 +192,7 @@ fn actor_runtime_matches_spawn_per_step_on_every_mix() {
     // (merge order may differ between runtimes, hence allclose, not
     // bit equality).
     for &mix_name in ServeMix::NAMES {
-        let mix = ServeMix::preset(mix_name, 1e5, 32).unwrap();
-        let requests = mix.generate(6, 3);
+        let requests = mix_requests(mix_name, 6, 3);
         let mut o = opts(2, 32);
         o.keep_outputs = true;
 
